@@ -1,0 +1,194 @@
+//! Ablation studies for the design choices DESIGN.md calls out
+//! (`cargo bench --bench ablations`, filter e.g. `-- im2col`).
+//!
+//! * `schedule`   — pipelined back-to-back passes vs isolated passes
+//! * `im2col`     — the hardware unit's net effect per network (3×3-heavy
+//!                  VGG vs 1×1-heavy ResNet/MobileNet)
+//! * `act_cg`     — activation clock gating on/off across act sparsity
+//! * `acc_reuse`  — wide-DP accumulator sharing vs single-MAC VDBB
+//! * `batch`      — coordinator twin: occupancy vs batch size
+//! * `vnnz`       — per-layer variable bounds vs the uniform model-wide
+//!                  bound at equal global density (paper §II-D extension)
+
+use ssta::arch::{Datapath, Design};
+use ssta::dbb::variable::{allocate, allocate_uniform, LayerInfo};
+use ssta::models;
+use ssta::power;
+use ssta::sim::accel::{network_timing, profile_model_fixed_act, LayerProfile};
+use ssta::sim::analytic::{cycles_per_pass, gemm_cycles, WeightStats};
+use ssta::tensor::TensorF32;
+use ssta::util::bench::BenchSet;
+use ssta::util::table::Table;
+use ssta::util::Rng;
+
+fn schedule_ablation() {
+    let d = Design::paper_optimal();
+    let mut t = Table::new("ablation: pipelined vs isolated tile passes (VDBB, 3/8)");
+    t.header(&["GEMM (MxKxN)", "passes", "isolated cycles", "pipelined cycles", "speedup"]);
+    for (m, k, n) in [(3136usize, 576usize, 64usize), (784, 1152, 128), (49, 4608, 512)] {
+        let stats = WeightStats::synthetic(k, n, 8, 3);
+        let tile_rows = d.dims.a * d.dims.m;
+        let tile_cols = d.dims.c * d.dims.n;
+        let passes = (m.div_ceil(tile_rows) * n.div_ceil(tile_cols)) as u64;
+        let isolated = passes * cycles_per_pass(&d, &stats);
+        let pipelined = gemm_cycles(&d, &stats, passes);
+        t.row(&[
+            format!("{m}x{k}x{n}"),
+            passes.to_string(),
+            isolated.to_string(),
+            pipelined.to_string(),
+            format!("{:.2}x", isolated as f64 / pipelined as f64),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn im2col_ablation() {
+    let mut t = Table::new("ablation: IM2COL unit net power effect per network (3/8 DBB, 50% act)");
+    t.header(&["Network", "ASRAM mW (no unit)", "ASRAM mW (unit)", "unit mW", "net total Δ mW"]);
+    for model in [models::vgg16(), models::resnet50(), models::mobilenet_v1()] {
+        let profiles = profile_model_fixed_act(&model, 3, 8, 0.5);
+        let mut with = Design::paper_optimal();
+        with.im2col = true;
+        let mut without = with;
+        without.im2col = false;
+        let tw = network_timing(&with, &profiles);
+        let to = network_timing(&without, &profiles);
+        let pw = power::power(&with, &tw.total);
+        let po = power::power(&without, &to.total);
+        t.row(&[
+            model.name.to_string(),
+            format!("{:.1}", po.asram_mw),
+            format!("{:.1}", pw.asram_mw),
+            format!("{:.1}", pw.im2col_mw),
+            format!("{:+.1}", pw.total_mw() - po.total_mw()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(3×3-heavy VGG benefits most; pointwise-heavy nets see little — §IV-C)");
+}
+
+fn act_cg_ablation() {
+    let mut t = Table::new("ablation: activation clock gating (VDBB optimal, ResNet-50 3/8)");
+    t.header(&["act sparsity %", "power mW (CG)", "power mW (no CG)", "saving %"]);
+    let m = models::resnet50();
+    for act in [0.0, 0.25, 0.5, 0.8] {
+        let profiles = profile_model_fixed_act(&m, 3, 8, act);
+        let d = Design::paper_optimal();
+        let mut d_no = d;
+        d_no.act_cg = false;
+        let timing = network_timing(&d, &profiles);
+        let p_cg = power::power(&d, &timing.total).total_mw();
+        let p_no = power::power(&d_no, &timing.total).total_mw();
+        t.row(&[
+            format!("{:.0}", act * 100.0),
+            format!("{p_cg:.1}"),
+            format!("{p_no:.1}"),
+            format!("{:.1}", 100.0 * (1.0 - p_cg / p_no)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn acc_reuse_ablation() {
+    // Table III's trade: wide DPs amortize accumulators but cannot gate or
+    // run variable bounds. Compare iso-MAC dense STA vs VDBB on the same
+    // sparse workload.
+    let mut t = Table::new("ablation: accumulator reuse vs VDBB flexibility (2048 MACs, ResNet-50)");
+    t.header(&["design", "ACC regs", "cycles (3/8+50%act)", "power mW", "TOPS/W"]);
+    let m = models::resnet50();
+    let profiles = profile_model_fixed_act(&m, 3, 8, 0.5);
+    for spec in ["4x8x4_4x4", "4x8x4_4x8_DBB4of8", "4x8x8_8x8_VDBB"] {
+        let d = Design::parse(spec).unwrap();
+        let timing = network_timing(&d, &profiles);
+        let p = power::power(&d, &timing.total);
+        t.row(&[
+            spec.to_string(),
+            d.acc_regs().to_string(),
+            timing.total.cycles.to_string(),
+            format!("{:.1}", p.total_mw()),
+            format!("{:.1}", power::effective_tops_per_w(&d, &timing.total, timing.dense_macs)),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+fn batch_ablation() {
+    let mut t = Table::new("ablation: batch folding on the serving twin (ConvNet-5, 4/8)");
+    t.header(&["batch", "cycles", "cycles/img", "eff TOPS", "energy/img mJ"]);
+    let model = models::convnet5();
+    let d = Design::paper_optimal();
+    for batch in [1usize, 2, 4, 8, 16] {
+        let profiles: Vec<LayerProfile> = profile_model_fixed_act(&model, 4, 8, 0.5)
+            .into_iter()
+            .map(|mut p| {
+                p.m *= batch;
+                p.out_elems *= batch as u64;
+                p
+            })
+            .collect();
+        let timing = network_timing(&d, &profiles);
+        let p = power::power(&d, &timing.total);
+        let secs = timing.total.cycles as f64 / d.tech.freq_hz();
+        t.row(&[
+            batch.to_string(),
+            timing.total.cycles.to_string(),
+            format!("{:.0}", timing.total.cycles as f64 / batch as f64),
+            format!("{:.2}", timing.effective_tops(&d)),
+            format!("{:.4}", p.total_mw() * secs / batch as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(batch folds into GEMM M: partial-tile waste amortizes away)");
+}
+
+fn vnnz_ablation() {
+    // per-layer variable bounds (the §II-D extension): measure retained
+    // magnitude energy and effective throughput vs the uniform bound
+    let mut rng = Rng::new(77);
+    let model = models::convnet5();
+    // synthesize heterogeneous "trained" weights: later layers sparser
+    let infos: Vec<LayerInfo> = model
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            let (_, k, n) = l.gemm_dims();
+            let mut w = TensorF32::randn(&[k, n], 1.0, &mut rng);
+            let concentration = 1.0 / (1.0 + i as f32); // later layers peakier
+            for (j, v) in w.data_mut().iter_mut().enumerate() {
+                if (j / n.max(1)) % 4 != 0 {
+                    *v *= concentration;
+                }
+            }
+            LayerInfo::measure(&l.name, &w, 8, l.prunable)
+        })
+        .collect();
+
+    let mut t = Table::new("ablation: per-layer variable NNZ vs uniform (ConvNet-5, equal density)");
+    t.header(&["target density", "uniform bounds", "uniform retained", "variable bounds", "variable retained"]);
+    for target in [0.5f64, 0.375, 0.25] {
+        let uni = allocate_uniform(&infos, 8, target);
+        let var = allocate(&infos, 8, target);
+        t.row(&[
+            format!("{target:.3}"),
+            format!("{:?}", uni.bounds),
+            format!("{:.4}", uni.retained),
+            format!("{:?}", var.bounds),
+            format!("{:.4}", var.retained),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(VDBB hardware runs any per-layer bound at full utilization — §III-B)");
+}
+
+fn main() {
+    let mut set = BenchSet::new("ablations");
+    set.report("schedule", schedule_ablation);
+    set.report("im2col", im2col_ablation);
+    set.report("act_cg", act_cg_ablation);
+    set.report("acc_reuse", acc_reuse_ablation);
+    set.report("batch", batch_ablation);
+    set.report("vnnz", vnnz_ablation);
+    set.run();
+}

@@ -1,0 +1,32 @@
+//! Regenerates the paper's Figures 9–12 as numeric series
+//! (`cargo bench --bench paper_figures`, filter with e.g. `-- fig12`).
+
+use ssta::harness;
+use ssta::util::bench::BenchSet;
+
+fn report(name: &'static str, quick: bool) -> impl FnMut() {
+    move || {
+        for t in harness::run(name, quick).expect("known experiment") {
+            println!("{}", t.render());
+        }
+    }
+}
+
+fn main() {
+    let mut set = BenchSet::new("paper_figures");
+    set.report("fig9", report("fig9", false));
+    set.report("fig10", report("fig10", false));
+    set.report("fig11", report("fig11", false));
+    set.report("fig12", report("fig12", false));
+
+    set.bench("driver/fig9", || {
+        ssta::util::bench::bb(harness::run("fig9", true));
+    });
+    set.bench("driver/fig10", || {
+        ssta::util::bench::bb(harness::run("fig10", true));
+    });
+    set.bench("driver/fig12", || {
+        ssta::util::bench::bb(harness::run("fig12", true));
+    });
+    set.run();
+}

@@ -1,0 +1,39 @@
+//! Regenerates the paper's Tables I–V (`cargo bench --bench paper_tables`,
+//! optionally filtered: `cargo bench --bench paper_tables -- table5`).
+//!
+//! Tables are emitted as run-once reports (the deliverable is the table),
+//! followed by timed micro-entries for the underlying drivers so the bench
+//! also tracks harness performance regressions. Training tables run in
+//! quick mode under `cargo bench` (full mode: `ssta run table1`).
+
+use ssta::harness;
+use ssta::util::bench::BenchSet;
+
+fn report(name: &'static str, quick: bool) -> impl FnMut() {
+    move || {
+        for t in harness::run(name, quick).expect("known experiment") {
+            println!("{}", t.render());
+        }
+    }
+}
+
+fn main() {
+    let mut set = BenchSet::new("paper_tables");
+    set.report("table1", report("table1", true));
+    set.report("table2", report("table2", true));
+    set.report("table3", report("table3", false));
+    set.report("table4", report("table4", false));
+    set.report("table5", report("table5", false));
+
+    // timed drivers (cheap ones only; training tables are report-only)
+    set.bench("driver/table3", || {
+        ssta::util::bench::bb(harness::run("table3", true));
+    });
+    set.bench("driver/table4", || {
+        ssta::util::bench::bb(harness::run("table4", true));
+    });
+    set.bench("driver/table5", || {
+        ssta::util::bench::bb(harness::run("table5", true));
+    });
+    set.run();
+}

@@ -1,0 +1,117 @@
+//! Hot-path microbenchmarks for the §Perf optimization pass
+//! (`cargo bench --bench perf_hotpath`).
+//!
+//! L3 targets (EXPERIMENTS.md §Perf): the analytic engine is the hot path —
+//! a full-design-space Fig-10 sweep must stay interactive; the XLA execute
+//! path dominates e2e request latency, with coordinator overhead < 5%.
+
+use ssta::arch::{space, Design, Tech};
+use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::models;
+use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
+use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
+use ssta::sim::detailed::simulate_gemm;
+use ssta::tensor::TensorI8;
+use ssta::util::bench::{bb, BenchSet};
+use ssta::util::Rng;
+
+fn main() {
+    let mut set = BenchSet::new("perf_hotpath");
+
+    // ---- L3: analytic engine (the design-space hot path) ----
+    let d = Design::paper_optimal();
+    let stats = WeightStats::synthetic(2304, 512, 8, 3);
+    set.bench("analytic/gemm_timing_stats", move || {
+        bb(gemm_timing_stats(&d, 3136, &stats, 0.5, 3.0));
+    });
+
+    let d2 = Design::paper_optimal();
+    let resnet = models::resnet50();
+    let profiles = profile_model_fixed_act(&resnet, 3, 8, 0.5);
+    set.bench("analytic/resnet50_network_timing", move || {
+        bb(network_timing(&d2, &profiles));
+    });
+
+    set.bench("analytic/full_fig10_sweep", || {
+        let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
+        let m = models::resnet50();
+        let profiles = profile_model_repr(&m, 3, 8, 0.5);
+        for d in &designs {
+            bb(network_timing(d, &profiles));
+        }
+    });
+
+    // ---- model profiling (sampled functional inference) ----
+    set.bench("profile/resnet50_measured_act", || {
+        let m = models::resnet50();
+        bb(ssta::sim::accel::profile_model(&m, 3, 8, 42));
+    });
+
+    // ---- detailed engine (ground truth; used at small scale) ----
+    {
+        let mut rng = Rng::new(1);
+        let d = Design::parse("2x8x4_2x2_VDBB").unwrap();
+        let a = TensorI8::rand_sparse(&[64, 128], 0.5, &mut rng);
+        let w = DbbMatrix::compress_with_bound(
+            &prune_i8(&TensorI8::rand(&[128, 32], &mut rng), 8, 3),
+            8,
+            3,
+        )
+        .unwrap();
+        set.bench("detailed/simulate_gemm_64x128x32", move || {
+            bb(simulate_gemm(&d, &a, &w, 1.0));
+        });
+    }
+
+    // ---- golden GEMMs (functional reference path) ----
+    {
+        let mut rng = Rng::new(2);
+        let a = TensorI8::rand_sparse(&[256, 512], 0.5, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[512, 128], &mut rng), 8, 3);
+        let w = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+        let a2 = a.clone();
+        set.bench("gemm/dense_i8_256x512x128", move || {
+            bb(ssta::gemm::dense_i8(&a, &wd));
+        });
+        set.bench("gemm/dbb_i8_256x512x128", move || {
+            bb(ssta::gemm::dbb_i8(&a2, &w));
+        });
+    }
+
+    // ---- DBB encode/decode ----
+    {
+        let mut rng = Rng::new(3);
+        let wd = prune_i8(&TensorI8::rand(&[1024, 256], &mut rng), 8, 3);
+        let enc = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+        set.bench("dbb/compress_1024x256", move || {
+            bb(DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap());
+        });
+        set.bench("dbb/decompress_1024x256", move || {
+            bb(enc.decompress());
+        });
+    }
+
+    // ---- XLA runtime path (only when artifacts exist) ----
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut rt = ssta::runtime::Runtime::open("artifacts").expect("runtime");
+        let exe = rt.load("dbb_gemm_m128_k256_n64_nnz4of8").expect("artifact");
+        let mut rng = Rng::new(4);
+        let a: Vec<i8> = (0..128 * 256).map(|_| rng.i8_sym()).collect();
+        let vals: Vec<i8> = (0..32 * 4 * 64).map(|_| rng.i8_sym()).collect();
+        let idx: Vec<i32> = (0..32 * 4 * 64).map(|_| (rng.below(8)) as i32).collect();
+        use ssta::runtime::HostTensor;
+        set.bench("xla/dbb_gemm_execute_128x256x64", move || {
+            bb(exe
+                .run(&[
+                    HostTensor::I8(a.clone()),
+                    HostTensor::I8(vals.clone()),
+                    HostTensor::I32(idx.clone()),
+                ])
+                .unwrap());
+        });
+    } else {
+        eprintln!("(artifacts not built — skipping XLA execute bench)");
+    }
+
+    set.run();
+}

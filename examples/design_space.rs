@@ -1,0 +1,81 @@
+//! Design-space exploration (paper §VI-A, Figs 9–10): enumerate every
+//! iso-4TOPS design point, evaluate power/area on the paper's workload,
+//! print the pareto frontier and the paper's three design groupings.
+//!
+//! ```sh
+//! cargo run --release --example design_space [-- --csv]
+//! ```
+
+use ssta::arch::{space, Design, Tech};
+use ssta::cli::Args;
+use ssta::models;
+use ssta::power;
+use ssta::sim::accel::{network_timing, profile_model_repr};
+
+fn main() {
+    let args = Args::from_env();
+    let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
+    eprintln!("enumerated {} iso-4TOPS design points", designs.len());
+
+    let m = models::resnet50();
+    let profiles = profile_model_repr(&m, 3, 8, 0.5);
+
+    let base = Design::baseline_sa();
+    let bt = network_timing(&base, &profiles);
+    let bp = power::power(&base, &bt.total).total_mw();
+    let ba = power::area(&base).total_mm2();
+    let bc = bt.total.cycles as f64;
+
+    // evaluate all points: effective (iso-work) power and area
+    let mut rows: Vec<(String, f64, f64)> = designs
+        .iter()
+        .map(|d| {
+            let t = network_timing(d, &profiles);
+            let slow = t.total.cycles as f64 / bc;
+            let p = power::power(d, &t.total).total_mw() * slow / bp;
+            let a = power::area(d).total_mm2() * slow / ba;
+            (d.label(), p, a)
+        })
+        .collect();
+    rows.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
+
+    if args.flag("csv") {
+        println!("design,norm_power,norm_area");
+        for (l, p, a) in &rows {
+            println!("{l},{p:.4},{a:.4}");
+        }
+        return;
+    }
+
+    // ---- pareto frontier (minimize both axes) ----
+    println!("pareto-optimal designs (normalized to {}):", base.label());
+    println!("  {:<28} {:>10} {:>10}", "design", "eff power", "eff area");
+    let mut best_area = f64::MAX;
+    let mut frontier = 0;
+    for (l, p, a) in &rows {
+        if *a < best_area {
+            best_area = *a;
+            frontier += 1;
+            println!("  {l:<28} {p:>10.3} {a:>10.3}");
+        }
+    }
+    println!("\n{} points on the frontier of {} total", frontier, rows.len());
+
+    // ---- the paper's three groupings (Fig 10's clusters) ----
+    let group = |l: &str| {
+        if l.contains("VDBB") {
+            "VDBB"
+        } else if l.contains("DBB") {
+            "fixed-DBB"
+        } else {
+            "dense"
+        }
+    };
+    for g in ["dense", "fixed-DBB", "VDBB"] {
+        let pts: Vec<&(String, f64, f64)> = rows.iter().filter(|(l, _, _)| group(l) == g).collect();
+        let pmin = pts.iter().map(|(_, p, _)| *p).fold(f64::MAX, f64::min);
+        let amin = pts.iter().map(|(_, _, a)| *a).fold(f64::MAX, f64::min);
+        println!("group {g:<10} n={:<3} best power {pmin:.3} best area {amin:.3}", pts.len());
+    }
+    println!("\n(the VDBB+IM2C corner is the paper's Fig 10 pareto group)");
+}

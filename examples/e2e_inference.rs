@@ -1,0 +1,122 @@
+//! End-to-end driver: the full three-layer stack on a real serving
+//! workload, proving all layers compose.
+//!
+//! * **Layer 1/2** (build time): `make artifacts` lowered the ConvNet-5
+//!   forward — Pallas VDBB-GEMM + IM2COL kernels inside a JAX graph — to
+//!   HLO text with the DBB-compressed INT8 weights baked in.
+//! * **Layer 3** (this binary): the rust coordinator loads the artifacts
+//!   via PJRT, serves a batched request stream (open-loop Poisson-ish
+//!   arrivals), and runs every batch through the STA-VDBB hardware twin
+//!   for simulated cycles/energy.
+//!
+//! Reports functional correctness (logits vs a golden replay), serving
+//! latency/throughput, batch occupancy, and the twin's effective TOPS and
+//! TOPS/W — the paper's headline metric, measured on served traffic.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_inference -- --requests 256
+//! ```
+
+use std::time::{Duration, Instant};
+
+use ssta::arch::Design;
+use ssta::cli::Args;
+use ssta::coordinator::{request::argmax, Config, Coordinator};
+use ssta::runtime::{HostTensor, Runtime};
+use ssta::util::Rng;
+
+const IMG: usize = 32 * 32 * 3;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let n = args.opt_as::<usize>("requests", 256);
+    let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
+    let design = Design::parse(args.opt("design").unwrap_or("4x8x8_8x8_VDBB_IM2C"))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    // ---- golden replay path: direct runtime, batch-1 ----
+    let mut rng = Rng::new(7);
+    let images: Vec<Vec<f32>> =
+        (0..n).map(|_| (0..IMG).map(|_| rng.f32()).collect()).collect();
+    eprintln!("golden replay of {} images on the raw runtime...", n.min(16));
+    let mut rt = Runtime::open(&artifacts)?;
+    let golden: Vec<Vec<f32>> = images
+        .iter()
+        .take(16)
+        .map(|im| {
+            let outs = rt.execute("convnet5_b1", &[HostTensor::F32(im.clone())]).unwrap();
+            outs[0].as_f32().to_vec()
+        })
+        .collect();
+    drop(rt);
+
+    // ---- serve the same stream through the coordinator ----
+    let coord = Coordinator::start(Config {
+        artifacts_dir: artifacts.into(),
+        design,
+        act_sparsity: 0.5,
+        max_wait: Duration::from_millis(1),
+    })?;
+    let h = coord.handle();
+
+    eprintln!("serving {n} requests (bursty open-loop arrivals)...");
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut arrival = Rng::new(99);
+    for (i, im) in images.iter().enumerate() {
+        pending.push(h.submit(i as u64, im.clone())?);
+        // bursty arrivals: occasionally pause so the batcher sees both
+        // full-batch and timeout-flush regimes
+        if arrival.coin(0.1) {
+            std::thread::sleep(Duration::from_micros(500));
+        }
+    }
+    let responses: Vec<_> = pending.into_iter().map(|rx| rx.recv().unwrap()).collect();
+    let wall = t0.elapsed();
+
+    // ---- functional check: served logits == golden replay ----
+    let mut checked = 0;
+    for (i, g) in golden.iter().enumerate() {
+        let r = &responses[i];
+        assert_eq!(r.id, i as u64);
+        for (a, b) in r.logits.iter().zip(g) {
+            assert!((a - b).abs() < 1e-4, "req {i}: served {a} vs golden {b}");
+        }
+        checked += 1;
+    }
+    println!("functional: {checked}/{checked} served responses match the golden replay exactly");
+
+    // ---- serving metrics ----
+    let m = coord.metrics();
+    let classes: Vec<usize> = responses.iter().map(|r| argmax(&r.logits)).collect();
+    let distinct = {
+        let mut c = classes.clone();
+        c.sort_unstable();
+        c.dedup();
+        c.len()
+    };
+    println!(
+        "served {n} requests in {wall:.2?} → {:.0} req/s, {distinct} distinct predicted classes",
+        n as f64 / wall.as_secs_f64()
+    );
+    println!("batching: {}", m.summary());
+
+    // ---- the hardware twin's verdict (the paper's metric) ----
+    let f = design.tech.freq_hz();
+    println!(
+        "hardware twin {}: {:.2} effective TOPS, {:.3} W avg → {:.1} effective TOPS/W on served traffic",
+        design.label(),
+        m.sim_effective_tops(f),
+        m.sim_avg_power_w(f),
+        m.sim_effective_tops(f) / m.sim_avg_power_w(f).max(1e-12),
+    );
+    println!(
+        "twin totals: {} cycles ({:.3} ms at {:.1} GHz), {:.2} mJ",
+        m.sim_cycles,
+        m.sim_cycles as f64 / f * 1e3,
+        f / 1e9,
+        m.sim_energy_mj
+    );
+    coord.shutdown()?;
+    Ok(())
+}

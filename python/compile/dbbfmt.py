@@ -1,0 +1,106 @@
+"""Density-Bound Block (DBB) weight format — build-time encode/decode.
+
+Mirrors the rust `ssta::dbb` module (paper §II, Fig. 2): a K×N INT8 weight
+matrix is blocked along K (the depth/channel dimension) into blocks of BZ
+elements; DBB bounds each block to at most NNZ non-zeros. The compressed
+tensor form used by the Pallas kernel stores, per (k-block, slot, column):
+
+* ``vals[KB, NNZ, N]``  int8  — the non-zero values, position-ordered,
+  zero-padded when a block has fewer than NNZ non-zeros;
+* ``idx[KB, NNZ, N]``   int32 — the position of each value inside its
+  expanded block (0..BZ-1). This is the bitmask metadata M of the paper in
+  pre-decoded "mux select" form: the hardware drives an 8:1 activation mux
+  with it, the kernel drives a gather.
+
+Padding slots carry ``val = 0`` with ``idx = 0`` — a multiply-by-zero, which
+is exactly what the hardware's zero-skipping leaves in the schedule.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "prune_to_dbb",
+    "compress",
+    "decompress",
+    "check_bound",
+    "storage_bits",
+    "compression_ratio",
+]
+
+
+def prune_to_dbb(w: np.ndarray, bz: int, nnz: int) -> np.ndarray:
+    """Magnitude-prune a dense K×N matrix to satisfy an (nnz, bz) DBB bound.
+
+    Within every depthwise block of ``bz`` elements, keep the ``nnz``
+    largest-magnitude values and zero the rest (paper §V-A's magnitude-based
+    DBB-aware pruning, single shot). The last ragged block is handled by
+    zero-padding K up to a block multiple.
+    """
+    if w.ndim != 2:
+        raise ValueError(f"expected K×N matrix, got shape {w.shape}")
+    k, n = w.shape
+    kb = -(-k // bz)
+    pad = kb * bz - k
+    wp = np.pad(w, ((0, pad), (0, 0))).reshape(kb, bz, n)
+    # rank positions by |value| descending within each block
+    order = np.argsort(-np.abs(wp), axis=1, kind="stable")
+    keep = np.zeros_like(wp, dtype=bool)
+    np.put_along_axis(keep, order[:, :nnz, :], True, axis=1)
+    out = np.where(keep, wp, 0).reshape(kb * bz, n)[:k]
+    return out.astype(w.dtype)
+
+
+def check_bound(w: np.ndarray, bz: int, nnz: int) -> bool:
+    """True iff every depthwise block of ``w`` has ≤ ``nnz`` non-zeros."""
+    k, n = w.shape
+    kb = -(-k // bz)
+    wp = np.pad(w, ((0, kb * bz - k), (0, 0))).reshape(kb, bz, n)
+    return bool(((wp != 0).sum(axis=1) <= nnz).all())
+
+
+def compress(w: np.ndarray, bz: int, nnz: int) -> tuple[np.ndarray, np.ndarray]:
+    """Encode a DBB-satisfying dense K×N matrix to ``(vals, idx)``.
+
+    Returns ``vals[KB, NNZ, N]`` (same dtype as ``w``) and
+    ``idx[KB, NNZ, N]`` int32. Raises if any block violates the bound —
+    the hardware would have to fall back to dense (paper §III).
+    """
+    if not check_bound(w, bz, nnz):
+        raise ValueError(f"matrix violates DBB bound {nnz}/{bz}")
+    k, n = w.shape
+    kb = -(-k // bz)
+    wp = np.pad(w, ((0, kb * bz - k), (0, 0))).reshape(kb, bz, n)
+    nonzero = wp != 0
+    # stable order: non-zeros first (by block position), zeros after
+    rank = np.argsort(~nonzero, axis=1, kind="stable")  # [KB, BZ, N]
+    sel = rank[:, :nnz, :]  # positions of the (up to) nnz non-zeros
+    vals = np.take_along_axis(wp, sel, axis=1)
+    taken_nonzero = np.take_along_axis(nonzero, sel, axis=1)
+    vals = np.where(taken_nonzero, vals, 0)
+    idx = np.where(taken_nonzero, sel, 0).astype(np.int32)
+    return vals.astype(w.dtype), idx
+
+
+def decompress(vals: np.ndarray, idx: np.ndarray, bz: int, k: int) -> np.ndarray:
+    """Decode ``(vals, idx)`` back to the dense K×N matrix."""
+    kb, nnz, n = vals.shape
+    out = np.zeros((kb, bz, n), dtype=vals.dtype)
+    kbi = np.arange(kb)[:, None, None]
+    ni = np.arange(n)[None, None, :]
+    # padding slots are (val 0, idx 0): adding zero is a no-op, so a plain
+    # scatter-add is safe even when idx collides with a real slot 0
+    np.add.at(out, (kbi, idx, ni), vals)
+    return out.reshape(kb * bz, n)[:k]
+
+
+def storage_bits(k: int, n: int, bz: int, nnz: int, wordbits: int = 8) -> int:
+    """Compressed bits: per block ``wordbits·NNZ + BZ`` (paper §II-A)."""
+    kb = -(-k // bz)
+    return kb * n * (wordbits * nnz + bz)
+
+
+def compression_ratio(bz: int, nnz: int, wordbits: int = 8) -> float:
+    """``wordbits·BZ / (wordbits·NNZ + BZ)`` — paper §II-A."""
+    return wordbits * bz / (wordbits * nnz + bz)

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: time-unrolled VDBB sparse GEMM (paper §III-B/§IV).
+
+This is the S8DP1 datapath of the STA-VDBB array expressed as a Pallas
+kernel. The compressed weight stream ``vals[KB, NNZ, N]`` is walked one
+*slot* at a time — the static inner loop over ``s in range(NNZ)`` is the
+paper's time unrolling: the number of executed slots per block equals the
+density bound, so effective throughput scales with weight sparsity exactly
+as in the hardware. The per-slot gather of activations with ``idx`` *is*
+the 8:1 activation mux driven by the bitmask metadata M.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper targets a
+16 nm ASIC, not a GPU, so the mapping is about representing the TPE
+datapath faithfully: TPE tiles (A×B×C sub-matrices) map to the BlockSpec
+tiles ``(bm, bn)``; the output-stationary INT32 accumulator maps to the
+kernel's carried accumulator; the HBM↔edge skew schedule is the Pallas
+grid. ``interpret=True`` everywhere — the CPU PJRT client cannot execute
+Mosaic custom-calls, and our correctness story is vs `ref.py`.
+
+NNZ (the density bound) is a *trace-time constant* — one lowered
+executable per bound, exactly like the hardware's per-layer stream
+configuration word.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dbb_gemm", "dbb_gemm_pallas_call"]
+
+
+def _acc_dtype(dtype) -> jnp.dtype:
+    return jnp.int32 if dtype == jnp.int8 else jnp.float32
+
+
+def _kernel(a_ref, vals_ref, idx_ref, o_ref, *, bz: int):
+    """One (bm×bn) output tile: all k-blocks of the reduction, time-unrolled.
+
+    a_ref:    [bm, KB*BZ]   activation tile (k padded to a block multiple)
+    vals_ref: [KB, NNZ, bn] compressed weights for this column tile
+    idx_ref:  [KB, NNZ, bn] positional metadata (mux selects)
+    o_ref:    [bm, bn]      output-stationary accumulators
+    """
+    kb_total, nnz, bn = vals_ref.shape
+    bm = a_ref.shape[0]
+    acc_t = _acc_dtype(a_ref.dtype)
+
+    def block_step(kb, acc):
+        # the A×B activation tile held at the TPE edge for this block
+        a_blk = pl.load(a_ref, (slice(None), pl.dslice(kb * bz, bz)))  # [bm, BZ]
+        a_blk = a_blk.astype(acc_t)
+        for s in range(nnz):  # ← time unrolling: one slot per cycle
+            w_s = pl.load(vals_ref, (kb, s, slice(None))).astype(acc_t)  # [bn]
+            i_s = pl.load(idx_ref, (kb, s, slice(None)))  # [bn]
+            gathered = jnp.take(a_blk, i_s, axis=1)  # the 8:1 mux  [bm, bn]
+            acc = acc + gathered * w_s[None, :]
+        return acc
+
+    acc = jnp.zeros((bm, bn), dtype=acc_t)
+    acc = jax.lax.fori_loop(0, kb_total, block_step, acc)
+    o_ref[...] = acc
+
+
+def dbb_gemm_pallas_call(
+    m: int,
+    k: int,
+    n: int,
+    nnz: int,
+    bz: int = 8,
+    *,
+    bm: int = 32,
+    bn: int = 32,
+    dtype=jnp.int8,
+):
+    """Build the pallas_call for an ``M×K×N`` DBB GEMM with bound ``nnz``.
+
+    Returns a function ``(a[M,K], vals[KB,NNZ,N], idx[KB,NNZ,N]) -> [M,N]``.
+    ``bm``/``bn`` are the output-tile shape (the VMEM working set is
+    ``bm·KB·BZ + 2·KB·NNZ·bn`` operand bytes + ``4·bm·bn`` accumulator
+    bytes — see EXPERIMENTS.md §Perf-L1 for the sizing rationale).
+    """
+    if m % bm:
+        bm = next(t for t in (16, 8, 4, 2, 1) if m % t == 0)
+    if n % bn:
+        bn = next(t for t in (16, 8, 4, 2, 1) if n % t == 0)
+    kb = -(-k // bz)
+    grid = (m // bm, n // bn)
+    acc_t = _acc_dtype(dtype)
+    return pl.pallas_call(
+        functools.partial(_kernel, bz=bz),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kb * bz), lambda i, j: (i, 0)),
+            pl.BlockSpec((kb, nnz, bn), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((kb, nnz, bn), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), acc_t),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )
+
+
+def dbb_gemm(a: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray, bz: int = 8, **tile) -> jnp.ndarray:
+    """Compute ``A[M,K] @ decompress(vals, idx)`` on the VDBB Pallas kernel.
+
+    ``A``'s reduction dim is zero-padded to a block multiple (the hardware's
+    ragged last block). Accumulates in INT32 for INT8 operands.
+    """
+    m, k = a.shape
+    kb, nnz, n = vals.shape
+    if kb * bz < k:
+        raise ValueError(f"weight encoding covers {kb * bz} rows < K={k}")
+    if kb * bz > k:
+        a = jnp.pad(a, ((0, 0), (0, kb * bz - k)))
+    call = dbb_gemm_pallas_call(m, kb * bz, n, nnz, bz, dtype=a.dtype, **tile)
+    return call(a, vals, idx)

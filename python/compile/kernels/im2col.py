@@ -1,0 +1,65 @@
+"""Layer-1 Pallas kernel: the hardware IM2COL bandwidth magnifier (§IV-C).
+
+The hardware unit sits between the activation SRAM and the datapath: it
+buffers a few input rows and emits IM2COL-expanded patch rows at 3× the
+SRAM read bandwidth (for 3×3 kernels). The Pallas analog reads the (padded)
+feature map once per output row and emits the expanded ``[OW, KH*KW*C]``
+patch rows — the duplication happens *after* the (modelled) SRAM, in VMEM,
+just like the unit's internal buffer register array.
+
+The grid iterates output rows; the static inner loop over ``ow`` plays the
+role of the unit's two-outputs-per-cycle register combining.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["im2col", "im2col_magnification"]
+
+
+def im2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1, pad: int = 0) -> jnp.ndarray:
+    """IM2COL a ``[H, W, C]`` feature map to ``[OH*OW, KH*KW*C]`` patches."""
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    hp, wp = h + 2 * pad, w + 2 * pad
+    oh = (hp - kh) // stride + 1
+    ow = (wp - kw) // stride + 1
+
+    def kernel(x_ref, o_ref):
+        # x_ref: [HP, WP, C] (whole padded map — the overlapping KH-row
+        # windows of a strided conv don't tile as BlockSpec blocks);
+        # o_ref: [OW, KH*KW*C] — the patch rows of output row i.
+        i = pl.program_id(0)
+        for j in range(ow):  # ← the unit's per-cycle register combining
+            patch = pl.load(
+                x_ref,
+                (pl.dslice(i * stride, kh), pl.dslice(j * stride, kw), slice(None)),
+            )
+            o_ref[j, :] = patch.reshape(kh * kw * c)
+
+    call = pl.pallas_call(
+        kernel,
+        grid=(oh,),
+        in_specs=[pl.BlockSpec((hp, wp, c), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((ow, kh * kw * c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((oh * ow, kh * kw * c), x.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )
+    return call(xp)
+
+
+def im2col_magnification(kh: int, stride: int, buf_rows: int = 6) -> float:
+    """SRAM-read magnification the hardware unit provides (paper Fig. 8).
+
+    The unit captures the *vertical* reuse of the patch window in its row
+    buffers: each SRAM byte serves ``kh/stride`` output rows, capped by the
+    buffered-row capacity (``buf_rows − kh + 1`` output rows per refill).
+    3× for 3×3 stride-1, 1× for 1×1 pointwise — mirrors
+    ``ssta::sim::im2col::Im2colUnit::magnification`` exactly.
+    """
+    if kh <= 1 or stride >= kh:
+        return 1.0
+    return max(1.0, min(kh / stride, float(buf_rows - kh + 1)))

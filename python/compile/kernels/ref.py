@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels — the build-time correctness
+reference (`pytest python/tests` checks every kernel against these).
+
+These are deliberately the simplest possible formulations: decompress the
+DBB operand to dense and call `jnp.matmul`; materialize IM2COL patches with
+plain indexing. No Pallas, no tiling.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["dbb_decompress", "dbb_gemm_ref", "im2col_ref", "requant_relu_ref"]
+
+
+def dbb_decompress(vals: jnp.ndarray, idx: jnp.ndarray, bz: int, k: int) -> jnp.ndarray:
+    """Expand ``(vals[KB,NNZ,N], idx[KB,NNZ,N])`` to the dense ``K×N``."""
+    kb, nnz, n = vals.shape
+    dense = jnp.zeros((kb, bz, n), dtype=vals.dtype)
+    kbi = jnp.arange(kb)[:, None, None]
+    ni = jnp.arange(n)[None, None, :]
+    # padding slots are (0, idx 0): scatter-add of zero is a no-op
+    dense = dense.at[kbi, idx, ni].add(vals)
+    return dense.reshape(kb * bz, n)[:k]
+
+
+def dbb_gemm_ref(a: jnp.ndarray, vals: jnp.ndarray, idx: jnp.ndarray, bz: int) -> jnp.ndarray:
+    """Reference ``A[M,K] @ decompress(vals, idx)`` with wide accumulation.
+
+    INT8 operands accumulate in INT32 (the paper's datapath); float operands
+    accumulate in float32.
+    """
+    k = a.shape[1]
+    w = dbb_decompress(vals, idx, bz, k)
+    acc = jnp.int32 if a.dtype == jnp.int8 else jnp.float32
+    return jnp.matmul(a.astype(acc), w.astype(acc), preferred_element_type=acc)
+
+
+def im2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int, pad: int) -> jnp.ndarray:
+    """Reference IM2COL: ``x[H,W,C]`` → patches ``[OH*OW, KH*KW*C]``.
+
+    Row-major over output pixels; each row is the flattened KH×KW×C patch,
+    matching both the Pallas kernel and the hardware unit's output order.
+    """
+    h, w, c = x.shape
+    xp = jnp.pad(x, ((pad, pad), (pad, pad), (0, 0)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    rows = []
+    for i in range(oh):
+        for j in range(ow):
+            patch = xp[i * stride : i * stride + kh, j * stride : j * stride + kw, :]
+            rows.append(patch.reshape(-1))
+    return jnp.stack(rows)
+
+
+def requant_relu_ref(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
+    """INT32 → INT8 with a power-of-two scale, then optional ReLU.
+
+    Zero-point is exactly 0 (paper §V-A trains with STE so FP 0 → INT 0),
+    which is what makes post-ReLU zeros exact zeros the hardware can gate on.
+    """
+    q = jnp.clip(acc >> shift, -127, 127).astype(jnp.int8)
+    if relu:
+        q = jnp.maximum(q, 0)
+    return q

@@ -1,0 +1,238 @@
+"""Layer-2 JAX model: INT8 CNN forward pass on the VDBB kernels.
+
+The paper's workload is CNN inference lowered to GEMM (§I): every conv
+layer becomes IM2COL (the Layer-1 `im2col` kernel — the hardware unit's
+analog) followed by a DBB-sparse GEMM (the Layer-1 `dbb_gemm` kernel — the
+time-unrolled STA-VDBB datapath). Requantization + ReLU follow each layer
+(the Cortex-M33 ancillary path), with power-of-two scales and an exact
+zero point so post-ReLU zeros are exact zeros the hardware clock-gates on.
+
+The network here is the paper's 5-layer **ConvNet** benchmark (Table I:
+CIFAR-10, 32×32×3, conv5×5×32 / conv5×5×32 / conv5×5×64 / fc64 / fc10) with
+DBB applied to every layer except the first conv and the classifier head
+(paper §V-A convention). Weights are synthetic magnitude-pruned INT8 —
+the Table I *accuracy* experiments train real models in the rust `train`
+substrate; this module is the *serving* model, AOT-lowered once by
+`aot.py` and executed from rust via PJRT.
+
+Everything is traceable: `convnet5_forward` contains no Python-side data
+dependence, so `jax.jit(...).lower()` produces a single fused HLO with the
+weights baked in as constants (they are known in advance — §II-A).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import dbbfmt
+from .kernels.dbb_gemm import dbb_gemm
+from .kernels.im2col import im2col
+from .kernels.ref import dbb_gemm_ref, im2col_ref
+
+BZ = 8
+
+# (name, kind, geometry, dbb?) — ConvNet-5 of paper Table I.
+# conv geometry: (kh, kw, cin, cout, stride, pad); fc: (in, out)
+CONVNET5 = [
+    ("conv1", "conv", (5, 5, 3, 32, 1, 2), False),
+    ("conv2", "conv", (5, 5, 32, 32, 1, 2), True),
+    ("conv3", "conv", (5, 5, 32, 64, 1, 2), True),
+    ("fc1", "fc", (1024, 64), True),
+    ("fc2", "fc", (64, 10), False),
+]
+
+
+@dataclass
+class LayerParams:
+    """One layer's compressed weights + static requant shift."""
+
+    name: str
+    kind: str
+    geom: tuple
+    nnz: int  # density bound this layer is encoded with (BZ = dense)
+    vals: np.ndarray  # [KB, NNZ, N] int8
+    idx: np.ndarray  # [KB, NNZ, N] int32
+    shift: int = 0  # calibrated power-of-two requant shift
+
+    @property
+    def gemm_k(self) -> int:
+        if self.kind == "conv":
+            kh, kw, cin, *_ = self.geom
+            return kh * kw * cin
+        return self.geom[0]
+
+    @property
+    def gemm_n(self) -> int:
+        return self.geom[3] if self.kind == "conv" else self.geom[1]
+
+
+@dataclass
+class ConvNet5Params:
+    """Whole-model parameters (see `build_convnet5`)."""
+
+    nnz: int
+    layers: list[LayerParams] = field(default_factory=list)
+
+
+def _synthesize_weights(rng: np.ndarray, k: int, n: int, nnz: int) -> np.ndarray:
+    """Random INT8 weights magnitude-pruned to the DBB bound."""
+    w = rng.integers(-64, 65, (k, n)).astype(np.int8)
+    w[w == 0] = 7  # keep blocks genuinely at the bound
+    if nnz < BZ:
+        w = dbbfmt.prune_to_dbb(w, BZ, nnz)
+    return w
+
+
+def _maxpool2x2(x: jnp.ndarray) -> jnp.ndarray:
+    """2×2 max pooling on [H, W, C] (MCU ancillary op)."""
+    h, w, c = x.shape
+    return x.reshape(h // 2, 2, w // 2, 2, c).max(axis=(1, 3))
+
+
+def _requant_relu(acc: jnp.ndarray, shift: int, relu: bool) -> jnp.ndarray:
+    q = jnp.clip(acc >> shift, -127, 127).astype(jnp.int8)
+    return jnp.maximum(q, 0) if relu else q
+
+
+def quantize_input(x: jnp.ndarray) -> jnp.ndarray:
+    """FP32 image in [0,1] → symmetric INT8 (the DMA-in conversion)."""
+    return jnp.clip(jnp.round(x * 127.0), -127, 127).astype(jnp.int8)
+
+
+def build_convnet5(nnz: int = 4, seed: int = 0, calib_batch: int = 4) -> ConvNet5Params:
+    """Synthesize DBB-pruned weights and calibrate the requant shifts.
+
+    Calibration runs the pure-jnp reference forward on a random batch and
+    picks, per layer, the smallest power-of-two shift that keeps the INT32
+    accumulator inside INT8 after scaling (the same rule as the rust
+    `sim::accel::requant_relu` path).
+    """
+    rng = np.random.default_rng(seed)
+    params = ConvNet5Params(nnz=nnz)
+    for name, kind, geom, dbb in CONVNET5:
+        bound = nnz if dbb else BZ
+        if kind == "conv":
+            kh, kw, cin, cout, _, _ = geom
+            k, n = kh * kw * cin, cout
+        else:
+            k, n = geom
+        w = _synthesize_weights(rng, k, n, bound)
+        vals, idx = dbbfmt.compress(w, BZ, bound)
+        params.layers.append(LayerParams(name, kind, geom, bound, vals, idx))
+
+    # ---- shift calibration on the reference path ----
+    x = rng.random((calib_batch, 32, 32, 3), dtype=np.float32)
+    xq = np.asarray(quantize_input(jnp.asarray(x)))
+    act = xq
+    for li, lp in enumerate(params.layers):
+        relu = li + 1 < len(params.layers)
+        if lp.kind == "conv":
+            kh, kw, cin, cout, stride, pad = lp.geom
+            cols = np.stack(
+                [np.asarray(im2col_ref(jnp.asarray(a), kh, kw, stride, pad)) for a in act]
+            )  # [B, OH*OW, K]
+            m = cols.shape[1]
+            a2d = cols.reshape(-1, cols.shape[-1])
+        else:
+            a2d = act.reshape(act.shape[0], -1)
+        acc = np.asarray(
+            dbb_gemm_ref(jnp.asarray(a2d), jnp.asarray(lp.vals), jnp.asarray(lp.idx), BZ)
+        )
+        max_abs = max(int(np.abs(acc).max()), 1)
+        shift = 0
+        while (max_abs >> shift) > 127:
+            shift += 1
+        lp.shift = shift
+        q = np.clip(acc >> shift, -127, 127).astype(np.int8)
+        if relu:
+            q = np.maximum(q, 0)
+        if lp.kind == "conv":
+            _, _, _, cout, stride, pad = lp.geom
+            hw = int(np.sqrt(m))
+            fmap = q.reshape(calib_batch, hw, hw, cout)
+            act = np.stack([np.asarray(_maxpool2x2(jnp.asarray(f))) for f in fmap])
+        else:
+            act = q
+    return params
+
+
+def convnet5_forward(params: ConvNet5Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass: ``x[B,32,32,3]`` f32 in [0,1] → logits ``[B,10]`` f32.
+
+    Conv layers run IM2COL (Pallas) + VDBB GEMM (Pallas) with the batch
+    folded into the GEMM M dimension — exactly how the rust coordinator's
+    dynamic batcher shapes work for the array.
+    """
+    b = x.shape[0]
+    act = quantize_input(x)  # [B, 32, 32, 3] int8
+    n_layers = len(params.layers)
+    for li, lp in enumerate(params.layers):
+        relu = li + 1 < n_layers
+        vals, idx = jnp.asarray(lp.vals), jnp.asarray(lp.idx)
+        if lp.kind == "conv":
+            kh, kw, cin, cout, stride, pad = lp.geom
+            cols = jax.vmap(lambda a: im2col(a, kh, kw, stride, pad))(act)
+            m_per = cols.shape[1]
+            a2d = cols.reshape(b * m_per, -1)  # batch folded into M
+            acc = dbb_gemm(a2d, vals, idx, BZ)
+            q = _requant_relu(acc, lp.shift, relu)
+            hw = int(round(m_per**0.5))
+            fmap = q.reshape(b, hw, hw, cout)
+            act = jax.vmap(_maxpool2x2)(fmap)
+        else:
+            a2d = act.reshape(b, -1)
+            acc = dbb_gemm(a2d, vals, idx, BZ)
+            if relu:
+                act = _requant_relu(acc, lp.shift, True)
+            else:
+                return acc.astype(jnp.float32)  # logits
+    raise AssertionError("unreachable: last layer returns")
+
+
+def convnet5_forward_ref(params: ConvNet5Params, x: jnp.ndarray) -> jnp.ndarray:
+    """Same forward on the pure-jnp oracles (kernel-free) — the L2 oracle."""
+    b = x.shape[0]
+    act = quantize_input(x)
+    n_layers = len(params.layers)
+    for li, lp in enumerate(params.layers):
+        relu = li + 1 < n_layers
+        vals, idx = jnp.asarray(lp.vals), jnp.asarray(lp.idx)
+        if lp.kind == "conv":
+            kh, kw, cin, cout, stride, pad = lp.geom
+            cols = jnp.stack([im2col_ref(a, kh, kw, stride, pad) for a in act])
+            m_per = cols.shape[1]
+            a2d = cols.reshape(b * m_per, -1)
+            acc = dbb_gemm_ref(a2d, vals, idx, BZ)
+            q = _requant_relu(acc, lp.shift, relu)
+            hw = int(round(m_per**0.5))
+            act = jax.vmap(_maxpool2x2)(q.reshape(b, hw, hw, cout))
+        else:
+            a2d = act.reshape(b, -1)
+            acc = dbb_gemm_ref(a2d, vals, idx, BZ)
+            if relu:
+                act = _requant_relu(acc, lp.shift, True)
+            else:
+                return acc.astype(jnp.float32)
+    raise AssertionError("unreachable")
+
+
+def model_weight_stats(params: ConvNet5Params) -> dict:
+    """Per-layer (k, n, nnz, storage bits) — consumed by the rust timing
+    path via the artifact manifest."""
+    out = {}
+    for lp in params.layers:
+        out[lp.name] = {
+            "kind": lp.kind,
+            "geom": list(lp.geom),
+            "k": lp.gemm_k,
+            "n": lp.gemm_n,
+            "nnz": lp.nnz,
+            "bz": BZ,
+            "shift": lp.shift,
+            "storage_bits": dbbfmt.storage_bits(lp.gemm_k, lp.gemm_n, BZ, lp.nnz),
+        }
+    return out

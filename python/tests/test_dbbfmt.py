@@ -1,0 +1,90 @@
+"""DBB format (numpy side): prune / compress / decompress invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import dbbfmt
+
+
+def rand_w(rng, k, n):
+    return rng.integers(-127, 128, (k, n)).astype(np.int8)
+
+
+@given(
+    k=st.integers(1, 64),
+    n=st.integers(1, 16),
+    bz=st.sampled_from([2, 4, 8, 16]),
+    seed=st.integers(0, 2**31),
+    data=st.data(),
+)
+@settings(max_examples=60, deadline=None)
+def test_prune_compress_roundtrip(k, n, bz, seed, data):
+    nnz = data.draw(st.integers(1, bz))
+    rng = np.random.default_rng(seed)
+    w = dbbfmt.prune_to_dbb(rand_w(rng, k, n), bz, nnz)
+    assert dbbfmt.check_bound(w, bz, nnz)
+    vals, idx = dbbfmt.compress(w, bz, nnz)
+    assert vals.shape == idx.shape == (-(-k // bz), nnz, n)
+    back = dbbfmt.decompress(vals, idx, bz, k)
+    np.testing.assert_array_equal(back, w)
+
+
+@given(
+    k=st.integers(1, 48),
+    n=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+    nnz=st.integers(1, 8),
+)
+@settings(max_examples=40, deadline=None)
+def test_prune_keeps_largest_magnitudes(k, n, seed, nnz):
+    bz = 8
+    rng = np.random.default_rng(seed)
+    w = rand_w(rng, k, n)
+    p = dbbfmt.prune_to_dbb(w, bz, nnz)
+    kb = -(-k // bz)
+    wp = np.pad(w, ((0, kb * bz - k), (0, 0))).reshape(kb, bz, n)
+    pp = np.pad(p, ((0, kb * bz - k), (0, 0))).reshape(kb, bz, n)
+    # every kept value must be >= every dropped value in magnitude
+    for b in range(kb):
+        for c in range(n):
+            kept = np.abs(wp[b, pp[b, :, c] != 0, c])
+            dropped = np.abs(wp[b, (pp[b, :, c] == 0) & (wp[b, :, c] != 0), c])
+            if kept.size and dropped.size:
+                assert kept.min() >= dropped.max()
+
+
+def test_compress_rejects_bound_violation():
+    w = np.full((8, 2), 3, dtype=np.int8)  # fully dense
+    with pytest.raises(ValueError):
+        dbbfmt.compress(w, 8, 2)
+
+
+def test_padding_slots_are_zero():
+    # a block with fewer non-zeros than the bound pads with (0, idx 0)
+    w = np.zeros((8, 1), dtype=np.int8)
+    w[5, 0] = 9
+    vals, idx = dbbfmt.compress(w, 8, 3)
+    assert vals[0, 0, 0] == 9 and idx[0, 0, 0] == 5
+    assert (vals[0, 1:, 0] == 0).all() and (idx[0, 1:, 0] == 0).all()
+
+
+def test_ragged_k_roundtrip():
+    rng = np.random.default_rng(7)
+    w = dbbfmt.prune_to_dbb(rand_w(rng, 13, 3), 8, 2)
+    vals, idx = dbbfmt.compress(w, 8, 2)
+    np.testing.assert_array_equal(dbbfmt.decompress(vals, idx, 8, 13), w)
+
+
+def test_storage_and_compression_formulas():
+    # paper §II-A: block of BZ=8 at NNZ=2 → 8*8/(8*2+8) ≈ 2.67×
+    assert dbbfmt.storage_bits(64, 16, 8, 2) == 8 * 16 * (8 * 2 + 8)
+    assert abs(dbbfmt.compression_ratio(8, 2) - 64 / 24) < 1e-12
+
+
+def test_dense_bound_is_identity():
+    rng = np.random.default_rng(3)
+    w = rand_w(rng, 24, 5)
+    vals, idx = dbbfmt.compress(w, 8, 8)
+    np.testing.assert_array_equal(dbbfmt.decompress(vals, idx, 8, 24), w)

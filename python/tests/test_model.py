@@ -1,0 +1,95 @@
+"""L2 model: Pallas forward vs oracle forward, quantization invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dbbfmt, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.build_convnet5(nnz=4, seed=0, calib_batch=2)
+
+
+def test_forward_matches_ref(params):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random((2, 32, 32, 3), dtype=np.float32))
+    got = model.convnet5_forward(params, x)
+    want = model.convnet5_forward_ref(params, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert got.shape == (2, 10)
+    assert got.dtype == jnp.float32
+
+
+def test_forward_batch1(params):
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.random((1, 32, 32, 3), dtype=np.float32))
+    out = model.convnet5_forward(params, x)
+    assert out.shape == (1, 10)
+
+
+def test_batch_rows_independent(params):
+    # batch folding into GEMM M must not mix rows (coordinator invariant)
+    rng = np.random.default_rng(3)
+    x2 = jnp.asarray(rng.random((2, 32, 32, 3), dtype=np.float32))
+    both = np.asarray(model.convnet5_forward(params, x2))
+    one = np.asarray(model.convnet5_forward(params, x2[:1]))
+    np.testing.assert_array_equal(both[0], one[0])
+
+
+def test_dbb_layers_satisfy_bound(params):
+    for lp in params.layers:
+        w = dbbfmt.decompress(lp.vals, lp.idx, model.BZ, lp.gemm_k)
+        assert dbbfmt.check_bound(w, model.BZ, lp.nnz), lp.name
+
+
+def test_first_and_last_layers_dense(params):
+    # paper §V-A: first conv + classifier head are left unpruned
+    assert params.layers[0].nnz == model.BZ
+    assert params.layers[-1].nnz == model.BZ
+    for lp in params.layers[1:-1]:
+        assert lp.nnz == 4
+
+
+def test_quantize_input_exact_zero():
+    # STE-style quantization: FP 0 → INT 0 exactly (gating correctness)
+    x = jnp.zeros((1, 4), jnp.float32)
+    assert (np.asarray(model.quantize_input(x)) == 0).all()
+
+
+def test_quantize_input_range():
+    x = jnp.asarray([[0.0, 1.0, 0.5, 2.0]], jnp.float32)
+    q = np.asarray(model.quantize_input(x))
+    assert q[0, 0] == 0 and q[0, 1] == 127 and q[0, 3] == 127  # clamped
+
+
+def test_calibrated_shifts_keep_int8(params):
+    # logits are the raw INT32 accumulators of the head (no requant on the
+    # last layer); intermediate activations are INT8 by construction, so the
+    # head's accumulator magnitude is bounded by K·127·|w|max
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.random((2, 32, 32, 3), dtype=np.float32))
+    out = np.asarray(model.convnet5_forward_ref(params, x))
+    assert np.isfinite(out).all()
+    assert np.abs(out).max() <= 64 * 127 * 64  # K=64, |w|<=64
+    assert out.std() > 0
+
+
+def test_weight_stats_consistent(params):
+    stats = model.model_weight_stats(params)
+    assert set(stats) == {l.name for l in params.layers}
+    assert stats["conv2"]["k"] == 5 * 5 * 32
+    assert stats["conv2"]["nnz"] == 4
+    assert stats["fc1"]["k"] == 1024
+    # §II-A storage: conv2 = KB*N*(8*NNZ+BZ) bits
+    assert stats["conv2"]["storage_bits"] == 100 * 32 * (8 * 4 + 8)
+
+
+def test_different_nnz_changes_model():
+    p2 = model.build_convnet5(nnz=2, seed=0, calib_batch=1)
+    assert p2.layers[1].vals.shape[1] == 2
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.random((1, 32, 32, 3), dtype=np.float32))
+    out = model.convnet5_forward_ref(p2, x)
+    assert np.isfinite(np.asarray(out)).all()

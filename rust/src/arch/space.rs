@@ -1,0 +1,166 @@
+//! Design-space enumeration (paper §VI-A): generate the family of
+//! iso-peak-throughput design points — every combination of TPE geometry,
+//! datapath variant and IM2COL option, sized to the same nominal MAC budget
+//! (4 TOPS ⇒ 2048 MACs at 1 GHz) — plus the curated 12-design subset used
+//! in Figs 9 and 11.
+
+use super::{ArrayDims, Datapath, Design, Tech};
+
+/// MAC budget for a nominal 4 TOPS array at 1 GHz.
+pub const MACS_4TOPS: usize = 2048;
+
+/// Factor `total` into an (m, n) grid as near-square as possible with n ≥ m
+/// (paper arrays are wider than tall, e.g. 32×64).
+pub fn near_square_grid(total: usize) -> Option<(usize, usize)> {
+    let mut best: Option<(usize, usize)> = None;
+    for m in 1..=total {
+        if m * m > total {
+            break;
+        }
+        if total % m == 0 {
+            best = Some((m, total / m));
+        }
+    }
+    best
+}
+
+/// Enumerate the full iso-throughput design space at a MAC budget.
+///
+/// Candidate TPE geometries follow the paper: A, C ∈ {1, 2, 4, 8} with
+/// B = 8 (the DBB block size) for tensor PEs, plus the scalar 1×1×1
+/// baseline. For each geometry we emit the valid datapath variants
+/// (dense; fixed-DBB 2/8 and 4/8; VDBB) × IM2COL on/off, keeping only
+/// configurations whose per-TPE MAC count divides the budget.
+pub fn enumerate(mac_budget: usize, tech: Tech) -> Vec<Design> {
+    let mut out = Vec::new();
+    let mut push = |dims: ArrayDims, dp: Datapath, im2c: bool| {
+        let d = Design {
+            dims,
+            datapath: dp,
+            im2col: im2c,
+            act_cg: true,
+            tech,
+        };
+        if d.validate().is_ok() {
+            out.push(d);
+        }
+    };
+
+    // scalar SA baseline (1x1x1)
+    if let Some((m, n)) = near_square_grid(mac_budget / 2).map(|(m, n)| (m, n * 2)) {
+        // prefer the paper's 32x64 aspect for 2048
+        let dims = ArrayDims { a: 1, b: 1, c: 1, m, n };
+        push(dims, Datapath::Dense, false);
+        push(dims, Datapath::Dense, true);
+    }
+
+    let geoms: &[(usize, usize)] = &[(1, 8), (2, 2), (2, 4), (2, 8), (4, 4), (4, 8), (8, 8)];
+    for &(a, c) in geoms {
+        let b = 8usize;
+        for dp in [
+            Datapath::Dense,
+            Datapath::FixedDbb { b: 2 },
+            Datapath::FixedDbb { b: 4 },
+            Datapath::Vdbb,
+        ] {
+            let per_tpe = match dp {
+                Datapath::Dense => a * b * c,
+                Datapath::FixedDbb { b: nnz } => a * nnz * c,
+                Datapath::Vdbb => a * c,
+            };
+            if per_tpe == 0 || mac_budget % per_tpe != 0 {
+                continue;
+            }
+            let tpes = mac_budget / per_tpe;
+            let Some((m, n)) = near_square_grid(tpes) else {
+                continue;
+            };
+            let dims = ArrayDims { a, b, c, m, n };
+            for im2c in [false, true] {
+                push(dims, dp, im2c);
+            }
+        }
+    }
+    out
+}
+
+/// The curated 12-design subset used for the per-layer power figure
+/// (paper Fig. 11) and the breakdown bars (Fig. 9): baseline SA, dense
+/// STAs, fixed-DBB and VDBB variants, with and without IM2COL.
+pub fn representative_12(tech: Tech) -> Vec<Design> {
+    let parse = |s: &str| {
+        let mut d = Design::parse(s).expect("representative design parses");
+        d.tech = tech;
+        d
+    };
+    vec![
+        parse("1x1x1_32x64"),            // TPU-like baseline (normalization point)
+        parse("1x1x1_32x64_IM2C"),       // baseline + IM2COL
+        parse("2x8x2_8x8"),              // dense STA, small TPE
+        parse("4x8x4_4x4"),              // dense STA, large TPE (2048 MACs)
+        parse("4x8x4_4x4_IM2C"),         // dense STA + IM2COL
+        parse("2x8x2_8x16_DBB4of8"),     // fixed DBB, small TPE
+        parse("4x8x4_4x8_DBB4of8"),      // fixed DBB (paper's DBB design)
+        parse("4x8x4_4x8_DBB4of8_IM2C"), // fixed DBB + IM2COL
+        parse("2x8x2_16x32_VDBB"),       // VDBB, small TPE
+        parse("4x8x4_8x16_VDBB"),        // VDBB, mid TPE
+        parse("4x8x8_8x8_VDBB"),         // VDBB, large TPE
+        parse("4x8x8_8x8_VDBB_IM2C"),    // the pareto-optimal design (Table IV)
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn near_square_prefers_wide() {
+        assert_eq!(near_square_grid(2048), Some((32, 64)));
+        assert_eq!(near_square_grid(64), Some((8, 8)));
+        assert_eq!(near_square_grid(1), Some((1, 1)));
+        assert_eq!(near_square_grid(13), Some((1, 13)));
+    }
+
+    #[test]
+    fn all_enumerated_designs_hit_budget() {
+        let space = enumerate(MACS_4TOPS, Tech::N16);
+        assert!(space.len() >= 30, "space too small: {}", space.len());
+        for d in &space {
+            assert_eq!(d.physical_macs(), MACS_4TOPS, "{}", d.label());
+            d.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn space_contains_paper_families() {
+        let space = enumerate(MACS_4TOPS, Tech::N16);
+        let labels: Vec<String> = space.iter().map(|d| d.label()).collect();
+        assert!(labels.iter().any(|l| l.starts_with("1x1x1")), "{labels:?}");
+        assert!(labels.iter().any(|l| l.contains("VDBB")));
+        assert!(labels.iter().any(|l| l.contains("DBB4of8")));
+        assert!(labels.iter().any(|l| l.contains("IM2C")));
+    }
+
+    #[test]
+    fn representative_12_are_iso_throughput() {
+        let reps = representative_12(Tech::N16);
+        assert_eq!(reps.len(), 12);
+        for d in &reps {
+            assert_eq!(d.physical_macs(), MACS_4TOPS, "{}", d.label());
+        }
+        // normalization point first
+        assert_eq!(reps[0].label(), "1x1x1_32x64");
+        // the optimal design is present
+        assert!(reps.iter().any(|d| d.label() == "4x8x8_8x8_VDBB_IM2C"));
+    }
+
+    #[test]
+    fn no_duplicate_labels_in_space() {
+        let space = enumerate(MACS_4TOPS, Tech::N16);
+        let mut labels: Vec<String> = space.iter().map(|d| d.label()).collect();
+        let n = labels.len();
+        labels.sort();
+        labels.dedup();
+        assert_eq!(labels.len(), n);
+    }
+}

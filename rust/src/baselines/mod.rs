@@ -1,0 +1,11 @@
+//! Comparison baselines for Table V.
+//!
+//! * [`smt_sa`] — our re-implementation of SMT-SA (Shomron et al., the only
+//!   other sparse systolic array), as the paper also did ("we implemented
+//!   the same design ourselves … with INT8 operands in 16nm").
+//! * [`published`] — the published numbers for the remaining comparison
+//!   rows (Laconic, SCNN, Kang, Eyeriss v2), clearly marked as constants
+//!   from the literature, exactly as the paper cites them.
+
+pub mod published;
+pub mod smt_sa;

@@ -1,0 +1,114 @@
+//! Minimal command-line argument parser (offline substrate for `clap`).
+//!
+//! Supports the subcommand + flags shape the `ssta` binary and the bench
+//! harnesses need: `ssta <command> [--flag] [--key value] [positional...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: BTreeMap<String, String>,
+    /// `--flag` booleans.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    ///
+    /// A `--name` token followed by a token that does not start with `--`
+    /// is an option; otherwise it is a flag. Everything else is positional.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.options.insert(name.to_string(), toks[i + 1].clone());
+                    i += 2;
+                    continue;
+                }
+                out.flags.push(name.to_string());
+            } else if out.command.is_none() {
+                out.command = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Boolean flag present?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Option value.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(String::as_str)
+    }
+
+    /// Option parsed to a type, with default.
+    pub fn opt_as<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.opt(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("table5 --csv --quick");
+        assert_eq!(a.command.as_deref(), Some("table5"));
+        assert!(a.flag("csv") && a.flag("quick"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn options_with_values() {
+        let a = parse("serve --design 4x8x8_8x8_VDBB_IM2C --requests 100");
+        assert_eq!(a.opt("design"), Some("4x8x8_8x8_VDBB_IM2C"));
+        assert_eq!(a.opt_as::<usize>("requests", 0), 100);
+        assert_eq!(a.opt_as::<usize>("missing", 7), 7);
+    }
+
+    #[test]
+    fn positional_after_command() {
+        let a = parse("run fig9 fig10");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["fig9", "fig10"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b v");
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b"), Some("v"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert!(a.positional.is_empty());
+    }
+}

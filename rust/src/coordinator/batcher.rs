@@ -1,0 +1,145 @@
+//! Dynamic batching policy.
+//!
+//! The accelerator's GEMM datapath folds the batch into the GEMM `M`
+//! dimension (Layer-2 does exactly this), so batching multiplies array
+//! utilization for free until the activation buffer bound. The AOT model
+//! is compiled for a fixed set of batch sizes (`convnet5_b1`, `convnet5_b8`
+//! — one executable per shape, there is no dynamic-shape PJRT path), so the
+//! batcher's job is:
+//!
+//! 1. accumulate requests until the largest compiled batch fills, or the
+//!    oldest request has waited `max_wait`;
+//! 2. split the pending queue into chunks of compiled sizes, padding the
+//!    final chunk up to the smallest compiled size that fits (padded rows
+//!    are zero images whose outputs are dropped).
+
+use std::time::Duration;
+
+/// Batching policy configuration.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Batch sizes with a compiled executable, ascending (e.g. `[1, 8]`).
+    pub sizes: Vec<usize>,
+    /// Max time the oldest request may wait before a forced flush.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// New policy; `sizes` must be non-empty and is sorted ascending.
+    pub fn new(mut sizes: Vec<usize>, max_wait: Duration) -> Self {
+        assert!(!sizes.is_empty(), "need at least one compiled batch size");
+        sizes.sort_unstable();
+        sizes.dedup();
+        BatchPolicy { sizes, max_wait }
+    }
+
+    /// Largest compiled size.
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Should the queue flush now? (full batch ready, or timeout expired
+    /// with anything pending)
+    pub fn should_flush(&self, pending: usize, oldest_wait: Duration) -> bool {
+        pending >= self.max_batch() || (pending > 0 && oldest_wait >= self.max_wait)
+    }
+
+    /// Plan the execution chunks for `pending` requests: returns
+    /// `(compiled_size, real_rows)` pairs covering all requests, preferring
+    /// large chunks, padding only the tail chunk.
+    ///
+    /// Invariants (property-tested): Σ real_rows == pending;
+    /// real_rows ≤ compiled_size; every compiled_size ∈ sizes.
+    pub fn plan(&self, pending: usize) -> Vec<(usize, usize)> {
+        let mut chunks = Vec::new();
+        let mut left = pending;
+        let max = self.max_batch();
+        while left >= max {
+            chunks.push((max, max));
+            left -= max;
+        }
+        if left > 0 {
+            // smallest compiled size that fits the remainder in one chunk,
+            // else several of the largest-fitting sizes
+            match self.sizes.iter().find(|&&s| s >= left) {
+                Some(&s) => chunks.push((s, left)),
+                None => unreachable!("max chunk loop guarantees left < max"),
+            }
+        }
+        chunks
+    }
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy::new(vec![1, 8], Duration::from_millis(2))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn flush_on_full_batch() {
+        let p = BatchPolicy::new(vec![1, 8], Duration::from_millis(5));
+        assert!(p.should_flush(8, Duration::ZERO));
+        assert!(p.should_flush(9, Duration::ZERO));
+        assert!(!p.should_flush(7, Duration::ZERO));
+    }
+
+    #[test]
+    fn flush_on_timeout() {
+        let p = BatchPolicy::new(vec![1, 8], Duration::from_millis(5));
+        assert!(p.should_flush(1, Duration::from_millis(5)));
+        assert!(!p.should_flush(0, Duration::from_secs(1)));
+    }
+
+    #[test]
+    fn plan_prefers_big_chunks() {
+        let p = BatchPolicy::new(vec![1, 8], Duration::ZERO);
+        assert_eq!(p.plan(20), vec![(8, 8), (8, 8), (8, 4)]);
+        assert_eq!(p.plan(8), vec![(8, 8)]);
+        assert_eq!(p.plan(1), vec![(1, 1)]);
+        assert_eq!(p.plan(3), vec![(8, 3)]); // padded tail
+    }
+
+    #[test]
+    fn plan_exact_small_size() {
+        let p = BatchPolicy::new(vec![1, 4, 8], Duration::ZERO);
+        assert_eq!(p.plan(4), vec![(4, 4)]);
+        assert_eq!(p.plan(5), vec![(8, 5)]);
+    }
+
+    #[test]
+    fn prop_plan_covers_exactly() {
+        check(Config::default().cases(200), |rng| {
+            let mut sizes: Vec<usize> = (0..rng.below(3) + 1).map(|_| 1 << rng.below(5)).collect();
+            sizes.push(1); // always include 1 so everything is coverable
+            let p = BatchPolicy::new(sizes, Duration::ZERO);
+            let pending = rng.below(100);
+            let plan = p.plan(pending);
+            let total: usize = plan.iter().map(|(_, r)| r).sum();
+            assert_eq!(total, pending);
+            for (s, r) in &plan {
+                assert!(p.sizes.contains(s));
+                assert!(*r <= *s && *r > 0 || pending == 0);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_padding_only_in_tail() {
+        check(Config::default().cases(100), |rng| {
+            let p = BatchPolicy::new(vec![1, 8], Duration::ZERO);
+            let pending = rng.below(64) + 1;
+            let plan = p.plan(pending);
+            for (i, (s, r)) in plan.iter().enumerate() {
+                if i + 1 < plan.len() {
+                    assert_eq!(s, r, "only the tail chunk may pad");
+                }
+            }
+        });
+    }
+}

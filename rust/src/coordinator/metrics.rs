@@ -1,0 +1,145 @@
+//! Coordinator metrics: request/batch counters, latency distribution and
+//! the hardware twin's aggregate (cycles, energy, effective TOPS).
+
+use std::time::Duration;
+
+use crate::util::stats;
+
+/// Aggregated serving metrics (snapshot-able).
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Requests completed.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Rows executed including padding.
+    pub padded_rows: u64,
+    /// Per-request end-to-end latency samples (µs).
+    pub latency_us: Vec<u64>,
+    /// Per-batch XLA execute time samples (µs).
+    pub execute_us: Vec<u64>,
+    /// Simulated accelerator cycles over all batches.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy over all batches (mJ).
+    pub sim_energy_mj: f64,
+    /// Dense-equivalent MACs served (for effective-TOPS accounting).
+    pub dense_macs: u64,
+}
+
+impl Metrics {
+    /// Record one completed batch.
+    pub fn record_batch(
+        &mut self,
+        real_rows: usize,
+        compiled_rows: usize,
+        execute: Duration,
+        sim_cycles: u64,
+        sim_energy_mj: f64,
+        dense_macs: u64,
+    ) {
+        self.batches += 1;
+        self.requests += real_rows as u64;
+        self.padded_rows += (compiled_rows - real_rows) as u64;
+        self.execute_us.push(execute.as_micros() as u64);
+        self.sim_cycles += sim_cycles;
+        self.sim_energy_mj += sim_energy_mj;
+        self.dense_macs += dense_macs;
+    }
+
+    /// Record one request's end-to-end latency.
+    pub fn record_latency(&mut self, l: Duration) {
+        self.latency_us.push(l.as_micros() as u64);
+    }
+
+    /// Mean batch occupancy (real rows per executed row).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.requests + self.padded_rows;
+        if total == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / total as f64
+    }
+
+    /// Latency percentile in µs.
+    pub fn latency_pct(&self, p: f64) -> u64 {
+        let v: Vec<f64> = self.latency_us.iter().map(|&x| x as f64).collect();
+        if v.is_empty() {
+            return 0;
+        }
+        stats::percentile(&v, p) as u64
+    }
+
+    /// Simulated effective TOPS of the hardware twin at `freq_hz`.
+    pub fn sim_effective_tops(&self, freq_hz: f64) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.sim_cycles as f64 / freq_hz;
+        2.0 * self.dense_macs as f64 / secs / 1e12
+    }
+
+    /// Simulated average power of the twin (W) at `freq_hz`.
+    pub fn sim_avg_power_w(&self, freq_hz: f64) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.sim_cycles as f64 / freq_hz;
+        self.sim_energy_mj / 1e3 / secs
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} batches={} occupancy={:.2} p50={}us p95={}us sim_cycles={} sim_energy={:.2}mJ",
+            self.requests,
+            self.batches,
+            self.occupancy(),
+            self.latency_pct(50.0),
+            self.latency_pct(95.0),
+            self.sim_cycles,
+            self.sim_energy_mj,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_counts_padding() {
+        let mut m = Metrics::default();
+        m.record_batch(3, 8, Duration::from_micros(100), 1000, 0.5, 1_000_000);
+        assert!((m.occupancy() - 3.0 / 8.0).abs() < 1e-12);
+        m.record_batch(8, 8, Duration::from_micros(100), 1000, 0.5, 1_000_000);
+        assert!((m.occupancy() - 11.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn effective_tops_accounting() {
+        let mut m = Metrics::default();
+        // 1e9 dense MACs in 1e6 cycles at 1 GHz = 1 ms → 2e9*1e3 ops/s = 2 TOPS
+        m.record_batch(8, 8, Duration::from_micros(10), 1_000_000, 1.0, 1_000_000_000);
+        assert!((m.sim_effective_tops(1e9) - 2.0).abs() < 1e-9);
+        // 1 mJ over 1 ms = 1 W
+        assert!((m.sim_avg_power_w(1e9) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record_latency(Duration::from_micros(i));
+        }
+        assert!(m.latency_pct(50.0) >= 49 && m.latency_pct(50.0) <= 51);
+        assert!(m.latency_pct(95.0) >= 94);
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::default();
+        assert_eq!(m.occupancy(), 0.0);
+        assert_eq!(m.latency_pct(50.0), 0);
+        assert_eq!(m.sim_effective_tops(1e9), 0.0);
+    }
+}

@@ -1,0 +1,467 @@
+//! Layer-3 inference coordinator: the serving loop in front of the
+//! accelerator.
+//!
+//! The leader thread owns the PJRT [`crate::runtime::Runtime`] (thread-
+//! affine) and runs the event loop: drain the request channel, let the
+//! [`batcher::BatchPolicy`] decide when to flush, execute the AOT model
+//! executable for each planned chunk (batch folded into GEMM `M`, exactly
+//! like the hardware folds it into array rows), split the logits back to
+//! the callers and account metrics.
+//!
+//! Every executed batch is *also* run through the architecture simulator as
+//! a **hardware twin** — the same layer profile the power model consumes —
+//! so the serving path reports both measured XLA latency and the simulated
+//! accelerator cycles/energy the paper's tables are built from. The twin is
+//! the timing path; XLA is the functional path. Python appears in neither.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::arch::Design;
+use crate::power;
+use crate::runtime::{HostTensor, Runtime};
+use crate::sim::accel::{network_timing, profile_model_fixed_act, LayerProfile};
+use batcher::BatchPolicy;
+use metrics::Metrics;
+use request::{InferRequest, InferResponse};
+
+const IMAGE_ELEMS: usize = 32 * 32 * 3;
+const NUM_CLASSES: usize = 10;
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Artifact directory (`make artifacts` output).
+    pub artifacts_dir: std::path::PathBuf,
+    /// Hardware-twin design point for the timing path.
+    pub design: Design,
+    /// Activation sparsity assumed by the twin (measured values come from
+    /// the functional profile; 0.5 is the paper's typical operating point).
+    pub act_sparsity: f64,
+    /// Batch flush timeout.
+    pub max_wait: Duration,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: "artifacts".into(),
+            design: Design::paper_optimal(),
+            act_sparsity: 0.5,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+enum Msg {
+    Infer(InferRequest),
+    Shutdown,
+}
+
+/// Handle to a running coordinator. Cloneable; submit requests from any
+/// thread.
+#[derive(Clone)]
+pub struct Handle {
+    tx: mpsc::Sender<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+}
+
+/// A running coordinator (joined by [`Coordinator::shutdown`] or drop).
+pub struct Coordinator {
+    handle: Handle,
+    worker: Option<JoinHandle<Result<()>>>,
+}
+
+impl Coordinator {
+    /// Start the leader thread; compiles the model executables up front so
+    /// the first request doesn't pay compile latency.
+    pub fn start(cfg: Config) -> Result<Coordinator> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let metrics2 = metrics.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("ssta-coordinator".into())
+            .spawn(move || leader_loop(cfg, rx, metrics2, ready_tx))
+            .context("spawning coordinator thread")?;
+        // wait for the runtime to come up (or fail fast)
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator thread died during startup"))??;
+        Ok(Coordinator {
+            handle: Handle { tx, metrics },
+            worker: Some(worker),
+        })
+    }
+
+    /// Cloneable submission handle.
+    pub fn handle(&self) -> Handle {
+        self.handle.clone()
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> Metrics {
+        self.handle.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop the leader loop and join the thread.
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            w.join().map_err(|_| anyhow!("coordinator thread panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.handle.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Handle {
+    /// Submit one image; returns the receiver for the response.
+    pub fn submit(&self, id: u64, image: Vec<f32>) -> Result<mpsc::Receiver<InferResponse>> {
+        if image.len() != IMAGE_ELEMS {
+            anyhow::bail!("image must have {IMAGE_ELEMS} elements, got {}", image.len());
+        }
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Infer(InferRequest {
+                id,
+                image,
+                enqueued: Instant::now(),
+                reply,
+            }))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn infer(&self, id: u64, image: Vec<f32>) -> Result<InferResponse> {
+        let rx = self.submit(id, image)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+/// The hardware twin: layer profiles of the served model on the configured
+/// design, scaled per executed batch.
+struct Twin {
+    design: Design,
+    profiles_b1: Vec<LayerProfile>,
+}
+
+impl Twin {
+    fn new(design: Design, nnz: usize, act_sparsity: f64) -> Twin {
+        let model = crate::models::convnet5();
+        Twin {
+            design,
+            profiles_b1: profile_model_fixed_act(&model, nnz, 8, act_sparsity),
+        }
+    }
+
+    /// Simulated (cycles, energy mJ, dense MACs) for one executed batch.
+    fn simulate(&self, batch: usize) -> (u64, f64, u64) {
+        let profiles: Vec<LayerProfile> = self
+            .profiles_b1
+            .iter()
+            .map(|p| {
+                let mut p = p.clone();
+                p.m *= batch; // batch folds into GEMM M
+                p.out_elems *= batch as u64;
+                p
+            })
+            .collect();
+        let t = network_timing(&self.design, &profiles);
+        let pw = power::power(&self.design, &t.total);
+        let secs = t.total.cycles as f64 / self.design.tech.freq_hz();
+        let energy_mj = pw.total_mw() * secs; // mW · s = mJ
+        (t.total.cycles, energy_mj, t.dense_macs)
+    }
+}
+
+fn leader_loop(
+    cfg: Config,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    // ---- startup: open runtime, discover model executables ----
+    let startup = (|| -> Result<(Runtime, Vec<usize>, usize)> {
+        let mut rt = Runtime::open(&cfg.artifacts_dir)?;
+        let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
+        let mut sizes = Vec::new();
+        let mut nnz = 8usize;
+        for name in names {
+            if let Some(rest) = name.strip_prefix("convnet5_b") {
+                if let Ok(b) = rest.parse::<usize>() {
+                    sizes.push(b);
+                    if let Some(m) = rt.meta(&name) {
+                        if let Some(v) = m.raw.get("nnz").and_then(|j| j.as_usize()) {
+                            nnz = v;
+                        }
+                    }
+                }
+            }
+        }
+        if sizes.is_empty() {
+            anyhow::bail!("no convnet5_b* artifacts found — run `make artifacts`");
+        }
+        // pre-compile all batch variants
+        for &b in &sizes {
+            rt.load(&format!("convnet5_b{b}"))?;
+        }
+        Ok((rt, sizes, nnz))
+    })();
+    let (mut rt, sizes, nnz) = match startup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+    let policy = BatchPolicy::new(sizes, cfg.max_wait);
+    let twin = Twin::new(cfg.design, nnz, cfg.act_sparsity);
+    let mut queue: Vec<InferRequest> = Vec::new();
+
+    loop {
+        // ---- wait for work ----
+        let msg = if queue.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return Ok(()), // all senders gone
+            }
+        } else {
+            let oldest = queue[0].enqueued.elapsed();
+            let budget = cfg.max_wait.saturating_sub(oldest);
+            match rx.recv_timeout(budget) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush(&mut rt, &policy, &twin, &mut queue, &metrics)?;
+                    return Ok(());
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Infer(r)) => {
+                queue.push(r);
+                // greedily drain whatever is already queued in the channel
+                // (arrivals during the previous flush) up to a full batch —
+                // otherwise a backlog degrades into size-1 flushes
+                while queue.len() < policy.max_batch() {
+                    match rx.try_recv() {
+                        Ok(Msg::Infer(r)) => queue.push(r),
+                        Ok(Msg::Shutdown) => {
+                            flush(&mut rt, &policy, &twin, &mut queue, &metrics)?;
+                            return Ok(());
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            Some(Msg::Shutdown) => {
+                flush(&mut rt, &policy, &twin, &mut queue, &metrics)?;
+                return Ok(());
+            }
+            None => {} // timeout → fall through to flush check
+        }
+        let oldest = queue.first().map(|r| r.enqueued.elapsed()).unwrap_or_default();
+        if policy.should_flush(queue.len(), oldest) {
+            flush(&mut rt, &policy, &twin, &mut queue, &metrics)?;
+        }
+    }
+}
+
+/// Execute everything in the queue according to the batch plan.
+fn flush(
+    rt: &mut Runtime,
+    policy: &BatchPolicy,
+    twin: &Twin,
+    queue: &mut Vec<InferRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    if queue.is_empty() {
+        return Ok(());
+    }
+    let plan = policy.plan(queue.len());
+    let mut reqs = std::mem::take(queue).into_iter();
+    for (compiled, real) in plan {
+        let chunk: Vec<InferRequest> = reqs.by_ref().take(real).collect();
+        debug_assert_eq!(chunk.len(), real);
+
+        // pack the batch (padding rows stay zero)
+        let mut batch = vec![0f32; compiled * IMAGE_ELEMS];
+        for (i, r) in chunk.iter().enumerate() {
+            batch[i * IMAGE_ELEMS..(i + 1) * IMAGE_ELEMS].copy_from_slice(&r.image);
+        }
+
+        let exe = rt.load(&format!("convnet5_b{compiled}"))?;
+        let t0 = Instant::now();
+        let outs = exe.run(&[HostTensor::F32(batch)])?;
+        let exec = t0.elapsed();
+        let logits_all = outs[0].as_f32();
+
+        let (sim_cycles, sim_energy_mj, dense_macs) = twin.simulate(compiled);
+        {
+            let mut m = metrics.lock().unwrap();
+            m.record_batch(real, compiled, exec, sim_cycles, sim_energy_mj, dense_macs);
+        }
+
+        for (i, r) in chunk.into_iter().enumerate() {
+            let logits = logits_all[i * NUM_CLASSES..(i + 1) * NUM_CLASSES].to_vec();
+            let queue_us = (t0 - r.enqueued).as_micros() as u64;
+            let resp = InferResponse {
+                id: r.id,
+                logits,
+                batch_size: compiled,
+                queue_us,
+                execute_us: exec.as_micros() as u64,
+                sim_cycles,
+                sim_energy_mj,
+            };
+            metrics.lock().unwrap().record_latency(r.enqueued.elapsed());
+            let _ = r.reply.send(resp); // caller may have gone away — fine
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn artifacts_ready() -> bool {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts/manifest.json")
+            .exists()
+    }
+
+    fn test_cfg() -> Config {
+        Config {
+            artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            ..Config::default()
+        }
+    }
+
+    #[test]
+    fn serves_single_request() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let mut rng = Rng::new(1);
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.f32()).collect();
+        let resp = c.handle().infer(42, img).unwrap();
+        assert_eq!(resp.id, 42);
+        assert_eq!(resp.logits.len(), NUM_CLASSES);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.sim_cycles > 0);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn batches_concurrent_requests_and_matches_single() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let h = c.handle();
+        let mut rng = Rng::new(2);
+        let imgs: Vec<Vec<f32>> =
+            (0..12).map(|_| (0..IMAGE_ELEMS).map(|_| rng.f32()).collect()).collect();
+
+        // singles first (reference answers)
+        let singles: Vec<Vec<f32>> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| h.infer(i as u64, im.clone()).unwrap().logits)
+            .collect();
+
+        // now fire concurrently → should batch
+        let rxs: Vec<_> = imgs
+            .iter()
+            .enumerate()
+            .map(|(i, im)| h.submit(100 + i as u64, im.clone()).unwrap())
+            .collect();
+        let batched: Vec<InferResponse> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+
+        for (i, resp) in batched.iter().enumerate() {
+            assert_eq!(resp.id, 100 + i as u64);
+            // batching must not change the numbers (row independence)
+            for (a, b) in resp.logits.iter().zip(&singles[i]) {
+                assert!((a - b).abs() < 1e-4, "req {i}: batched {a} vs single {b}");
+            }
+        }
+        // at least one multi-request batch formed
+        let m = c.metrics();
+        assert!(m.batches < m.requests, "no batching happened: {}", m.summary());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_image_size() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Coordinator::start(test_cfg()).unwrap();
+        assert!(c.handle().submit(0, vec![0.0; 7]).is_err());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let c = Coordinator::start(test_cfg()).unwrap();
+        let h = c.handle();
+        let mut rng = Rng::new(3);
+        for i in 0..5 {
+            let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.f32()).collect();
+            h.infer(i, img).unwrap();
+        }
+        let m = c.metrics();
+        assert_eq!(m.requests, 5);
+        assert!(m.sim_cycles > 0);
+        assert!(m.sim_energy_mj > 0.0);
+        assert!(m.sim_effective_tops(1e9) > 0.0);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn twin_cycles_scale_with_batch() {
+        let twin = Twin::new(Design::paper_optimal(), 4, 0.5);
+        let (c1, e1, m1) = twin.simulate(1);
+        let (c8, e8, m8) = twin.simulate(8);
+        assert_eq!(m8, 8 * m1);
+        assert!(c8 > 4 * c1, "batch-8 should cost much more than batch-1: {c1} vs {c8}");
+        assert!(c8 < 9 * c1, "but less than 9x (better utilization)");
+        assert!(e8 > e1);
+    }
+}

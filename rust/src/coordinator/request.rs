@@ -1,0 +1,58 @@
+//! Request/response types for the inference coordinator.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One inference request: a 32×32×3 f32 image in `[0,1]`.
+#[derive(Debug)]
+pub struct InferRequest {
+    /// Caller-assigned id (echoed in the response).
+    pub id: u64,
+    /// Flattened image, `32*32*3` floats.
+    pub image: Vec<f32>,
+    /// Enqueue timestamp (set by the handle).
+    pub enqueued: Instant,
+    /// Response channel.
+    pub reply: mpsc::Sender<InferResponse>,
+}
+
+/// Response to one request.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// Class logits (10 classes).
+    pub logits: Vec<f32>,
+    /// Batch this request was served in.
+    pub batch_size: usize,
+    /// Queue wait in microseconds.
+    pub queue_us: u64,
+    /// XLA execute time for the whole batch, microseconds.
+    pub execute_us: u64,
+    /// Simulated accelerator cycles for this batch on the hardware twin.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy for this batch (millijoules).
+    pub sim_energy_mj: f64,
+}
+
+/// Argmax helper for callers that want a class id.
+pub fn argmax(logits: &[f32]) -> usize {
+    logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-5.0, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+}

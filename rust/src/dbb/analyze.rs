@@ -1,0 +1,112 @@
+//! Sparsity analysis helpers: measure activation sparsity (post-ReLU zeros)
+//! and summarize DBB weight statistics per layer — feeds the clock-gating
+//! power model and the Table I "Total NNZ / Sparsity" columns.
+
+use super::DbbMatrix;
+use crate::tensor::TensorI8;
+
+/// Per-matrix DBB summary (one row of the Table I right-hand side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DbbSummary {
+    /// Block size used.
+    pub bz: usize,
+    /// Effective density bound (max block NNZ).
+    pub bound: usize,
+    /// Total stored non-zeros.
+    pub total_nnz: usize,
+    /// Dense element count (K×N).
+    pub dense_elems: usize,
+    /// Block sparsity in percent, `(1 − bound/bz)·100` (paper's "Sparsity").
+    pub block_sparsity_pct: f64,
+    /// Element-level sparsity in percent (fraction of exact zeros).
+    pub elem_sparsity_pct: f64,
+    /// Compression ratio of the encoded form.
+    pub compression: f64,
+}
+
+/// Summarize a compressed matrix.
+pub fn summarize(m: &DbbMatrix) -> DbbSummary {
+    let dense = m.k * m.n;
+    DbbSummary {
+        bz: m.bz,
+        bound: m.bound,
+        total_nnz: m.total_nnz(),
+        dense_elems: dense,
+        block_sparsity_pct: (1.0 - m.density()) * 100.0,
+        elem_sparsity_pct: if dense == 0 {
+            0.0
+        } else {
+            (1.0 - m.total_nnz() as f64 / dense as f64) * 100.0
+        },
+        compression: m.compression_ratio(),
+    }
+}
+
+/// Fraction of zero elements in an activation tensor — what the paper's
+/// clock-gating scheme exploits ("50% random sparse activations").
+pub fn activation_sparsity(a: &TensorI8) -> f64 {
+    a.sparsity()
+}
+
+/// Histogram of block-NNZ occupancy (how many blocks have 0,1,..,BZ
+/// non-zeros) — used by the VDBB occupancy model: cycles per block on the
+/// time-unrolled datapath is `max(1, nnz)` when streaming measured blocks.
+pub fn block_occupancy_histogram(m: &DbbMatrix) -> Vec<usize> {
+    let mut h = vec![0usize; m.bz + 1];
+    for b in m.blocks() {
+        h[b.nnz()] += 1;
+    }
+    h
+}
+
+/// Mean cycles/block for a VDBB stream of this matrix at fixed bound
+/// (hardware streams the padded `bound` slots — paper §III-B: "the number of
+/// clock cycles required to compute the block being equal to NNZ", with the
+/// *bound* NNZ setting the fixed-rate stream).
+pub fn vdbb_cycles_per_block(m: &DbbMatrix) -> usize {
+    m.bound.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::prune::prune_i8;
+    use crate::util::Rng;
+
+    #[test]
+    fn summary_of_pruned_matrix() {
+        let mut rng = Rng::new(1);
+        let w = TensorI8::rand(&[64, 32], &mut rng);
+        let p = prune_i8(&w, 8, 2);
+        let c = DbbMatrix::compress(&p, 8).unwrap();
+        let s = summarize(&c);
+        assert_eq!(s.bz, 8);
+        assert!(s.bound <= 2);
+        assert!((s.block_sparsity_pct - 75.0).abs() < 1e-9);
+        // element sparsity >= block sparsity (blocks may have < bound nnz)
+        assert!(s.elem_sparsity_pct >= s.block_sparsity_pct - 1e-9);
+    }
+
+    #[test]
+    fn occupancy_histogram_sums_to_blocks() {
+        let mut rng = Rng::new(2);
+        let w = TensorI8::rand_sparse(&[40, 10], 0.7, &mut rng);
+        let c = DbbMatrix::compress(&w, 8).unwrap();
+        let h = block_occupancy_histogram(&c);
+        assert_eq!(h.iter().sum::<usize>(), c.blocks().len());
+    }
+
+    #[test]
+    fn activation_sparsity_matches_tensor() {
+        let a = TensorI8::from_vec(&[4], vec![0, 1, 0, 2]);
+        assert_eq!(activation_sparsity(&a), 0.5);
+    }
+
+    #[test]
+    fn vdbb_cycles_is_bound() {
+        let mut rng = Rng::new(3);
+        let w = prune_i8(&TensorI8::rand(&[16, 4], &mut rng), 8, 3);
+        let c = DbbMatrix::compress_with_bound(&w, 8, 3).unwrap();
+        assert_eq!(vdbb_cycles_per_block(&c), 3);
+    }
+}

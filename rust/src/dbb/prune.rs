@@ -1,0 +1,144 @@
+//! Magnitude-based DBB pruning (paper §II-B / §V-A).
+//!
+//! Given a dense weight tensor and a target `(NNZ, BZ)`, keep the `NNZ`
+//! largest-magnitude elements of every block and zero the rest. The training
+//! substrate (`crate::train`) applies this progressively over epochs; the
+//! one-shot form here is also used to synthesize DBB-conformant weights for
+//! the architecture experiments.
+
+use crate::tensor::{TensorF32, TensorI8};
+
+/// One-shot magnitude prune of an f32 `K×N` matrix to a `(nnz, bz)` DBB
+/// constraint (blocks run down the K dimension, per column).
+pub fn prune_f32(w: &TensorF32, bz: usize, nnz: usize) -> TensorF32 {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    let mut out = w.clone();
+    for col in 0..n {
+        for kb in 0..k.div_ceil(bz) {
+            let lo = kb * bz;
+            let hi = (lo + bz).min(k);
+            prune_block_f32(&mut out, col, lo, hi, nnz);
+        }
+    }
+    out
+}
+
+fn prune_block_f32(w: &mut TensorF32, col: usize, lo: usize, hi: usize, nnz: usize) {
+    let len = hi - lo;
+    if len <= nnz {
+        return;
+    }
+    // rank positions by |w|, keep top-nnz
+    let mut idx: Vec<usize> = (lo..hi).collect();
+    idx.sort_by(|&a, &b| {
+        w.at(&[b, col])
+            .abs()
+            .partial_cmp(&w.at(&[a, col]).abs())
+            .unwrap()
+    });
+    for &kk in &idx[nnz..] {
+        w.set(&[kk, col], 0.0);
+    }
+}
+
+/// One-shot magnitude prune of an INT8 `K×N` matrix.
+pub fn prune_i8(w: &TensorI8, bz: usize, nnz: usize) -> TensorI8 {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    let mut out = w.clone();
+    for col in 0..n {
+        for kb in 0..k.div_ceil(bz) {
+            let lo = kb * bz;
+            let hi = (lo + bz).min(k);
+            let len = hi - lo;
+            if len <= nnz {
+                continue;
+            }
+            let mut idx: Vec<usize> = (lo..hi).collect();
+            idx.sort_by_key(|&a| std::cmp::Reverse((out.at(&[a, col]) as i32).abs()));
+            for &kk in &idx[nnz..] {
+                out.set(&[kk, col], 0);
+            }
+        }
+    }
+    out
+}
+
+/// A pruning *mask* (true = keep) for progressive training-time pruning:
+/// the mask is recomputed per pruning step and applied after every weight
+/// update, mimicking the paper's "progressively prunes small-magnitude
+/// weights within each DBB block" over ~20 epochs.
+pub fn dbb_mask_f32(w: &TensorF32, bz: usize, nnz: usize) -> Vec<bool> {
+    // keep exactly the surviving positions; in particular, positions that
+    // are currently zero are *not* kept — otherwise gradient updates would
+    // regrow them past the block bound between mask refreshes
+    let pruned = prune_f32(w, bz, nnz);
+    pruned.data().iter().map(|&p| p != 0.0).collect()
+}
+
+/// Apply a keep-mask in place.
+pub fn apply_mask_f32(w: &mut TensorF32, mask: &[bool]) {
+    for (v, &keep) in w.data_mut().iter_mut().zip(mask) {
+        if !keep {
+            *v = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::DbbMatrix;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn pruned_i8_satisfies_bound() {
+        check(Config::default().cases(64), |rng| {
+            let k = rng.below(64) + 1;
+            let n = rng.below(16) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let w = TensorI8::rand(&[k, n], rng);
+            let p = prune_i8(&w, bz, nnz);
+            // must now encode under the bound
+            let c = DbbMatrix::compress_with_bound(&p, bz, nnz).unwrap();
+            assert!(c.max_block_nnz() <= nnz);
+        });
+    }
+
+    #[test]
+    fn prune_keeps_largest_magnitudes() {
+        let w = TensorF32::from_vec(&[8, 1], vec![0.1, -0.9, 0.2, 0.8, -0.05, 0.3, 0.0, -0.4]);
+        let p = prune_f32(&w, 8, 2);
+        // top-2 by |.| are -0.9 and 0.8
+        assert_eq!(p.at(&[1, 0]), -0.9);
+        assert_eq!(p.at(&[3, 0]), 0.8);
+        let kept: usize = p.data().iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(kept, 2);
+    }
+
+    #[test]
+    fn prune_noop_when_block_already_sparse() {
+        let w = TensorF32::from_vec(&[4, 1], vec![0.0, 0.5, 0.0, 0.0]);
+        let p = prune_f32(&w, 4, 2);
+        assert_eq!(p.data(), w.data());
+    }
+
+    #[test]
+    fn mask_roundtrip() {
+        let mut rng = Rng::new(4);
+        let w = TensorF32::randn(&[32, 8], 1.0, &mut rng);
+        let mask = dbb_mask_f32(&w, 8, 3);
+        let mut w2 = w.clone();
+        apply_mask_f32(&mut w2, &mask);
+        assert_eq!(w2.data(), prune_f32(&w, 8, 3).data());
+    }
+
+    #[test]
+    fn prune_f32_sparsity_level() {
+        let mut rng = Rng::new(5);
+        let w = TensorF32::randn(&[64, 64], 1.0, &mut rng);
+        let p = prune_f32(&w, 8, 2); // 75% sparsity
+        assert!((p.sparsity() - 0.75).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Convolution ↔ GEMM lowering (IM2COL) and a direct convolution oracle.
+//!
+//! Layout conventions (match `python/compile/kernels/ref.py`):
+//! * activations NHWC (`[n, h, w, c]`), INT8;
+//! * weights HWCO (`[kh, kw, c, oc]`), INT8 — so the flattened GEMM `K`
+//!   dimension is `(kh, kw, c)` with the **channel innermost**. That is the
+//!   paper's depthwise blocking (Fig. 2): a DBB block of BZ consecutive K
+//!   elements covers BZ channels of one spatial tap, so the elements of a
+//!   single 3×3 kernel never fall into the same block (for C ≥ BZ).
+
+use crate::tensor::{TensorI32, TensorI8};
+
+/// Convolution shape parameters (single layer, square-friendly but fully
+/// general in H/W).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Input height.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Output channels.
+    pub oc: usize,
+    /// Stride (both dims).
+    pub stride: usize,
+    /// Symmetric zero padding (both dims).
+    pub pad: usize,
+}
+
+impl ConvShape {
+    /// Output height.
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// GEMM M dimension per image: output pixels.
+    pub fn gemm_m(&self) -> usize {
+        self.oh() * self.ow()
+    }
+
+    /// GEMM K dimension: kh·kw·c.
+    pub fn gemm_k(&self) -> usize {
+        self.kh * self.kw * self.c
+    }
+
+    /// GEMM N dimension: output channels.
+    pub fn gemm_n(&self) -> usize {
+        self.oc
+    }
+
+    /// MAC count per image.
+    pub fn macs(&self) -> u64 {
+        self.gemm_m() as u64 * self.gemm_k() as u64 * self.gemm_n() as u64
+    }
+}
+
+/// IM2COL: lower an NHWC activation tensor (one image, `[h, w, c]`) to the
+/// GEMM left operand `[oh·ow, kh·kw·c]` (channel-innermost K).
+pub fn im2col(x: &TensorI8, s: &ConvShape) -> TensorI8 {
+    assert_eq!(x.shape(), &[s.h, s.w, s.c], "im2col input shape");
+    let (oh, ow) = (s.oh(), s.ow());
+    let mut out = TensorI8::zeros(&[oh * ow, s.gemm_k()]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let row = oy * ow + ox;
+            for ky in 0..s.kh {
+                for kx in 0..s.kw {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                    if iy < 0 || ix < 0 || iy >= s.h as isize || ix >= s.w as isize {
+                        continue; // zero padding
+                    }
+                    for cc in 0..s.c {
+                        let v = x.at(&[iy as usize, ix as usize, cc]);
+                        out.set(&[row, (ky * s.kw + kx) * s.c + cc], v);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Flatten HWCO weights `[kh, kw, c, oc]` to the GEMM right operand
+/// `[kh·kw·c, oc]` (same K ordering as [`im2col`]).
+pub fn weights_to_gemm(w: &TensorI8, s: &ConvShape) -> TensorI8 {
+    assert_eq!(w.shape(), &[s.kh, s.kw, s.c, s.oc], "weight shape");
+    w.reshape(&[s.gemm_k(), s.oc])
+}
+
+/// Direct convolution oracle (no IM2COL): output `[oh, ow, oc]` INT32.
+pub fn conv2d_direct(x: &TensorI8, w: &TensorI8, s: &ConvShape) -> TensorI32 {
+    assert_eq!(x.shape(), &[s.h, s.w, s.c]);
+    assert_eq!(w.shape(), &[s.kh, s.kw, s.c, s.oc]);
+    let (oh, ow) = (s.oh(), s.ow());
+    let mut out = TensorI32::zeros(&[oh, ow, s.oc]);
+    for oy in 0..oh {
+        for ox in 0..ow {
+            for ky in 0..s.kh {
+                for kx in 0..s.kw {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                    if iy < 0 || ix < 0 || iy >= s.h as isize || ix >= s.w as isize {
+                        continue;
+                    }
+                    for cc in 0..s.c {
+                        let a = x.at(&[iy as usize, ix as usize, cc]) as i32;
+                        if a == 0 {
+                            continue;
+                        }
+                        for oc in 0..s.oc {
+                            let wv = w.at(&[ky, kx, cc, oc]) as i32;
+                            let cur = out.at(&[oy, ox, oc]);
+                            out.set(&[oy, ox, oc], cur + a * wv);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// IM2COL duplication factor: how many GEMM-operand bytes each SRAM byte of
+/// the feature map expands into — the bandwidth the hardware IM2COL unit
+/// saves (≈`kh·kw/stride²`; exactly 9/1 = up to 3× *average read* reduction
+/// for 3×3 s=1 per paper Fig. 8 which streams 2 of 6 buffered rows).
+pub fn im2col_expansion(s: &ConvShape) -> f64 {
+    let gemm_bytes = (s.gemm_m() * s.gemm_k()) as f64;
+    let fmap_bytes = (s.h * s.w * s.c) as f64;
+    gemm_bytes / fmap_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::dense_i8;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    fn rand_shape(rng: &mut crate::util::Rng) -> ConvShape {
+        let kh = [1usize, 3, 5][rng.below(3)];
+        let stride = rng.below(2) + 1;
+        let pad = rng.below(kh.div_ceil(2));
+        let h = kh + rng.below(6) + stride;
+        ConvShape {
+            h,
+            w: kh + rng.below(6) + stride,
+            c: rng.below(8) + 1,
+            kh,
+            kw: kh,
+            oc: rng.below(8) + 1,
+            stride,
+            pad,
+        }
+    }
+
+    #[test]
+    fn im2col_gemm_matches_direct_conv() {
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let x = TensorI8::rand(&[s.h, s.w, s.c], rng);
+            let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+            let direct = conv2d_direct(&x, &w, &s);
+            let a = im2col(&x, &s);
+            let wg = weights_to_gemm(&w, &s);
+            let gemm = dense_i8(&a, &wg);
+            assert_eq!(
+                gemm.data(),
+                direct.data(),
+                "shape={s:?}" // same row-major order: [oh*ow, oc] vs [oh, ow, oc]
+            );
+        });
+    }
+
+    #[test]
+    fn output_dims_textbook() {
+        let s = ConvShape {
+            h: 224,
+            w: 224,
+            c: 3,
+            kh: 7,
+            kw: 7,
+            oc: 64,
+            stride: 2,
+            pad: 3,
+        };
+        assert_eq!(s.oh(), 112);
+        assert_eq!(s.ow(), 112);
+        assert_eq!(s.gemm_k(), 147);
+    }
+
+    #[test]
+    fn pointwise_conv_is_plain_gemm() {
+        // 1x1 conv: im2col is the identity on [h*w, c]
+        let mut rng = Rng::new(11);
+        let s = ConvShape {
+            h: 4,
+            w: 4,
+            c: 8,
+            kh: 1,
+            kw: 1,
+            oc: 16,
+            stride: 1,
+            pad: 0,
+        };
+        let x = TensorI8::rand(&[4, 4, 8], &mut rng);
+        let a = im2col(&x, &s);
+        assert_eq!(a.data(), x.data());
+        assert!((im2col_expansion(&s) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expansion_3x3_stride1_near_9x_interior() {
+        let s = ConvShape {
+            h: 56,
+            w: 56,
+            c: 64,
+            kh: 3,
+            kw: 3,
+            oc: 64,
+            stride: 1,
+            pad: 1,
+        };
+        let e = im2col_expansion(&s);
+        assert!(e > 8.0 && e <= 9.0, "e={e}");
+    }
+
+    #[test]
+    fn padding_zeros_visible_in_im2col() {
+        let s = ConvShape {
+            h: 2,
+            w: 2,
+            c: 1,
+            kh: 3,
+            kw: 3,
+            oc: 1,
+            stride: 1,
+            pad: 1,
+        };
+        let x = TensorI8::from_vec(&[2, 2, 1], vec![1, 2, 3, 4]);
+        let a = im2col(&x, &s);
+        // first output pixel (0,0): top-left 3x3 window has 5 padding zeros
+        let row0: Vec<i8> = a.data()[..9].to_vec();
+        assert_eq!(row0, vec![0, 0, 0, 0, 1, 2, 0, 3, 4]);
+    }
+}

@@ -1,0 +1,256 @@
+//! Drivers for the paper's figures (9–12) — each emits the numeric series
+//! behind the figure as a table (one row per bar/point).
+
+use crate::arch::{space, Design, Tech};
+use crate::models;
+use crate::power;
+use crate::sim::accel::{network_timing, profile_model, profile_model_repr, NetworkTiming};
+use crate::util::table::Table;
+
+/// Shared evaluation: run the paper's power-analysis workload (§V-C:
+/// representative 3×3 ResNet-50 layers) at (nnz/8 DBB, fixed act sparsity)
+/// on a design; returns (timing, power mW, area mm²).
+fn eval_design(d: &Design, nnz: usize, act: f64) -> (NetworkTiming, f64, f64) {
+    let m = models::resnet50();
+    let profiles = profile_model_repr(&m, nnz, 8, act);
+    let t = network_timing(d, &profiles);
+    let p = power::power(d, &t.total).total_mw();
+    let a = power::area(d).total_mm2();
+    (t, p, a)
+}
+
+/// Effective power/area: the paper's iso-*effective-throughput* view —
+/// power and area scaled by the time each design needs for the same work.
+fn effective_power_area(d: &Design, nnz: usize, act: f64, base_cycles: u64) -> (f64, f64) {
+    let (t, p, a) = eval_design(d, nnz, act);
+    let slowdown = t.total.cycles as f64 / base_cycles as f64;
+    // energy per inference ∝ power × time; effective area ∝ area × time
+    (p * slowdown, a * slowdown)
+}
+
+/// Fig. 9 — normalized power and area breakdown of the 12 representative
+/// iso-peak-throughput designs at 3/8 DBB + 50% activation sparsity.
+pub fn fig9() -> Vec<Table> {
+    let designs = space::representative_12(Tech::N16);
+    let base = &designs[0];
+    let (bt, bp, ba) = eval_design(base, 3, 0.5);
+    let base_cycles = bt.total.cycles;
+
+    let mut t = Table::new("Fig 9: iso-throughput designs @ 3/8 DBB, 50% act (normalized to 1x1x1_32x64)");
+    t.header(&[
+        "Design", "Power mW", "Area mm2", "Cycles (ResNet50)", "Norm. eff. power",
+        "Norm. eff. area",
+    ]);
+    for d in &designs {
+        let (ti, p, a) = eval_design(d, 3, 0.5);
+        let (ep, ea) = effective_power_area(d, 3, 0.5, base_cycles);
+        t.row(&[
+            d.label(),
+            format!("{p:.1}"),
+            format!("{a:.2}"),
+            format!("{}", ti.total.cycles),
+            format!("{:.3}", ep / bp),
+            format!("{:.3}", ea / ba),
+        ]);
+    }
+    vec![t]
+}
+
+/// Fig. 10 — the full enumerated design space: effective power vs area,
+/// normalized to the baseline (the paper's scatter plot, as rows).
+pub fn fig10() -> Vec<Table> {
+    let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
+    let base = Design::baseline_sa();
+    let (bt, bp, ba) = eval_design(&base, 3, 0.5);
+    let base_cycles = bt.total.cycles;
+
+    let mut t = Table::new("Fig 10: design space (effective power vs area, normalized)");
+    t.header(&["Design", "Norm. power", "Norm. area", "Group"]);
+    let mut rows: Vec<(String, f64, f64, &'static str)> = Vec::new();
+    for d in &designs {
+        let (ep, ea) = effective_power_area(d, 3, 0.5, base_cycles);
+        let group = match (&d.datapath, d.im2col) {
+            (crate::arch::Datapath::Dense, _) => "dense",
+            (crate::arch::Datapath::FixedDbb { .. }, _) => "fixed-DBB",
+            (crate::arch::Datapath::Vdbb, true) => "VDBB+IM2C",
+            (crate::arch::Datapath::Vdbb, false) => "VDBB",
+        };
+        rows.push((d.label(), ep / bp, ea / ba, group));
+    }
+    rows.sort_by(|a, b| (a.1 * a.2).partial_cmp(&(b.1 * b.2)).unwrap());
+    for (label, p, a, g) in rows {
+        t.row(&[label, format!("{p:.3}"), format!("{a:.3}"), g.to_string()]);
+    }
+    vec![t]
+}
+
+/// Fig. 11 — per-layer power of INT8 DBB ResNet-50 on the representative
+/// designs, normalized to the baseline, with *measured* per-layer
+/// activation sparsity from a sampled functional inference.
+pub fn fig11(quick: bool) -> Vec<Table> {
+    let designs = if quick {
+        vec![
+            Design::baseline_sa(),
+            Design::parse("4x8x4_4x8_DBB4of8_IM2C").unwrap(),
+            Design::paper_optimal(),
+        ]
+    } else {
+        space::representative_12(Tech::N16)
+    };
+    let m = models::resnet50();
+    let profiles = profile_model(&m, 3, 8, 42); // measured act sparsity
+
+    let base = Design::baseline_sa();
+    let bt = network_timing(&base, &profiles);
+    let bp = power::power(&base, &bt.total).total_mw();
+
+    // whole-model row + a sample of named layers (the paper highlights
+    // blk1/unit3/conv3 as the ~50%-sparsity layer). Power is per unit
+    // time; the energy column (power × cycles, normalized) is the
+    // per-inference view — the paper's "44.6% power reduction over the
+    // baseline" matches the energy interpretation, since the sparse
+    // designs also finish in a fraction of the cycles.
+    let sample_layers = ["blk1/unit1/conv2", "blk1/unit3/conv3", "blk3/unit2/conv2", "blk4/unit3/conv3"];
+
+    let mut t = Table::new("Fig 11: ResNet-50 power/energy (normalized to baseline, measured act sparsity)");
+    let mut hdr = vec!["Design".to_string(), "whole power".into(), "whole energy".into()];
+    hdr.extend(sample_layers.iter().map(|s| s.to_string()));
+    t.header(&hdr);
+
+    for d in &designs {
+        let ti = network_timing(d, &profiles);
+        let p = power::power(d, &ti.total).total_mw();
+        let energy = p * ti.total.cycles as f64 / (bp * bt.total.cycles as f64);
+        let mut row = vec![d.label(), format!("{:.3}", p / bp), format!("{:.3}", energy)];
+        for name in sample_layers {
+            let li = ti.layers.iter().position(|l| l.name == name).expect("layer exists");
+            let lp = power::power(d, &ti.layers[li].events).total_mw();
+            let blp = power::power(&base, &bt.layers[li].events).total_mw();
+            row.push(format!("{:.3}", lp / blp));
+        }
+        t.row(&row);
+    }
+
+    let mut spars = Table::new("Fig 11 (annotation): measured per-layer activation sparsity");
+    spars.header(&["Layer", "Act sparsity %"]);
+    for p in profiles.iter().take(12) {
+        spars.row(&[p.name.clone(), format!("{:.1}", 100.0 * p.act_sparsity)]);
+    }
+    vec![t, spars]
+}
+
+/// Fig. 12 — effective throughput and energy efficiency vs weight sparsity
+/// for the three designs (baseline SA + CG, fixed 4/8 DBB, VDBB), at 50%
+/// and 80% activation sparsity.
+pub fn fig12() -> Vec<Table> {
+    let designs = vec![
+        ("SA+CG (1x1x1_32x64_IM2C)", {
+            let mut d = Design::baseline_sa();
+            d.im2col = true;
+            d
+        }),
+        ("DBB 4/8 (4x8x4_4x8_IM2C)", {
+            let mut d = Design::paper_fixed_dbb();
+            d.im2col = true;
+            d
+        }),
+        ("VDBB (4x8x8_8x8_VDBB_IM2C)", Design::paper_optimal()),
+    ];
+
+    let mut thr = Table::new("Fig 12a: effective throughput (TOPS) vs weight sparsity");
+    let mut hdr = vec!["Design / sparsity %".to_string()];
+    for nnz in (1..=8).rev() {
+        hdr.push(format!("{:.1}", 100.0 * (1.0 - nnz as f64 / 8.0)));
+    }
+    thr.header(&hdr);
+
+    let mut eff50 = Table::new("Fig 12b: TOPS/W vs weight sparsity @ 50% act");
+    eff50.header(&hdr);
+    let mut eff80 = Table::new("Fig 12b: TOPS/W vs weight sparsity @ 80% act");
+    eff80.header(&hdr);
+
+    for (name, d) in &designs {
+        let mut thr_row = vec![name.to_string()];
+        let mut e50_row = vec![name.to_string()];
+        let mut e80_row = vec![name.to_string()];
+        for nnz in (1..=8usize).rev() {
+            let (t, _, _) = eval_design(d, nnz, 0.5);
+            thr_row.push(format!("{:.1}", t.effective_tops(d)));
+            let tw50 = power::effective_tops_per_w(d, &t.total, t.dense_macs);
+            e50_row.push(format!("{tw50:.1}"));
+            let (t80, _, _) = eval_design(d, nnz, 0.8);
+            let tw80 = power::effective_tops_per_w(d, &t80.total, t80.dense_macs);
+            e80_row.push(format!("{tw80:.1}"));
+        }
+        thr.row(&thr_row);
+        eff50.row(&e50_row);
+        eff80.row(&e80_row);
+    }
+    vec![thr, eff50, eff80]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig9_vdbb_im2c_is_best() {
+        let t = &fig9()[0];
+        // last column is normalized effective area; find the optimal design
+        // row and check it beats the baseline by >2x on both axes (paper:
+        // ">2.5x area, >2x power" for the pareto group)
+        let rows = t.rows();
+        let opt = rows.iter().find(|r| r[0] == "4x8x8_8x8_VDBB_IM2C").expect("optimal in fig9");
+        let p: f64 = opt[4].parse().unwrap();
+        let a: f64 = opt[5].parse().unwrap();
+        assert!(p < 0.5, "normalized effective power {p}");
+        assert!(a < 0.4, "normalized effective area {a}");
+    }
+
+    #[test]
+    fn fig10_pareto_corner_is_vdbb_im2c() {
+        let t = &fig10()[0];
+        // rows are sorted by power×area: the best corner must be VDBB+IM2C
+        let first = &t.rows()[0];
+        assert_eq!(first[3], "VDBB+IM2C", "pareto corner: {first:?}");
+    }
+
+    #[test]
+    fn fig12_baseline_flat_dbb_steps_vdbb_scales() {
+        let ts = fig12();
+        let thr = &ts[0];
+        let rows = thr.rows();
+        let parse_row = |i: usize| -> Vec<f64> {
+            rows[i][1..].iter().map(|s| s.parse().unwrap()).collect()
+        };
+        let sa = parse_row(0);
+        let dbb = parse_row(1);
+        let vdbb = parse_row(2);
+        // baseline flat (within a few %)
+        let sa_min = sa.iter().cloned().fold(f64::MAX, f64::min);
+        let sa_max = sa.iter().cloned().fold(0.0, f64::max);
+        assert!(sa_max / sa_min < 1.05, "SA should be flat: {sa:?}");
+        // columns ascend in sparsity: [0]=0.0% ... [7]=87.5%
+        // fixed DBB steps at 50% sparsity (col 4) and gains nothing above
+        assert!(dbb[4] > 1.8 * dbb[0], "DBB 2x at 50%: {dbb:?}");
+        assert!((dbb[7] / dbb[4] - 1.0).abs() < 0.05, "no further gain above 50%: {dbb:?}");
+        // VDBB scales ~8x from dense to 87.5%
+        let ratio = vdbb[7] / vdbb[0];
+        assert!(ratio > 6.0, "VDBB should scale ~8x: {vdbb:?}");
+        // and the 87.5% point approaches the paper's ~30 TOPS
+        assert!(vdbb[7] > 25.0, "VDBB @87.5% = {} TOPS", vdbb[7]);
+    }
+
+    #[test]
+    fn fig12_energy_scales_with_act_sparsity() {
+        let ts = fig12();
+        let e50 = &ts[1];
+        let e80 = &ts[2];
+        // VDBB row, 87.5% sparsity column (last): 80% act must beat 50% act
+        let v50: f64 = e50.rows()[2][8].parse().unwrap();
+        let v80: f64 = e80.rows()[2][8].parse().unwrap();
+        assert!(v80 > v50, "80% act {v80} should beat 50% act {v50}");
+        // and the headline: ~55.7 TOPS/W at 87.5% (50% act) — same order
+        assert!(v50 > 30.0, "headline TOPS/W at 87.5%: {v50}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Experiment harness: one driver per table and figure of the paper's
+//! evaluation, each regenerating the same rows/series the paper reports
+//! (DESIGN.md §Per-experiment index).
+//!
+//! Every driver returns [`crate::util::table::Table`]s so the CLI, the
+//! examples and the bench targets share one implementation; `quick` mode
+//! shrinks the training workloads (Tables I–II) for CI.
+
+pub mod figures;
+pub mod tables;
+
+use crate::util::table::Table;
+
+/// All experiment names, in paper order.
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "fig9", "fig10", "fig11", "fig12",
+];
+
+/// Run one experiment by name.
+pub fn run(name: &str, quick: bool) -> Option<Vec<Table>> {
+    Some(match name {
+        "table1" => tables::table1(quick),
+        "table2" => tables::table2(quick),
+        "table3" => tables::table3(),
+        "table4" => tables::table4(),
+        "table5" => tables::table5(),
+        "fig9" => figures::fig9(),
+        "fig10" => figures::fig10(),
+        "fig11" => figures::fig11(quick),
+        "fig12" => figures::fig12(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_cheap_experiment_runs() {
+        // smoke: the cheap drivers (everything but the training tables and
+        // the full per-layer sweep) produce non-empty tables
+        for name in ["table3", "table4", "table5", "fig9", "fig12"] {
+            let ts = run(name, true).unwrap_or_else(|| panic!("unknown {name}"));
+            assert!(!ts.is_empty(), "{name} returned no tables");
+            for t in &ts {
+                assert!(!t.is_empty(), "{name} empty table");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_is_none() {
+        assert!(run("table99", true).is_none());
+    }
+}

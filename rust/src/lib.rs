@@ -1,0 +1,36 @@
+//! # ssta — Sparse Systolic Tensor Array
+//!
+//! A full-system reproduction of *"Sparse Systolic Tensor Array for Efficient
+//! CNN Hardware Acceleration"* (Liu, Whatmough, Mattina — Arm ML Research,
+//! 2020), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the architecture simulator and coordinator:
+//!   cycle-accurate models of the SA / STA / STA-DBB / STA-VDBB datapath
+//!   arrays, the hardware IM2COL unit, local SRAMs and the M33 MCUs; a
+//!   calibrated 16 nm / 65 nm power + area model; the design-space explorer;
+//!   a pure-Rust CNN training substrate for the DBB-pruning experiments; and
+//!   an inference coordinator that serves batched requests, running the
+//!   functional path on AOT-compiled XLA executables while the timing path
+//!   runs on the simulator.
+//! * **Layer 2 (python/compile/model.py)** — the CNN forward pass in JAX,
+//!   lowered once to HLO text artifacts consumed by [`runtime`].
+//! * **Layer 1 (python/compile/kernels/)** — the DBB-sparse GEMM hot-spot as
+//!   a Pallas kernel (interpret mode), checked against a pure-jnp oracle.
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index
+//! mapping every table and figure of the paper to a module and bench target.
+
+pub mod arch;
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod dbb;
+pub mod gemm;
+pub mod harness;
+pub mod models;
+pub mod power;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;

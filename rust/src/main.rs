@@ -1,0 +1,166 @@
+//! `ssta` — the leader binary: experiment drivers + the serving demo.
+//!
+//! ```text
+//! ssta list                          # available experiments
+//! ssta run <name>... [--quick|--csv] # regenerate paper tables/figures
+//! ssta all [--quick]                 # every experiment in paper order
+//! ssta serve [--requests N] [--design STR] [--artifacts DIR]
+//! ssta design <STR> [--nnz N --act S]   # inspect one design point
+//! ```
+
+use std::time::Instant;
+
+use ssta::arch::Design;
+use ssta::cli::Args;
+use ssta::coordinator::{Config, Coordinator};
+use ssta::harness;
+use ssta::models;
+use ssta::power;
+use ssta::sim::accel::{network_timing, profile_model_fixed_act};
+use ssta::util::Rng;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.command.as_deref() {
+        Some("list") => {
+            for e in harness::EXPERIMENTS {
+                println!("{e}");
+            }
+            0
+        }
+        Some("run") => run_experiments(&args.positional, &args),
+        Some("all") => {
+            let names: Vec<String> =
+                harness::EXPERIMENTS.iter().map(|s| s.to_string()).collect();
+            run_experiments(&names, &args)
+        }
+        Some("serve") => serve(&args),
+        Some("design") => inspect_design(&args),
+        _ => {
+            eprintln!(
+                "usage: ssta <list|run|all|serve|design> [...]\n\
+                 try: ssta run table5    ssta all --quick    ssta serve --requests 64"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run_experiments(names: &[String], args: &Args) -> i32 {
+    if names.is_empty() {
+        eprintln!("no experiments named; try `ssta list`");
+        return 2;
+    }
+    let quick = args.flag("quick");
+    for name in names {
+        let t0 = Instant::now();
+        match harness::run(name, quick) {
+            Some(tables) => {
+                for t in &tables {
+                    if args.flag("csv") {
+                        println!("{}", t.to_csv());
+                    } else {
+                        println!("{}", t.render());
+                    }
+                }
+                eprintln!("[{name}] done in {:.2?}", t0.elapsed());
+            }
+            None => {
+                eprintln!("unknown experiment `{name}` — try `ssta list`");
+                return 2;
+            }
+        }
+    }
+    0
+}
+
+fn serve(args: &Args) -> i32 {
+    let n = args.opt_as::<usize>("requests", 64);
+    let design = match Design::parse(args.opt("design").unwrap_or("4x8x8_8x8_VDBB_IM2C")) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("bad --design: {e}");
+            return 2;
+        }
+    };
+    let cfg = Config {
+        artifacts_dir: args.opt("artifacts").unwrap_or("artifacts").into(),
+        design,
+        ..Config::default()
+    };
+    let coord = match Coordinator::start(cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("coordinator failed to start: {e:#}");
+            return 1;
+        }
+    };
+    let h = coord.handle();
+    let mut rng = Rng::new(42);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f32()).collect();
+            h.submit(i as u64, img).expect("submit")
+        })
+        .collect();
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = coord.metrics();
+    println!("served {ok}/{n} requests in {wall:.2?} ({:.1} req/s)", ok as f64 / wall.as_secs_f64());
+    println!("{}", m.summary());
+    println!(
+        "hardware twin ({}): {:.2} effective TOPS, {:.1} mW avg",
+        design.label(),
+        m.sim_effective_tops(design.tech.freq_hz()),
+        m.sim_avg_power_w(design.tech.freq_hz()) * 1e3,
+    );
+    if coord.shutdown().is_err() {
+        return 1;
+    }
+    0
+}
+
+fn inspect_design(args: &Args) -> i32 {
+    let Some(spec) = args.positional.first() else {
+        eprintln!("usage: ssta design <AxBxC_MxN[_VDBB][_IM2C]> [--nnz N --act S]");
+        return 2;
+    };
+    let d = match Design::parse(spec) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
+    let nnz = args.opt_as::<usize>("nnz", 3);
+    let act = args.opt_as::<f64>("act", 0.5);
+    let m = models::resnet50();
+    let profiles = profile_model_fixed_act(&m, nnz, 8, act);
+    let t = network_timing(&d, &profiles);
+    let p = power::power(&d, &t.total);
+    let a = power::area(&d);
+    println!("design        {}", d.label());
+    println!("MACs          {}", d.physical_macs());
+    println!("nominal TOPS  {:.2}", d.nominal_tops());
+    println!("workload      ResNet-50, {nnz}/8 DBB, {:.0}% act sparsity", act * 100.0);
+    println!("cycles        {}", t.total.cycles);
+    println!("effective TOPS {:.2}", t.effective_tops(&d));
+    println!(
+        "power mW      sta {:.1} + wsram {:.1} + asram {:.1} + mcu {:.1} + im2c {:.1} = {:.1}",
+        p.sta_mw, p.wsram_mw, p.asram_mw, p.mcu_mw, p.im2col_mw, p.total_mw()
+    );
+    println!("area mm2      {:.3}", a.total_mm2());
+    println!(
+        "TOPS/W        {:.1}    TOPS/mm2 {:.2}",
+        power::effective_tops_per_w(&d, &t.total, t.dense_macs),
+        power::effective_tops_per_mm2(&d, &t.total, t.dense_macs)
+    );
+    0
+}

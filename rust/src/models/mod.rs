@@ -1,0 +1,383 @@
+//! CNN model zoo: the layer tables of the five benchmark networks the paper
+//! evaluates (Table I) — LeNet-5, a 5-layer ConvNet, ResNet-50V1, VGG-16 and
+//! MobileNetV1 — expressed as sequences of conv / FC layers with exact
+//! shapes, so per-layer GEMM dimensions, MAC counts and weight counts are
+//! reproduced from the published architectures.
+//!
+//! The architecture experiments (Figs 9–12, Table V) run these layer tables
+//! through the simulator; the training experiments (Tables I–II) train the
+//! two small models end-to-end on synthetic datasets (see `crate::train`).
+
+use crate::gemm::conv::ConvShape;
+
+/// Layer kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution.
+    Conv(ConvShape),
+    /// Depthwise convolution (MobileNet) — the paper runs these **dense**
+    /// (DBB applies to pointwise layers only, §II-B).
+    DepthwiseConv(ConvShape),
+    /// Fully connected, `in_features → out_features` (GEMM with M = batch).
+    Fc(usize, usize),
+}
+
+/// One network layer.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    /// Layer name (ResNet names follow the paper's `blkB/unitU/convC`).
+    pub name: String,
+    /// Shape information.
+    pub kind: LayerKind,
+    /// Whether DBB pruning applies (first conv layers are conventionally
+    /// left dense, paper §V-A; depthwise convs fall back to dense).
+    pub prunable: bool,
+}
+
+impl Layer {
+    /// GEMM dimensions `(M, K, N)` for this layer at batch 1 (conv M is
+    /// output pixels).
+    pub fn gemm_dims(&self) -> (usize, usize, usize) {
+        match self.kind {
+            LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => {
+                (s.gemm_m(), s.gemm_k(), s.gemm_n())
+            }
+            LayerKind::Fc(i, o) => (1, i, o),
+        }
+    }
+
+    /// Weight parameter count.
+    pub fn weights(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv(s) => s.kh * s.kw * s.c * s.oc,
+            // depthwise: one filter per channel
+            LayerKind::DepthwiseConv(s) => s.kh * s.kw * s.c,
+            LayerKind::Fc(i, o) => i * o,
+        }
+    }
+
+    /// MACs at batch 1.
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv(s) => s.macs(),
+            LayerKind::DepthwiseConv(s) => {
+                (s.oh() * s.ow() * s.kh * s.kw * s.c) as u64
+            }
+            LayerKind::Fc(i, o) => (i * o) as u64,
+        }
+    }
+
+    /// Convolution shape if this is a conv layer.
+    pub fn conv_shape(&self) -> Option<ConvShape> {
+        match self.kind {
+            LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => Some(s),
+            LayerKind::Fc(..) => None,
+        }
+    }
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Model name.
+    pub name: &'static str,
+    /// Dataset it is associated with (informational).
+    pub dataset: &'static str,
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    /// Total weights over conv layers only (paper Table I footnote).
+    pub fn conv_weights(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv(_) | LayerKind::DepthwiseConv(_)))
+            .map(|l| l.weights())
+            .sum()
+    }
+
+    /// Total weights over prunable layers.
+    pub fn prunable_weights(&self) -> usize {
+        self.layers
+            .iter()
+            .filter(|l| l.prunable)
+            .map(|l| l.weights())
+            .sum()
+    }
+
+    /// Total MACs at batch 1.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Layers that run on the GEMM datapath (everything; FC is GEMM too).
+    pub fn gemm_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter()
+    }
+}
+
+fn conv(name: &str, h: usize, w: usize, c: usize, k: usize, oc: usize, stride: usize, pad: usize, prunable: bool) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Conv(ConvShape {
+            h,
+            w,
+            c,
+            kh: k,
+            kw: k,
+            oc,
+            stride,
+            pad,
+        }),
+        prunable,
+    }
+}
+
+/// LeNet-5 (MNIST, 28×28×1). Classic shape: conv 5×5×1×6 (pad 2), pool,
+/// conv 5×5×6×16, pool, FC 400-120-84-10.
+pub fn lenet5() -> Model {
+    Model {
+        name: "LeNet-5",
+        dataset: "MNIST",
+        layers: vec![
+            conv("conv1", 28, 28, 1, 5, 6, 1, 2, false),
+            conv("conv2", 14, 14, 6, 5, 16, 1, 0, true),
+            Layer { name: "fc1".into(), kind: LayerKind::Fc(400, 120), prunable: true },
+            Layer { name: "fc2".into(), kind: LayerKind::Fc(120, 84), prunable: true },
+            Layer { name: "fc3".into(), kind: LayerKind::Fc(84, 10), prunable: false },
+        ],
+    }
+}
+
+/// 5-layer ConvNet (CIFAR-10, 32×32×3): 3 conv + 2 FC.
+pub fn convnet5() -> Model {
+    Model {
+        name: "ConvNet",
+        dataset: "CIFAR10",
+        layers: vec![
+            conv("conv1", 32, 32, 3, 5, 32, 1, 2, false),
+            conv("conv2", 16, 16, 32, 5, 32, 1, 2, true),
+            conv("conv3", 8, 8, 32, 5, 64, 1, 2, true),
+            Layer { name: "fc1".into(), kind: LayerKind::Fc(1024, 64), prunable: true },
+            Layer { name: "fc2".into(), kind: LayerKind::Fc(64, 10), prunable: false },
+        ],
+    }
+}
+
+/// VGG-16 (ImageNet, 224×224×3): the 13 conv layers (+3 FC).
+pub fn vgg16() -> Model {
+    let cfg: &[(usize, usize, usize)] = &[
+        // (input hw, in c, out c); all 3x3 s1 p1, maxpool between groups
+        (224, 3, 64),
+        (224, 64, 64),
+        (112, 64, 128),
+        (112, 128, 128),
+        (56, 128, 256),
+        (56, 256, 256),
+        (56, 256, 256),
+        (28, 256, 512),
+        (28, 512, 512),
+        (28, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+        (14, 512, 512),
+    ];
+    let mut layers: Vec<Layer> = cfg
+        .iter()
+        .enumerate()
+        .map(|(i, &(hw, ci, co))| {
+            conv(&format!("conv{}", i + 1), hw, hw, ci, 3, co, 1, 1, i > 0)
+        })
+        .collect();
+    layers.push(Layer { name: "fc6".into(), kind: LayerKind::Fc(25088, 4096), prunable: true });
+    layers.push(Layer { name: "fc7".into(), kind: LayerKind::Fc(4096, 4096), prunable: true });
+    layers.push(Layer { name: "fc8".into(), kind: LayerKind::Fc(4096, 1000), prunable: false });
+    Model {
+        name: "VGG-16",
+        dataset: "ImageNet",
+        layers,
+    }
+}
+
+/// ResNet-50 V1 (ImageNet): conv1 + 4 stages of bottleneck units. Layer
+/// names follow the paper's Fig. 11 convention `blkB/unitU/convC`.
+pub fn resnet50() -> Model {
+    let mut layers = vec![conv("conv1", 224, 224, 3, 7, 64, 2, 3, false)];
+    // (blocks, in hw after stage entry, bottleneck width, out channels)
+    let stages: &[(usize, usize, usize, usize)] =
+        &[(3, 56, 64, 256), (4, 28, 128, 512), (6, 14, 256, 1024), (3, 7, 512, 2048)];
+    let mut in_c = 64; // after conv1 + maxpool
+    for (bi, &(units, hw, width, out_c)) in stages.iter().enumerate() {
+        for u in 0..units {
+            let blk = bi + 1;
+            let unit = u + 1;
+            // stride-2 happens in the first unit of stages 2..4 (on conv2 in V1.5;
+            // V1 puts it on conv1 of the unit — we follow V1: 1x1/2)
+            let s = if u == 0 && bi > 0 { 2 } else { 1 };
+            let hw_in = if u == 0 && bi > 0 { hw * 2 } else { hw };
+            let p = |n: usize| format!("blk{blk}/unit{unit}/conv{n}");
+            layers.push(conv(&p(1), hw_in, hw_in, in_c, 1, width, s, 0, true));
+            layers.push(conv(&p(2), hw, hw, width, 3, width, 1, 1, true));
+            layers.push(conv(&p(3), hw, hw, width, 1, out_c, 1, 0, true));
+            if u == 0 {
+                layers.push(conv(
+                    &format!("blk{blk}/unit{unit}/shortcut"),
+                    hw_in,
+                    hw_in,
+                    in_c,
+                    1,
+                    out_c,
+                    s,
+                    0,
+                    true,
+                ));
+            }
+            in_c = out_c;
+        }
+    }
+    layers.push(Layer { name: "fc".into(), kind: LayerKind::Fc(2048, 1000), prunable: false });
+    Model {
+        name: "ResNet-50V1",
+        dataset: "ImageNet",
+        layers,
+    }
+}
+
+/// MobileNetV1 1.0/224 (ImageNet): conv1 then 13 depthwise-separable pairs.
+/// DBB applies to the pointwise (1×1) layers only (paper §II-B).
+pub fn mobilenet_v1() -> Model {
+    let mut layers = vec![conv("conv1", 224, 224, 3, 3, 32, 2, 1, false)];
+    // (hw in, c in, c out, stride of dw)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (112, 32, 64, 1),
+        (112, 64, 128, 2),
+        (56, 128, 128, 1),
+        (56, 128, 256, 2),
+        (28, 256, 256, 1),
+        (28, 256, 512, 2),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 512, 1),
+        (14, 512, 1024, 2),
+        (7, 1024, 1024, 1),
+    ];
+    for (i, &(hw, ci, co, s)) in cfg.iter().enumerate() {
+        let n = i + 2;
+        layers.push(Layer {
+            name: format!("conv{n}/dw"),
+            kind: LayerKind::DepthwiseConv(ConvShape {
+                h: hw,
+                w: hw,
+                c: ci,
+                kh: 3,
+                kw: 3,
+                oc: ci,
+                stride: s,
+                pad: 1,
+            }),
+            prunable: false, // dense fallback
+        });
+        let hw_pw = hw / s;
+        layers.push(Layer {
+            name: format!("conv{n}/pw"),
+            kind: LayerKind::Conv(ConvShape {
+                h: hw_pw,
+                w: hw_pw,
+                c: ci,
+                kh: 1,
+                kw: 1,
+                oc: co,
+                stride: 1,
+                pad: 0,
+            }),
+            prunable: true,
+        });
+    }
+    layers.push(Layer { name: "fc".into(), kind: LayerKind::Fc(1024, 1000), prunable: false });
+    Model {
+        name: "MobileNetV1",
+        dataset: "ImageNet",
+        layers,
+    }
+}
+
+/// All five benchmark models (Table I rows).
+pub fn all_models() -> Vec<Model> {
+    vec![lenet5(), convnet5(), resnet50(), vgg16(), mobilenet_v1()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet_weights() {
+        let m = lenet5();
+        // conv1 150, conv2 2400, fc 48000+10080+840
+        assert_eq!(m.conv_weights(), 150 + 2400);
+        let total: usize = m.layers.iter().map(|l| l.weights()).sum();
+        assert_eq!(total, 150 + 2400 + 48_000 + 10_080 + 840);
+    }
+
+    #[test]
+    fn vgg16_conv_weights_published() {
+        let m = vgg16();
+        // published VGG-16 conv parameter count ≈ 14.71M
+        let w = m.conv_weights();
+        assert!((14_600_000..14_800_000).contains(&w), "w={w}");
+    }
+
+    #[test]
+    fn resnet50_totals_published() {
+        let m = resnet50();
+        let w = m.conv_weights();
+        // ResNet-50 conv weights ≈ 23.45M (total 25.5M incl. fc+bn)
+        assert!((23_000_000..24_000_000).contains(&w), "w={w}");
+        let macs = m.total_macs();
+        // ≈ 3.8 GMACs on 224x224 input (V1, conv s=2 in unit conv1)
+        assert!((3_300_000_000..4_300_000_000).contains(&macs), "macs={macs}");
+    }
+
+    #[test]
+    fn mobilenet_totals_published() {
+        let m = mobilenet_v1();
+        let macs = m.total_macs();
+        // MobileNetV1 ≈ 569 MMACs
+        assert!((520_000_000..620_000_000).contains(&macs), "macs={macs}");
+        // pointwise layers dominate and are prunable
+        let pw: usize = m.prunable_weights();
+        let total = m.conv_weights();
+        assert!(pw as f64 / total as f64 > 0.9, "pw={pw} total={total}");
+    }
+
+    #[test]
+    fn resnet_names_match_paper_convention() {
+        let m = resnet50();
+        assert!(m.layers.iter().any(|l| l.name == "blk1/unit3/conv3"));
+        assert!(m.layers.iter().any(|l| l.name == "blk4/unit3/conv3"));
+    }
+
+    #[test]
+    fn gemm_dims_consistent_with_macs() {
+        for m in all_models() {
+            for l in &m.layers {
+                if matches!(l.kind, LayerKind::Conv(_) | LayerKind::Fc(..)) {
+                    let (mm, k, n) = l.gemm_dims();
+                    assert_eq!((mm * k * n) as u64, l.macs(), "{}/{}", m.name, l.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vgg_gemm_m_is_pixel_count() {
+        let m = vgg16();
+        let (mm, k, n) = m.layers[0].gemm_dims();
+        assert_eq!(mm, 224 * 224);
+        assert_eq!(k, 27);
+        assert_eq!(n, 64);
+    }
+}

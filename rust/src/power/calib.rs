@@ -1,0 +1,138 @@
+//! Calibration anchors for the technology libraries.
+//!
+//! The paper's power/area numbers come from PrimeTimePX on parasitic
+//! annotated 16 nm netlists — unavailable here, so we substitute an
+//! analytical component model (DESIGN.md §Paper-resources substitutions)
+//! whose per-event energies are **calibrated once** against the paper's own
+//! Table IV breakdown at its quoted operating point (optimal VDBB design,
+//! ResNet-50 with 3/8 DBB weights and 50% random-sparse activations):
+//!
+//! | component | paper Table IV | model target |
+//! |---|---|---|
+//! | Systolic tensor array | 318 mW / 0.732 mm² | anchor |
+//! | Weight SRAM (512 KB)  | 78.5 mW / 0.54 mm² | anchor |
+//! | Activation SRAM (2 MB)| 31.0 mW (93.0 no-IM2C) / 2.16 mm² | anchor |
+//! | Cortex-M33 MCUs       | 50.5 mW / 0.30 mm² | anchor |
+//! | IM2COL unit           | 10.0 mW / 0.01 mm² | anchor |
+//!
+//! Every constant below is a physically plausible 16 nm per-event cost
+//! (cross-checked against the usual pJ/op literature values: INT8 MAC
+//! ≈0.05–0.3 pJ, large SRAM read ≈5–20 pJ/word, register ≈1–10 fJ/bit) and
+//! scaled so the anchor design lands on Table IV; the residuals we accept
+//! are recorded in `EXPERIMENTS.md`. Every *other* design point — different
+//! array shapes, datapaths, sparsity levels, layers — is then a genuine
+//! model prediction, which is what reproduces the *shapes* of Figs 9–12.
+//!
+//! The 65 nm LP library is derived from the 16 nm one with conventional
+//! node-scaling factors (dynamic energy ×~6 at the higher VDD and larger
+//! caps, area ×~9 for logic, ×~8 for SRAM macros), sanity-checked against
+//! the paper's 65 nm rows of Table V (2.80 TOPS/W at 75% VDBB).
+
+use super::TechLib;
+
+/// TSMC 16 nm FinFET @ 1 GHz (paper's primary node).
+pub const LIB_16NM: TechLib = TechLib {
+    // --- datapath per-event energies (pJ) ---
+    e_mac_active_pj: 0.143,
+    e_mac_data_gated_pj: 0.055,
+    e_mac_clock_gated_pj: 0.018,
+    e_mac_idle_pj: 0.030,
+    e_mux_pj: 0.008,
+    e_opr_reg_byte_pj: 0.018,
+    e_acc_update_pj: 0.030,
+    // --- memory ---
+    e_wsram_byte_pj: 0.92,
+    e_asram_byte_pj: 1.07,
+    e_im2col_byte_pj: 0.131,
+    // --- MCU (paper Table IV: 50.5 mW for the complex; the optimal VDBB
+    // design provisions the maximum 8 cores → 6.3 mW/core, consistent with
+    // an M33-class core + 64 KB program SRAM + DMA running flat out) ---
+    mcu_mw_per_core: 6.31,
+    // clock tree + global distribution on top of datapath dynamic power
+    clock_overhead: 0.18,
+
+    // --- areas ---
+    a_mac_um2: 245.0,
+    a_mux_um2: 30.0,
+    a_reg_bit_um2: 2.0,
+    a_sram_mm2_per_mb: 1.08,
+    a_mcu_mm2_per_core: 0.0375,
+    a_im2col_mm2: 0.01,
+};
+
+/// TSMC 65 nm LP bulk @ 500 MHz (paper's comparison node).
+///
+/// Scaling from 16 nm: dynamic energy ×10.7 — calibrated to the paper's
+/// own 65 nm rows of Table V (2.80 TOPS/W at 75% VDBB; a plain capacitance
+/// argument gives ×6, but the 65 nm LP library also runs at higher VDD and
+/// the paper's 65 nm numbers imply the larger factor). Logic area ×9, SRAM
+/// macro area ×8 (bitcell 0.5 µm² class vs 0.074 µm² class plus
+/// periphery).
+pub const LIB_65NM: TechLib = TechLib {
+    e_mac_active_pj: 0.143 * 10.7,
+    e_mac_data_gated_pj: 0.055 * 10.7,
+    e_mac_clock_gated_pj: 0.018 * 10.7,
+    e_mac_idle_pj: 0.030 * 10.7,
+    e_mux_pj: 0.008 * 10.7,
+    e_opr_reg_byte_pj: 0.018 * 10.7,
+    e_acc_update_pj: 0.030 * 10.7,
+    e_wsram_byte_pj: 0.92 * 10.7,
+    e_asram_byte_pj: 1.07 * 10.7,
+    e_im2col_byte_pj: 0.131 * 10.7,
+    mcu_mw_per_core: 11.3, // scaled with the node energy factor
+    clock_overhead: 0.18,
+
+    a_mac_um2: 245.0 * 9.0,
+    a_mux_um2: 30.0 * 9.0,
+    a_reg_bit_um2: 2.0 * 9.0,
+    a_sram_mm2_per_mb: 1.08 * 8.0,
+    a_mcu_mm2_per_core: 0.0375 * 9.0,
+    a_im2col_mm2: 0.01 * 9.0,
+};
+
+#[cfg(test)]
+mod tests {
+    use crate::arch::Design;
+    use crate::power;
+    use crate::sim::accel::{network_timing, profile_model_repr};
+
+    /// Dump the anchor-run component powers next to the Table IV targets
+    /// (`cargo test calib_dump -- --nocapture --ignored` while re-tuning).
+    #[test]
+    #[ignore = "diagnostic dump for re-calibration"]
+    fn calib_dump() {
+        let d = Design::paper_optimal();
+        let m = crate::models::resnet50();
+        let p = profile_model_repr(&m, 3, 8, 0.5);
+        let t = network_timing(&d, &p);
+        let e = &t.total;
+        let secs = e.cycles as f64 / d.tech.freq_hz();
+        println!("anchor events over {secs:.6} s:");
+        println!("  cycles          {}", e.cycles);
+        println!("  macs_active     {}", e.macs_active);
+        println!("  macs_gated      {}", e.macs_gated);
+        println!("  macs_idle       {}", e.macs_idle);
+        println!("  mux_selects     {}", e.mux_selects);
+        println!("  weight_bytes    {}", e.weight_sram_bytes);
+        println!("  act_bytes       {}", e.act_sram_bytes);
+        println!("  act_edge_bytes  {}", e.act_edge_bytes);
+        println!("  out_bytes       {}", e.out_sram_bytes);
+        let pw = power::power(&d, e);
+        println!("power  (paper):   sta 318  wsram 78.5  asram 31.0  mcu 50.5  im2c 10.0  total 487.5");
+        println!(
+            "power  (model):   sta {:.1}  wsram {:.1}  asram {:.1}  mcu {:.1}  im2c {:.1}  total {:.1}",
+            pw.sta_mw, pw.wsram_mw, pw.asram_mw, pw.mcu_mw, pw.im2col_mw, pw.total_mw()
+        );
+        let a = power::area(&d);
+        println!("area   (paper):   sta 0.732  wsram 0.54  asram 2.16  mcu 0.30  im2c 0.01  total 3.74");
+        println!(
+            "area   (model):   sta {:.3}  wsram {:.3}  asram {:.3}  mcu {:.3}  im2c {:.3}  total {:.3}",
+            a.sta_mm2, a.wsram_mm2, a.asram_mm2, a.mcu_mm2, a.im2col_mm2, a.total_mm2()
+        );
+        println!(
+            "efficiency: {:.1} TOPS/W (paper 21.9), {:.2} TOPS/mm2 (paper 2.85)",
+            power::effective_tops_per_w(&d, e, t.dense_macs),
+            power::effective_tops_per_mm2(&d, e, t.dense_macs),
+        );
+    }
+}

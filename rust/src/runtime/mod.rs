@@ -1,0 +1,471 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the Layer-3 hot path. Python never runs here — `make artifacts`
+//! lowered the Layer-2/Layer-1 computations to HLO **text** once, and this
+//! module parses, compiles and caches them on the CPU PJRT client.
+//!
+//! Text (not serialized `HloModuleProto`) is the interchange format: jax
+//! ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see `/opt/xla-example/README.md`
+//! and `python/compile/aot.py`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Element dtype of an artifact operand (the manifest's `"dtype"` field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 32-bit float.
+    F32,
+    /// 8-bit signed int (the INT8 datapath type).
+    S8,
+    /// 32-bit signed int (accumulators, index metadata).
+    S32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s8" => Dtype::S8,
+            "s32" => Dtype::S32,
+            other => bail!("unsupported dtype in manifest: {other}"),
+        })
+    }
+
+    fn element_type(self) -> xla::ElementType {
+        match self {
+            Dtype::F32 => xla::ElementType::F32,
+            Dtype::S8 => xla::ElementType::S8,
+            Dtype::S32 => xla::ElementType::S32,
+        }
+    }
+
+    fn size(self) -> usize {
+        match self {
+            Dtype::S8 => 1,
+            _ => 4,
+        }
+    }
+}
+
+/// Shape + dtype of one artifact operand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Dimensions.
+    pub shape: Vec<usize>,
+    /// Element type.
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = Dtype::parse(
+            j.get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("missing dtype"))?,
+        )?;
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// Manifest entry for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact name (manifest key).
+    pub name: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Entry kind (`convnet5`, `dbb_gemm`, ...).
+    pub entry: String,
+    /// Input operand specs, in execute order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output specs (artifacts are lowered with `return_tuple=True`).
+    pub outputs: Vec<TensorSpec>,
+    /// The raw manifest object (for entry-specific fields: batch, nnz,
+    /// per-layer weight stats...).
+    pub raw: Json,
+}
+
+/// A host-side tensor matching a [`TensorSpec`] — what the coordinator's
+/// request path moves in and out of PJRT.
+#[derive(Debug, Clone, PartialEq)]
+pub enum HostTensor {
+    /// f32 data.
+    F32(Vec<f32>),
+    /// i8 data.
+    I8(Vec<i8>),
+    /// i32 data.
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I8(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dtype of this tensor.
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            HostTensor::F32(_) => Dtype::F32,
+            HostTensor::I8(_) => Dtype::S8,
+            HostTensor::I32(_) => Dtype::S32,
+        }
+    }
+
+    /// View as f32 slice (panics on dtype mismatch).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            HostTensor::F32(v) => v,
+            _ => panic!("dtype mismatch: wanted f32, got {:?}", self.dtype()),
+        }
+    }
+
+    /// View as i32 slice.
+    pub fn as_i32(&self) -> &[i32] {
+        match self {
+            HostTensor::I32(v) => v,
+            _ => panic!("dtype mismatch: wanted i32, got {:?}", self.dtype()),
+        }
+    }
+
+    /// View as i8 slice.
+    pub fn as_i8(&self) -> &[i8] {
+        match self {
+            HostTensor::I8(v) => v,
+            _ => panic!("dtype mismatch: wanted i8, got {:?}", self.dtype()),
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            HostTensor::F32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+            HostTensor::I8(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len())
+            },
+            HostTensor::I32(v) => unsafe {
+                std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4)
+            },
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        if self.dtype() != spec.dtype {
+            bail!("operand dtype {:?} != spec {:?}", self.dtype(), spec.dtype);
+        }
+        if self.len() != spec.elems() {
+            bail!(
+                "operand has {} elems, spec {:?} wants {}",
+                self.len(),
+                spec.shape,
+                spec.elems()
+            );
+        }
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            spec.dtype.element_type(),
+            &spec.shape,
+            self.bytes(),
+        )?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        debug_assert_eq!(lit.size_bytes(), spec.elems() * spec.dtype.size());
+        Ok(match spec.dtype {
+            Dtype::F32 => HostTensor::F32(lit.to_vec::<f32>()?),
+            Dtype::S8 => HostTensor::I8(lit.to_vec::<i8>()?),
+            Dtype::S32 => HostTensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Artifact metadata.
+    pub fn meta(&self) -> &ArtifactMeta {
+        &self.meta
+    }
+
+    /// Execute with host tensors; returns the tuple outputs as host tensors.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {} wants {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        let literals = inputs
+            .iter()
+            .zip(&self.meta.inputs)
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<Result<Vec<_>>>()?;
+        let bufs = self.exe.execute::<xla::Literal>(&literals)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // artifacts are lowered with return_tuple=True
+        let outs = result.to_tuple()?;
+        if outs.len() != self.meta.outputs.len() {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.meta.name,
+                outs.len(),
+                self.meta.outputs.len()
+            );
+        }
+        outs.iter()
+            .zip(&self.meta.outputs)
+            .map(|(l, s)| HostTensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+/// The artifact runtime: PJRT CPU client + manifest + executable cache.
+///
+/// Not `Sync` (PJRT handles are thread-affine in the 0.1.6 crate); the
+/// coordinator owns one `Runtime` on its executor thread and feeds it
+/// through channels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, std::rc::Rc<Executable>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} — run `make artifacts` first", mpath.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let obj = json.as_obj().ok_or_else(|| anyhow!("manifest is not an object"))?;
+        let mut manifest = HashMap::new();
+        for (name, meta) in obj {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(meta
+                    .get(k)
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {k}"))?
+                    .to_string())
+            };
+            let specs = |k: &str| -> Result<Vec<TensorSpec>> {
+                meta.get(k)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("artifact {name}: missing {k}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            manifest.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    file: get_str("file")?,
+                    entry: get_str("entry")?,
+                    inputs: specs("inputs")?,
+                    outputs: specs("outputs")?,
+                    raw: meta.clone(),
+                },
+            );
+        }
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Artifact names available.
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Manifest metadata for an artifact.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    /// Load (compile) an artifact; compiled executables are cached.
+    pub fn load(&mut self, name: &str) -> Result<std::rc::Rc<Executable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact `{name}`"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let e = std::rc::Rc::new(Executable { meta, exe });
+        self.cache.insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+
+    /// One-shot convenience: load + run.
+    pub fn execute(&mut self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// PJRT platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn open_and_list() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let rt = Runtime::open(&dir).unwrap();
+        assert!(rt.artifact_names().iter().any(|n| n.starts_with("dbb_gemm")));
+        assert!(rt.artifact_names().contains(&"convnet5_b1"));
+    }
+
+    #[test]
+    fn dbb_gemm_artifact_matches_golden() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(&dir).unwrap();
+        let name = "dbb_gemm_m128_k256_n64_nnz4of8";
+        let meta = rt.meta(name).expect("artifact in manifest").clone();
+        let (m, k, n) = (128usize, 256usize, 64usize);
+        let (kb, nnz, bz) = (k / 8, 4usize, 8usize);
+        assert_eq!(meta.inputs[0].shape, vec![m, k]);
+
+        // synthesize a DBB operand pair with the rust-side encoder
+        let mut rng = crate::util::Rng::new(7);
+        let a = crate::tensor::TensorI8::rand(&[m, k], &mut rng);
+        let wd = crate::dbb::prune::prune_i8(
+            &crate::tensor::TensorI8::rand(&[k, n], &mut rng),
+            bz,
+            nnz,
+        );
+        let w = crate::dbb::DbbMatrix::compress_with_bound(&wd, bz, nnz).unwrap();
+        // pack (vals, idx) in the kernel's [KB, NNZ, N] layout
+        let mut vals = vec![0i8; kb * nnz * n];
+        let mut idx = vec![0i32; kb * nnz * n];
+        for col in 0..n {
+            for kbi in 0..kb {
+                let blk = w.block(col, kbi);
+                for (s, (v, p)) in blk.vals.iter().zip(blk.positions()).enumerate() {
+                    vals[(kbi * nnz + s) * n + col] = *v;
+                    idx[(kbi * nnz + s) * n + col] = p as i32;
+                }
+            }
+        }
+        let outs = rt
+            .execute(
+                name,
+                &[
+                    HostTensor::I8(a.data().to_vec()),
+                    HostTensor::I8(vals),
+                    HostTensor::I32(idx),
+                ],
+            )
+            .unwrap();
+        let got = outs[0].as_i32();
+        let golden = crate::gemm::dense_i8(&a, &wd);
+        assert_eq!(got, golden.data(), "XLA artifact vs rust golden GEMM");
+    }
+
+    #[test]
+    fn convnet5_artifact_executes() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(&dir).unwrap();
+        let meta = rt.meta("convnet5_b1").unwrap().clone();
+        let n_in = meta.inputs[0].elems();
+        let mut rng = crate::util::Rng::new(3);
+        let x: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+        let outs = rt.execute("convnet5_b1", &[HostTensor::F32(x)]).unwrap();
+        let logits = outs[0].as_f32();
+        assert_eq!(logits.len(), 10);
+        assert!(logits.iter().all(|v| v.is_finite()));
+        // non-degenerate: not all logits identical
+        assert!(logits.iter().any(|v| (v - logits[0]).abs() > 1e-6));
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(&dir).unwrap();
+        let a = rt.load("convnet5_b1").unwrap();
+        let b = rt.load("convnet5_b1").unwrap();
+        assert!(std::rc::Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn wrong_inputs_rejected() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut rt = Runtime::open(&dir).unwrap();
+        let err = rt.execute("convnet5_b1", &[]).unwrap_err();
+        assert!(err.to_string().contains("inputs"));
+        let err2 = rt
+            .execute("convnet5_b1", &[HostTensor::F32(vec![0.0; 3])])
+            .unwrap_err();
+        assert!(err2.to_string().contains("elems"), "{err2}");
+    }
+}

@@ -1,0 +1,386 @@
+//! Detailed per-MAC-slot simulator — ground truth for the analytic engine.
+//!
+//! Walks the exact output-stationary schedule of §IV (same tiling, skew and
+//! occupancy as [`super::analytic`]), issuing every physical MAC slot with
+//! its real operand data: it computes the functional GEMM result (checked
+//! against `crate::gemm` golden in tests), counts every switching event from
+//! the data (not from sparsity fractions), and accounts cycles from the
+//! deterministic schedule. Slow (O(MAC slots)) — use on small/medium GEMMs;
+//! the property tests cross-validate [`super::analytic`] against this.
+
+use super::analytic::{occupancy, sched_blocks, steady_cycles_per_pass, WeightStats};
+use super::{EventCounts, GemmTiming};
+use crate::arch::{Datapath, Design};
+use crate::dbb::DbbMatrix;
+use crate::tensor::{TensorI32, TensorI8};
+
+/// Result of a detailed simulation: functional output + timing.
+#[derive(Debug, Clone)]
+pub struct DetailedResult {
+    /// The computed GEMM output (INT32).
+    pub output: TensorI32,
+    /// Timing/event summary.
+    pub timing: GemmTiming,
+}
+
+/// Simulate `C = A · W` on the design's array, per MAC slot.
+///
+/// `im2col_magnification` only scales the activation SRAM traffic (the
+/// datapath behaviour is unchanged), mirroring the analytic engine.
+pub fn simulate_gemm(
+    design: &Design,
+    a: &TensorI8,
+    w: &DbbMatrix,
+    im2col_magnification: f64,
+) -> DetailedResult {
+    design.validate().expect("valid design");
+    let d = design.dims;
+    let (mg, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dim");
+    let ng = w.n;
+    if !matches!(design.datapath, Datapath::Dense) {
+        assert_eq!(d.b, w.bz, "sparse datapath block size must match encoding");
+    }
+
+    let stats = WeightStats::of(w);
+    let o = occupancy(design, &stats);
+    let tsteps = sched_blocks(design, &stats);
+    let (tile_rows, tile_cols) = (d.a * d.m, d.c * d.n);
+    let row_tiles = mg.div_ceil(tile_rows);
+    let col_tiles = ng.div_ceil(tile_cols);
+
+    // dense view needed for the dense datapath / fixed-DBB fallback streams
+    let dense_w = w.decompress();
+
+    let mut out = TensorI32::zeros(&[mg, ng]);
+    let mut ev = EventCounts::default();
+
+    for rt in 0..row_tiles {
+        for ct in 0..col_tiles {
+            // ---- one output-tile pass ----
+            for t in 0..tsteps {
+                // every TPE (i,j) processes step t (at skewed cycles; the
+                // schedule is deterministic so we only account the counts)
+                for ti in 0..d.m {
+                    for tj in 0..d.n {
+                        for ai in 0..d.a {
+                            let row = rt * tile_rows + ti * d.a + ai;
+                            for cj in 0..d.c {
+                                let col = ct * tile_cols + tj * d.c + cj;
+                                if row >= mg || col >= ng {
+                                    continue; // idle (counted via slot balance)
+                                }
+                                issue_block(
+                                    design, a, w, &dense_w, row, col, t, o, &mut out, &mut ev,
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            ev.cycles += steady_cycles_per_pass(design, &stats);
+        }
+    }
+    // one pipeline fill (skew) + one final accumulator drain for the whole
+    // back-to-back pass stream (matches `analytic::gemm_cycles`)
+    ev.cycles += (d.m + d.n - 2) as u64 * occupancy(design, &stats) as u64
+        + (d.a * d.c) as u64;
+
+    // idle slots = total slots − issued
+    let slots = design.physical_macs() as u64 * ev.cycles;
+    ev.macs_idle = slots - (ev.macs_active + ev.macs_gated);
+
+    // ---- SRAM traffic (counted, not computed from formulas) ----
+    let kb = tsteps as u64;
+    let wbytes_per_col: u64 = match design.datapath {
+        Datapath::Dense => kb * d.b as u64,
+        Datapath::FixedDbb { b } => kb * (o as u64 * b as u64) + (w.kblocks() as u64), // + index byte/blk
+        Datapath::Vdbb => kb * o as u64 + w.kblocks() as u64,
+    };
+    ev.weight_sram_bytes = wbytes_per_col * ng as u64 * row_tiles as u64;
+    ev.act_edge_bytes = (mg as u64 * kb * d.b as u64) * col_tiles as u64;
+    ev.act_sram_bytes = (ev.act_edge_bytes as f64 / im2col_magnification.max(1.0)) as u64;
+    ev.out_sram_bytes = mg as u64 * ng as u64; // INT8 post-requant write-back
+    ev.mux_selects = match design.datapath {
+        Datapath::Dense => 0,
+        _ => ev.macs_active + ev.macs_gated,
+    };
+
+    DetailedResult {
+        output: out,
+        timing: GemmTiming {
+            events: ev,
+            dense_macs: mg as u64 * k as u64 * ng as u64,
+        },
+    }
+}
+
+/// Issue all MAC slots of one (row, col, block-step) triple.
+#[allow(clippy::too_many_arguments)]
+fn issue_block(
+    design: &Design,
+    a: &TensorI8,
+    w: &DbbMatrix,
+    dense_w: &TensorI8,
+    row: usize,
+    col: usize,
+    t: usize,
+    o: usize,
+    out: &mut TensorI32,
+    ev: &mut EventCounts,
+) {
+    let d = design.dims;
+    let k = a.shape()[1];
+    let mut mac = |av: i8, wv: i8| {
+        if av != 0 && wv != 0 {
+            ev.macs_active += 1;
+        } else {
+            ev.macs_gated += 1;
+        }
+        if av != 0 && wv != 0 {
+            let cur = out.at(&[row, col]);
+            out.set(&[row, col], cur + av as i32 * wv as i32);
+        }
+    };
+
+    match design.datapath {
+        Datapath::Dense => {
+            // step t covers k ∈ [t·B, t·B+B)
+            for s in 0..d.b {
+                let kk = t * d.b + s;
+                let (av, wv) = if kk < k {
+                    (a.at(&[row, kk]), dense_w.at(&[kk, col]))
+                } else {
+                    (0, 0) // K padding streams zeros
+                };
+                mac(av, wv);
+            }
+        }
+        Datapath::FixedDbb { b } => {
+            let blk = w.block(col, t);
+            if w.bound <= b {
+                // sparse mode: one cycle, b slots, compressed weights
+                let positions: Vec<usize> = blk.positions().collect();
+                for s in 0..b {
+                    if s < blk.vals.len() {
+                        let kk = t * d.b + positions[s];
+                        mac(a.at(&[row, kk]), blk.vals[s]);
+                    } else {
+                        mac(0, 0); // encoded padding slot
+                    }
+                }
+            } else {
+                // dense fallback: stream the expanded block in o·b slots
+                let expanded = blk.expand(d.b);
+                for s in 0..(o * b) {
+                    if s < d.b {
+                        let kk = t * d.b + s;
+                        let av = if kk < k { a.at(&[row, kk]) } else { 0 };
+                        mac(av, expanded[s]);
+                    } else {
+                        mac(0, 0);
+                    }
+                }
+            }
+        }
+        Datapath::Vdbb => {
+            // time unrolled: o = bound slots, one non-zero per cycle
+            let blk = w.block(col, t);
+            let positions: Vec<usize> = blk.positions().collect();
+            for s in 0..o {
+                if s < blk.vals.len() {
+                    let kk = t * d.b + positions[s];
+                    mac(a.at(&[row, kk]), blk.vals[s]);
+                } else {
+                    mac(0, 0); // block had fewer non-zeros than the bound
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{ArrayDims, Tech};
+    use crate::dbb::prune::prune_i8;
+    use crate::gemm;
+    use crate::sim::analytic;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    fn designs_under_test() -> Vec<Design> {
+        let mk = |a, b, c, m, n, dp| Design {
+            dims: ArrayDims { a, b, c, m, n },
+            datapath: dp,
+            im2col: false,
+            act_cg: true,
+            tech: Tech::N16,
+        };
+        vec![
+            mk(1, 1, 1, 2, 4, Datapath::Dense),            // classic SA
+            mk(2, 8, 2, 2, 2, Datapath::Dense),            // dense STA
+            mk(2, 8, 2, 2, 2, Datapath::FixedDbb { b: 4 }), // STA-DBB 4/8
+            mk(2, 8, 2, 2, 2, Datapath::FixedDbb { b: 2 }), // STA-DBB 2/8
+            mk(2, 8, 4, 2, 2, Datapath::Vdbb),             // STA-VDBB
+            mk(4, 8, 8, 2, 2, Datapath::Vdbb),             // bigger VDBB TPE
+        ]
+    }
+
+    #[test]
+    fn functional_output_matches_golden() {
+        check(Config::default().cases(40), |rng| {
+            let designs = designs_under_test();
+            let design = &designs[rng.below(designs.len())];
+            let mg = rng.below(20) + 1;
+            let k = rng.below(40) + 1;
+            let ng = rng.below(20) + 1;
+            let nnz = rng.below(8) + 1;
+            let a = TensorI8::rand_sparse(&[mg, k], 0.4, rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, ng], rng), 8, nnz);
+            let w = DbbMatrix::compress(&wd, 8).unwrap();
+            let r = simulate_gemm(design, &a, &w, 1.0);
+            let golden = gemm::dense_i8(&a, &wd);
+            assert_eq!(
+                r.output.data(),
+                golden.data(),
+                "design={} mg={mg} k={k} ng={ng} nnz={nnz}",
+                design.label()
+            );
+        });
+    }
+
+    #[test]
+    fn cycles_match_analytic_exactly() {
+        check(Config::default().cases(40), |rng| {
+            let designs = designs_under_test();
+            let design = &designs[rng.below(designs.len())];
+            let mg = rng.below(30) + 1;
+            let k = rng.below(50) + 1;
+            let ng = rng.below(30) + 1;
+            let nnz = rng.below(8) + 1;
+            let a = TensorI8::rand(&[mg, k], rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, ng], rng), 8, nnz);
+            let w = DbbMatrix::compress(&wd, 8).unwrap();
+            let det = simulate_gemm(design, &a, &w, 1.0);
+            let ana = analytic::gemm_timing_exact(design, &a, &w, 1.0);
+            assert_eq!(
+                det.timing.events.cycles,
+                ana.events.cycles,
+                "design={}",
+                design.label()
+            );
+            assert_eq!(det.timing.events.mac_slots(), ana.events.mac_slots());
+        });
+    }
+
+    #[test]
+    fn issued_slots_match_analytic_exactly() {
+        check(Config::default().cases(30), |rng| {
+            let designs = designs_under_test();
+            let design = &designs[rng.below(designs.len())];
+            let mg = rng.below(24) + 1;
+            let k = rng.below(48) + 1;
+            let ng = rng.below(24) + 1;
+            let nnz = rng.below(8) + 1;
+            let a = TensorI8::rand(&[mg, k], rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, ng], rng), 8, nnz);
+            let w = DbbMatrix::compress(&wd, 8).unwrap();
+            let det = simulate_gemm(design, &a, &w, 1.0).timing.events;
+            let ana = analytic::gemm_timing_exact(design, &a, &w, 1.0).events;
+            let det_issued = det.macs_active + det.macs_gated;
+            let ana_issued = ana.macs_active + ana.macs_gated;
+            assert_eq!(det_issued, ana_issued, "design={}", design.label());
+            assert_eq!(det.macs_idle, ana.macs_idle);
+        });
+    }
+
+    #[test]
+    fn active_counts_match_analytic_when_acts_dense() {
+        // with no activation zeros the analytic fraction model is exact
+        check(Config::default().cases(30), |rng| {
+            let designs = designs_under_test();
+            let design = &designs[rng.below(designs.len())];
+            let mg = rng.below(16) + 1;
+            let k = rng.below(32) + 1;
+            let ng = rng.below(16) + 1;
+            let nnz = rng.below(8) + 1;
+            // all-nonzero activations
+            let mut a = TensorI8::rand(&[mg, k], rng);
+            for v in a.data_mut() {
+                if *v == 0 {
+                    *v = 1;
+                }
+            }
+            let wd = prune_i8(&TensorI8::rand(&[k, ng], rng), 8, nnz);
+            let w = DbbMatrix::compress(&wd, 8).unwrap();
+            let det = simulate_gemm(design, &a, &w, 1.0).timing.events;
+            let ana = analytic::gemm_timing_exact(design, &a, &w, 1.0).events;
+            assert_eq!(det.macs_active, ana.macs_active, "design={}", design.label());
+        });
+    }
+
+    #[test]
+    fn active_counts_close_to_analytic_with_sparse_acts() {
+        let mut rng = Rng::new(77);
+        let design = &designs_under_test()[4]; // VDBB
+        let a = TensorI8::rand_sparse(&[32, 64], 0.5, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[64, 32], &mut rng), 8, 3);
+        let w = DbbMatrix::compress(&wd, 8).unwrap();
+        let det = simulate_gemm(design, &a, &w, 1.0).timing.events;
+        let ana = analytic::gemm_timing_exact(design, &a, &w, 1.0).events;
+        let rel = (det.macs_active as f64 - ana.macs_active as f64).abs()
+            / det.macs_active.max(1) as f64;
+        assert!(rel < 0.02, "rel={rel}");
+    }
+
+    #[test]
+    fn sram_traffic_matches_analytic() {
+        check(Config::default().cases(30), |rng| {
+            let designs = designs_under_test();
+            let design = &designs[rng.below(designs.len())];
+            let mg = rng.below(24) + 1;
+            let k = rng.below(48) + 1;
+            let ng = rng.below(24) + 1;
+            let nnz = rng.below(8) + 1;
+            let a = TensorI8::rand(&[mg, k], rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, ng], rng), 8, nnz);
+            let w = DbbMatrix::compress(&wd, 8).unwrap();
+            let det = simulate_gemm(design, &a, &w, 1.0).timing.events;
+            let ana = analytic::gemm_timing_exact(design, &a, &w, 1.0).events;
+            assert_eq!(det.act_edge_bytes, ana.act_edge_bytes, "{}", design.label());
+            assert_eq!(det.out_sram_bytes, ana.out_sram_bytes);
+            // weight bytes: same formula base; allow the index-byte rounding
+            let diff = det.weight_sram_bytes as i64 - ana.weight_sram_bytes as i64;
+            assert!(
+                diff.unsigned_abs() <= (w.kblocks() * ng) as u64,
+                "det={} ana={} design={}",
+                det.weight_sram_bytes,
+                ana.weight_sram_bytes,
+                design.label()
+            );
+        });
+    }
+
+    #[test]
+    fn vdbb_sparser_weights_fewer_cycles() {
+        let mut rng = Rng::new(5);
+        let design = &designs_under_test()[4];
+        let a = TensorI8::rand(&[32, 64], &mut rng);
+        let w2 = DbbMatrix::compress_with_bound(
+            &prune_i8(&TensorI8::rand(&[64, 32], &mut rng), 8, 2),
+            8,
+            2,
+        )
+        .unwrap();
+        let w6 = DbbMatrix::compress_with_bound(
+            &prune_i8(&TensorI8::rand(&[64, 32], &mut rng), 8, 6),
+            8,
+            6,
+        )
+        .unwrap();
+        let c2 = simulate_gemm(design, &a, &w2, 1.0).timing.events.cycles;
+        let c6 = simulate_gemm(design, &a, &w6, 1.0).timing.events.cycles;
+        assert!(c6 > 2 * c2, "c2={c2} c6={c6}"); // ≈3x
+    }
+}

@@ -1,0 +1,149 @@
+//! Architecture simulator for the SA / STA / STA-DBB / STA-VDBB datapath
+//! arrays (paper §IV), with two engines cross-validated against each other:
+//!
+//! * [`detailed`] — a per-MAC, per-cycle functional simulator. Slow, but
+//!   bit-exact against the golden GEMM and used as ground truth in tests.
+//! * [`analytic`] — closed-form cycle/event model (DBB schedules are fully
+//!   deterministic, paper §V-C), fast enough to sweep whole CNNs across the
+//!   design space. Property tests assert it agrees with [`detailed`].
+//!
+//! [`accel`] composes either engine with the SRAM ([`sram`]), hardware
+//! IM2COL unit ([`im2col`]) and MCU ([`mcu`]) models into a whole-network
+//! timing/energy event stream consumed by `crate::power`.
+
+pub mod accel;
+pub mod analytic;
+pub mod detailed;
+pub mod im2col;
+pub mod mcu;
+pub mod sram;
+
+/// Switching/activity event counters produced by a simulation and consumed
+/// by the power model — the moral equivalent of the paper's VCD traces.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EventCounts {
+    /// Datapath cycles (array busy).
+    pub cycles: u64,
+    /// MAC operations issued to a physical MAC with a non-zero activation
+    /// (full switching).
+    pub macs_active: u64,
+    /// MAC slots where the activation operand was zero: clock-gated on
+    /// gating-capable datapaths (SA/VDBB), data-gated (reduced switching,
+    /// registers still clocked) on wide-DP datapaths.
+    pub macs_gated: u64,
+    /// Idle MAC slots (array under-utilization: skew fill/drain, partial
+    /// tiles, dense fallback stalls).
+    pub macs_idle: u64,
+    /// Weight bytes read from the weight SRAM (compressed stream for
+    /// DBB/VDBB, including the index metadata bytes).
+    pub weight_sram_bytes: u64,
+    /// Activation bytes read from the activation SRAM (after IM2COL
+    /// magnification when the unit is present — i.e. actual SRAM traffic).
+    pub act_sram_bytes: u64,
+    /// Activation bytes consumed at the array edge (pre-magnifier demand).
+    pub act_edge_bytes: u64,
+    /// Output bytes written back to SRAM (INT32 accumulators, requantized
+    /// to INT8 by the MCU path).
+    pub out_sram_bytes: u64,
+    /// Mux select toggles (one per MAC issue on sparse datapaths).
+    pub mux_selects: u64,
+    /// MCU cycles spent on ancillary ops (ReLU/pool/requant), overlappable.
+    pub mcu_cycles: u64,
+}
+
+impl EventCounts {
+    /// Accumulate another counter set (e.g. across layers).
+    pub fn add(&mut self, o: &EventCounts) {
+        self.cycles += o.cycles;
+        self.macs_active += o.macs_active;
+        self.macs_gated += o.macs_gated;
+        self.macs_idle += o.macs_idle;
+        self.weight_sram_bytes += o.weight_sram_bytes;
+        self.act_sram_bytes += o.act_sram_bytes;
+        self.act_edge_bytes += o.act_edge_bytes;
+        self.out_sram_bytes += o.out_sram_bytes;
+        self.mux_selects += o.mux_selects;
+        self.mcu_cycles += o.mcu_cycles;
+    }
+
+    /// Total MAC issue slots (active + gated + idle) — equals
+    /// `physical_macs × cycles` for a well-formed simulation.
+    pub fn mac_slots(&self) -> u64 {
+        self.macs_active + self.macs_gated + self.macs_idle
+    }
+
+    /// Datapath utilization: fraction of MAC slots doing useful (issued)
+    /// work — gated slots count as *issued* (they hold real zero-operand
+    /// work the schedule assigned), idle slots do not.
+    pub fn utilization(&self) -> f64 {
+        let slots = self.mac_slots();
+        if slots == 0 {
+            return 0.0;
+        }
+        (self.macs_active + self.macs_gated) as f64 / slots as f64
+    }
+
+    /// Measured activation sparsity over issued MACs.
+    pub fn act_sparsity(&self) -> f64 {
+        let issued = self.macs_active + self.macs_gated;
+        if issued == 0 {
+            return 0.0;
+        }
+        self.macs_gated as f64 / issued as f64
+    }
+}
+
+/// Result of simulating one GEMM on an array.
+#[derive(Debug, Clone, Default)]
+pub struct GemmTiming {
+    /// Event counters.
+    pub events: EventCounts,
+    /// Dense-equivalent MACs of the computed GEMM (M·K·N).
+    pub dense_macs: u64,
+}
+
+impl GemmTiming {
+    /// Effective ops/cycle = 2·dense MACs / cycles.
+    pub fn effective_ops_per_cycle(&self) -> f64 {
+        if self.events.cycles == 0 {
+            return 0.0;
+        }
+        2.0 * self.dense_macs as f64 / self.events.cycles as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn event_add_accumulates() {
+        let mut a = EventCounts {
+            cycles: 10,
+            macs_active: 5,
+            ..Default::default()
+        };
+        let b = EventCounts {
+            cycles: 3,
+            macs_gated: 2,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.cycles, 13);
+        assert_eq!(a.macs_active, 5);
+        assert_eq!(a.macs_gated, 2);
+        assert_eq!(a.mac_slots(), 7);
+    }
+
+    #[test]
+    fn utilization_and_sparsity() {
+        let e = EventCounts {
+            macs_active: 60,
+            macs_gated: 20,
+            macs_idle: 20,
+            ..Default::default()
+        };
+        assert!((e.utilization() - 0.8).abs() < 1e-12);
+        assert!((e.act_sparsity() - 0.25).abs() < 1e-12);
+    }
+}

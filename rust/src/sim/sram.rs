@@ -1,0 +1,118 @@
+//! Local SRAM model (paper §IV-B): 512 KB weight buffer (WB) + 2 MB
+//! activation buffer (AB), double-buffered, software managed.
+//!
+//! The model tracks capacity feasibility (does a layer's working set fit,
+//! or does it need K/N-striping with DRAM spill — the paper sizes the
+//! buffers so ResNet-50 layers fit) and turns byte-traffic counts from the
+//! timing engine into access events for the power model.
+
+/// SRAM instance parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct Sram {
+    /// Capacity in bytes.
+    pub bytes: usize,
+    /// Access word width in bytes (row of the bank mux).
+    pub word_bytes: usize,
+    /// Double buffered (halves usable capacity per phase, allows overlap
+    /// of DMA fill with compute — paper §IV-B).
+    pub double_buffered: bool,
+}
+
+impl Sram {
+    /// The paper's 512 KB weight buffer.
+    pub fn weight_buffer() -> Sram {
+        Sram {
+            bytes: 512 << 10,
+            word_bytes: 16,
+            double_buffered: true,
+        }
+    }
+
+    /// The paper's 2 MB activation buffer.
+    pub fn activation_buffer() -> Sram {
+        Sram {
+            bytes: 2 << 20,
+            word_bytes: 16,
+            double_buffered: true,
+        }
+    }
+
+    /// Usable bytes per phase.
+    pub fn usable(&self) -> usize {
+        if self.double_buffered {
+            self.bytes / 2
+        } else {
+            self.bytes
+        }
+    }
+
+    /// Whether a working set fits in one phase.
+    pub fn fits(&self, working_set: usize) -> bool {
+        working_set <= self.usable()
+    }
+
+    /// Number of word accesses for a byte-traffic count (reads or writes).
+    pub fn accesses(&self, traffic_bytes: u64) -> u64 {
+        traffic_bytes.div_ceil(self.word_bytes as u64)
+    }
+}
+
+/// Double-buffer phase tracker: models ping-pong between compute and DMA.
+#[derive(Debug, Default)]
+pub struct DoubleBuffer {
+    phase: bool,
+    /// Cycles the datapath stalled waiting for a DMA fill to finish.
+    pub stall_cycles: u64,
+}
+
+impl DoubleBuffer {
+    /// Advance one phase: compute consumed `compute_cycles` while the next
+    /// fill needs `fill_cycles`; any excess fill time stalls the array.
+    pub fn advance(&mut self, compute_cycles: u64, fill_cycles: u64) {
+        self.phase = !self.phase;
+        self.stall_cycles += fill_cycles.saturating_sub(compute_cycles);
+    }
+
+    /// Current phase id (0/1).
+    pub fn phase(&self) -> usize {
+        self.phase as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_capacities() {
+        assert_eq!(Sram::weight_buffer().bytes, 524_288);
+        assert_eq!(Sram::activation_buffer().bytes, 2_097_152);
+    }
+
+    #[test]
+    fn double_buffering_halves_capacity() {
+        let wb = Sram::weight_buffer();
+        assert_eq!(wb.usable(), 262_144);
+        assert!(wb.fits(200_000));
+        assert!(!wb.fits(300_000));
+    }
+
+    #[test]
+    fn word_access_counting() {
+        let wb = Sram::weight_buffer();
+        assert_eq!(wb.accesses(0), 0);
+        assert_eq!(wb.accesses(1), 1);
+        assert_eq!(wb.accesses(16), 1);
+        assert_eq!(wb.accesses(17), 2);
+    }
+
+    #[test]
+    fn double_buffer_stalls_when_fill_slower() {
+        let mut db = DoubleBuffer::default();
+        db.advance(100, 60); // fill hidden
+        assert_eq!(db.stall_cycles, 0);
+        db.advance(100, 150); // 50 cycle bubble
+        assert_eq!(db.stall_cycles, 50);
+        assert_eq!(db.phase(), 0);
+    }
+}

@@ -1,0 +1,254 @@
+//! Minimal dense n-d tensor used by the golden GEMMs, the simulator's
+//! functional path and the training substrate.
+//!
+//! Row-major, owned storage, no views/strides beyond what the substrate
+//! needs — the hot paths in this repo operate on raw slices obtained via
+//! [`Tensor::data`] and do their own indexing.
+
+use std::fmt;
+
+/// Dense row-major tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+/// INT8 tensor (CNN operands).
+pub type TensorI8 = Tensor<i8>;
+/// INT32 tensor (accumulators).
+pub type TensorI32 = Tensor<i32>;
+/// f32 tensor (training substrate).
+pub type TensorF32 = Tensor<f32>;
+
+impl<T: Copy + Default> Tensor<T> {
+    /// All-default (zero) tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: vec![T::default(); n],
+        }
+    }
+
+    /// Build from existing data; panics if the element count mismatches.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, data.len(), "shape {shape:?} needs {n} elems, got {}", data.len());
+        Tensor {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Shape slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when there are no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Immutable raw storage.
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Mutable raw storage.
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into raw storage.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Flat offset of a multi-index (row-major).
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0usize;
+        for (i, &d) in idx.iter().enumerate() {
+            debug_assert!(d < self.shape[i], "index {idx:?} out of shape {:?}", self.shape);
+            off = off * self.shape[i] + d;
+        }
+        off
+    }
+
+    /// Element read by multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    /// Element write by multi-index.
+    #[inline]
+    pub fn set(&mut self, idx: &[usize], v: T) {
+        let off = self.offset(idx);
+        self.data[off] = v;
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshape(&self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape {:?} -> {shape:?}", self.shape);
+        Tensor {
+            shape: shape.to_vec(),
+            data: self.data.clone(),
+        }
+    }
+
+    /// Elementwise map into a (possibly different-typed) tensor.
+    pub fn map<U: Copy + Default, F: Fn(T) -> U>(&self, f: F) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Materialized transpose of a 2-D tensor.
+    pub fn transpose2d(&self) -> Self {
+        assert_eq!(self.shape.len(), 2, "transpose2d needs a matrix");
+        let (m, n) = (self.shape[0], self.shape[1]);
+        let mut data = vec![T::default(); m * n];
+        for i in 0..m {
+            for j in 0..n {
+                data[j * m + i] = self.data[i * n + j];
+            }
+        }
+        Tensor { shape: vec![n, m], data }
+    }
+}
+
+impl TensorF32 {
+    /// Gaussian-initialized tensor (He-style scale under `std`).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut crate::util::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.normal() * std).collect(),
+        }
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+impl TensorI8 {
+    /// Uniform random INT8 in [-127, 127].
+    pub fn rand(shape: &[usize], rng: &mut crate::util::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n).map(|_| rng.i8_sym()).collect(),
+        }
+    }
+
+    /// Random with a given probability of zero per element (random sparsity).
+    pub fn rand_sparse(shape: &[usize], p_zero: f32, rng: &mut crate::util::Rng) -> Self {
+        let n: usize = shape.iter().product();
+        Tensor {
+            shape: shape.to_vec(),
+            data: (0..n)
+                .map(|_| if rng.coin(p_zero) { 0 } else { rng.i8_sym() })
+                .collect(),
+        }
+    }
+
+    /// Fraction of exactly-zero elements.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x == 0).count() as f64 / self.data.len() as f64
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}(n={})", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = TensorI32::zeros(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert!(t.data().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn offset_row_major() {
+        let t = TensorI32::zeros(&[2, 3, 4]);
+        assert_eq!(t.offset(&[0, 0, 0]), 0);
+        assert_eq!(t.offset(&[0, 0, 3]), 3);
+        assert_eq!(t.offset(&[0, 1, 0]), 4);
+        assert_eq!(t.offset(&[1, 0, 0]), 12);
+        assert_eq!(t.offset(&[1, 2, 3]), 23);
+    }
+
+    #[test]
+    fn set_at_roundtrip() {
+        let mut t = TensorF32::zeros(&[3, 3]);
+        t.set(&[1, 2], 7.5);
+        assert_eq!(t.at(&[1, 2]), 7.5);
+        assert_eq!(t.at(&[2, 1]), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_bad_len_panics() {
+        let _ = TensorI8::from_vec(&[2, 2], vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = TensorI32::from_vec(&[2, 3], vec![1, 2, 3, 4, 5, 6]);
+        let r = t.reshape(&[3, 2]);
+        assert_eq!(r.at(&[0, 1]), 2);
+        assert_eq!(r.at(&[2, 1]), 6);
+    }
+
+    #[test]
+    fn map_changes_type() {
+        let t = TensorI8::from_vec(&[2], vec![-1, 2]);
+        let f = t.map(|x| x as f32 * 2.0);
+        assert_eq!(f.data(), &[-2.0, 4.0]);
+    }
+
+    #[test]
+    fn rand_sparse_hits_target() {
+        let mut rng = Rng::new(9);
+        let t = TensorI8::rand_sparse(&[100, 100], 0.5, &mut rng);
+        let s = t.sparsity();
+        assert!((s - 0.5).abs() < 0.03, "sparsity={s}");
+    }
+
+    #[test]
+    fn randn_scale() {
+        let mut rng = Rng::new(10);
+        let t = TensorF32::randn(&[10_000], 0.1, &mut rng);
+        let var =
+            t.data().iter().map(|x| (x * x) as f64).sum::<f64>() / t.len() as f64;
+        assert!((var.sqrt() - 0.1).abs() < 0.01);
+    }
+}

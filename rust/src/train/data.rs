@@ -1,0 +1,255 @@
+//! Synthetic image-classification datasets.
+//!
+//! The paper trains on MNIST / CIFAR-10 / ImageNet; the builder has no
+//! network access, so we substitute *genuinely learnable* synthetic
+//! datasets (DESIGN.md §Paper-resources substitutions): each class gets a
+//! smooth random template (low-frequency blobs), and samples are the
+//! template plus pixel noise, random shifts and amplitude jitter. This
+//! preserves what Tables I–II actually measure — the *relative* accuracy
+//! cost of DBB pruning and quantization on a trained CNN — without the
+//! datasets themselves.
+
+use crate::tensor::TensorF32;
+use crate::util::Rng;
+
+/// A labeled image dataset, `[N, H, W, C]` in `[0, 1]`.
+pub struct Dataset {
+    /// Images.
+    pub images: TensorF32,
+    /// Labels `0..classes`.
+    pub labels: Vec<usize>,
+    /// Class count.
+    pub classes: usize,
+}
+
+impl Dataset {
+    /// Number of samples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Per-sample image size (H·W·C).
+    pub fn sample_elems(&self) -> usize {
+        self.images.len() / self.len().max(1)
+    }
+
+    /// Copy a batch `[indices.len(), H, W, C]`.
+    pub fn batch(&self, indices: &[usize]) -> (TensorF32, Vec<usize>) {
+        let e = self.sample_elems();
+        let mut shape = self.images.shape().to_vec();
+        shape[0] = indices.len();
+        let mut data = Vec::with_capacity(indices.len() * e);
+        for &i in indices {
+            data.extend_from_slice(&self.images.data()[i * e..(i + 1) * e]);
+        }
+        (
+            TensorF32::from_vec(&shape, data),
+            indices.iter().map(|&i| self.labels[i]).collect(),
+        )
+    }
+}
+
+/// Smooth per-class template: sum of a few random 2-D Gaussian blobs.
+fn template(h: usize, w: usize, c: usize, rng: &mut Rng) -> Vec<f32> {
+    let mut t = vec![0f32; h * w * c];
+    let blobs = 3 + rng.below(3);
+    for _ in 0..blobs {
+        let cy = rng.f32() * h as f32;
+        let cx = rng.f32() * w as f32;
+        let sig = 1.5 + rng.f32() * (h as f32 / 4.0);
+        let amp = 0.4 + rng.f32() * 0.6;
+        let chan = rng.below(c);
+        for y in 0..h {
+            for x in 0..w {
+                let d2 = (y as f32 - cy).powi(2) + (x as f32 - cx).powi(2);
+                t[(y * w + x) * c + chan] += amp * (-d2 / (2.0 * sig * sig)).exp();
+            }
+        }
+    }
+    t
+}
+
+/// Generate a synthetic dataset of `n` samples.
+pub fn synth(
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    noise: f32,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let templates: Vec<Vec<f32>> = (0..classes).map(|_| template(h, w, c, &mut rng)).collect();
+    let e = h * w * c;
+    let mut images = vec![0f32; n * e];
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let y = rng.below(classes);
+        labels.push(y);
+        let amp = 0.6 + rng.f32() * 0.6;
+        // random translation (±3 px)
+        let dy = rng.below(7) as isize - 3;
+        let dx = rng.below(7) as isize - 3;
+        let t = &templates[y];
+        for yy in 0..h {
+            for xx in 0..w {
+                let sy = yy as isize - dy;
+                let sx = xx as isize - dx;
+                for cc in 0..c {
+                    let base = if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                        t[((sy as usize) * w + sx as usize) * c + cc]
+                    } else {
+                        0.0
+                    };
+                    let v = amp * base + noise * rng.normal();
+                    images[(i * h * w + yy * w + xx) * c + cc] = v.clamp(0.0, 1.0);
+                }
+            }
+        }
+    }
+    Dataset {
+        images: TensorF32::from_vec(&[n, h, w, c], images),
+        labels,
+        classes,
+    }
+}
+
+/// Generate a train/test pair drawn from the *same* class templates
+/// (the split a real dataset provides).
+pub fn synth_split(
+    n_train: usize,
+    n_test: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    classes: usize,
+    noise: f32,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    let all = synth(n_train + n_test, h, w, c, classes, noise, seed);
+    let e = all.sample_elems();
+    let cut = n_train * e;
+    let train = Dataset {
+        images: {
+            let mut shape = all.images.shape().to_vec();
+            shape[0] = n_train;
+            TensorF32::from_vec(&shape, all.images.data()[..cut].to_vec())
+        },
+        labels: all.labels[..n_train].to_vec(),
+        classes,
+    };
+    let test = Dataset {
+        images: {
+            let mut shape = all.images.shape().to_vec();
+            shape[0] = n_test;
+            TensorF32::from_vec(&shape, all.images.data()[cut..].to_vec())
+        },
+        labels: all.labels[n_train..].to_vec(),
+        classes,
+    };
+    (train, test)
+}
+
+/// Noise level of the standard datasets: tuned so a converged LeNet-5
+/// lands in the high-90s (headroom for pruning damage to show, like the
+/// real MNIST/CIFAR columns of Table I) while a nearest-mean classifier
+/// still clears 60%.
+pub const NOISE: f32 = 0.22;
+
+/// MNIST-like: 28×28×1, 10 classes.
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    synth(n, 28, 28, 1, 10, NOISE, seed)
+}
+
+/// MNIST-like train/test split sharing templates.
+pub fn synth_mnist_split(n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    synth_split(n_train, n_test, 28, 28, 1, 10, NOISE, seed)
+}
+
+/// CIFAR-like: 32×32×3, 10 classes.
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    synth(n, 32, 32, 3, 10, NOISE, seed)
+}
+
+/// CIFAR-like train/test split sharing templates.
+pub fn synth_cifar_split(n_train: usize, n_test: usize, seed: u64) -> (Dataset, Dataset) {
+    synth_split(n_train, n_test, 32, 32, 3, 10, NOISE, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = synth_mnist(64, 1);
+        assert_eq!(d.images.shape(), &[64, 28, 28, 1]);
+        assert_eq!(d.len(), 64);
+        assert!(d.images.data().iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(d.labels.iter().all(|&y| y < 10));
+    }
+
+    #[test]
+    fn all_classes_present() {
+        let d = synth_mnist(400, 2);
+        for cls in 0..10 {
+            assert!(d.labels.contains(&cls), "class {cls} missing");
+        }
+    }
+
+    #[test]
+    fn batch_extraction() {
+        let d = synth_cifar(16, 3);
+        let (x, y) = d.batch(&[3, 7, 11]);
+        assert_eq!(x.shape(), &[3, 32, 32, 3]);
+        assert_eq!(y.len(), 3);
+        // rows are the right samples
+        let e = d.sample_elems();
+        assert_eq!(&x.data()[..e], &d.images.data()[3 * e..4 * e]);
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // a nearest-template classifier should beat chance easily —
+        // the dataset is genuinely learnable
+        let d = synth_mnist(200, 4);
+        let e = d.sample_elems();
+        // build per-class means from the first half
+        let mut means = vec![vec![0f32; e]; 10];
+        let mut counts = vec![0usize; 10];
+        for i in 0..100 {
+            let y = d.labels[i];
+            counts[y] += 1;
+            for (m, v) in means[y].iter_mut().zip(&d.images.data()[i * e..(i + 1) * e]) {
+                *m += v;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(&counts) {
+            for v in m.iter_mut() {
+                *v /= c.max(1) as f32;
+            }
+        }
+        // classify the second half by nearest mean
+        let mut correct = 0;
+        for i in 100..200 {
+            let img = &d.images.data()[i * e..(i + 1) * e];
+            let best = (0..10)
+                .min_by(|&a, &b| {
+                    let da: f32 = means[a].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    let db: f32 = means[b].iter().zip(img).map(|(m, v)| (m - v).powi(2)).sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == d.labels[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "nearest-mean accuracy only {correct}/100");
+    }
+}

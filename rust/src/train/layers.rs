@@ -1,0 +1,447 @@
+//! Trainable layers with forward/backward passes.
+//!
+//! The layer set is exactly what the paper's five benchmark CNNs need:
+//! conv (via im2col + GEMM — the same lowering the accelerator uses),
+//! fully-connected, ReLU, 2×2 max-pool and flatten. Weights live in GEMM
+//! layout (`[K, N]`, K = kh·kw·cin channel-fastest) so the DBB pruning
+//! masks apply to the same blocks the hardware sees.
+
+use crate::tensor::TensorF32;
+use crate::util::Rng;
+
+use super::linalg::{col2im_f32, im2col_f32, matmul, matmul_tn, Conv2dShape};
+
+/// A trainable layer.
+pub trait Layer {
+    /// Forward pass; `x` layout is layer-specific (documented per layer).
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32;
+    /// Backward pass: gradient w.r.t. input; accumulates weight grads.
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32;
+    /// (weights, grads, momentum) triples for the optimizer; empty for
+    /// stateless layers.
+    fn params(&mut self) -> Vec<(&mut TensorF32, &mut TensorF32, &mut TensorF32)> {
+        Vec::new()
+    }
+    /// Prunable GEMM weight matrix (K×N), if this layer carries one.
+    fn gemm_weight(&mut self) -> Option<&mut TensorF32> {
+        None
+    }
+    /// Layer name for reporting.
+    fn name(&self) -> &str;
+}
+
+/// Convolution via im2col + GEMM. Input `[B, H, W, C]`, output
+/// `[B, OH, OW, OC]`. Weight `[K, OC]` with `K = k·k·c` (GEMM layout).
+pub struct Conv2d {
+    /// Geometry.
+    pub shape: Conv2dShape,
+    /// GEMM-layout weights.
+    pub w: TensorF32,
+    /// Bias per output channel.
+    pub b: TensorF32,
+    dw: TensorF32,
+    db: TensorF32,
+    mw: TensorF32,
+    mb: TensorF32,
+    cols: Option<TensorF32>,
+    batch: usize,
+    label: String,
+}
+
+impl Conv2d {
+    /// He-initialized conv layer.
+    pub fn new(label: &str, shape: Conv2dShape, rng: &mut Rng) -> Self {
+        let k = shape.gemm_k();
+        let std = (2.0 / k as f32).sqrt();
+        Conv2d {
+            shape,
+            w: TensorF32::randn(&[k, shape.oc], std, rng),
+            b: TensorF32::zeros(&[shape.oc]),
+            dw: TensorF32::zeros(&[k, shape.oc]),
+            db: TensorF32::zeros(&[shape.oc]),
+            mw: TensorF32::zeros(&[k, shape.oc]),
+            mb: TensorF32::zeros(&[shape.oc]),
+            cols: None,
+            batch: 0,
+            label: label.to_string(),
+        }
+    }
+}
+
+impl Layer for Conv2d {
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        let b = x.shape()[0];
+        self.batch = b;
+        let s = self.shape;
+        let cols = im2col_f32(x, &s);
+        let mut y = matmul(&cols, &self.w);
+        let oc = s.oc;
+        for row in y.data_mut().chunks_mut(oc) {
+            for (v, bias) in row.iter_mut().zip(self.b.data()) {
+                *v += bias;
+            }
+        }
+        if train {
+            self.cols = Some(cols);
+        }
+        y.reshape(&[b, s.oh(), s.ow(), oc])
+    }
+
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32 {
+        let s = self.shape;
+        let m = self.batch * s.oh() * s.ow();
+        let dy2 = dy.reshape(&[m, s.oc]);
+        let cols = self.cols.take().expect("forward(train=true) first");
+        // dW = colsᵀ · dy
+        self.dw = matmul_tn(&cols, &dy2);
+        // db = Σ rows
+        let mut db = vec![0f32; s.oc];
+        for row in dy2.data().chunks(s.oc) {
+            for (d, v) in db.iter_mut().zip(row) {
+                *d += v;
+            }
+        }
+        self.db = TensorF32::from_vec(&[s.oc], db);
+        // dX = col2im(dy · Wᵀ)
+        let wt = self.w.transpose2d(); // [N, K]
+        let dcols = matmul(&dy2, &wt);
+        col2im_f32(&dcols, &s, self.batch)
+    }
+
+    fn params(&mut self) -> Vec<(&mut TensorF32, &mut TensorF32, &mut TensorF32)> {
+        vec![(&mut self.w, &mut self.dw, &mut self.mw), (&mut self.b, &mut self.db, &mut self.mb)]
+    }
+
+    fn gemm_weight(&mut self) -> Option<&mut TensorF32> {
+        Some(&mut self.w)
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// Fully connected: input `[B, K]`, weight `[K, N]`, output `[B, N]`.
+pub struct Linear {
+    /// GEMM-layout weights.
+    pub w: TensorF32,
+    /// Bias.
+    pub b: TensorF32,
+    dw: TensorF32,
+    db: TensorF32,
+    mw: TensorF32,
+    mb: TensorF32,
+    x: Option<TensorF32>,
+    label: String,
+}
+
+impl Linear {
+    /// He-initialized FC layer.
+    pub fn new(label: &str, k: usize, n: usize, rng: &mut Rng) -> Self {
+        let std = (2.0 / k as f32).sqrt();
+        Linear {
+            w: TensorF32::randn(&[k, n], std, rng),
+            b: TensorF32::zeros(&[n]),
+            dw: TensorF32::zeros(&[k, n]),
+            db: TensorF32::zeros(&[n]),
+            mw: TensorF32::zeros(&[k, n]),
+            mb: TensorF32::zeros(&[n]),
+            x: None,
+            label: label.to_string(),
+        }
+    }
+}
+
+impl Layer for Linear {
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        let b = x.shape()[0];
+        let k = self.w.shape()[0];
+        let x2 = x.reshape(&[b, k]);
+        let mut y = matmul(&x2, &self.w);
+        let n = self.w.shape()[1];
+        for row in y.data_mut().chunks_mut(n) {
+            for (v, bias) in row.iter_mut().zip(self.b.data()) {
+                *v += bias;
+            }
+        }
+        if train {
+            self.x = Some(x2);
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32 {
+        let x = self.x.take().expect("forward(train=true) first");
+        self.dw = matmul_tn(&x, dy);
+        let n = self.w.shape()[1];
+        let mut db = vec![0f32; n];
+        for row in dy.data().chunks(n) {
+            for (d, v) in db.iter_mut().zip(row) {
+                *d += v;
+            }
+        }
+        self.db = TensorF32::from_vec(&[n], db);
+        matmul(dy, &self.w.transpose2d())
+    }
+
+    fn params(&mut self) -> Vec<(&mut TensorF32, &mut TensorF32, &mut TensorF32)> {
+        vec![(&mut self.w, &mut self.dw, &mut self.mw), (&mut self.b, &mut self.db, &mut self.mb)]
+    }
+
+    fn gemm_weight(&mut self) -> Option<&mut TensorF32> {
+        Some(&mut self.w)
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+/// ReLU (any shape).
+pub struct Relu {
+    mask: Vec<bool>,
+}
+
+impl Relu {
+    /// New ReLU.
+    pub fn new() -> Self {
+        Relu { mask: Vec::new() }
+    }
+}
+
+impl Default for Relu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Relu {
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        let mut y = x.clone();
+        if train {
+            self.mask = x.data().iter().map(|&v| v > 0.0).collect();
+        }
+        for v in y.data_mut() {
+            if *v < 0.0 {
+                *v = 0.0;
+            }
+        }
+        y
+    }
+
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32 {
+        let mut dx = dy.clone();
+        for (d, &keep) in dx.data_mut().iter_mut().zip(&self.mask) {
+            if !keep {
+                *d = 0.0;
+            }
+        }
+        dx
+    }
+
+    fn name(&self) -> &str {
+        "relu"
+    }
+}
+
+/// 2×2 max pool, stride 2. Input `[B, H, W, C]` (H, W even).
+pub struct MaxPool2 {
+    argmax: Vec<usize>,
+    in_shape: Vec<usize>,
+}
+
+impl MaxPool2 {
+    /// New pool layer.
+    pub fn new() -> Self {
+        MaxPool2 { argmax: Vec::new(), in_shape: Vec::new() }
+    }
+}
+
+impl Default for MaxPool2 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for MaxPool2 {
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        let (b, h, w, c) = (x.shape()[0], x.shape()[1], x.shape()[2], x.shape()[3]);
+        let (oh, ow) = (h / 2, w / 2);
+        let mut y = vec![f32::NEG_INFINITY; b * oh * ow * c];
+        let mut arg = vec![0usize; b * oh * ow * c];
+        let xd = x.data();
+        for bi in 0..b {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    for ci in 0..c {
+                        let o = ((bi * oh + oy) * ow + ox) * c + ci;
+                        for dy_ in 0..2 {
+                            for dx in 0..2 {
+                                let ii = ((bi * h + oy * 2 + dy_) * w + ox * 2 + dx) * c + ci;
+                                if xd[ii] > y[o] {
+                                    y[o] = xd[ii];
+                                    arg[o] = ii;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if train {
+            self.argmax = arg;
+            self.in_shape = x.shape().to_vec();
+        }
+        TensorF32::from_vec(&[b, oh, ow, c], y)
+    }
+
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32 {
+        let mut dx = TensorF32::zeros(&self.in_shape);
+        let dxd = dx.data_mut();
+        for (g, &src) in dy.data().iter().zip(&self.argmax) {
+            dxd[src] += g;
+        }
+        dx
+    }
+
+    fn name(&self) -> &str {
+        "maxpool2"
+    }
+}
+
+/// Flatten `[B, ...]` → `[B, prod]`.
+pub struct Flatten {
+    in_shape: Vec<usize>,
+}
+
+impl Flatten {
+    /// New flatten layer.
+    pub fn new() -> Self {
+        Flatten { in_shape: Vec::new() }
+    }
+}
+
+impl Default for Flatten {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Layer for Flatten {
+    fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        if train {
+            self.in_shape = x.shape().to_vec();
+        }
+        let b = x.shape()[0];
+        x.reshape(&[b, x.len() / b])
+    }
+
+    fn backward(&mut self, dy: &TensorF32) -> TensorF32 {
+        dy.reshape(&self.in_shape)
+    }
+
+    fn name(&self) -> &str {
+        "flatten"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Finite-difference gradient check for a layer's input gradient.
+    fn grad_check<L: Layer>(layer: &mut L, x: &TensorF32, eps: f32, tol: f32) {
+        let y = layer.forward(x, true);
+        // loss = Σ y²/2 → dy = y
+        let dx = layer.backward(&y);
+        let mut rng = Rng::new(11);
+        for _ in 0..10 {
+            let i = rng.below(x.len());
+            let mut xp = x.clone();
+            xp.data_mut()[i] += eps;
+            let yp = layer.forward(&xp, false);
+            let mut xm = x.clone();
+            xm.data_mut()[i] -= eps;
+            let ym = layer.forward(&xm, false);
+            let lp: f32 = yp.data().iter().map(|v| v * v / 2.0).sum();
+            let lm: f32 = ym.data().iter().map(|v| v * v / 2.0).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            let an = dx.data()[i];
+            assert!(
+                (fd - an).abs() < tol * (1.0 + fd.abs().max(an.abs())),
+                "elem {i}: fd={fd} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn conv_grad_check() {
+        let mut rng = Rng::new(1);
+        let s = Conv2dShape { h: 5, w: 5, c: 2, k: 3, oc: 3, stride: 1, pad: 1 };
+        let mut conv = Conv2d::new("c", s, &mut rng);
+        let x = TensorF32::randn(&[2, 5, 5, 2], 1.0, &mut rng);
+        grad_check(&mut conv, &x, 1e-2, 2e-2);
+    }
+
+    #[test]
+    fn conv_weight_grad_check() {
+        let mut rng = Rng::new(2);
+        let s = Conv2dShape { h: 4, w: 4, c: 1, k: 3, oc: 2, stride: 1, pad: 0 };
+        let mut conv = Conv2d::new("c", s, &mut rng);
+        let x = TensorF32::randn(&[1, 4, 4, 1], 1.0, &mut rng);
+        let y = conv.forward(&x, true);
+        conv.backward(&y);
+        let eps = 1e-2f32;
+        for i in [0usize, 3, 7] {
+            let orig = conv.w.data()[i];
+            conv.w.data_mut()[i] = orig + eps;
+            let lp: f32 = conv.forward(&x, false).data().iter().map(|v| v * v / 2.0).sum();
+            conv.w.data_mut()[i] = orig - eps;
+            let lm: f32 = conv.forward(&x, false).data().iter().map(|v| v * v / 2.0).sum();
+            conv.w.data_mut()[i] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            let y2 = conv.forward(&x, true);
+            conv.backward(&y2);
+            let an = conv.dw.data()[i];
+            assert!((fd - an).abs() < 2e-2 * (1.0 + fd.abs()), "w[{i}]: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn linear_grad_check() {
+        let mut rng = Rng::new(3);
+        let mut fc = Linear::new("fc", 6, 4, &mut rng);
+        let x = TensorF32::randn(&[3, 6], 1.0, &mut rng);
+        grad_check(&mut fc, &x, 1e-2, 1e-2);
+    }
+
+    #[test]
+    fn relu_grad_check() {
+        let mut rng = Rng::new(4);
+        let mut r = Relu::new();
+        let x = TensorF32::randn(&[4, 5], 1.0, &mut rng);
+        grad_check(&mut r, &x, 1e-3, 1e-2);
+    }
+
+    #[test]
+    fn maxpool_forward_and_grad_routing() {
+        let x = TensorF32::from_vec(
+            &[1, 2, 2, 1],
+            vec![1.0, 5.0, 3.0, 2.0],
+        );
+        let mut p = MaxPool2::new();
+        let y = p.forward(&x, true);
+        assert_eq!(y.data(), &[5.0]);
+        let dx = p.backward(&TensorF32::from_vec(&[1, 1, 1, 1], vec![7.0]));
+        assert_eq!(dx.data(), &[0.0, 7.0, 0.0, 0.0]); // all grad to argmax
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let mut f = Flatten::new();
+        let x = TensorF32::zeros(&[2, 3, 4, 5]);
+        let y = f.forward(&x, true);
+        assert_eq!(y.shape(), &[2, 60]);
+        assert_eq!(f.backward(&y).shape(), &[2, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,260 @@
+//! f32 GEMM + im2col primitives for the training substrate.
+//!
+//! Scalar `ikj`-ordered matmul (cache-friendly, autovectorizes well) — the
+//! training workloads here are small synthetic-dataset models (Tables I–II),
+//! not production training.
+
+use crate::tensor::TensorF32;
+
+/// `C[M,N] = A[M,K] · B[K,N]`.
+pub fn matmul(a: &TensorF32, b: &TensorF32) -> TensorF32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "GEMM inner dim: {k} vs {k2}");
+    let mut c = vec![0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let av = ad[i * k + kk];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    TensorF32::from_vec(&[m, n], c)
+}
+
+/// `C[M,N] = Aᵀ[M,K]ᵀ… ` — precisely: `C = Aᵀ·B` with `A[K,M]`, `B[K,N]`.
+pub fn matmul_tn(a: &TensorF32, b: &TensorF32) -> TensorF32 {
+    let (k, m) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut c = vec![0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    TensorF32::from_vec(&[m, n], c)
+}
+
+/// `C[M,N] = A[M,K] · Bᵀ` with `B[N,K]`.
+pub fn matmul_nt(a: &TensorF32, b: &TensorF32) -> TensorF32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (n, k2) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2);
+    let mut c = vec![0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for (av, bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    TensorF32::from_vec(&[m, n], c)
+}
+
+/// Conv geometry for the training layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dShape {
+    /// Input height/width/channels.
+    pub h: usize,
+    /// Input width.
+    pub w: usize,
+    /// Input channels.
+    pub c: usize,
+    /// Kernel size (square).
+    pub k: usize,
+    /// Output channels.
+    pub oc: usize,
+    /// Stride.
+    pub stride: usize,
+    /// Zero padding.
+    pub pad: usize,
+}
+
+impl Conv2dShape {
+    /// Output height.
+    pub fn oh(&self) -> usize {
+        (self.h + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// Output width.
+    pub fn ow(&self) -> usize {
+        (self.w + 2 * self.pad - self.k) / self.stride + 1
+    }
+
+    /// GEMM reduction dim (patch size), channel-fastest layout `(kh, kw, c)`
+    /// so DBB blocks along K group channels at one tap — the paper's
+    /// depthwise blocking (Fig. 2).
+    pub fn gemm_k(&self) -> usize {
+        self.k * self.k * self.c
+    }
+}
+
+/// IM2COL for a batched `[B, H, W, C]` f32 tensor → `[B·OH·OW, K·K·C]`.
+pub fn im2col_f32(x: &TensorF32, s: &Conv2dShape) -> TensorF32 {
+    let b = x.shape()[0];
+    let (oh, ow, kk) = (s.oh(), s.ow(), s.gemm_k());
+    let mut out = vec![0f32; b * oh * ow * kk];
+    let xd = x.data();
+    let (h, w, c) = (s.h, s.w, s.c);
+    for bi in 0..b {
+        let xoff = bi * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * kk;
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..s.k {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let src = xoff + ((iy as usize) * w + ix as usize) * c;
+                        let dst = row + (ky * s.k + kx) * c;
+                        out[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+                    }
+                }
+            }
+        }
+    }
+    TensorF32::from_vec(&[b * oh * ow, kk], out)
+}
+
+/// COL2IM: scatter-add patch-space gradients back to `[B, H, W, C]`.
+pub fn col2im_f32(cols: &TensorF32, s: &Conv2dShape, b: usize) -> TensorF32 {
+    let (oh, ow, kk) = (s.oh(), s.ow(), s.gemm_k());
+    assert_eq!(cols.shape(), &[b * oh * ow, kk]);
+    let (h, w, c) = (s.h, s.w, s.c);
+    let mut out = vec![0f32; b * h * w * c];
+    let cd = cols.data();
+    for bi in 0..b {
+        let xoff = bi * h * w * c;
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = ((bi * oh + oy) * ow + ox) * kk;
+                for ky in 0..s.k {
+                    let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    for kx in 0..s.k {
+                        let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+                        if ix < 0 || ix >= w as isize {
+                            continue;
+                        }
+                        let dst = xoff + ((iy as usize) * w + ix as usize) * c;
+                        let src = row + (ky * s.k + kx) * c;
+                        for ci in 0..c {
+                            out[dst + ci] += cd[src + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    TensorF32::from_vec(&[b, h, w, c], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_small_golden() {
+        let a = TensorF32::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = TensorF32::from_vec(&[3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = Rng::new(9);
+        let a = TensorF32::randn(&[7, 5], 1.0, &mut rng);
+        let b = TensorF32::randn(&[5, 6], 1.0, &mut rng);
+        let c = matmul(&a, &b);
+        // A = (Aᵀ)ᵀ: matmul_tn(Aᵀ, B) == A·B
+        let mut at = TensorF32::zeros(&[5, 7]);
+        for i in 0..7 {
+            for j in 0..5 {
+                at.set(&[j, i], a.at(&[i, j]));
+            }
+        }
+        let c2 = matmul_tn(&at, &b);
+        for (x, y) in c.data().iter().zip(c2.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        // matmul_nt(A, Bᵀ) == A·B
+        let mut bt = TensorF32::zeros(&[6, 5]);
+        for i in 0..5 {
+            for j in 0..6 {
+                bt.set(&[j, i], b.at(&[i, j]));
+            }
+        }
+        let c3 = matmul_nt(&a, &bt);
+        for (x, y) in c.data().iter().zip(c3.data()) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn im2col_col2im_adjoint() {
+        // <im2col(x), y> == <x, col2im(y)> — the operators are adjoint,
+        // which is exactly what correct conv backprop requires.
+        let mut rng = Rng::new(3);
+        let s = Conv2dShape { h: 6, w: 5, c: 2, k: 3, oc: 4, stride: 1, pad: 1 };
+        let x = TensorF32::randn(&[2, 6, 5, 2], 1.0, &mut rng);
+        let y = TensorF32::randn(&[2 * s.oh() * s.ow(), s.gemm_k()], 1.0, &mut rng);
+        let ax = im2col_f32(&x, &s);
+        let aty = col2im_f32(&y, &s, 2);
+        let lhs: f32 = ax.data().iter().zip(y.data()).map(|(a, b)| a * b).sum();
+        let rhs: f32 = x.data().iter().zip(aty.data()).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-2 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn im2col_matches_python_layout() {
+        // channel-fastest (kh, kw, c) — the same layout as the Pallas kernel
+        let s = Conv2dShape { h: 2, w: 2, c: 2, k: 1, oc: 1, stride: 1, pad: 0 };
+        let x = TensorF32::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let cols = im2col_f32(&x, &s);
+        assert_eq!(cols.shape(), &[4, 2]);
+        assert_eq!(cols.data(), x.data());
+    }
+
+    #[test]
+    fn stride_2_shapes() {
+        let s = Conv2dShape { h: 8, w: 8, c: 1, k: 3, oc: 1, stride: 2, pad: 1 };
+        assert_eq!(s.oh(), 4);
+        let x = TensorF32::zeros(&[1, 8, 8, 1]);
+        assert_eq!(im2col_f32(&x, &s).shape(), &[16, 9]);
+    }
+}

@@ -1,0 +1,267 @@
+//! Training substrate for the DBB pruning experiments (paper Tables I–II).
+//!
+//! A small, dependency-free CNN training stack: f32 conv/fc/pool layers
+//! with exact backprop ([`layers`], gradient-checked), SGD + momentum
+//! ([`net`]), synthetic learnable datasets ([`data`] — the offline
+//! substitute for MNIST/CIFAR), the paper's three-phase recipe
+//! ([`three_phase`]): baseline training → progressive DBB-aware magnitude
+//! pruning ([`pruning`]) → INT8 fine-tuning/quantization ([`quant`]).
+//!
+//! What Tables I–II claim — and what these modules reproduce — is the
+//! *relative* behaviour: (a) DBB pruning to 50–75% sparsity costs ≲1%
+//! accuracy after fine-tuning, and (b) at equal compression ratio, larger
+//! block sizes lose less accuracy. Absolute ImageNet numbers are out of
+//! scope (no data, one CPU core); the big-model rows of Table I reuse the
+//! weight-count columns from `crate::models` layer tables.
+
+pub mod data;
+pub mod layers;
+pub mod linalg;
+pub mod net;
+pub mod pruning;
+pub mod quant;
+pub mod zoo;
+
+use crate::util::Rng;
+use data::Dataset;
+use net::{accuracy, softmax_ce, Network};
+use pruning::DbbPruneSchedule;
+use zoo::TrainableModel;
+
+/// Hyper-parameters for the three-phase recipe.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Baseline training epochs.
+    pub baseline_epochs: usize,
+    /// Progressive-pruning epochs (the NNZ ramp length).
+    pub prune_epochs: usize,
+    /// Quantized fine-tuning epochs.
+    pub finetune_epochs: usize,
+    /// Minibatch size.
+    pub batch: usize,
+    /// Learning rate.
+    pub lr: f32,
+    /// SGD momentum.
+    pub momentum: f32,
+    /// RNG seed (shuffling).
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            baseline_epochs: 4,
+            prune_epochs: 4,
+            finetune_epochs: 2,
+            batch: 32,
+            lr: 0.01,
+            momentum: 0.9,
+            seed: 1234,
+        }
+    }
+}
+
+/// Result of a full three-phase run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Model name.
+    pub model: &'static str,
+    /// FP32 baseline test accuracy.
+    pub baseline_acc: f64,
+    /// Accuracy after DBB pruning + INT8 quantization + fine-tuning.
+    pub dbb_int8_acc: f64,
+    /// Total non-zero weights in the prunable matrices after pruning.
+    pub total_nnz: usize,
+    /// Non-zero weights in *convolution* layers only (paper Table I
+    /// footnote: "Convolution layers only" — conv nnz incl. dense convs).
+    pub conv_nnz: usize,
+    /// Measured sparsity over prunable matrices.
+    pub sparsity: f64,
+    /// DBB parameters used.
+    pub bz: usize,
+    /// Density bound.
+    pub nnz: usize,
+}
+
+/// One training epoch; returns mean loss.
+pub fn train_epoch(
+    net: &mut Network,
+    ds: &Dataset,
+    cfg: &TrainConfig,
+    rng: &mut Rng,
+    schedule: Option<&DbbPruneSchedule>,
+) -> f32 {
+    let n = ds.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut total = 0f32;
+    let mut batches = 0;
+    for chunk in order.chunks(cfg.batch) {
+        let (x, y) = ds.batch(chunk);
+        let logits = net.forward(&x, true);
+        let (loss, d) = softmax_ce(&logits, &y);
+        net.backward(&d);
+        net.sgd_step(cfg.lr, cfg.momentum);
+        if let Some(s) = schedule {
+            s.enforce(net); // pruned weights stay zero through the update
+        }
+        total += loss;
+        batches += 1;
+    }
+    total / batches.max(1) as f32
+}
+
+/// Test accuracy over a dataset.
+pub fn evaluate(net: &mut Network, ds: &Dataset) -> f64 {
+    let mut correct = 0f64;
+    let mut count = 0usize;
+    for chunk in (0..ds.len()).collect::<Vec<_>>().chunks(64) {
+        let (x, y) = ds.batch(chunk);
+        let logits = net.forward(&x, false);
+        correct += accuracy(&logits, &y) * y.len() as f64;
+        count += y.len();
+    }
+    correct / count.max(1) as f64
+}
+
+/// The paper's full three-phase recipe (§V-A): train FP32 baseline,
+/// progressively DBB-prune with fine-tuning, then quantize to INT8 and
+/// fine-tune with the masks enforced. Returns the Table-I style report.
+pub fn three_phase(
+    mut model: TrainableModel,
+    train: &Dataset,
+    test: &Dataset,
+    bz: usize,
+    nnz: usize,
+    cfg: &TrainConfig,
+) -> TrainReport {
+    let mut rng = Rng::new(cfg.seed);
+
+    // phase 1: baseline
+    for _ in 0..cfg.baseline_epochs {
+        train_epoch(&mut model.net, train, cfg, &mut rng, None);
+    }
+    let baseline_acc = evaluate(&mut model.net, test);
+
+    // phase 2: progressive DBB pruning with fine-tuning between steps
+    let mut sched = DbbPruneSchedule::new(bz, nnz, cfg.prune_epochs);
+    for e in 0..cfg.prune_epochs {
+        sched.prune_epoch(&mut model.net, &model.prunable, e);
+        train_epoch(&mut model.net, train, cfg, &mut rng, Some(&sched));
+    }
+    // make sure the final bound is in force
+    sched.prune_epoch(&mut model.net, &model.prunable, cfg.prune_epochs);
+
+    // phase 3: INT8 quantization + fine-tune (STE: quantize, train f32
+    // with masks, re-quantize)
+    let mut ft_cfg = cfg.clone();
+    ft_cfg.lr = cfg.lr * 0.2;
+    for _ in 0..cfg.finetune_epochs {
+        quant::quantize_network(&mut model.net);
+        sched.enforce(&mut model.net);
+        train_epoch(&mut model.net, train, &ft_cfg, &mut rng, Some(&sched));
+    }
+    quant::quantize_network(&mut model.net);
+    sched.enforce(&mut model.net);
+
+    let dbb_int8_acc = evaluate(&mut model.net, test);
+    let sparsity = sched.sparsity(&mut model.net, &model.prunable);
+    let total_nnz: usize = model
+        .net
+        .gemm_weights()
+        .into_iter()
+        .zip(&model.prunable)
+        .filter(|(_, &p)| p)
+        .map(|((_, w), _)| w.data().iter().filter(|&&v| v != 0.0).count())
+        .sum();
+    let conv_nnz: usize = model
+        .net
+        .gemm_weights()
+        .into_iter()
+        .filter(|(n, _)| n.starts_with("conv"))
+        .map(|(_, w)| w.data().iter().filter(|&&v| v != 0.0).count())
+        .sum();
+
+    TrainReport {
+        model: model.name,
+        baseline_acc,
+        dbb_int8_acc,
+        total_nnz,
+        conv_nnz,
+        sparsity,
+        bz,
+        nnz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            baseline_epochs: 2,
+            prune_epochs: 2,
+            finetune_epochs: 1,
+            batch: 32,
+            lr: 0.01,
+            momentum: 0.9,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn lenet_three_phase_learns_and_prunes() {
+        let mut rng = Rng::new(1);
+        let (train, test) = data::synth_mnist_split(600, 200, 10);
+        let model = zoo::lenet5(&mut rng);
+        let r = three_phase(model, &train, &test, 8, 2, &quick_cfg());
+        // learnable: well above 10% chance
+        assert!(r.baseline_acc > 0.5, "baseline {}", r.baseline_acc);
+        // pruning hit the 2/8 target = 75% sparsity
+        assert!((r.sparsity - 0.75).abs() < 0.02, "sparsity {}", r.sparsity);
+        // the paper's claim: small accuracy cost (allow generous slack on
+        // tiny synthetic data)
+        assert!(
+            r.dbb_int8_acc > r.baseline_acc - 0.15,
+            "acc {} -> {}",
+            r.baseline_acc,
+            r.dbb_int8_acc
+        );
+    }
+
+    #[test]
+    fn pruned_network_exports_valid_dbb() {
+        // after three_phase, every prunable weight must encode under the
+        // bound — the exact artifact the accelerator consumes
+        let mut rng = Rng::new(2);
+        let (train, test) = data::synth_mnist_split(300, 100, 20);
+        let mut cfg = quick_cfg();
+        cfg.baseline_epochs = 1;
+        let (bz, nnz) = (8usize, 3usize);
+
+        // re-run the phases manually to keep the model afterwards
+        let mut model = zoo::lenet5(&mut rng);
+        let mut train_rng = Rng::new(cfg.seed);
+        for _ in 0..cfg.baseline_epochs {
+            train_epoch(&mut model.net, &train, &cfg, &mut train_rng, None);
+        }
+        let mut sched = DbbPruneSchedule::new(bz, nnz, cfg.prune_epochs);
+        for e in 0..cfg.prune_epochs {
+            sched.prune_epoch(&mut model.net, &model.prunable, e);
+            train_epoch(&mut model.net, &train, &cfg, &mut train_rng, Some(&sched));
+        }
+        sched.prune_epoch(&mut model.net, &model.prunable, cfg.prune_epochs);
+        quant::quantize_network(&mut model.net);
+        sched.enforce(&mut model.net);
+
+        let prunable = model.prunable.clone();
+        for ((_, w), p) in model.net.gemm_weights().into_iter().zip(prunable) {
+            let (dbb, _) = quant::export_dbb(w, bz);
+            if p {
+                assert!(dbb.max_block_nnz() <= nnz, "bound violated");
+            }
+        }
+        let _ = evaluate(&mut model.net, &test);
+    }
+}

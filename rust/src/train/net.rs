@@ -1,0 +1,162 @@
+//! Sequential network container, softmax cross-entropy and SGD+momentum.
+
+use crate::tensor::TensorF32;
+
+use super::layers::Layer;
+
+/// A sequential network.
+pub struct Network {
+    /// Layers in order.
+    pub layers: Vec<Box<dyn Layer>>,
+}
+
+impl Network {
+    /// Build from a layer list.
+    pub fn new(layers: Vec<Box<dyn Layer>>) -> Self {
+        Network { layers }
+    }
+
+    /// Forward pass through all layers.
+    pub fn forward(&mut self, x: &TensorF32, train: bool) -> TensorF32 {
+        let mut h = x.clone();
+        for l in &mut self.layers {
+            h = l.forward(&h, train);
+        }
+        h
+    }
+
+    /// Backward pass (after `forward(train=true)`).
+    pub fn backward(&mut self, dloss: &TensorF32) {
+        let mut g = dloss.clone();
+        for l in self.layers.iter_mut().rev() {
+            g = l.backward(&g);
+        }
+    }
+
+    /// SGD with momentum over all parameters.
+    pub fn sgd_step(&mut self, lr: f32, momentum: f32) {
+        for l in &mut self.layers {
+            for (w, g, m) in l.params() {
+                for ((wv, gv), mv) in
+                    w.data_mut().iter_mut().zip(g.data()).zip(m.data_mut())
+                {
+                    *mv = momentum * *mv + gv;
+                    *wv -= lr * *mv;
+                }
+            }
+        }
+    }
+
+    /// Prunable GEMM weight matrices (conv + fc), with layer names.
+    pub fn gemm_weights(&mut self) -> Vec<(String, &mut TensorF32)> {
+        let mut out = Vec::new();
+        for l in &mut self.layers {
+            let name = l.name().to_string();
+            if let Some(w) = l.gemm_weight() {
+                out.push((name, w));
+            }
+        }
+        out
+    }
+}
+
+/// Softmax cross-entropy: returns (mean loss, dlogits).
+pub fn softmax_ce(logits: &TensorF32, labels: &[usize]) -> (f32, TensorF32) {
+    let b = logits.shape()[0];
+    let n = logits.shape()[1];
+    assert_eq!(b, labels.len());
+    let mut dl = TensorF32::zeros(&[b, n]);
+    let mut loss = 0f32;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits.data()[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f32> = row.iter().map(|v| (v - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        loss += -(exps[y] / z).ln();
+        for j in 0..n {
+            let p = exps[j] / z;
+            dl.set(&[i, j], (p - if j == y { 1.0 } else { 0.0 }) / b as f32);
+        }
+    }
+    (loss / b as f32, dl)
+}
+
+/// Classification accuracy of logits vs labels.
+pub fn accuracy(logits: &TensorF32, labels: &[usize]) -> f64 {
+    let b = logits.shape()[0];
+    let n = logits.shape()[1];
+    let mut correct = 0usize;
+    for (i, &y) in labels.iter().enumerate() {
+        let row = &logits.data()[i * n..(i + 1) * n];
+        let pred = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if pred == y {
+            correct += 1;
+        }
+    }
+    correct as f64 / b as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::layers::{Linear, Relu};
+    use crate::util::Rng;
+
+    #[test]
+    fn softmax_ce_gradient_sums_to_zero_per_row() {
+        let mut rng = Rng::new(1);
+        let logits = TensorF32::randn(&[4, 10], 1.0, &mut rng);
+        let (_, d) = softmax_ce(&logits, &[0, 3, 9, 5]);
+        for i in 0..4 {
+            let s: f32 = d.data()[i * 10..(i + 1) * 10].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_ce_loss_of_perfect_prediction_is_small() {
+        let mut logits = TensorF32::zeros(&[1, 3]);
+        logits.set(&[0, 1], 100.0);
+        let (loss, _) = softmax_ce(&logits, &[1]);
+        assert!(loss < 1e-6);
+    }
+
+    #[test]
+    fn tiny_net_learns_xor_like_task() {
+        // 2-layer MLP on a linearly-inseparable toy task: loss must drop
+        let mut rng = Rng::new(7);
+        let mut net = Network::new(vec![
+            Box::new(Linear::new("fc1", 2, 16, &mut rng)),
+            Box::new(Relu::new()),
+            Box::new(Linear::new("fc2", 16, 2, &mut rng)),
+        ]);
+        let xs: Vec<[f32; 2]> = vec![[0., 0.], [0., 1.], [1., 0.], [1., 1.]];
+        let ys = [0usize, 1, 1, 0];
+        let x = TensorF32::from_vec(&[4, 2], xs.iter().flatten().cloned().collect());
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..300 {
+            let logits = net.forward(&x, true);
+            let (loss, d) = softmax_ce(&logits, &ys);
+            net.backward(&d);
+            net.sgd_step(0.1, 0.9);
+            first.get_or_insert(loss);
+            last = loss;
+        }
+        assert!(last < 0.1 * first.unwrap(), "loss {first:?} -> {last}");
+        let logits = net.forward(&x, false);
+        assert_eq!(accuracy(&logits, &ys), 1.0);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let logits = TensorF32::from_vec(&[2, 3], vec![1., 5., 2., 9., 0., 1.]);
+        assert_eq!(accuracy(&logits, &[1, 0]), 1.0);
+        assert_eq!(accuracy(&logits, &[0, 0]), 0.5);
+    }
+}

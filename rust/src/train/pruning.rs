@@ -1,0 +1,189 @@
+//! Progressive DBB-aware magnitude pruning (paper §V-A).
+//!
+//! "This step progressively prunes small-magnitude weights within each DBB
+//! block for about 20 epochs, until the desired block sparsity constraint
+//! is met." We implement the schedule as a per-epoch NNZ ramp from BZ down
+//! to the target, recomputing the keep-mask each step and re-applying it
+//! after every optimizer update so pruned weights stay zero.
+
+use crate::dbb::prune::{apply_mask_f32, dbb_mask_f32};
+use crate::tensor::TensorF32;
+
+use super::net::Network;
+
+/// Pruning schedule state.
+#[derive(Debug, Clone)]
+pub struct DbbPruneSchedule {
+    /// Block size.
+    pub bz: usize,
+    /// Final NNZ target.
+    pub target_nnz: usize,
+    /// Epochs over which NNZ ramps from BZ to the target.
+    pub ramp_epochs: usize,
+    masks: Vec<Vec<bool>>, // one per prunable weight matrix
+}
+
+impl DbbPruneSchedule {
+    /// New schedule.
+    pub fn new(bz: usize, target_nnz: usize, ramp_epochs: usize) -> Self {
+        assert!(target_nnz >= 1 && target_nnz <= bz);
+        DbbPruneSchedule {
+            bz,
+            target_nnz,
+            ramp_epochs: ramp_epochs.max(1),
+            masks: Vec::new(),
+        }
+    }
+
+    /// NNZ bound in force at `epoch` (0-based): linear ramp BZ → target.
+    pub fn nnz_at(&self, epoch: usize) -> usize {
+        if epoch + 1 >= self.ramp_epochs {
+            return self.target_nnz;
+        }
+        let span = (self.bz - self.target_nnz) as f64;
+        let frac = (epoch + 1) as f64 / self.ramp_epochs as f64;
+        (self.bz as f64 - span * frac).round() as usize
+    }
+
+    /// Recompute masks for the epoch's bound and prune the network.
+    /// `prunable` marks which GEMM weights participate (same order as
+    /// [`Network::gemm_weights`]).
+    pub fn prune_epoch(&mut self, net: &mut Network, prunable: &[bool], epoch: usize) {
+        let nnz = self.nnz_at(epoch);
+        let weights = net.gemm_weights();
+        self.masks = weights
+            .into_iter()
+            .zip(prunable)
+            .map(|((_, w), &p)| {
+                if !p || nnz >= self.bz {
+                    vec![true; w.len()]
+                } else {
+                    let m = dbb_mask_f32(w, self.bz, nnz);
+                    apply_mask_f32(w, &m);
+                    m
+                }
+            })
+            .collect();
+    }
+
+    /// Re-apply the current masks (call after every optimizer step).
+    pub fn enforce(&self, net: &mut Network) {
+        if self.masks.is_empty() {
+            return;
+        }
+        for ((_, w), mask) in net.gemm_weights().into_iter().zip(&self.masks) {
+            apply_mask_f32(w, mask);
+        }
+    }
+
+    /// Measured sparsity over the prunable matrices.
+    pub fn sparsity(&self, net: &mut Network, prunable: &[bool]) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for ((_, w), &p) in net.gemm_weights().into_iter().zip(prunable) {
+            if !p {
+                continue;
+            }
+            zeros += w.data().iter().filter(|&&v| v == 0.0).count();
+            total += w.len();
+        }
+        if total == 0 {
+            0.0
+        } else {
+            zeros as f64 / total as f64
+        }
+    }
+}
+
+/// Verify every prunable matrix satisfies the (nnz, bz) bound.
+pub fn check_dbb_bound(w: &TensorF32, bz: usize, nnz: usize) -> bool {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    for col in 0..n {
+        for kb in 0..k.div_ceil(bz) {
+            let lo = kb * bz;
+            let hi = (lo + bz).min(k);
+            let cnt = (lo..hi).filter(|&kk| w.at(&[kk, col]) != 0.0).count();
+            if cnt > nnz {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::layers::Linear;
+    use crate::util::Rng;
+
+    fn net2(rng: &mut Rng) -> Network {
+        Network::new(vec![
+            Box::new(Linear::new("fc1", 32, 16, rng)),
+            Box::new(Linear::new("fc2", 16, 8, rng)),
+        ])
+    }
+
+    #[test]
+    fn ramp_is_monotone_and_hits_target() {
+        let s = DbbPruneSchedule::new(8, 2, 6);
+        let mut prev = 8;
+        for e in 0..10 {
+            let n = s.nnz_at(e);
+            assert!(n <= prev, "epoch {e}: {n} > {prev}");
+            prev = n;
+        }
+        assert_eq!(s.nnz_at(5), 2);
+        assert_eq!(s.nnz_at(9), 2);
+    }
+
+    #[test]
+    fn prune_epoch_enforces_bound() {
+        let mut rng = Rng::new(1);
+        let mut net = net2(&mut rng);
+        let mut s = DbbPruneSchedule::new(8, 2, 1);
+        s.prune_epoch(&mut net, &[true, true], 0);
+        for (_, w) in net.gemm_weights() {
+            assert!(check_dbb_bound(w, 8, 2));
+        }
+    }
+
+    #[test]
+    fn non_prunable_layers_untouched() {
+        let mut rng = Rng::new(2);
+        let mut net = net2(&mut rng);
+        let before = net.gemm_weights()[1].1.data().to_vec();
+        let mut s = DbbPruneSchedule::new(8, 1, 1);
+        s.prune_epoch(&mut net, &[true, false], 0);
+        assert_eq!(net.gemm_weights()[1].1.data(), &before[..]);
+        assert!(check_dbb_bound(net.gemm_weights()[0].1, 8, 1));
+    }
+
+    #[test]
+    fn enforce_keeps_weights_pruned_after_updates() {
+        let mut rng = Rng::new(3);
+        let mut net = net2(&mut rng);
+        let mut s = DbbPruneSchedule::new(8, 2, 1);
+        s.prune_epoch(&mut net, &[true, true], 0);
+        // simulate an optimizer update perturbing everything
+        for (_, w) in net.gemm_weights() {
+            for v in w.data_mut() {
+                *v += 0.5;
+            }
+        }
+        s.enforce(&mut net);
+        for (_, w) in net.gemm_weights() {
+            assert!(check_dbb_bound(w, 8, 2));
+        }
+    }
+
+    #[test]
+    fn sparsity_reporting() {
+        let mut rng = Rng::new(4);
+        let mut net = net2(&mut rng);
+        let mut s = DbbPruneSchedule::new(8, 2, 1);
+        s.prune_epoch(&mut net, &[true, true], 0);
+        let sp = s.sparsity(&mut net, &[true, true]);
+        assert!((sp - 0.75).abs() < 0.02, "sparsity {sp}"); // 2/8 = 75%
+    }
+}

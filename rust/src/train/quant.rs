@@ -1,0 +1,123 @@
+//! INT8 post-training quantization with STE-style exact zero (paper §V-A).
+//!
+//! Symmetric per-tensor quantization: `q = clamp(round(w / s), ±127)` with
+//! `s = max|w| / 127`. FP 0 maps to INT 0 exactly — the property the
+//! clock-gating power model depends on. The quantized *evaluation* path
+//! runs fake-quant (quantize → dequantize) through the f32 layers, which is
+//! numerically identical to the INT8 datapath up to the accumulator (exact
+//! for weights/activations, and the INT32 accumulator never saturates for
+//! these layer sizes).
+
+use crate::dbb::DbbMatrix;
+use crate::tensor::{TensorF32, TensorI8};
+
+use super::net::Network;
+
+/// Symmetric quantization scale for a tensor.
+pub fn scale_for(w: &TensorF32) -> f32 {
+    let mx = w.data().iter().fold(0f32, |a, &v| a.max(v.abs()));
+    if mx == 0.0 {
+        1.0
+    } else {
+        mx / 127.0
+    }
+}
+
+/// Quantize to INT8 with the given scale (exact zero preserved).
+pub fn quantize(w: &TensorF32, scale: f32) -> TensorI8 {
+    w.map(|v| (v / scale).round().clamp(-127.0, 127.0) as i8)
+}
+
+/// Dequantize back to f32.
+pub fn dequantize(q: &TensorI8, scale: f32) -> TensorF32 {
+    q.map(|v| v as f32 * scale)
+}
+
+/// Fake-quantize in place: `w ← dequant(quant(w))`.
+pub fn fake_quant(w: &mut TensorF32) -> f32 {
+    let s = scale_for(w);
+    let q = quantize(w, s);
+    *w = dequantize(&q, s);
+    s
+}
+
+/// Quantize every GEMM weight of a network in place (fake-quant), so the
+/// f32 evaluation measures INT8 accuracy. Returns per-layer scales.
+pub fn quantize_network(net: &mut Network) -> Vec<(String, f32)> {
+    net.gemm_weights()
+        .into_iter()
+        .map(|(name, w)| {
+            let s = fake_quant(w);
+            (name, s)
+        })
+        .collect()
+}
+
+/// Export a (pruned, fake-quantized) GEMM weight as a DBB-compressed INT8
+/// matrix — the artifact the accelerator consumes.
+pub fn export_dbb(w: &TensorF32, bz: usize) -> (DbbMatrix, f32) {
+    let s = scale_for(w);
+    let q = quantize(w, s);
+    (DbbMatrix::compress(&q, bz).expect("valid block size"), s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn zero_maps_to_zero_exactly() {
+        check(Config::default().cases(64), |rng| {
+            let w = TensorF32::randn(&[16, 4], 1.0, rng);
+            let s = scale_for(&w);
+            let q = quantize(&w, s);
+            for (orig, qq) in w.data().iter().zip(q.data()) {
+                if *orig == 0.0 {
+                    assert_eq!(*qq, 0);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn quant_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        let w = TensorF32::randn(&[64, 8], 1.0, &mut rng);
+        let s = scale_for(&w);
+        let back = dequantize(&quantize(&w, s), s);
+        for (a, b) in w.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-7, "{a} vs {b} (s={s})");
+        }
+    }
+
+    #[test]
+    fn pruned_zeros_survive_quantization() {
+        let mut rng = Rng::new(2);
+        let w0 = TensorF32::randn(&[32, 8], 1.0, &mut rng);
+        let w = crate::dbb::prune::prune_f32(&w0, 8, 3);
+        let mut wq = w.clone();
+        fake_quant(&mut wq);
+        // every pruned zero is still zero → DBB bound still satisfied
+        for (orig, q) in w.data().iter().zip(wq.data()) {
+            if *orig == 0.0 {
+                assert_eq!(*q, 0.0);
+            }
+        }
+        let (dbb, _) = export_dbb(&wq, 8);
+        assert!(dbb.max_block_nnz() <= 3);
+    }
+
+    #[test]
+    fn export_scale_consistency() {
+        let mut rng = Rng::new(3);
+        let w = crate::dbb::prune::prune_f32(&TensorF32::randn(&[24, 4], 1.0, &mut rng), 8, 2);
+        let (dbb, s) = export_dbb(&w, 8);
+        let dense = dbb.decompress();
+        // dequantized export approximates the original
+        for (a, b) in w.data().iter().zip(dense.data()) {
+            assert!((a - *b as f32 * s).abs() <= s * 0.5 + 1e-7);
+        }
+    }
+}

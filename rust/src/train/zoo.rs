@@ -1,0 +1,107 @@
+//! Trainable builds of the paper's small benchmark CNNs (Table I rows that
+//! are trained end-to-end: LeNet-5 and the 5-layer ConvNet).
+
+use crate::util::Rng;
+
+use super::layers::{Conv2d, Flatten, Linear, MaxPool2, Relu};
+use super::linalg::Conv2dShape;
+use super::net::Network;
+
+/// A trainable model plus its pruning annotation.
+pub struct TrainableModel {
+    /// The network.
+    pub net: Network,
+    /// Which GEMM weights (conv+fc, in order) are DBB-prunable. The first
+    /// conv and the classifier head stay dense (paper §V-A).
+    pub prunable: Vec<bool>,
+    /// Model name.
+    pub name: &'static str,
+}
+
+/// LeNet-5 for 28×28×1 inputs: conv5×5×6(p2) → pool → conv5×5×16 → pool →
+/// fc120 → fc84 → fc10.
+pub fn lenet5(rng: &mut Rng) -> TrainableModel {
+    let c1 = Conv2dShape { h: 28, w: 28, c: 1, k: 5, oc: 6, stride: 1, pad: 2 };
+    let c2 = Conv2dShape { h: 14, w: 14, c: 6, k: 5, oc: 16, stride: 1, pad: 0 };
+    let net = Network::new(vec![
+        Box::new(Conv2d::new("conv1", c1, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2::new()),
+        Box::new(Conv2d::new("conv2", c2, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2::new()),
+        Box::new(Flatten::new()),
+        Box::new(Linear::new("fc1", 5 * 5 * 16, 120, rng)),
+        Box::new(Relu::new()),
+        Box::new(Linear::new("fc2", 120, 84, rng)),
+        Box::new(Relu::new()),
+        Box::new(Linear::new("fc3", 84, 10, rng)),
+    ]);
+    TrainableModel {
+        net,
+        prunable: vec![false, true, true, true, false],
+        name: "LeNet-5",
+    }
+}
+
+/// The paper's 5-layer ConvNet for 32×32×3 inputs.
+pub fn convnet5(rng: &mut Rng) -> TrainableModel {
+    let c1 = Conv2dShape { h: 32, w: 32, c: 3, k: 5, oc: 32, stride: 1, pad: 2 };
+    let c2 = Conv2dShape { h: 16, w: 16, c: 32, k: 5, oc: 32, stride: 1, pad: 2 };
+    let c3 = Conv2dShape { h: 8, w: 8, c: 32, k: 5, oc: 64, stride: 1, pad: 2 };
+    let net = Network::new(vec![
+        Box::new(Conv2d::new("conv1", c1, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2::new()),
+        Box::new(Conv2d::new("conv2", c2, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2::new()),
+        Box::new(Conv2d::new("conv3", c3, rng)),
+        Box::new(Relu::new()),
+        Box::new(MaxPool2::new()),
+        Box::new(Flatten::new()),
+        Box::new(Linear::new("fc1", 4 * 4 * 64, 64, rng)),
+        Box::new(Relu::new()),
+        Box::new(Linear::new("fc2", 64, 10, rng)),
+    ]);
+    TrainableModel {
+        net,
+        prunable: vec![false, true, true, true, false],
+        name: "ConvNet",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorF32;
+
+    #[test]
+    fn lenet_shapes() {
+        let mut rng = Rng::new(1);
+        let mut m = lenet5(&mut rng);
+        let x = TensorF32::zeros(&[2, 28, 28, 1]);
+        let y = m.net.forward(&x, false);
+        assert_eq!(y.shape(), &[2, 10]);
+        assert_eq!(m.net.gemm_weights().len(), m.prunable.len());
+    }
+
+    #[test]
+    fn convnet_shapes() {
+        let mut rng = Rng::new(2);
+        let mut m = convnet5(&mut rng);
+        let x = TensorF32::zeros(&[1, 32, 32, 3]);
+        let y = m.net.forward(&x, false);
+        assert_eq!(y.shape(), &[1, 10]);
+    }
+
+    #[test]
+    fn weight_counts_match_layer_tables() {
+        // the trainable builds must agree with `crate::models` layer tables
+        let mut rng = Rng::new(3);
+        let mut m = lenet5(&mut rng);
+        let total: usize = m.net.gemm_weights().iter().map(|(_, w)| w.len()).sum();
+        let table: usize = crate::models::lenet5().layers.iter().map(|l| l.weights()).sum();
+        assert_eq!(total, table);
+    }
+}

@@ -1,0 +1,202 @@
+//! Timing harness for `benches/*` (offline stand-in for `criterion`).
+//!
+//! Benches are `harness = false`: each bench binary builds a [`BenchSet`],
+//! registers closures, and calls [`BenchSet::run`], which handles CLI filter
+//! arguments (so `cargo bench -- fig9` runs only matching entries), warmup,
+//! adaptive repetition and robust statistics.
+
+use super::stats;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One timing measurement summary.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// Benchmark id.
+    pub name: String,
+    /// Median wall time per iteration.
+    pub median: Duration,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Std-dev across samples.
+    pub stddev: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: u64,
+}
+
+impl Measurement {
+    /// criterion-like one-line rendering.
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} time: [{:>12} ± {:>10}] (median {:>12}, {} samples × {} iters)",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.median),
+            self.samples,
+            self.iters_per_sample
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Time a single closure: warm up for `warmup`, then take `samples` samples,
+/// auto-scaling iterations so each sample lasts ≥ `min_sample`.
+pub fn time_fn<F: FnMut()>(
+    name: &str,
+    warmup: Duration,
+    min_sample: Duration,
+    samples: usize,
+    mut f: F,
+) -> Measurement {
+    // Warmup & calibration: figure out iterations per sample.
+    let mut iters: u64 = 1;
+    let warm_start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let dt = t0.elapsed();
+        if warm_start.elapsed() >= warmup && dt >= min_sample {
+            break;
+        }
+        if dt < min_sample {
+            // grow multiplicatively but avoid overshooting wildly
+            let factor = (min_sample.as_nanos() as f64 / dt.as_nanos().max(1) as f64).min(10.0);
+            iters = ((iters as f64 * factor).ceil() as u64).max(iters + 1);
+        }
+        if warm_start.elapsed() > warmup * 20 {
+            break; // very slow body: give up growing, take what we have
+        }
+    }
+
+    let mut per_iter: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        per_iter.push(t0.elapsed().as_secs_f64() / iters as f64);
+    }
+    Measurement {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(stats::median(&per_iter)),
+        mean: Duration::from_secs_f64(stats::mean(&per_iter)),
+        stddev: Duration::from_secs_f64(stats::stddev(&per_iter)),
+        samples,
+        iters_per_sample: iters,
+    }
+}
+
+/// Re-export of `std::hint::black_box` so benches only import this module.
+pub fn bb<T>(x: T) -> T {
+    black_box(x)
+}
+
+type BenchFn = Box<dyn FnMut()>;
+
+/// A named set of benchmarks with CLI filtering — the bench-binary entry
+/// point.
+pub struct BenchSet {
+    name: String,
+    entries: Vec<(String, BenchFn)>,
+    /// Report-only entries: run once, print their own output (used for the
+    /// paper-table harness where the deliverable is the table itself).
+    reports: Vec<(String, Box<dyn FnMut()>)>,
+}
+
+impl BenchSet {
+    /// New bench set (name is informational).
+    pub fn new(name: &str) -> Self {
+        BenchSet {
+            name: name.to_string(),
+            entries: Vec::new(),
+            reports: Vec::new(),
+        }
+    }
+
+    /// Register a timed benchmark.
+    pub fn bench<F: FnMut() + 'static>(&mut self, name: &str, f: F) -> &mut Self {
+        self.entries.push((name.to_string(), Box::new(f)));
+        self
+    }
+
+    /// Register a run-once report (prints a paper table/figure).
+    pub fn report<F: FnMut() + 'static>(&mut self, name: &str, f: F) -> &mut Self {
+        self.reports.push((name.to_string(), Box::new(f)));
+        self
+    }
+
+    /// Parse CLI args (`cargo bench -- <filter>`), run matching entries.
+    pub fn run(&mut self) {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        // cargo passes --bench; ignore flags, keep free-form filters
+        let filters: Vec<&String> = args.iter().filter(|a| !a.starts_with('-')).collect();
+        let matches = |name: &str| filters.is_empty() || filters.iter().any(|f| name.contains(*f));
+
+        println!("== bench set: {} ==", self.name);
+        for (name, f) in self.reports.iter_mut() {
+            if matches(name) {
+                println!("\n-- report: {name} --");
+                f();
+            }
+        }
+        for (name, f) in self.entries.iter_mut() {
+            if matches(name) {
+                let m = time_fn(
+                    name,
+                    Duration::from_millis(200),
+                    Duration::from_millis(50),
+                    10,
+                    f,
+                );
+                println!("{}", m.render());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_measures_something() {
+        let m = time_fn(
+            "noop-ish",
+            Duration::from_millis(5),
+            Duration::from_millis(1),
+            3,
+            || {
+                let n = bb(100u64);
+                bb((0..n).sum::<u64>());
+            },
+        );
+        assert_eq!(m.samples, 3);
+        assert!(m.iters_per_sample >= 1);
+        assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(500)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains(" s"));
+    }
+}

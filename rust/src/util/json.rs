@@ -1,0 +1,380 @@
+//! Minimal JSON parser/serializer (offline substrate for `serde_json`).
+//!
+//! The artifact manifest (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`) and the harness's machine-readable outputs are
+//! the only JSON consumers/producers in the system, so the supported
+//! surface is the full JSON grammar but with f64 numbers only (ints are
+//! exact up to 2⁵³ — artifact shapes are far below that).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use thiserror::Error;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`
+    Null,
+    /// `true` / `false`
+    Bool(bool),
+    /// Any number (f64; integers exact to 2⁵³).
+    Num(f64),
+    /// String (escapes decoded).
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (sorted keys — deterministic serialization).
+    Obj(BTreeMap<String, Json>),
+}
+
+/// Parse errors with byte offsets.
+#[derive(Debug, Error, PartialEq, Eq)]
+pub enum JsonError {
+    /// Unexpected byte or EOF.
+    #[error("unexpected input at byte {0}")]
+    Unexpected(usize),
+    /// Trailing non-whitespace after the top-level value.
+    #[error("trailing garbage at byte {0}")]
+    Trailing(usize),
+    /// Bad \u escape or number.
+    #[error("malformed literal at byte {0}")]
+    Malformed(usize),
+}
+
+impl Json {
+    /// Parse a complete JSON document.
+    pub fn parse(s: &str) -> Result<Json, JsonError> {
+        let b = s.as_bytes();
+        let mut p = 0usize;
+        let v = parse_value(b, &mut p)?;
+        skip_ws(b, &mut p);
+        if p != b.len() {
+            return Err(JsonError::Trailing(p));
+        }
+        Ok(v)
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// String value.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// Number value.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Integer value (rejects non-integral floats).
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 => Some(*n as usize),
+            _ => None,
+        }
+    }
+
+    /// Array items.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Object map.
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], p: &mut usize) {
+    while *p < b.len() && matches!(b[*p], b' ' | b'\t' | b'\n' | b'\r') {
+        *p += 1;
+    }
+}
+
+fn parse_value(b: &[u8], p: &mut usize) -> Result<Json, JsonError> {
+    skip_ws(b, p);
+    match b.get(*p) {
+        Some(b'{') => parse_obj(b, p),
+        Some(b'[') => parse_arr(b, p),
+        Some(b'"') => Ok(Json::Str(parse_str(b, p)?)),
+        Some(b't') => parse_lit(b, p, b"true", Json::Bool(true)),
+        Some(b'f') => parse_lit(b, p, b"false", Json::Bool(false)),
+        Some(b'n') => parse_lit(b, p, b"null", Json::Null),
+        Some(c) if c.is_ascii_digit() || *c == b'-' => parse_num(b, p),
+        _ => Err(JsonError::Unexpected(*p)),
+    }
+}
+
+fn parse_lit(b: &[u8], p: &mut usize, lit: &[u8], v: Json) -> Result<Json, JsonError> {
+    if b.len() >= *p + lit.len() && &b[*p..*p + lit.len()] == lit {
+        *p += lit.len();
+        Ok(v)
+    } else {
+        Err(JsonError::Malformed(*p))
+    }
+}
+
+fn parse_num(b: &[u8], p: &mut usize) -> Result<Json, JsonError> {
+    let start = *p;
+    if b.get(*p) == Some(&b'-') {
+        *p += 1;
+    }
+    while *p < b.len() && (b[*p].is_ascii_digit() || matches!(b[*p], b'.' | b'e' | b'E' | b'+' | b'-')) {
+        *p += 1;
+    }
+    std::str::from_utf8(&b[start..*p])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(Json::Num)
+        .ok_or(JsonError::Malformed(start))
+}
+
+fn parse_str(b: &[u8], p: &mut usize) -> Result<String, JsonError> {
+    debug_assert_eq!(b[*p], b'"');
+    *p += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*p) {
+            None => return Err(JsonError::Unexpected(*p)),
+            Some(b'"') => {
+                *p += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *p += 1;
+                match b.get(*p) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*p + 1..*p + 5)
+                            .and_then(|h| std::str::from_utf8(h).ok())
+                            .and_then(|h| u32::from_str_radix(h, 16).ok())
+                            .ok_or(JsonError::Malformed(*p))?;
+                        out.push(char::from_u32(hex).unwrap_or('\u{fffd}'));
+                        *p += 4;
+                    }
+                    _ => return Err(JsonError::Malformed(*p)),
+                }
+                *p += 1;
+            }
+            Some(_) => {
+                // copy a full UTF-8 scalar
+                let s = std::str::from_utf8(&b[*p..]).map_err(|_| JsonError::Malformed(*p))?;
+                let c = s.chars().next().unwrap();
+                out.push(c);
+                *p += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_arr(b: &[u8], p: &mut usize) -> Result<Json, JsonError> {
+    *p += 1; // [
+    let mut items = Vec::new();
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b']') {
+        *p += 1;
+        return Ok(Json::Arr(items));
+    }
+    loop {
+        items.push(parse_value(b, p)?);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b']') => {
+                *p += 1;
+                return Ok(Json::Arr(items));
+            }
+            _ => return Err(JsonError::Unexpected(*p)),
+        }
+    }
+}
+
+fn parse_obj(b: &[u8], p: &mut usize) -> Result<Json, JsonError> {
+    *p += 1; // {
+    let mut map = BTreeMap::new();
+    skip_ws(b, p);
+    if b.get(*p) == Some(&b'}') {
+        *p += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, p);
+        if b.get(*p) != Some(&b'"') {
+            return Err(JsonError::Unexpected(*p));
+        }
+        let key = parse_str(b, p)?;
+        skip_ws(b, p);
+        if b.get(*p) != Some(&b':') {
+            return Err(JsonError::Unexpected(*p));
+        }
+        *p += 1;
+        map.insert(key, parse_value(b, p)?);
+        skip_ws(b, p);
+        match b.get(*p) {
+            Some(b',') => *p += 1,
+            Some(b'}') => {
+                *p += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => return Err(JsonError::Unexpected(*p)),
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => write!(f, "null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => {
+                write!(f, "\"")?;
+                for c in s.chars() {
+                    match c {
+                        '"' => write!(f, "\\\"")?,
+                        '\\' => write!(f, "\\\\")?,
+                        '\n' => write!(f, "\\n")?,
+                        '\r' => write!(f, "\\r")?,
+                        '\t' => write!(f, "\\t")?,
+                        c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+                        c => write!(f, "{c}")?,
+                    }
+                }
+                write!(f, "\"")
+            }
+            Json::Arr(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Json::Obj(m) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{}:{}", Json::Str(k.clone()), v)?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn parse_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-12.5e2").unwrap(), Json::Num(-1250.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+    }
+
+    #[test]
+    fn parse_nested() {
+        let j = Json::parse(r#"{"a": [1, 2, {"b": "x"}], "c": null}"#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(
+            j.get("a").unwrap().as_arr().unwrap()[2].get("b").unwrap().as_str(),
+            Some("x")
+        );
+        assert_eq!(j.get("c"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("truefalse").is_err());
+    }
+
+    #[test]
+    fn unicode_escapes() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse("\"π\"").unwrap(), Json::Str("π".into()));
+    }
+
+    #[test]
+    fn display_roundtrip_prop() {
+        // random value trees serialize then re-parse identically
+        check(Config::default().cases(100), |rng| {
+            fn gen(rng: &mut crate::util::Rng, depth: usize) -> Json {
+                match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+                    0 => Json::Null,
+                    1 => Json::Bool(rng.below(2) == 0),
+                    2 => Json::Num((rng.below(2_000_001) as f64) - 1_000_000.0),
+                    3 => Json::Str(format!("s{}\"\\\n{}", rng.below(100), rng.below(10))),
+                    4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+                    _ => Json::Obj(
+                        (0..rng.below(4))
+                            .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                            .collect(),
+                    ),
+                }
+            }
+            let v = gen(rng, 0);
+            let s = v.to_string();
+            assert_eq!(Json::parse(&s).unwrap(), v, "serialized: {s}");
+        });
+    }
+
+    #[test]
+    fn real_manifest_shape() {
+        let doc = r#"{
+          "convnet5_b1": {"entry": "convnet5", "batch": 1,
+            "inputs": [{"shape": [1,32,32,3], "dtype": "f32"}],
+            "file": "convnet5_b1.hlo.txt"}
+        }"#;
+        let j = Json::parse(doc).unwrap();
+        let m = j.get("convnet5_b1").unwrap();
+        assert_eq!(m.get("batch").unwrap().as_usize(), Some(1));
+        let shape = m.get("inputs").unwrap().as_arr().unwrap()[0]
+            .get("shape")
+            .unwrap();
+        let dims: Vec<usize> = shape.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect();
+        assert_eq!(dims, vec![1, 32, 32, 3]);
+    }
+}

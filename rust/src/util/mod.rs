@@ -1,0 +1,29 @@
+//! Cross-cutting utilities.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `proptest`, `criterion`, `prettytable`) are unavailable. This
+//! module provides the minimal, well-tested in-tree replacements the rest of
+//! the crate relies on:
+//!
+//! * [`rng`] — deterministic SplitMix64 PRNG (seedable, serializable state),
+//!   used for every piece of synthetic data in the repo so experiments are
+//!   reproducible bit-for-bit.
+//! * [`prop`] — a small property-based-testing harness (seeded case
+//!   generation, failure-seed reporting) standing in for `proptest`.
+//! * [`bench`] — a timing harness with warmup, repetition and robust
+//!   statistics standing in for `criterion`; used by `benches/*` which are
+//!   `harness = false`.
+//! * [`table`] — fixed-width ASCII table rendering for the experiment
+//!   harness output (the "same rows the paper reports").
+//! * [`stats`] — mean/median/percentile helpers.
+//! * [`json`] — minimal JSON parse/serialize for the artifact manifest
+//!   (standing in for `serde_json`).
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,193 @@
+//! Deterministic SplitMix64 PRNG.
+//!
+//! Every synthetic tensor, dataset, and workload in this repo is produced
+//! through [`Rng`], so all experiments are reproducible from a single seed.
+//! SplitMix64 (Steele, Lea & Flood 2014) passes BigCrush, needs no warmup,
+//! and is a few instructions per draw — good enough for data generation (we
+//! make no cryptographic claims).
+
+/// SplitMix64 pseudo-random generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a generator from a seed. Equal seeds give equal streams.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit draw.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Next 32-bit draw (upper half of a 64-bit draw).
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Uses Lemire's multiply-shift rejection-free
+    /// mapping (bias < 2^-32 for the `n` we use; fine for data generation).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range_i32(&mut self, lo: i32, hi: i32) -> i32 {
+        debug_assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as usize) as i32
+    }
+
+    /// Uniform f32 in `[0, 1)`.
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform f32 in `[lo, hi)`.
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.f32() * (hi - lo)
+    }
+
+    /// Approximately standard-normal f32 (sum of 12 uniforms, Irwin-Hall).
+    /// Cheap, deterministic, and plenty for weight init / noisy datasets.
+    pub fn normal(&mut self) -> f32 {
+        let mut s = 0.0f32;
+        for _ in 0..12 {
+            s += self.f32();
+        }
+        s - 6.0
+    }
+
+    /// Bernoulli draw with probability `p` of `true`.
+    pub fn coin(&mut self, p: f32) -> bool {
+        self.f32() < p
+    }
+
+    /// Random INT8 value in `[-127, 127]` (symmetric; -128 excluded to match
+    /// symmetric-quantized CNN weights).
+    pub fn i8_sym(&mut self) -> i8 {
+        self.range_i32(-127, 127) as i8
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Choose `k` distinct indices out of `n` (sorted). Used to place
+    /// non-zeros inside a DBB block.
+    pub fn choose_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        let mut picked = idx[..k].to_vec();
+        picked.sort_unstable();
+        picked
+    }
+
+    /// Split off an independent child generator (for parallel streams).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_stream() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.below(13);
+            assert!(v < 13);
+        }
+    }
+
+    #[test]
+    fn f32_unit_interval() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let v = r.f32();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn uniform_mean_close_to_half() {
+        let mut r = Rng::new(11);
+        let n = 100_000;
+        let mean: f32 = (0..n).map(|_| r.f32()).sum::<f32>() / n as f32;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(13);
+        let n = 100_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f32>() / n as f32;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn choose_indices_distinct_sorted() {
+        let mut r = Rng::new(5);
+        for _ in 0..100 {
+            let k = r.below(8) + 1;
+            let idx = r.choose_indices(8, k);
+            assert_eq!(idx.len(), k);
+            for w in idx.windows(2) {
+                assert!(w[0] < w[1]);
+            }
+            assert!(idx.iter().all(|&i| i < 8));
+        }
+    }
+
+    #[test]
+    fn coin_probability() {
+        let mut r = Rng::new(17);
+        let n = 100_000;
+        let heads = (0..n).filter(|_| r.coin(0.3)).count();
+        let p = heads as f32 / n as f32;
+        assert!((p - 0.3).abs() < 0.01, "p={p}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(23);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<u32>>());
+    }
+}

@@ -1,0 +1,161 @@
+//! Fixed-width ASCII table rendering for the experiment harness.
+//!
+//! The harness prints "the same rows the paper reports"; this keeps that
+//! output aligned and greppable, and can also emit CSV for plotting.
+
+/// A simple column-aligned table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with a title line.
+    pub fn new(title: &str) -> Self {
+        Table {
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Set the header row.
+    pub fn header<S: ToString>(&mut self, cols: &[S]) -> &mut Self {
+        self.header = cols.iter().map(|c| c.to_string()).collect();
+        self
+    }
+
+    /// Append a data row.
+    pub fn row<S: ToString>(&mut self, cols: &[S]) -> &mut Self {
+        self.rows.push(cols.iter().map(|c| c.to_string()).collect());
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when there are no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Data rows (for assertions in tests and downstream processing).
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Table title.
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let ncols = self
+            .rows
+            .iter()
+            .map(|r| r.len())
+            .chain(std::iter::once(self.header.len()))
+            .max()
+            .unwrap_or(0);
+        let mut w = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(h.chars().count());
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        w
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n", self.title));
+        }
+        let fmt_row = |cols: &[String]| -> String {
+            let cells: Vec<String> = cols
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w.get(i).copied().unwrap_or(0)))
+                .collect();
+            format!("| {} |", cells.join(" | "))
+        };
+        if !self.header.is_empty() {
+            out.push_str(&fmt_row(&self.header));
+            out.push('\n');
+            let sep: Vec<String> = w.iter().map(|n| "-".repeat(*n)).collect();
+            out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        }
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (header then rows).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = String::new();
+        if !self.header.is_empty() {
+            out.push_str(&self.header.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        for r in &self.rows {
+            out.push_str(&r.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo");
+        t.header(&["name", "value"]);
+        t.row(&["a", "1"]);
+        t.row(&["longer-name", "22"]);
+        let s = t.render();
+        assert!(s.contains("### demo"));
+        assert!(s.contains("| name        | value |"));
+        assert!(s.contains("| longer-name | 22    |"));
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("");
+        t.header(&["a", "b"]);
+        t.row(&["x,y", "z"]);
+        assert_eq!(t.to_csv(), "a,b\n\"x,y\",z\n");
+    }
+
+    #[test]
+    fn len_tracks_rows() {
+        let mut t = Table::new("");
+        assert!(t.is_empty());
+        t.row(&["1"]);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,122 @@
+//! Integration: the complete software→hardware pipeline in one test —
+//! train a CNN with DBB pruning, quantize, export compressed weights,
+//! run the GEMMs bit-exactly on the array simulator, and price the run
+//! with the power model. Every module boundary in the repo is crossed.
+
+use ssta::arch::Design;
+use ssta::dbb::analyze;
+use ssta::gemm;
+use ssta::power;
+use ssta::sim::detailed::simulate_gemm;
+use ssta::tensor::TensorI8;
+use ssta::train::{self, data, quant, zoo, TrainConfig};
+use ssta::util::Rng;
+
+#[test]
+fn train_prune_quantize_simulate_price() {
+    let (tr, te) = data::synth_mnist_split(400, 100, 77);
+    let cfg = TrainConfig {
+        baseline_epochs: 2,
+        prune_epochs: 2,
+        finetune_epochs: 1,
+        ..TrainConfig::default()
+    };
+    let (bz, nnz) = (8usize, 3usize);
+
+    // ---- train + prune + quantize (phases of train::three_phase,
+    //      unrolled so we keep the model) ----
+    let mut model = zoo::lenet5(&mut Rng::new(9));
+    let mut rng = Rng::new(cfg.seed);
+    for _ in 0..cfg.baseline_epochs {
+        train::train_epoch(&mut model.net, &tr, &cfg, &mut rng, None);
+    }
+    let mut sched = ssta::train::pruning::DbbPruneSchedule::new(bz, nnz, cfg.prune_epochs);
+    for e in 0..cfg.prune_epochs {
+        sched.prune_epoch(&mut model.net, &model.prunable, e);
+        train::train_epoch(&mut model.net, &tr, &cfg, &mut rng, Some(&sched));
+    }
+    sched.prune_epoch(&mut model.net, &model.prunable, cfg.prune_epochs);
+    quant::quantize_network(&mut model.net);
+    sched.enforce(&mut model.net);
+    let acc = train::evaluate(&mut model.net, &te);
+    assert!(acc > 0.4, "pruned INT8 model should still classify: {acc}");
+
+    // ---- export the fc1 weights (prunable, biggest layer) ----
+    let prunable = model.prunable.clone();
+    let weights = model.net.gemm_weights();
+    let (name, w) = weights
+        .into_iter()
+        .zip(&prunable)
+        .filter(|((n, _), &p)| p && n.starts_with("fc"))
+        .map(|(nw, _)| nw)
+        .next()
+        .expect("an fc prunable layer");
+    let (dbb, _scale) = quant::export_dbb(w, bz);
+    assert!(dbb.max_block_nnz() <= nnz, "{name} violates the trained bound");
+    let summary = analyze::summarize(&dbb);
+    assert!(
+        summary.elem_sparsity_pct > 50.0,
+        "exported sparsity {}%",
+        summary.elem_sparsity_pct
+    );
+
+    // ---- run the layer's GEMM on the simulated STA-VDBB, bit-exact ----
+    let mut arng = Rng::new(5);
+    let a = TensorI8::rand_sparse(&[16, dbb.k], 0.5, &mut arng);
+    let design = Design::paper_optimal();
+    let result = simulate_gemm(&design, &a, &dbb, 1.0);
+    let golden = gemm::dense_i8(&a, &dbb.decompress());
+    assert_eq!(result.output.data(), golden.data(), "simulator bit-exact on trained weights");
+
+    // ---- price it ----
+    let p = power::power(&design, &result.timing.events);
+    assert!(p.total_mw() > 0.0);
+    let tw = power::effective_tops_per_w(&design, &result.timing.events, result.timing.dense_macs);
+    assert!(tw > 1.0, "trained-layer TOPS/W {tw}");
+}
+
+#[test]
+fn vdbb_speedup_on_trained_weights_matches_bound() {
+    // the *trained* weight matrices must get the same cycle scaling the
+    // synthetic sweeps promise: occupancy == the layer's encoded bound
+    let (tr, _te) = data::synth_mnist_split(300, 50, 88);
+    let cfg = TrainConfig {
+        baseline_epochs: 1,
+        prune_epochs: 2,
+        finetune_epochs: 0,
+        ..TrainConfig::default()
+    };
+    let design = Design::parse("2x8x4_2x2_VDBB").unwrap();
+    let mut cycles_by_bound = Vec::new();
+    for nnz in [2usize, 4, 8] {
+        let mut model = zoo::lenet5(&mut Rng::new(11));
+        let mut rng = Rng::new(cfg.seed);
+        train::train_epoch(&mut model.net, &tr, &cfg, &mut rng, None);
+        let mut sched = ssta::train::pruning::DbbPruneSchedule::new(8, nnz, cfg.prune_epochs);
+        sched.prune_epoch(&mut model.net, &model.prunable, cfg.prune_epochs);
+        quant::quantize_network(&mut model.net);
+        sched.enforce(&mut model.net);
+
+        let prunable = model.prunable.clone();
+        let weights = model.net.gemm_weights();
+        let (_, w) = weights
+            .into_iter()
+            .zip(&prunable)
+            .filter(|((n, _), &p)| p && n.starts_with("fc"))
+            .map(|(nw, _)| nw)
+            .next()
+            .unwrap();
+        let mut dbb = quant::export_dbb(w, 8).0;
+        // encode at the schedule bound even if training left some blocks
+        // under-full (hardware streams at the configured bound)
+        dbb.bound = nnz;
+        let mut arng = Rng::new(3);
+        let a = TensorI8::rand(&[8, dbb.k], &mut arng);
+        let r = simulate_gemm(&design, &a, &dbb, 1.0);
+        cycles_by_bound.push(r.timing.events.cycles);
+    }
+    // cycles scale ≈ bound (2:4:8)
+    let (c2, c4, c8) = (cycles_by_bound[0] as f64, cycles_by_bound[1] as f64, cycles_by_bound[2] as f64);
+    assert!((c4 / c2 - 2.0).abs() < 0.25, "c4/c2 = {}", c4 / c2);
+    assert!((c8 / c4 - 2.0).abs() < 0.25, "c8/c4 = {}", c8 / c4);
+}

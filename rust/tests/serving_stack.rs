@@ -1,0 +1,158 @@
+//! Integration: the serving stack over real artifacts (skipped when
+//! `make artifacts` hasn't run) — runtime ↔ coordinator ↔ hardware twin,
+//! plus cross-validation of the XLA functional path against the rust
+//! golden GEMM for every compiled density bound.
+
+use std::path::PathBuf;
+
+use ssta::coordinator::{Config, Coordinator};
+use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::runtime::{HostTensor, Runtime};
+use ssta::tensor::TensorI8;
+use ssta::util::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Pack a DbbMatrix into the kernel's [KB, NNZ, N] (vals, idx) layout.
+fn pack(w: &DbbMatrix, nnz: usize) -> (Vec<i8>, Vec<i32>) {
+    let (kb, n) = (w.kblocks(), w.n);
+    let mut vals = vec![0i8; kb * nnz * n];
+    let mut idx = vec![0i32; kb * nnz * n];
+    for col in 0..n {
+        for kbi in 0..kb {
+            let blk = w.block(col, kbi);
+            for (s, (v, p)) in blk.vals.iter().zip(blk.positions()).enumerate() {
+                vals[(kbi * nnz + s) * n + col] = *v;
+                idx[(kbi * nnz + s) * n + col] = p as i32;
+            }
+        }
+    }
+    (vals, idx)
+}
+
+#[test]
+fn every_gemm_artifact_matches_rust_golden() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = Runtime::open(&dir).unwrap();
+    let names: Vec<String> = rt
+        .artifact_names()
+        .iter()
+        .filter(|n| n.starts_with("dbb_gemm"))
+        .map(|s| s.to_string())
+        .collect();
+    assert!(!names.is_empty());
+    let mut rng = Rng::new(55);
+    for name in names {
+        let meta = rt.meta(&name).unwrap().clone();
+        let (m, k) = (meta.inputs[0].shape[0], meta.inputs[0].shape[1]);
+        let (kb, nnz, n) = (
+            meta.inputs[1].shape[0],
+            meta.inputs[1].shape[1],
+            meta.inputs[1].shape[2],
+        );
+        assert_eq!(kb * 8, k, "{name}: block coverage");
+        let a = TensorI8::rand_sparse(&[m, k], 0.4, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[k, n], &mut rng), 8, nnz);
+        let w = DbbMatrix::compress_with_bound(&wd, 8, nnz).unwrap();
+        let (vals, idx) = pack(&w, nnz);
+        let outs = rt
+            .execute(
+                &name,
+                &[HostTensor::I8(a.data().to_vec()), HostTensor::I8(vals), HostTensor::I32(idx)],
+            )
+            .unwrap();
+        let golden = ssta::gemm::dense_i8(&a, &wd);
+        assert_eq!(outs[0].as_i32(), golden.data(), "{name} vs golden");
+    }
+}
+
+#[test]
+fn coordinator_under_concurrent_load() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(Config {
+        artifacts_dir: dir,
+        ..Config::default()
+    })
+    .unwrap();
+    let n_threads = 4;
+    let per_thread = 8;
+    let mut joins = Vec::new();
+    for t in 0..n_threads {
+        let h = coord.handle();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + t as u64);
+            let mut ok = 0;
+            for i in 0..per_thread {
+                let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f32()).collect();
+                let id = (t * per_thread + i) as u64;
+                let resp = h.infer(id, img).unwrap();
+                assert_eq!(resp.id, id);
+                assert_eq!(resp.logits.len(), 10);
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, n_threads * per_thread);
+    let m = coord.metrics();
+    assert_eq!(m.requests as usize, total);
+    assert!(m.sim_cycles > 0 && m.sim_energy_mj > 0.0);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn coordinator_survives_dropped_callers() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let coord = Coordinator::start(Config {
+        artifacts_dir: dir,
+        ..Config::default()
+    })
+    .unwrap();
+    let h = coord.handle();
+    let mut rng = Rng::new(2);
+    // submit and immediately drop the receivers — the coordinator must not
+    // wedge or error out
+    for i in 0..5 {
+        let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f32()).collect();
+        drop(h.submit(i, img).unwrap());
+    }
+    // a live request afterwards still works
+    let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f32()).collect();
+    let resp = h.infer(99, img).unwrap();
+    assert_eq!(resp.id, 99);
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn manifest_layer_stats_power_the_twin() {
+    // the artifact manifest's per-layer weight stats must agree with the
+    // rust model zoo's ConvNet-5 (the twin is built from the zoo)
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = Runtime::open(&dir).unwrap();
+    let meta = rt.meta("convnet5_b1").unwrap();
+    let layers = meta.raw.get("layers").and_then(|j| j.as_obj()).expect("layer stats");
+    let zoo = ssta::models::convnet5();
+    for l in zoo.layers.iter() {
+        let name = &l.name;
+        let entry = layers.get(name).unwrap_or_else(|| panic!("manifest missing {name}"));
+        let (_, k, n) = l.gemm_dims();
+        assert_eq!(entry.get("k").unwrap().as_usize(), Some(k), "{name} k");
+        assert_eq!(entry.get("n").unwrap().as_usize(), Some(n), "{name} n");
+    }
+}

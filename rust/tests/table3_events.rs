@@ -1,0 +1,124 @@
+//! Integration: Table III's reuse algebra vs *counted* events.
+//!
+//! The closed-form reuse expressions (`arch::reuse`) must agree with what
+//! the detailed simulator actually counts: MACs issued per operand byte
+//! entering the array, accumulator updates per MAC, and gating behaviour.
+
+use ssta::arch::{reuse, ArrayDims, Datapath, Design, Tech};
+use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::sim::analytic;
+use ssta::sim::detailed::simulate_gemm;
+use ssta::tensor::TensorI8;
+use ssta::util::Rng;
+
+fn mk(a: usize, b: usize, c: usize, m: usize, n: usize, dp: Datapath) -> Design {
+    Design {
+        dims: ArrayDims { a, b, c, m, n },
+        datapath: dp,
+        im2col: false,
+        act_cg: true,
+        tech: Tech::N16,
+    }
+}
+
+/// Counted inter-TPE reuse over a steady-state GEMM = issued-MAC slots per
+/// operand byte entering the array edges, compared against Table III.
+#[test]
+fn counted_reuse_matches_formulas() {
+    let mut rng = Rng::new(17);
+    let cases = vec![
+        mk(1, 1, 1, 4, 4, Datapath::Dense),
+        mk(2, 8, 2, 2, 2, Datapath::Dense),
+        mk(2, 8, 2, 2, 2, Datapath::FixedDbb { b: 4 }),
+        mk(2, 8, 4, 2, 2, Datapath::Vdbb),
+    ];
+    for d in cases {
+        // big aligned GEMM so edge effects vanish
+        let tile_rows = d.dims.a * d.dims.m;
+        let tile_cols = d.dims.c * d.dims.n;
+        let mg = tile_rows * 6;
+        let k = d.dims.b.max(8) * 12;
+        let ng = tile_cols * 4;
+        let nnz = match d.datapath {
+            Datapath::FixedDbb { b } => b,
+            Datapath::Vdbb => 3,
+            Datapath::Dense => 8,
+        };
+        let a = TensorI8::rand(&[mg, k], &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[k, ng], &mut rng), 8, nnz);
+        let w = DbbMatrix::compress_with_bound(&wd, 8, nnz).unwrap();
+
+        let det = simulate_gemm(&d, &a, &w, 1.0);
+        let ev = &det.timing.events;
+
+        // operand bytes entering the array per cycle: weight edge + act edge
+        let stats = analytic::WeightStats::of(&w);
+        let w_bytes = d.weight_edge_bytes_per_cycle();
+        let act_bytes = d.act_edge_bytes_per_cycle(stats.density());
+        let issued_per_cycle = (ev.macs_active + ev.macs_gated) as f64 / ev.cycles as f64;
+        let counted_reuse = issued_per_cycle / (w_bytes + act_bytes);
+        let formula = reuse::inter_tpe_reuse_at(&d, stats.bound);
+        // agreement within 25% (partial tiles, fill/drain, index bytes)
+        let rel = (counted_reuse - formula).abs() / formula;
+        assert!(
+            rel < 0.25,
+            "design {}: counted {counted_reuse:.2} vs formula {formula:.2}",
+            d.label()
+        );
+    }
+}
+
+/// Accumulator reuse: MAC slots per accumulator update.
+#[test]
+fn acc_reuse_matches_event_ratio() {
+    // acc updates are implicit in the power model as issued/acc_reuse; here
+    // we verify the invariant that drives it: dense B-way DPs retire B MAC
+    // slots per accumulator write, VDBB one.
+    let dense = mk(2, 8, 2, 2, 2, Datapath::Dense);
+    let vdbb = mk(2, 8, 4, 2, 2, Datapath::Vdbb);
+    assert_eq!(reuse::acc_reuse(&dense), 8);
+    assert_eq!(reuse::acc_reuse(&vdbb), 1);
+    // and fixed DBB retires b per write
+    let fdbb = mk(2, 8, 2, 2, 2, Datapath::FixedDbb { b: 4 });
+    assert_eq!(reuse::acc_reuse(&fdbb), 4);
+}
+
+/// Activation clock gating only works on single-MAC datapaths (Table III):
+/// the detailed engine's gated counts must reflect the structural claim —
+/// a VDBB design sees gated slots ≈ act sparsity; a wide-DP dense design
+/// still issues them but they count as data-gated (same counter), so here
+/// we check the *analytic* act-CG capability flags feed the power model
+/// with different unit energies.
+#[test]
+fn gating_capability_affects_power_not_cycles() {
+    use ssta::power;
+    let mut rng = Rng::new(23);
+    let vdbb = mk(2, 8, 4, 2, 2, Datapath::Vdbb);
+    let a = TensorI8::rand_sparse(&[64, 64], 0.6, &mut rng);
+    let wd = prune_i8(&TensorI8::rand(&[64, 32], &mut rng), 8, 4);
+    let w = DbbMatrix::compress_with_bound(&wd, 8, 4).unwrap();
+    let r = simulate_gemm(&vdbb, &a, &w, 1.0);
+
+    let mut no_cg = vdbb;
+    no_cg.act_cg = false;
+    let p_cg = power::power(&vdbb, &r.timing.events).total_mw();
+    let p_no = power::power(&no_cg, &r.timing.events).total_mw();
+    assert!(p_cg < p_no, "CG must reduce power: {p_cg} vs {p_no}");
+}
+
+/// The detailed and analytic engines agree on IM2COL-magnified SRAM
+/// accounting too (the Fig 9/10 energy inputs).
+#[test]
+fn magnified_sram_agreement() {
+    let mut rng = Rng::new(31);
+    let d = mk(2, 8, 4, 2, 2, Datapath::Vdbb);
+    let a = TensorI8::rand(&[48, 72], &mut rng);
+    let wd = prune_i8(&TensorI8::rand(&[72, 24], &mut rng), 8, 3);
+    let w = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+    for mag in [1.0, 1.5, 3.0] {
+        let det = simulate_gemm(&d, &a, &w, mag).timing.events;
+        let ana = analytic::gemm_timing_exact(&d, &a, &w, mag).events;
+        assert_eq!(det.act_sram_bytes, ana.act_sram_bytes, "mag={mag}");
+        assert_eq!(det.act_edge_bytes, ana.act_edge_bytes);
+    }
+}
