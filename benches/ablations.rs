@@ -10,7 +10,7 @@
 //! * `vnnz`       — per-layer variable bounds vs the uniform model-wide
 //!                  bound at equal global density (paper §II-D extension)
 
-use ssta::arch::{Datapath, Design};
+use ssta::arch::Design;
 use ssta::dbb::variable::{allocate, allocate_uniform, LayerInfo};
 use ssta::models;
 use ssta::power;
@@ -94,7 +94,8 @@ fn acc_reuse_ablation() {
     // Table III's trade: wide DPs amortize accumulators but cannot gate or
     // run variable bounds. Compare iso-MAC dense STA vs VDBB on the same
     // sparse workload.
-    let mut t = Table::new("ablation: accumulator reuse vs VDBB flexibility (2048 MACs, ResNet-50)");
+    let mut t =
+        Table::new("ablation: accumulator reuse vs VDBB flexibility (2048 MACs, ResNet-50)");
     t.header(&["design", "ACC regs", "cycles (3/8+50%act)", "power mW", "TOPS/W"]);
     let m = models::resnet50();
     let profiles = profile_model_fixed_act(&m, 3, 8, 0.5);
@@ -165,8 +166,15 @@ fn vnnz_ablation() {
         })
         .collect();
 
-    let mut t = Table::new("ablation: per-layer variable NNZ vs uniform (ConvNet-5, equal density)");
-    t.header(&["target density", "uniform bounds", "uniform retained", "variable bounds", "variable retained"]);
+    let mut t =
+        Table::new("ablation: per-layer variable NNZ vs uniform (ConvNet-5, equal density)");
+    t.header(&[
+        "target density",
+        "uniform bounds",
+        "uniform retained",
+        "variable bounds",
+        "variable retained",
+    ]);
     for target in [0.5f64, 0.375, 0.25] {
         let uni = allocate_uniform(&infos, 8, target);
         let var = allocate(&infos, 8, target);

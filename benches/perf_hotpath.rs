@@ -13,7 +13,7 @@ use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
 use ssta::sim::detailed::simulate_gemm;
 use ssta::tensor::TensorI8;
 use ssta::util::bench::{bb, BenchSet};
-use ssta::util::Rng;
+use ssta::util::{Parallelism, Rng};
 
 fn main() {
     let mut set = BenchSet::new("perf_hotpath");
@@ -39,6 +39,15 @@ fn main() {
         for d in &designs {
             bb(network_timing(d, &profiles));
         }
+    });
+
+    set.bench("analytic/full_fig10_sweep_par", || {
+        let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
+        let m = models::resnet50();
+        let profiles = profile_model_repr(&m, 3, 8, 0.5);
+        bb(space::sweep(&designs, Parallelism::auto(), |d| {
+            network_timing(d, &profiles)
+        }));
     });
 
     // ---- model profiling (sampled functional inference) ----
@@ -75,6 +84,34 @@ fn main() {
         });
         set.bench("gemm/dbb_i8_256x512x128", move || {
             bb(ssta::gemm::dbb_i8(&a2, &w));
+        });
+    }
+
+    // ---- tiled parallel GEMM engine (the §tentpole hot path) ----
+    // Acceptance target: the tiled 512³ dense GEMM shows ≥ 2x over the
+    // serial oracle on a ≥ 4-core host (compare the two entries below).
+    {
+        let mut rng = Rng::new(6);
+        let a = TensorI8::rand(&[512, 512], &mut rng);
+        let w = TensorI8::rand(&[512, 512], &mut rng);
+        let (a2, w2) = (a.clone(), w.clone());
+        set.bench("gemm/dense_i8_512x512x512_serial", move || {
+            bb(ssta::gemm::dense_i8(&a, &w));
+        });
+        set.bench("gemm/dense_i8_512x512x512_tiled_auto", move || {
+            bb(ssta::gemm::tiled::dense_i8(&a2, &w2, Parallelism::auto()));
+        });
+
+        let mut rng = Rng::new(7);
+        let a = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 3);
+        let w = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+        let (a2, w2) = (a.clone(), w.clone());
+        set.bench("gemm/dbb_i8_512x512x512_serial", move || {
+            bb(ssta::gemm::dbb_i8(&a, &w));
+        });
+        set.bench("gemm/dbb_i8_512x512x512_tiled_auto", move || {
+            bb(ssta::gemm::tiled::dbb_i8(&a2, &w2, Parallelism::auto()));
         });
     }
 

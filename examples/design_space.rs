@@ -11,11 +11,17 @@ use ssta::cli::Args;
 use ssta::models;
 use ssta::power;
 use ssta::sim::accel::{network_timing, profile_model_repr};
+use ssta::util::Parallelism;
 
 fn main() {
     let args = Args::from_env();
     let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
-    eprintln!("enumerated {} iso-4TOPS design points", designs.len());
+    let par = Parallelism::auto();
+    eprintln!(
+        "enumerated {} iso-4TOPS design points ({} sweep threads)",
+        designs.len(),
+        par.get()
+    );
 
     let m = models::resnet50();
     let profiles = profile_model_repr(&m, 3, 8, 0.5);
@@ -26,17 +32,15 @@ fn main() {
     let ba = power::area(&base).total_mm2();
     let bc = bt.total.cycles as f64;
 
-    // evaluate all points: effective (iso-work) power and area
-    let mut rows: Vec<(String, f64, f64)> = designs
-        .iter()
-        .map(|d| {
-            let t = network_timing(d, &profiles);
-            let slow = t.total.cycles as f64 / bc;
-            let p = power::power(d, &t.total).total_mw() * slow / bp;
-            let a = power::area(d).total_mm2() * slow / ba;
-            (d.label(), p, a)
-        })
-        .collect();
+    // evaluate all points in parallel (one design per task): effective
+    // (iso-work) power and area
+    let mut rows: Vec<(String, f64, f64)> = space::sweep(&designs, par, |d| {
+        let t = network_timing(d, &profiles);
+        let slow = t.total.cycles as f64 / bc;
+        let p = power::power(d, &t.total).total_mw() * slow / bp;
+        let a = power::area(d).total_mm2() * slow / ba;
+        (d.label(), p, a)
+    });
     rows.sort_by(|x, y| x.1.partial_cmp(&y.1).unwrap());
 
     if args.flag("csv") {

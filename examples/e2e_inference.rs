@@ -23,16 +23,17 @@ use ssta::arch::Design;
 use ssta::cli::Args;
 use ssta::coordinator::{request::argmax, Config, Coordinator};
 use ssta::runtime::{HostTensor, Runtime};
+use ssta::util::error::{Error, Result};
 use ssta::util::Rng;
 
 const IMG: usize = 32 * 32 * 3;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args = Args::from_env();
     let n = args.opt_as::<usize>("requests", 256);
     let artifacts = args.opt("artifacts").unwrap_or("artifacts").to_string();
     let design = Design::parse(args.opt("design").unwrap_or("4x8x8_8x8_VDBB_IM2C"))
-        .map_err(|e| anyhow::anyhow!("{e}"))?;
+        .map_err(Error::msg)?;
 
     // ---- golden replay path: direct runtime, batch-1 ----
     let mut rng = Rng::new(7);
@@ -56,6 +57,7 @@ fn main() -> anyhow::Result<()> {
         design,
         act_sparsity: 0.5,
         max_wait: Duration::from_millis(1),
+        ..Config::default()
     })?;
     let h = coord.handle();
 
@@ -104,7 +106,8 @@ fn main() -> anyhow::Result<()> {
     // ---- the hardware twin's verdict (the paper's metric) ----
     let f = design.tech.freq_hz();
     println!(
-        "hardware twin {}: {:.2} effective TOPS, {:.3} W avg → {:.1} effective TOPS/W on served traffic",
+        "hardware twin {}: {:.2} effective TOPS, {:.3} W avg → {:.1} effective TOPS/W \
+         on served traffic",
         design.label(),
         m.sim_effective_tops(f),
         m.sim_avg_power_w(f),

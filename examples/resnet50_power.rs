@@ -66,5 +66,8 @@ fn main() {
             t.effective_tops(d)
         );
     }
-    println!("\n(paper Fig 11: the VDBB+IM2C design achieves a large whole-model power cut\n while also finishing in ~1/2.4 the cycles — energy/inference drops further)");
+    println!(
+        "\n(paper Fig 11: the VDBB+IM2C design achieves a large whole-model power cut\n \
+         while also finishing in ~1/2.4 the cycles — energy/inference drops further)"
+    );
 }

@@ -30,7 +30,6 @@ pub mod reuse;
 pub mod space;
 
 use std::fmt;
-use thiserror::Error;
 
 /// Datapath variant.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,13 +88,11 @@ impl ArrayDims {
 }
 
 /// Config validation errors.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum ArchError {
     /// Any zero dimension.
-    #[error("dimensions must be non-zero: {0:?}")]
     ZeroDim(ArrayDims),
     /// Fixed-DBB NNZ out of range.
-    #[error("fixed-DBB b={b} must be in 1..B={bz}")]
     BadFixedNnz {
         /// Requested SDP width.
         b: usize,
@@ -103,12 +100,27 @@ pub enum ArchError {
         bz: usize,
     },
     /// Sparse datapaths need a real block dimension.
-    #[error("sparse datapath requires B>1 (got B={0})")]
     SparseNeedsBlock(usize),
     /// Unparseable design string.
-    #[error("cannot parse design string `{0}`")]
     Parse(String),
 }
+
+impl fmt::Display for ArchError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArchError::ZeroDim(d) => write!(f, "dimensions must be non-zero: {d:?}"),
+            ArchError::BadFixedNnz { b, bz } => {
+                write!(f, "fixed-DBB b={b} must be in 1..B={bz}")
+            }
+            ArchError::SparseNeedsBlock(b) => {
+                write!(f, "sparse datapath requires B>1 (got B={b})")
+            }
+            ArchError::Parse(s) => write!(f, "cannot parse design string `{s}`"),
+        }
+    }
+}
+
+impl std::error::Error for ArchError {}
 
 /// A complete design point.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

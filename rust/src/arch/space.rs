@@ -5,9 +5,24 @@
 //! in Figs 9 and 11.
 
 use super::{ArrayDims, Datapath, Design, Tech};
+use crate::util::par::{map_indexed, Parallelism};
 
 /// MAC budget for a nominal 4 TOPS array at 1 GHz.
 pub const MACS_4TOPS: usize = 2048;
+
+/// Evaluate `eval` over every design point on the worker pool — one design
+/// per task, pulled from a shared queue so expensive points (dense
+/// fallbacks, deep occupancies) balance across threads — and return the
+/// results in design order. This is the engine behind the Fig-9/10/11
+/// sweeps and the `design_space` example; `Parallelism::serial()` gives the
+/// original sequential sweep.
+pub fn sweep<T, F>(designs: &[Design], par: Parallelism, eval: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(&Design) -> T + Sync,
+{
+    map_indexed(designs.len(), par, |i| eval(&designs[i]))
+}
 
 /// Factor `total` into an (m, n) grid as near-square as possible with n ≥ m
 /// (paper arrays are wider than tall, e.g. 32×64).
@@ -152,6 +167,18 @@ mod tests {
         assert_eq!(reps[0].label(), "1x1x1_32x64");
         // the optimal design is present
         assert!(reps.iter().any(|d| d.label() == "4x8x8_8x8_VDBB_IM2C"));
+    }
+
+    #[test]
+    fn sweep_preserves_design_order_and_matches_serial() {
+        let space = enumerate(MACS_4TOPS, Tech::N16);
+        let serial = sweep(&space, Parallelism::serial(), |d| d.physical_macs());
+        let parallel = sweep(&space, Parallelism::threads(4), |d| d.physical_macs());
+        assert_eq!(serial, parallel);
+        let labels = sweep(&space, Parallelism::threads(8), |d| d.label());
+        for (d, l) in space.iter().zip(&labels) {
+            assert_eq!(&d.label(), l);
+        }
     }
 
     #[test]

@@ -90,7 +90,8 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} occupancy={:.2} p50={}us p95={}us sim_cycles={} sim_energy={:.2}mJ",
+            "requests={} batches={} occupancy={:.2} p50={}us p95={}us sim_cycles={} \
+             sim_energy={:.2}mJ",
             self.requests,
             self.batches,
             self.occupancy(),

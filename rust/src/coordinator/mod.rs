@@ -23,12 +23,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::arch::Design;
 use crate::power;
 use crate::runtime::{HostTensor, Runtime};
-use crate::sim::accel::{network_timing, profile_model_fixed_act, LayerProfile};
+use crate::sim::accel::{network_timing_with, profile_model_fixed_act, LayerProfile};
+use crate::util::error::{anyhow, bail, Context, Result};
+use crate::util::Parallelism;
 use batcher::BatchPolicy;
 use metrics::Metrics;
 use request::{InferRequest, InferResponse};
@@ -48,6 +48,12 @@ pub struct Config {
     pub act_sparsity: f64,
     /// Batch flush timeout.
     pub max_wait: Duration,
+    /// Worker-pool width for the hardware twin's per-layer timing on the
+    /// batched execution path. Defaults to `Parallelism::serial()`: the
+    /// served convnet5 twin has 5 µs-scale layers per batch, so pool setup
+    /// would cost more latency than it saves. Set `Parallelism::auto()` /
+    /// `threads(n)` when serving deeper models.
+    pub parallelism: Parallelism,
 }
 
 impl Default for Config {
@@ -57,6 +63,7 @@ impl Default for Config {
             design: Design::paper_optimal(),
             act_sparsity: 0.5,
             max_wait: Duration::from_millis(2),
+            parallelism: Parallelism::serial(),
         }
     }
 }
@@ -135,7 +142,7 @@ impl Handle {
     /// Submit one image; returns the receiver for the response.
     pub fn submit(&self, id: u64, image: Vec<f32>) -> Result<mpsc::Receiver<InferResponse>> {
         if image.len() != IMAGE_ELEMS {
-            anyhow::bail!("image must have {IMAGE_ELEMS} elements, got {}", image.len());
+            bail!("image must have {IMAGE_ELEMS} elements, got {}", image.len());
         }
         let (reply, rx) = mpsc::channel();
         self.tx
@@ -166,14 +173,16 @@ impl Handle {
 struct Twin {
     design: Design,
     profiles_b1: Vec<LayerProfile>,
+    par: Parallelism,
 }
 
 impl Twin {
-    fn new(design: Design, nnz: usize, act_sparsity: f64) -> Twin {
+    fn new(design: Design, nnz: usize, act_sparsity: f64, par: Parallelism) -> Twin {
         let model = crate::models::convnet5();
         Twin {
             design,
             profiles_b1: profile_model_fixed_act(&model, nnz, 8, act_sparsity),
+            par,
         }
     }
 
@@ -189,7 +198,7 @@ impl Twin {
                 p
             })
             .collect();
-        let t = network_timing(&self.design, &profiles);
+        let t = network_timing_with(&self.design, &profiles, self.par);
         let pw = power::power(&self.design, &t.total);
         let secs = t.total.cycles as f64 / self.design.tech.freq_hz();
         let energy_mj = pw.total_mw() * secs; // mW · s = mJ
@@ -222,7 +231,7 @@ fn leader_loop(
             }
         }
         if sizes.is_empty() {
-            anyhow::bail!("no convnet5_b* artifacts found — run `make artifacts`");
+            bail!("no convnet5_b* artifacts found — run `make artifacts`");
         }
         // pre-compile all batch variants
         for &b in &sizes {
@@ -241,7 +250,7 @@ fn leader_loop(
         }
     };
     let policy = BatchPolicy::new(sizes, cfg.max_wait);
-    let twin = Twin::new(cfg.design, nnz, cfg.act_sparsity);
+    let twin = Twin::new(cfg.design, nnz, cfg.act_sparsity, cfg.parallelism);
     let mut queue: Vec<InferRequest> = Vec::new();
 
     loop {
@@ -456,7 +465,7 @@ mod tests {
 
     #[test]
     fn twin_cycles_scale_with_batch() {
-        let twin = Twin::new(Design::paper_optimal(), 4, 0.5);
+        let twin = Twin::new(Design::paper_optimal(), 4, 0.5, Parallelism::auto());
         let (c1, e1, m1) = twin.simulate(1);
         let (c8, e8, m8) = twin.simulate(8);
         assert_eq!(m8, 8 * m1);

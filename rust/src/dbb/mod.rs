@@ -17,13 +17,12 @@ pub mod prune;
 pub mod variable;
 
 use crate::tensor::TensorI8;
-use thiserror::Error;
+use std::fmt;
 
 /// Errors raised by DBB encode/validate.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum DbbError {
     /// A block exceeded the requested density bound.
-    #[error("block (col {col}, kblk {kblk}) has {found} non-zeros > bound {bound}")]
     BoundExceeded {
         /// Column of the offending block.
         col: usize,
@@ -35,9 +34,24 @@ pub enum DbbError {
         bound: usize,
     },
     /// Unsupported block size.
-    #[error("block size {0} not supported (must be 1..=16)")]
     BadBlockSize(usize),
 }
+
+impl fmt::Display for DbbError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DbbError::BoundExceeded { col, kblk, found, bound } => write!(
+                f,
+                "block (col {col}, kblk {kblk}) has {found} non-zeros > bound {bound}"
+            ),
+            DbbError::BadBlockSize(bz) => {
+                write!(f, "block size {bz} not supported (must be 1..=16)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DbbError {}
 
 /// One compressed block: the non-zero values (in ascending position order)
 /// and the positional bitmask (bit `i` set ⇔ expanded element `i` non-zero).

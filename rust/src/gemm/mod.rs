@@ -5,11 +5,56 @@
 //! Everything in this module is bit-exact integer arithmetic
 //! (INT8 × INT8 → INT32 accumulate) and serves as the functional oracle for
 //! the datapath simulators and for the XLA/Pallas artifacts.
+//!
+//! ## Parallelism
+//!
+//! [`dense_i8`] and [`dbb_i8`] are the single-threaded oracles. The
+//! [`tiled`] submodule provides row-tiled multi-threaded versions
+//! ([`tiled::dense_i8`] / [`tiled::dbb_i8`]) built on a dependency-free
+//! `std::thread::scope` worker pool: the `M` dimension is partitioned into
+//! per-thread output tiles, each accumulated in INT32 with the *same* inner
+//! kernels as the serial path, so the parallel results are bit-exact with
+//! the oracles for every thread count. The knob is
+//! [`crate::util::Parallelism`]: `Parallelism::auto()` (the default) uses
+//! `std::thread::available_parallelism()`, `Parallelism::serial()` falls
+//! back to the exact single-threaded path with no threads spawned.
 
 pub mod conv;
+pub mod tiled;
 
 use crate::dbb::DbbMatrix;
 use crate::tensor::{TensorI32, TensorI8};
+
+/// Inner kernel shared by the serial and tiled dense GEMMs: accumulate the
+/// output rows `row0..row0 + out.len()/n` into `out` (a row-contiguous
+/// `&mut` window of C). Iteration order is identical for every caller, so
+/// tiling cannot change a single bit of the result.
+pub(crate) fn dense_rows_i8(
+    ad: &[i8],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..row * k + k];
+        for (kk, &a) in arow.iter().enumerate() {
+            let av = a as i32;
+            if av == 0 {
+                continue;
+            }
+            let wrow = &wd[kk * n..kk * n + n];
+            for (cv, &wv) in crow.iter_mut().zip(wrow) {
+                *cv += av * wv as i32;
+            }
+        }
+    }
+}
 
 /// Dense GEMM: `C[M×N] = A[M×K] · W[K×N]`, INT8 operands, INT32 accumulate.
 pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
@@ -17,22 +62,7 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
     let mut c = TensorI32::zeros(&[m, n]);
-    let ad = a.data();
-    let wd = w.data();
-    let cd = c.data_mut();
-    for i in 0..m {
-        for kk in 0..k {
-            let av = ad[i * k + kk] as i32;
-            if av == 0 {
-                continue;
-            }
-            let wrow = &wd[kk * n..kk * n + n];
-            let crow = &mut cd[i * n..i * n + n];
-            for j in 0..n {
-                crow[j] += av * wrow[j] as i32;
-            }
-        }
-    }
+    dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
     c
 }
 
@@ -44,14 +74,19 @@ pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix) -> TensorI32 {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
     let mut c = TensorI32::zeros(&[m, w.n]);
-    let ad = a.data();
-    let n = w.n;
+    let (col_ptr, entries) = dbb_decode_csc(w);
+    dbb_rows_i8(a.data(), &col_ptr, &entries, c.data_mut(), 0, k, w.n);
+    c
+}
 
-    // Decode once into a per-column (k-index, value) stream — the CSC view
-    // of the compressed operand. The per-row pass then walks each output
-    // row with the A row hot in L1 and the weight stream sequential, which
-    // is ~5x faster than scattering down the columns (§Perf, EXPERIMENTS).
+/// Decode a compressed operand once into a per-column (k-index, value)
+/// stream — the CSC view. The per-row pass then walks each output row with
+/// the A row hot in L1 and the weight stream sequential, which is ~5x
+/// faster than scattering down the columns (§Perf, EXPERIMENTS). Shared by
+/// the serial and tiled DBB GEMMs (the tiled workers all read one decode).
+pub(crate) fn dbb_decode_csc(w: &DbbMatrix) -> (Vec<usize>, Vec<(u32, i32)>) {
     let kblocks = w.kblocks();
+    let n = w.n;
     let mut col_ptr = Vec::with_capacity(n + 1);
     let mut entries: Vec<(u32, i32)> = Vec::with_capacity(w.total_nnz());
     col_ptr.push(0usize);
@@ -60,17 +95,34 @@ pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix) -> TensorI32 {
             let blk = w.block(col, kb);
             for (val, pos) in blk.vals.iter().zip(blk.positions()) {
                 let kk = kb * w.bz + pos;
-                debug_assert!(kk < k, "non-zero in padding region");
+                debug_assert!(kk < w.k, "non-zero in padding region");
                 entries.push((kk as u32, *val as i32));
             }
         }
         col_ptr.push(entries.len());
     }
+    (col_ptr, entries)
+}
 
-    let cd = c.data_mut();
-    for i in 0..m {
-        let arow = &ad[i * k..(i + 1) * k];
-        let crow = &mut cd[i * n..(i + 1) * n];
+/// Inner kernel shared by the serial and tiled DBB GEMMs: accumulate output
+/// rows `row0..row0 + out.len()/n` from the decoded CSC stream. Per-element
+/// accumulation order is column-stream order for every caller — bit-exact
+/// under tiling.
+pub(crate) fn dbb_rows_i8(
+    ad: &[i8],
+    col_ptr: &[usize],
+    entries: &[(u32, i32)],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..(row + 1) * k];
         for (col, cv) in crow.iter_mut().enumerate() {
             let mut acc = 0i32;
             for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
@@ -80,7 +132,6 @@ pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix) -> TensorI32 {
             *cv = acc;
         }
     }
-    c
 }
 
 /// Count of effective MAC operations for a DBB GEMM (per paper Table V

@@ -1,0 +1,160 @@
+//! Parallel row-tiled GEMM engine — the multi-PE analogue in software.
+//!
+//! The paper's array reaches throughput by spreading the `M` (output-row)
+//! dimension across physical PE rows; this module does the same across host
+//! cores: the output matrix is split into row-contiguous tiles, one scoped
+//! worker (`std::thread::scope`, no external crates) accumulates each tile
+//! in INT32 using the *same* inner kernels as the serial oracles
+//! ([`crate::gemm::dense_i8`] / [`crate::gemm::dbb_i8`]), so results are
+//! bit-exact for every thread count — property-tested in this module and in
+//! `rust/tests/tiled_gemm.rs`.
+//!
+//! The thread-count knob is [`Parallelism`] (re-exported from
+//! [`crate::util::par`]): `auto()` = `available_parallelism()` (the
+//! default), `serial()` = the exact single-threaded fallback with no thread
+//! spawned.
+
+pub use crate::util::par::Parallelism;
+
+use crate::dbb::DbbMatrix;
+use crate::tensor::{TensorI32, TensorI8};
+
+/// Parallel dense GEMM: `C[M×N] = A[M×K] · W[K×N]`, INT8 operands, INT32
+/// accumulate. Bit-exact with [`crate::gemm::dense_i8`].
+pub fn dense_i8(a: &TensorI8, w: &TensorI8, par: Parallelism) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
+    if par.get() <= 1 || m <= 1 || n == 0 {
+        return crate::gemm::dense_i8(a, w);
+    }
+    let mut c = TensorI32::zeros(&[m, n]);
+    let ad = a.data();
+    let wd = w.data();
+    let rows_per_tile = m.div_ceil(par.get().min(m));
+    std::thread::scope(|s| {
+        for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
+            let row0 = ti * rows_per_tile;
+            s.spawn(move || crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n));
+        }
+    });
+    c
+}
+
+/// Parallel DBB-sparse GEMM: `C = A · decompress(W)` on the compressed
+/// form. The CSC decode happens once; all workers read it. Bit-exact with
+/// [`crate::gemm::dbb_i8`].
+pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix, par: Parallelism) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
+    if par.get() <= 1 || m <= 1 || w.n == 0 {
+        return crate::gemm::dbb_i8(a, w);
+    }
+    let n = w.n;
+    let mut c = TensorI32::zeros(&[m, n]);
+    let (col_ptr, entries) = crate::gemm::dbb_decode_csc(w);
+    let ad = a.data();
+    let (cp, en) = (&col_ptr[..], &entries[..]);
+    let rows_per_tile = m.div_ceil(par.get().min(m));
+    std::thread::scope(|s| {
+        for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
+            let row0 = ti * rows_per_tile;
+            s.spawn(move || crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, n));
+        }
+    });
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::prune::prune_i8;
+    use crate::gemm;
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn dense_tiled_equals_serial_prop() {
+        // random M/K/N and thread counts 1–8, including M < threads
+        check(Config::default().cases(96), |rng| {
+            let m = rng.below(40) + 1;
+            let k = rng.below(64) + 1;
+            let n = rng.below(24) + 1;
+            let threads = rng.below(8) + 1;
+            let a = TensorI8::rand_sparse(&[m, k], 0.3, rng);
+            let w = TensorI8::rand(&[k, n], rng);
+            let serial = gemm::dense_i8(&a, &w);
+            let tiled = dense_i8(&a, &w, Parallelism::threads(threads));
+            assert_eq!(
+                serial.data(),
+                tiled.data(),
+                "m={m} k={k} n={n} threads={threads}"
+            );
+        });
+    }
+
+    #[test]
+    fn dbb_tiled_equals_serial_prop() {
+        // random M/K/N/bz/nnz and thread counts 1–8
+        check(Config::default().cases(96), |rng| {
+            let m = rng.below(32) + 1;
+            let k = rng.below(64) + 1;
+            let n = rng.below(20) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let threads = rng.below(8) + 1;
+            let a = TensorI8::rand_sparse(&[m, k], 0.4, rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, n], rng), bz, nnz);
+            let w = DbbMatrix::compress(&wd, bz).unwrap();
+            let serial = gemm::dbb_i8(&a, &w);
+            let tiled = dbb_i8(&a, &w, Parallelism::threads(threads));
+            assert_eq!(
+                serial.data(),
+                tiled.data(),
+                "m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads}"
+            );
+        });
+    }
+
+    #[test]
+    fn single_row_more_threads_than_rows() {
+        // M < threads: the tile split must degenerate gracefully
+        let mut rng = Rng::new(3);
+        let a = TensorI8::rand(&[1, 33], &mut rng);
+        let w = TensorI8::rand(&[33, 7], &mut rng);
+        assert_eq!(
+            dense_i8(&a, &w, Parallelism::threads(8)).data(),
+            gemm::dense_i8(&a, &w).data()
+        );
+        let a3 = TensorI8::rand(&[3, 16], &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[16, 5], &mut rng), 8, 3);
+        let wc = DbbMatrix::compress(&wd, 8).unwrap();
+        assert_eq!(
+            dbb_i8(&a3, &wc, Parallelism::threads(16)).data(),
+            gemm::dbb_i8(&a3, &wc).data()
+        );
+    }
+
+    #[test]
+    fn serial_fallback_is_exact_path() {
+        let mut rng = Rng::new(4);
+        let a = TensorI8::rand(&[9, 24], &mut rng);
+        let w = TensorI8::rand(&[24, 6], &mut rng);
+        assert_eq!(
+            dense_i8(&a, &w, Parallelism::serial()).data(),
+            gemm::dense_i8(&a, &w).data()
+        );
+    }
+
+    #[test]
+    fn dbb_tiled_matches_dense_on_decompressed() {
+        let mut rng = Rng::new(5);
+        let a = TensorI8::rand_sparse(&[40, 48], 0.5, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[48, 24], &mut rng), 8, 3);
+        let w = DbbMatrix::compress(&wd, 8).unwrap();
+        assert_eq!(
+            dbb_i8(&a, &w, Parallelism::threads(4)).data(),
+            gemm::dense_i8(&a, &wd).data()
+        );
+    }
+}

@@ -4,8 +4,11 @@
 use crate::arch::{space, Design, Tech};
 use crate::models;
 use crate::power;
-use crate::sim::accel::{network_timing, profile_model, profile_model_repr, NetworkTiming};
+use crate::sim::accel::{
+    network_timing, profile_model, profile_model_repr, LayerProfile, NetworkTiming,
+};
 use crate::util::table::Table;
+use crate::util::Parallelism;
 
 /// Shared evaluation: run the paper's power-analysis workload (§V-C:
 /// representative 3×3 ResNet-50 layers) at (nnz/8 DBB, fixed act sparsity)
@@ -13,19 +16,31 @@ use crate::util::table::Table;
 fn eval_design(d: &Design, nnz: usize, act: f64) -> (NetworkTiming, f64, f64) {
     let m = models::resnet50();
     let profiles = profile_model_repr(&m, nnz, 8, act);
-    let t = network_timing(d, &profiles);
+    eval_design_on(d, &profiles)
+}
+
+/// [`eval_design`] against an already-built layer profile — the sweep form:
+/// the profile is design-independent, so fig9/fig10 build it once and share
+/// it across every sweep task.
+fn eval_design_on(d: &Design, profiles: &[LayerProfile]) -> (NetworkTiming, f64, f64) {
+    let t = network_timing(d, profiles);
     let p = power::power(d, &t.total).total_mw();
     let a = power::area(d).total_mm2();
     (t, p, a)
 }
 
-/// Effective power/area: the paper's iso-*effective-throughput* view —
-/// power and area scaled by the time each design needs for the same work.
-fn effective_power_area(d: &Design, nnz: usize, act: f64, base_cycles: u64) -> (f64, f64) {
-    let (t, p, a) = eval_design(d, nnz, act);
+/// Iso-work ("effective") view shared by fig9/fig10: raw power/area plus
+/// the same scaled by the time this design needs for the workload relative
+/// to `base_cycles` (energy per inference ∝ power × time; effective area ∝
+/// area × time). Returns `(timing, power, area, eff_power, eff_area)`.
+fn effective_on(
+    d: &Design,
+    profiles: &[LayerProfile],
+    base_cycles: u64,
+) -> (NetworkTiming, f64, f64, f64, f64) {
+    let (t, p, a) = eval_design_on(d, profiles);
     let slowdown = t.total.cycles as f64 / base_cycles as f64;
-    // energy per inference ∝ power × time; effective area ∝ area × time
-    (p * slowdown, a * slowdown)
+    (t, p, a, p * slowdown, a * slowdown)
 }
 
 /// Fig. 9 — normalized power and area breakdown of the 12 representative
@@ -33,22 +48,27 @@ fn effective_power_area(d: &Design, nnz: usize, act: f64, base_cycles: u64) -> (
 pub fn fig9() -> Vec<Table> {
     let designs = space::representative_12(Tech::N16);
     let base = &designs[0];
-    let (bt, bp, ba) = eval_design(base, 3, 0.5);
+    let m = models::resnet50();
+    let profiles = profile_model_repr(&m, 3, 8, 0.5);
+    let (bt, bp, ba) = eval_design_on(base, &profiles);
     let base_cycles = bt.total.cycles;
 
-    let mut t = Table::new("Fig 9: iso-throughput designs @ 3/8 DBB, 50% act (normalized to 1x1x1_32x64)");
+    let mut t =
+        Table::new("Fig 9: iso-throughput designs @ 3/8 DBB, 50% act (normalized to 1x1x1_32x64)");
     t.header(&[
         "Design", "Power mW", "Area mm2", "Cycles (ResNet50)", "Norm. eff. power",
         "Norm. eff. area",
     ]);
-    for d in &designs {
-        let (ti, p, a) = eval_design(d, 3, 0.5);
-        let (ep, ea) = effective_power_area(d, 3, 0.5, base_cycles);
+    let rows = space::sweep(&designs, Parallelism::auto(), |d| {
+        let (ti, p, a, ep, ea) = effective_on(d, &profiles, base_cycles);
+        (d.label(), p, a, ti.total.cycles, ep, ea)
+    });
+    for (label, p, a, cycles, ep, ea) in rows {
         t.row(&[
-            d.label(),
+            label,
             format!("{p:.1}"),
             format!("{a:.2}"),
-            format!("{}", ti.total.cycles),
+            format!("{cycles}"),
             format!("{:.3}", ep / bp),
             format!("{:.3}", ea / ba),
         ]);
@@ -61,22 +81,26 @@ pub fn fig9() -> Vec<Table> {
 pub fn fig10() -> Vec<Table> {
     let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
     let base = Design::baseline_sa();
-    let (bt, bp, ba) = eval_design(&base, 3, 0.5);
+    let m = models::resnet50();
+    let profiles = profile_model_repr(&m, 3, 8, 0.5);
+    let (bt, bp, ba) = eval_design_on(&base, &profiles);
     let base_cycles = bt.total.cycles;
 
     let mut t = Table::new("Fig 10: design space (effective power vs area, normalized)");
     t.header(&["Design", "Norm. power", "Norm. area", "Group"]);
-    let mut rows: Vec<(String, f64, f64, &'static str)> = Vec::new();
-    for d in &designs {
-        let (ep, ea) = effective_power_area(d, 3, 0.5, base_cycles);
-        let group = match (&d.datapath, d.im2col) {
-            (crate::arch::Datapath::Dense, _) => "dense",
-            (crate::arch::Datapath::FixedDbb { .. }, _) => "fixed-DBB",
-            (crate::arch::Datapath::Vdbb, true) => "VDBB+IM2C",
-            (crate::arch::Datapath::Vdbb, false) => "VDBB",
-        };
-        rows.push((d.label(), ep / bp, ea / ba, group));
-    }
+    // the whole-space sweep is the repo's hot loop — one design per task,
+    // all tasks sharing the one design-independent layer profile
+    let mut rows: Vec<(String, f64, f64, &'static str)> =
+        space::sweep(&designs, Parallelism::auto(), |d| {
+            let (_ti, _p, _a, ep, ea) = effective_on(d, &profiles, base_cycles);
+            let group = match (&d.datapath, d.im2col) {
+                (crate::arch::Datapath::Dense, _) => "dense",
+                (crate::arch::Datapath::FixedDbb { .. }, _) => "fixed-DBB",
+                (crate::arch::Datapath::Vdbb, true) => "VDBB+IM2C",
+                (crate::arch::Datapath::Vdbb, false) => "VDBB",
+            };
+            (d.label(), ep / bp, ea / ba, group)
+        });
     rows.sort_by(|a, b| (a.1 * a.2).partial_cmp(&(b.1 * b.2)).unwrap());
     for (label, p, a, g) in rows {
         t.row(&[label, format!("{p:.3}"), format!("{a:.3}"), g.to_string()]);
@@ -110,14 +134,17 @@ pub fn fig11(quick: bool) -> Vec<Table> {
     // per-inference view — the paper's "44.6% power reduction over the
     // baseline" matches the energy interpretation, since the sparse
     // designs also finish in a fraction of the cycles.
-    let sample_layers = ["blk1/unit1/conv2", "blk1/unit3/conv3", "blk3/unit2/conv2", "blk4/unit3/conv3"];
+    let sample_layers =
+        ["blk1/unit1/conv2", "blk1/unit3/conv3", "blk3/unit2/conv2", "blk4/unit3/conv3"];
 
-    let mut t = Table::new("Fig 11: ResNet-50 power/energy (normalized to baseline, measured act sparsity)");
+    let mut t = Table::new(
+        "Fig 11: ResNet-50 power/energy (normalized to baseline, measured act sparsity)",
+    );
     let mut hdr = vec!["Design".to_string(), "whole power".into(), "whole energy".into()];
     hdr.extend(sample_layers.iter().map(|s| s.to_string()));
     t.header(&hdr);
 
-    for d in &designs {
+    let rows = space::sweep(&designs, Parallelism::auto(), |d| {
         let ti = network_timing(d, &profiles);
         let p = power::power(d, &ti.total).total_mw();
         let energy = p * ti.total.cycles as f64 / (bp * bt.total.cycles as f64);
@@ -128,6 +155,9 @@ pub fn fig11(quick: bool) -> Vec<Table> {
             let blp = power::power(&base, &bt.layers[li].events).total_mw();
             row.push(format!("{:.3}", lp / blp));
         }
+        row
+    });
+    for row in rows {
         t.row(&row);
     }
 

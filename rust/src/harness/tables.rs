@@ -211,7 +211,13 @@ pub fn table4() -> Vec<Table> {
         d.label(),
         d.nominal_tops()
     ));
-    t.header(&["Component", "Power mW (model)", "Power mW (paper)", "Area mm2 (model)", "Area mm2 (paper)"]);
+    t.header(&[
+        "Component",
+        "Power mW (model)",
+        "Power mW (paper)",
+        "Area mm2 (model)",
+        "Area mm2 (paper)",
+    ]);
     let rows: Vec<(&str, f64, f64, f64, f64)> = vec![
         ("Systolic Tensor Array", p.sta_mw, 318.0, a.sta_mm2, 0.732),
         ("Weight SRAM (512KB)", p.wsram_mw, 78.5, a.wsram_mm2, 0.54),
@@ -373,7 +379,8 @@ pub fn smt_sa_efficiency(smt: &SmtSa) -> (f64, f64) {
         + idle as f64 * lib.e_mac_idle_pj
         + fifo_pj)
         * (1.0 + lib.clock_overhead);
-    let sram_pj = wbytes as f64 * lib.e_wsram_byte_pj + (abytes + obytes) as f64 * lib.e_asram_byte_pj;
+    let sram_pj =
+        wbytes as f64 * lib.e_wsram_byte_pj + (abytes + obytes) as f64 * lib.e_asram_byte_pj;
     let mcu_mw = 4.0 * lib.mcu_mw_per_core;
     let mw = (sta_pj + sram_pj) * 1e-12 / secs * 1e3 + mcu_mw;
 

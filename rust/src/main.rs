@@ -113,7 +113,10 @@ fn serve(args: &Args) -> i32 {
     }
     let wall = t0.elapsed();
     let m = coord.metrics();
-    println!("served {ok}/{n} requests in {wall:.2?} ({:.1} req/s)", ok as f64 / wall.as_secs_f64());
+    println!(
+        "served {ok}/{n} requests in {wall:.2?} ({:.1} req/s)",
+        ok as f64 / wall.as_secs_f64()
+    );
     println!("{}", m.summary());
     println!(
         "hardware twin ({}): {:.2} effective TOPS, {:.1} mW avg",

@@ -117,7 +117,17 @@ impl Model {
     }
 }
 
-fn conv(name: &str, h: usize, w: usize, c: usize, k: usize, oc: usize, stride: usize, pad: usize, prunable: bool) -> Layer {
+fn conv(
+    name: &str,
+    h: usize,
+    w: usize,
+    c: usize,
+    k: usize,
+    oc: usize,
+    stride: usize,
+    pad: usize,
+    prunable: bool,
+) -> Layer {
     Layer {
         name: name.to_string(),
         kind: LayerKind::Conv(ConvShape {

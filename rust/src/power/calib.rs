@@ -118,15 +118,21 @@ mod tests {
         println!("  act_edge_bytes  {}", e.act_edge_bytes);
         println!("  out_bytes       {}", e.out_sram_bytes);
         let pw = power::power(&d, e);
-        println!("power  (paper):   sta 318  wsram 78.5  asram 31.0  mcu 50.5  im2c 10.0  total 487.5");
         println!(
-            "power  (model):   sta {:.1}  wsram {:.1}  asram {:.1}  mcu {:.1}  im2c {:.1}  total {:.1}",
+            "power  (paper):   sta 318  wsram 78.5  asram 31.0  mcu 50.5  im2c 10.0  total 487.5"
+        );
+        println!(
+            "power  (model):   sta {:.1}  wsram {:.1}  asram {:.1}  mcu {:.1}  im2c {:.1}  \
+             total {:.1}",
             pw.sta_mw, pw.wsram_mw, pw.asram_mw, pw.mcu_mw, pw.im2col_mw, pw.total_mw()
         );
         let a = power::area(&d);
-        println!("area   (paper):   sta 0.732  wsram 0.54  asram 2.16  mcu 0.30  im2c 0.01  total 3.74");
         println!(
-            "area   (model):   sta {:.3}  wsram {:.3}  asram {:.3}  mcu {:.3}  im2c {:.3}  total {:.3}",
+            "area   (paper):   sta 0.732  wsram 0.54  asram 2.16  mcu 0.30  im2c 0.01  total 3.74"
+        );
+        println!(
+            "area   (model):   sta {:.3}  wsram {:.3}  asram {:.3}  mcu {:.3}  im2c {:.3}  \
+             total {:.3}",
             a.sta_mm2, a.wsram_mm2, a.asram_mm2, a.mcu_mm2, a.im2col_mm2, a.total_mm2()
         );
         println!(

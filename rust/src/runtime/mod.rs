@@ -11,9 +11,10 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::util::error::{anyhow, bail, Context, Result};
 use crate::util::json::Json;
+
+mod xla;
 
 /// Element dtype of an artifact operand (the manifest's `"dtype"` field).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,11 +189,11 @@ impl HostTensor {
                 spec.elems()
             );
         }
-        Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::Literal::create_from_shape_and_untyped_data(
             spec.dtype.element_type(),
             &spec.shape,
             self.bytes(),
-        )?)
+        )
     }
 
     fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {

@@ -16,11 +16,11 @@ use super::im2col::Im2colUnit;
 use super::mcu::McuComplex;
 use super::EventCounts;
 use crate::arch::Design;
-use crate::dbb::prune::prune_i8;
 use crate::gemm;
 use crate::models::{Layer, LayerKind, Model};
 use crate::tensor::TensorI8;
-use crate::util::Rng;
+use crate::util::par::map_indexed;
+use crate::util::{Parallelism, Rng};
 
 /// Cap on sampled GEMM rows/cols for the functional sparsity measurement
 /// (keeps ResNet/VGG profiling fast; sparsity is a statistical mean over
@@ -106,8 +106,23 @@ fn layer_bound(l: &Layer, nnz: usize, bz: usize) -> usize {
 /// run a sampled forward pass, measure per-layer activation sparsity.
 ///
 /// `nnz` is the model-wide DBB target (paper Table I: e.g. 3/8 for
-/// ResNet-50); `seed` fixes the synthetic weights and input.
+/// ResNet-50); `seed` fixes the synthetic weights and input. The sampled
+/// GEMMs run on the tiled parallel engine at host width — bit-exact with
+/// the serial path, so the measured sparsities are unchanged.
 pub fn profile_model(model: &Model, nnz: usize, bz: usize, seed: u64) -> Vec<LayerProfile> {
+    profile_model_with(model, nnz, bz, seed, Parallelism::auto())
+}
+
+/// [`profile_model`] with an explicit worker-pool width for the sampled
+/// functional GEMMs (`Parallelism::serial()` = the original single-threaded
+/// path; results are bit-identical either way).
+pub fn profile_model_with(
+    model: &Model,
+    nnz: usize,
+    bz: usize,
+    seed: u64,
+    par: Parallelism,
+) -> Vec<LayerProfile> {
     let mut rng = Rng::new(seed);
     let mut profiles = Vec::with_capacity(model.layers.len());
     // input image: natural images are dense (≈0% zeros after normalization)
@@ -128,9 +143,9 @@ pub fn profile_model(model: &Model, nnz: usize, bz: usize, seed: u64) -> Vec<Lay
         let acc = if bound < bz {
             let enc = crate::dbb::DbbMatrix::compress_topk(&w_dense, bz, bound)
                 .expect("valid block size");
-            gemm::dbb_i8(&a, &enc)
+            gemm::tiled::dbb_i8(&a, &enc, par)
         } else {
-            gemm::dense_i8(&a, &w_dense)
+            gemm::tiled::dense_i8(&a, &w_dense, par)
         };
         let out = requant_relu(&acc, relu);
         let out_s = out.sparsity();
@@ -311,13 +326,28 @@ pub fn layer_timing(design: &Design, p: &LayerProfile, mcu: &McuComplex) -> Laye
     }
 }
 
-/// Whole-network timing on a design.
+/// Whole-network timing on a design (serial; see [`network_timing_with`]
+/// for the parallel variant — callers that already parallelize across
+/// designs, like the Fig-10 sweep, should keep this one to avoid
+/// oversubscription).
 pub fn network_timing(design: &Design, profiles: &[LayerProfile]) -> NetworkTiming {
+    network_timing_with(design, profiles, Parallelism::serial())
+}
+
+/// Whole-network timing with the per-layer analytic models evaluated on the
+/// worker pool. `layer_timing` is pure, so results are identical to the
+/// serial path for any thread count. Note: pool setup costs tens of µs per
+/// call — worth it for ResNet-50-class layer counts, not for 5-layer
+/// models, which is why latency-sensitive callers (the serving twin)
+/// default to `Parallelism::serial()`.
+pub fn network_timing_with(
+    design: &Design,
+    profiles: &[LayerProfile],
+    par: Parallelism,
+) -> NetworkTiming {
     let mcu = McuComplex::for_tops(design.peak_effective_tops());
-    let layers: Vec<LayerTiming> = profiles
-        .iter()
-        .map(|p| layer_timing(design, p, &mcu))
-        .collect();
+    let layers: Vec<LayerTiming> =
+        map_indexed(profiles.len(), par, |i| layer_timing(design, &profiles[i], &mcu));
     let mut total = EventCounts::default();
     for l in &layers {
         total.add(&l.events);
@@ -440,6 +470,24 @@ mod tests {
         // the late 3x3 layers genuinely need several phases
         let blk4 = feas.iter().find(|f| f.name == "blk4/unit2/conv2").unwrap();
         assert!(blk4.wb_phases > 1, "phases={}", blk4.wb_phases);
+    }
+
+    #[test]
+    fn parallel_profile_and_timing_match_serial() {
+        // the worker-pool paths must be bit-identical to the serial ones
+        let m = models::convnet5();
+        let ps = profile_model_with(&m, 3, 8, 42, Parallelism::serial());
+        let pp = profile_model_with(&m, 3, 8, 42, Parallelism::threads(4));
+        assert_eq!(ps.len(), pp.len());
+        for (a, b) in ps.iter().zip(&pp) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+        }
+        let d = crate::arch::Design::paper_optimal();
+        let ts = network_timing(&d, &ps);
+        let tp = network_timing_with(&d, &ps, Parallelism::threads(4));
+        assert_eq!(ts.total, tp.total);
+        assert_eq!(ts.dense_macs, tp.dense_macs);
     }
 
     #[test]

@@ -94,7 +94,8 @@ pub fn simulate_gemm(
     let kb = tsteps as u64;
     let wbytes_per_col: u64 = match design.datapath {
         Datapath::Dense => kb * d.b as u64,
-        Datapath::FixedDbb { b } => kb * (o as u64 * b as u64) + (w.kblocks() as u64), // + index byte/blk
+        // + one index byte per block
+        Datapath::FixedDbb { b } => kb * (o as u64 * b as u64) + (w.kblocks() as u64),
         Datapath::Vdbb => kb * o as u64 + w.kblocks() as u64,
     };
     ev.weight_sram_bytes = wbytes_per_col * ng as u64 * row_tiles as u64;

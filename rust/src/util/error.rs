@@ -1,0 +1,140 @@
+//! Minimal error type + context helpers (offline substrate for `anyhow`).
+//!
+//! The runtime and coordinator layers need ad-hoc, message-carrying errors
+//! with context chaining; `anyhow` is unavailable offline, so this module
+//! provides the surface those layers use: an opaque [`Error`], the
+//! [`Result`] alias with a defaulted error type, the [`anyhow!`]/[`bail!`]
+//! macros and a [`Context`] extension trait for `Result`.
+//!
+//! Context is flattened into a single `outer: inner` message string rather
+//! than a source chain — every consumer in this crate only ever formats the
+//! error, so the chain structure would be dead weight.
+
+use std::fmt;
+
+/// An opaque, message-carrying error.
+#[derive(Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl Error {
+    /// Build from any displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// `Result` with [`Error`] as the default error type (mirrors
+/// `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error, `anyhow::Context`-style: the context message
+/// is prepended (`"context: cause"`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", ctx())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, ctx: F) -> Result<T> {
+        self.ok_or_else(|| Error(ctx().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::core::format_args!($($arg)*))
+    };
+}
+
+/// Early-return an [`Error`] built from a format string (mirrors
+/// `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("broke with code {}", 7)
+    }
+
+    #[test]
+    fn bail_and_display() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke with code 7");
+        assert_eq!(format!("{e:?}"), "broke with code 7");
+        assert_eq!(format!("{e:#}"), "broke with code 7");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<()> = Err(anyhow!("root cause")).context("opening manifest");
+        assert_eq!(r.unwrap_err().to_string(), "opening manifest: root cause");
+        let r2: Result<()> = Err(anyhow!("inner")).with_context(|| format!("step {}", 3));
+        assert_eq!(r2.unwrap_err().to_string(), "step 3: inner");
+    }
+
+    #[test]
+    fn context_on_foreign_error_types() {
+        let io: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "no such file",
+        ));
+        let e = io.context("reading config").unwrap_err();
+        assert!(e.to_string().starts_with("reading config: "));
+        assert!(e.to_string().contains("no such file"));
+    }
+
+    #[test]
+    fn context_on_option() {
+        let v: Option<u8> = None;
+        assert_eq!(v.context("missing field").unwrap_err().to_string(), "missing field");
+        assert_eq!(Some(5u8).context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn question_mark_propagates() {
+        fn outer() -> Result<u32> {
+            let v = fails()?;
+            Ok(v)
+        }
+        assert!(outer().is_err());
+    }
+}

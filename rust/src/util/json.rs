@@ -8,7 +8,6 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
-use thiserror::Error;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -28,18 +27,27 @@ pub enum Json {
 }
 
 /// Parse errors with byte offsets.
-#[derive(Debug, Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum JsonError {
     /// Unexpected byte or EOF.
-    #[error("unexpected input at byte {0}")]
     Unexpected(usize),
     /// Trailing non-whitespace after the top-level value.
-    #[error("trailing garbage at byte {0}")]
     Trailing(usize),
     /// Bad \u escape or number.
-    #[error("malformed literal at byte {0}")]
     Malformed(usize),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Unexpected(p) => write!(f, "unexpected input at byte {p}"),
+            JsonError::Trailing(p) => write!(f, "trailing garbage at byte {p}"),
+            JsonError::Malformed(p) => write!(f, "malformed literal at byte {p}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     /// Parse a complete JSON document.
@@ -137,7 +145,9 @@ fn parse_num(b: &[u8], p: &mut usize) -> Result<Json, JsonError> {
     if b.get(*p) == Some(&b'-') {
         *p += 1;
     }
-    while *p < b.len() && (b[*p].is_ascii_digit() || matches!(b[*p], b'.' | b'e' | b'E' | b'+' | b'-')) {
+    while *p < b.len()
+        && (b[*p].is_ascii_digit() || matches!(b[*p], b'.' | b'e' | b'E' | b'+' | b'-'))
+    {
         *p += 1;
     }
     std::str::from_utf8(&b[start..*p])
@@ -374,7 +384,8 @@ mod tests {
         let shape = m.get("inputs").unwrap().as_arr().unwrap()[0]
             .get("shape")
             .unwrap();
-        let dims: Vec<usize> = shape.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect();
+        let dims: Vec<usize> =
+            shape.as_arr().unwrap().iter().map(|d| d.as_usize().unwrap()).collect();
         assert_eq!(dims, vec![1, 32, 32, 3]);
     }
 }

@@ -18,12 +18,20 @@
 //! * [`stats`] — mean/median/percentile helpers.
 //! * [`json`] — minimal JSON parse/serialize for the artifact manifest
 //!   (standing in for `serde_json`).
+//! * [`error`] — message-carrying error + context chaining (standing in for
+//!   `anyhow`), used by the runtime and coordinator layers.
+//! * [`par`] — scoped-thread worker pool and the [`par::Parallelism`] knob
+//!   (standing in for `rayon`), used by the tiled GEMMs, the layer profiler
+//!   and the design-space sweep.
 
 pub mod bench;
+pub mod error;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use par::Parallelism;
 pub use rng::Rng;

@@ -1,0 +1,170 @@
+//! Dependency-free data-parallel helpers built on `std::thread::scope`
+//! (offline substrate for `rayon`).
+//!
+//! Two primitives cover every hot path in the crate:
+//!
+//! * [`Parallelism`] — the thread-count knob. Defaults to
+//!   `std::thread::available_parallelism()`; `Parallelism::serial()` (1
+//!   thread) is the exact-fallback that bypasses thread spawning entirely,
+//!   so serial results stay byte-for-byte reproducible and debuggable.
+//! * [`map_indexed`] — evaluate `f(0..n)` across a scoped worker pool with a
+//!   shared atomic work queue (one index per task — good load balance when
+//!   task costs vary, e.g. design points with different occupancies), and
+//!   return the results in index order.
+//!
+//! `crate::gemm::tiled` adds the third pattern (disjoint `&mut` output
+//! tiles via `chunks_mut`) directly where the output buffer lives.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Worker-pool size configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    threads: usize,
+}
+
+impl Parallelism {
+    /// Use the host's available parallelism (≥ 1).
+    pub fn auto() -> Parallelism {
+        let threads = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
+        Parallelism { threads }
+    }
+
+    /// Serial execution: no worker threads are spawned at all.
+    pub fn serial() -> Parallelism {
+        Parallelism { threads: 1 }
+    }
+
+    /// Exactly `n` worker threads (clamped to ≥ 1).
+    pub fn threads(n: usize) -> Parallelism {
+        Parallelism { threads: n.max(1) }
+    }
+
+    /// Configured thread count.
+    pub fn get(&self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::auto()
+    }
+}
+
+/// Evaluate `f(i)` for every `i in 0..n` on the worker pool and collect the
+/// results in index order. Work is distributed through a shared atomic
+/// counter, one index per claim, so uneven task costs balance naturally.
+///
+/// With `par` serial (or `n <= 1`) this runs inline with no threads — the
+/// exact serial fallback.
+///
+/// Panics in `f` are propagated (the pool joins every worker first).
+pub fn map_indexed<T, F>(n: usize, par: Parallelism, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = par.get().min(n);
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let fref = &f;
+    let nextref = &next;
+    let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = nextref.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, fref(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(local) => local,
+                // re-raise with the original payload so the caller sees the
+                // real assertion message, not a generic pool error
+                Err(payload) => std::panic::resume_unwind(payload),
+            })
+            .collect()
+    });
+
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in parts.into_iter().flatten() {
+        out[i] = Some(v);
+    }
+    out.into_iter()
+        .map(|v| v.expect("work queue covered every index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_is_at_least_one() {
+        assert!(Parallelism::auto().get() >= 1);
+        assert_eq!(Parallelism::serial().get(), 1);
+        assert_eq!(Parallelism::threads(0).get(), 1);
+        assert_eq!(Parallelism::threads(6).get(), 6);
+    }
+
+    #[test]
+    fn map_preserves_index_order() {
+        for t in [1usize, 2, 3, 8] {
+            let got = map_indexed(37, Parallelism::threads(t), |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn fewer_items_than_threads() {
+        let got = map_indexed(2, Parallelism::threads(8), |i| i + 10);
+        assert_eq!(got, vec![10, 11]);
+        let empty = map_indexed(0, Parallelism::threads(4), |i| i);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn every_index_claimed_exactly_once() {
+        use std::sync::atomic::AtomicU32;
+        let calls = AtomicU32::new(0);
+        let n = 101;
+        let got = map_indexed(n, Parallelism::threads(4), |i| {
+            calls.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(calls.load(Ordering::Relaxed), n as u32);
+        assert_eq!(got, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn uneven_task_costs_still_complete() {
+        // tasks with wildly different costs (the design-space sweep shape)
+        let got = map_indexed(16, Parallelism::threads(4), |i| {
+            let mut acc = 0u64;
+            for k in 0..(i * 10_000) {
+                acc = acc.wrapping_add(k as u64);
+            }
+            (i, acc)
+        });
+        for (i, (gi, _)) in got.iter().enumerate() {
+            assert_eq!(i, *gi);
+        }
+    }
+}

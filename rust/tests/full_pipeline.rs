@@ -116,7 +116,11 @@ fn vdbb_speedup_on_trained_weights_matches_bound() {
         cycles_by_bound.push(r.timing.events.cycles);
     }
     // cycles scale ≈ bound (2:4:8)
-    let (c2, c4, c8) = (cycles_by_bound[0] as f64, cycles_by_bound[1] as f64, cycles_by_bound[2] as f64);
+    let (c2, c4, c8) = (
+        cycles_by_bound[0] as f64,
+        cycles_by_bound[1] as f64,
+        cycles_by_bound[2] as f64,
+    );
     assert!((c4 / c2 - 2.0).abs() < 0.25, "c4/c2 = {}", c4 / c2);
     assert!((c8 / c4 - 2.0).abs() < 0.25, "c8/c4 = {}", c8 / c4);
 }

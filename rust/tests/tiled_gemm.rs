@@ -1,0 +1,118 @@
+//! Integration: the tiled parallel GEMM engine vs the serial oracles,
+//! exercised through the public API exactly as the profiler and coordinator
+//! consume it — bit-exactness across shapes, block parameters and thread
+//! counts, plus the parallel sweep/profiling wrappers.
+
+use ssta::arch::{space, Tech};
+use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::gemm;
+use ssta::models;
+use ssta::sim::accel::{network_timing, network_timing_with, profile_model_with};
+use ssta::tensor::TensorI8;
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+#[test]
+fn tiled_dense_bit_exact_across_thread_counts() {
+    check(Config::default().cases(64), |rng| {
+        let m = rng.below(96) + 1;
+        let k = rng.below(96) + 1;
+        let n = rng.below(48) + 1;
+        let threads = rng.below(8) + 1;
+        let a = TensorI8::rand_sparse(&[m, k], 0.35, rng);
+        let w = TensorI8::rand(&[k, n], rng);
+        assert_eq!(
+            gemm::tiled::dense_i8(&a, &w, Parallelism::threads(threads)).data(),
+            gemm::dense_i8(&a, &w).data(),
+            "m={m} k={k} n={n} threads={threads}"
+        );
+    });
+}
+
+#[test]
+fn tiled_dbb_bit_exact_across_thread_counts() {
+    check(Config::default().cases(64), |rng| {
+        let m = rng.below(64) + 1;
+        let k = rng.below(96) + 1;
+        let n = rng.below(32) + 1;
+        let bz = [4usize, 8, 16][rng.below(3)];
+        let nnz = rng.below(bz) + 1;
+        let threads = rng.below(8) + 1;
+        let a = TensorI8::rand_sparse(&[m, k], 0.5, rng);
+        let wd = prune_i8(&TensorI8::rand(&[k, n], rng), bz, nnz);
+        let w = DbbMatrix::compress(&wd, bz).unwrap();
+        assert_eq!(
+            gemm::tiled::dbb_i8(&a, &w, Parallelism::threads(threads)).data(),
+            gemm::dbb_i8(&a, &w).data(),
+            "m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads}"
+        );
+    });
+}
+
+#[test]
+fn m_smaller_than_thread_count() {
+    // every M in 1..8 against an 8-thread pool — the partition degenerates
+    // to one row per worker with idle workers left over
+    let mut rng = Rng::new(11);
+    for m in 1..8usize {
+        let a = TensorI8::rand(&[m, 40], &mut rng);
+        let w = TensorI8::rand(&[40, 12], &mut rng);
+        assert_eq!(
+            gemm::tiled::dense_i8(&a, &w, Parallelism::threads(8)).data(),
+            gemm::dense_i8(&a, &w).data(),
+            "m={m}"
+        );
+        let wd = prune_i8(&TensorI8::rand(&[40, 12], &mut rng), 8, 3);
+        let wc = DbbMatrix::compress(&wd, 8).unwrap();
+        assert_eq!(
+            gemm::tiled::dbb_i8(&a, &wc, Parallelism::threads(8)).data(),
+            gemm::dbb_i8(&a, &wc).data(),
+            "m={m} (dbb)"
+        );
+    }
+}
+
+#[test]
+fn large_gemm_spot_check_auto_parallelism() {
+    // the bench shape (scaled down) through the default auto pool
+    let mut rng = Rng::new(21);
+    let a = TensorI8::rand_sparse(&[192, 256], 0.5, &mut rng);
+    let wd = prune_i8(&TensorI8::rand(&[256, 96], &mut rng), 8, 3);
+    let w = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+    assert_eq!(
+        gemm::tiled::dense_i8(&a, &wd, Parallelism::auto()).data(),
+        gemm::dense_i8(&a, &wd).data()
+    );
+    assert_eq!(
+        gemm::tiled::dbb_i8(&a, &w, Parallelism::auto()).data(),
+        gemm::dbb_i8(&a, &w).data()
+    );
+}
+
+#[test]
+fn parallel_profile_and_sweep_reproduce_serial_results() {
+    // the wired-through consumers: layer profiling and the design sweep
+    let m = models::convnet5();
+    let serial = profile_model_with(&m, 4, 8, 7, Parallelism::serial());
+    let parallel = profile_model_with(&m, 4, 8, 7, Parallelism::threads(6));
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+        assert_eq!(a.m, b.m);
+    }
+
+    let designs = space::enumerate(space::MACS_4TOPS, Tech::N16);
+    let cycles_serial = space::sweep(&designs, Parallelism::serial(), |d| {
+        network_timing(d, &serial).total.cycles
+    });
+    let cycles_par = space::sweep(&designs, Parallelism::auto(), |d| {
+        network_timing(d, &serial).total.cycles
+    });
+    assert_eq!(cycles_serial, cycles_par);
+
+    let d = ssta::arch::Design::paper_optimal();
+    let t1 = network_timing(&d, &serial);
+    let t8 = network_timing_with(&d, &serial, Parallelism::threads(8));
+    assert_eq!(t1.total, t8.total);
+    assert_eq!(t1.dense_macs, t8.dense_macs);
+}

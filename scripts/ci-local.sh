@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Mirror of .github/workflows/ci.yml — run this before pushing and you have
+# run exactly what the gate runs (same commands, same flags, same order).
+#
+#   scripts/ci-local.sh            # full gate
+#   scripts/ci-local.sh --fast     # skip the release build (biggest step)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+FAST=0
+[[ "${1:-}" == "--fast" ]] && FAST=1
+
+step() {
+  echo
+  echo "==> $*"
+  "$@"
+}
+
+if [[ "$FAST" -eq 0 ]]; then
+  step cargo build --release
+fi
+step cargo test -q
+step cargo fmt --check
+step cargo clippy --all-targets -- -D warnings
+step cargo bench --no-run
+
+echo
+echo "ci-local: all gates green"
