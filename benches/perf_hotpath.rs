@@ -7,6 +7,7 @@
 
 use ssta::arch::{space, Design, Tech};
 use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::gemm::conv::{im2col, ConvShape};
 use ssta::models;
 use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
 use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
@@ -112,6 +113,53 @@ fn main() {
         });
         set.bench("gemm/dbb_i8_512x512x512_tiled_auto", move || {
             bb(ssta::gemm::tiled::dbb_i8(&a2, &w2, Parallelism::auto()));
+        });
+    }
+
+    // ---- fused streaming-IM2COL conv vs materialized IM2COL (§IV-C) ----
+    // ResNet blk1-class 3×3: 56×56×64 → 56×56×64 (M=3136, K=576, N=64).
+    // The materialized entries allocate the full M×K patch matrix per
+    // iteration; the fused entries never do (peak operand O(threads·tile·K),
+    // see the conv/operand_bytes report).
+    {
+        let s = ConvShape { h: 56, w: 56, c: 64, kh: 3, kw: 3, oc: 64, stride: 1, pad: 1 };
+        let mut rng = Rng::new(8);
+        let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.5, &mut rng);
+        let w = TensorI8::rand(&[s.gemm_k(), s.oc], &mut rng);
+        let (x2, w2) = (x.clone(), w.clone());
+        set.bench("conv/3x3_56x56x64_materialized", move || {
+            let a = im2col(&x, &s);
+            bb(ssta::gemm::tiled::dense_i8(&a, &w, Parallelism::auto()));
+        });
+        set.bench("conv/3x3_56x56x64_fused", move || {
+            bb(ssta::gemm::fused::conv2d_i8(&x2, &w2, &s, Parallelism::auto()));
+        });
+
+        let mut rng = Rng::new(9);
+        let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.5, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[s.gemm_k(), s.oc], &mut rng), 8, 3);
+        let wc = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap();
+        let (x2, wc2) = (x.clone(), wc.clone());
+        set.bench("conv/3x3_56x56x64_dbb_materialized", move || {
+            let a = im2col(&x, &s);
+            bb(ssta::gemm::tiled::dbb_i8(&a, &wc, Parallelism::auto()));
+        });
+        set.bench("conv/3x3_56x56x64_dbb_fused", move || {
+            bb(ssta::gemm::fused::conv2d_dbb_i8(&x2, &wc2, &s, Parallelism::auto()));
+        });
+
+        set.report("conv/operand_bytes", move || {
+            let par = Parallelism::auto();
+            let materialized = s.gemm_m() * s.gemm_k();
+            let fused = ssta::gemm::fused::peak_operand_bytes(&s, par);
+            println!(
+                "3x3 56x56x64: materialized IM2COL operand {materialized} B \
+                 vs fused peak {fused} B ({} workers × {} rows × K={}) — {:.0}x smaller",
+                par.get(),
+                ssta::gemm::fused::PATCH_ROWS,
+                s.gemm_k(),
+                materialized as f64 / fused as f64
+            );
         });
     }
 

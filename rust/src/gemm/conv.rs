@@ -1,5 +1,13 @@
 //! Convolution ↔ GEMM lowering (IM2COL) and a direct convolution oracle.
 //!
+//! [`im2col`] here is the **materializing** lowering: it allocates the full
+//! `[M×K]` patch matrix. Since the fused engine landed it serves as the test
+//! oracle's lowering (and as the operand-footprint baseline the benches
+//! compare against); production conv call sites run on
+//! [`crate::gemm::fused`], which generates the same rows on the fly and
+//! never stores the expansion — the software mirror of the paper's §IV-C
+//! hardware IM2COL unit.
+//!
 //! Layout conventions (match `python/compile/kernels/ref.py`):
 //! * activations NHWC (`[n, h, w, c]`), INT8;
 //! * weights HWCO (`[kh, kw, c, oc]`), INT8 — so the flattened GEMM `K`
@@ -135,6 +143,16 @@ pub fn conv2d_direct(x: &TensorI8, w: &TensorI8, s: &ConvShape) -> TensorI32 {
 /// the feature map expands into — the bandwidth the hardware IM2COL unit
 /// saves (≈`kh·kw/stride²`; exactly 9/1 = up to 3× *average read* reduction
 /// for 3×3 s=1 per paper Fig. 8 which streams 2 of 6 buffered rows).
+///
+/// This counts the duplication actually present in the finite operand (edge
+/// and padding effects included), so it upper-bounds the buffered unit's
+/// achievable read magnification:
+/// `im2col_expansion(s).max(1.0) ≥ Im2colUnit::magnification(s)` for every
+/// shape — [`crate::sim::im2col::Im2colUnit::magnification`] clamps against
+/// this value, and the invariant is property-tested in
+/// `rust/tests/fused_conv.rs`. (For subsampling convs with `stride > kh`
+/// the "expansion" is a contraction, `< 1`, while the unit is simply
+/// bypassed at 1×, hence the clamp at 1.)
 pub fn im2col_expansion(s: &ConvShape) -> f64 {
     let gemm_bytes = (s.gemm_m() * s.gemm_k()) as f64;
     let fmap_bytes = (s.h * s.w * s.c) as f64;

@@ -1,0 +1,463 @@
+//! Fused streaming-IM2COL convolution engine — paper §IV-C (Fig. 8) in
+//! software.
+//!
+//! The paper's hardware IM2COL unit moves the patch expansion *into the
+//! datapath*: the SRAM holds only the raw NHWC feature map and a small row
+//! buffer regenerates the duplicated IM2COL pixels just before the MACs, so
+//! the ~`kh·kw/stride²` operand blowup never exists as a stored matrix.
+//! This module is the same design decision applied to the functional stack:
+//! instead of materializing the `[M×K]` IM2COL operand
+//! ([`crate::gemm::conv::im2col`] — now the test oracle's lowering), each
+//! worker of the tiled pool generates a small chunk of patch rows on the fly
+//! from the feature map and streams it straight into the shared inner
+//! kernels (`dense_rows_i8` / `dbb_rows_i8`, the same row kernels behind
+//! [`crate::gemm::dense_i8`] and [`crate::gemm::dbb_i8`]), accumulating its
+//! disjoint output tile in INT32.
+//!
+//! Peak extra memory is `O(threads · PATCH_ROWS · K)` — the software
+//! analogue of the unit's 6×4-pixel buffer registers
+//! ([`crate::sim::im2col::Im2colUnit`], whose functional row-generation path
+//! is this module's [`patch_row_into`]) — versus `O(M·K)` for the
+//! materializing path. Batch folds into `M` exactly like the coordinator
+//! folds it: row `r` of the virtual operand is output pixel
+//! `(r / ow) % oh, r % ow` of image `r / (oh·ow)`.
+//!
+//! Results are bit-exact with [`crate::gemm::conv::conv2d_direct`] (INT8 is
+//! order-independent) and, for the f32 training variant, bit-exact with
+//! `im2col_f32` + `matmul` (the per-row accumulation order is preserved).
+//! Property-tested here and in `rust/tests/fused_conv.rs`.
+
+pub use crate::util::par::Parallelism;
+
+use crate::dbb::DbbMatrix;
+use crate::gemm::conv::ConvShape;
+use crate::tensor::{Tensor, TensorF32, TensorI32, TensorI8};
+
+/// Patch rows generated per inner-kernel call — the software row buffer.
+/// Small enough to stay L1-resident next to the weight stream, large enough
+/// to amortize the generation loop.
+pub const PATCH_ROWS: usize = 8;
+
+/// Write the IM2COL operand row of output pixel `(oy, ox)` (one image,
+/// layout `[h, w, c]`, channel-innermost K) into `row`
+/// (length [`ConvShape::gemm_k`]). Out-of-bounds taps stay zero (padding).
+///
+/// This is the row generator shared by the fused engine and the hardware
+/// [`crate::sim::im2col::Im2colUnit`] functional path — the two are
+/// cross-tested against [`crate::gemm::conv::im2col`] in
+/// `rust/tests/fused_conv.rs`.
+pub fn patch_row_into<T: Copy + Default>(
+    xd: &[T],
+    s: &ConvShape,
+    oy: usize,
+    ox: usize,
+    row: &mut [T],
+) {
+    debug_assert_eq!(xd.len(), s.h * s.w * s.c);
+    debug_assert_eq!(row.len(), s.gemm_k());
+    row.fill(T::default());
+    let (h, w, c) = (s.h, s.w, s.c);
+    for ky in 0..s.kh {
+        let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+        if iy < 0 || iy >= h as isize {
+            continue;
+        }
+        for kx in 0..s.kw {
+            let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+            if ix < 0 || ix >= w as isize {
+                continue;
+            }
+            let src = (iy as usize * w + ix as usize) * c;
+            let dst = (ky * s.kw + kx) * c;
+            row[dst..dst + c].copy_from_slice(&xd[src..src + c]);
+        }
+    }
+}
+
+/// Peak operand bytes the fused engine holds at once (all workers' row
+/// buffers, with the same worker/row clamps the engine applies) — compare
+/// with the `gemm_m() · gemm_k()` bytes the materializing path allocates.
+/// This is the §IV-C memory claim, measured (batch-1 view).
+pub fn peak_operand_bytes(s: &ConvShape, par: Parallelism) -> usize {
+    let m = s.gemm_m().max(1);
+    let workers = par.get().clamp(1, m);
+    let rows_per_tile = m.div_ceil(workers);
+    workers * PATCH_ROWS.min(rows_per_tile) * s.gemm_k()
+}
+
+/// Batch size of an activation tensor: `[h, w, c]` (one image) or
+/// `[b, h, w, c]` (batch folded into GEMM M). Panics on a shape mismatch.
+fn batch_of<T: Copy + Default>(x: &Tensor<T>, s: &ConvShape) -> usize {
+    match x.shape() {
+        &[h, w, c] => {
+            assert_eq!([h, w, c], [s.h, s.w, s.c], "conv input shape");
+            1
+        }
+        &[b, h, w, c] => {
+            assert_eq!([h, w, c], [s.h, s.w, s.c], "conv input shape");
+            b
+        }
+        other => panic!("conv input must be [h,w,c] or [b,h,w,c], got {other:?}"),
+    }
+}
+
+/// Weights may come as HWCO `[kh, kw, c, oc]` (the direct-conv layout) or
+/// already flattened to the GEMM right operand `[kh·kw·c, oc]` — identical
+/// bytes either way (see [`crate::gemm::conv::weights_to_gemm`]).
+fn check_weights<T: Copy + Default>(w: &Tensor<T>, s: &ConvShape) {
+    let ok = w.shape() == [s.kh, s.kw, s.c, s.oc] || w.shape() == [s.gemm_k(), s.oc];
+    assert!(
+        ok,
+        "conv weights must be [kh,kw,c,oc] or [K,oc] for {s:?}, got {:?}",
+        w.shape()
+    );
+}
+
+/// Generate-and-accumulate worker: compute output rows
+/// `row0..row0 + out.len()/n` of the virtual `[M×N]` result, generating
+/// IM2COL rows in `PATCH_ROWS` chunks and handing each chunk (patch slice +
+/// matching output window) to the inner row `kernel` — the dense or
+/// decoded-CSC GEMM row kernel.
+fn conv_rows<K: Fn(&[i8], &mut [i32])>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    kernel: &K,
+) {
+    let (oh, ow) = (s.oh(), s.ow());
+    let img = s.h * s.w * s.c;
+    let rows = out.len() / n;
+    let mut patch = vec![0i8; PATCH_ROWS * k];
+    let mut done = 0usize;
+    while done < rows {
+        let take = PATCH_ROWS.min(rows - done);
+        for r in 0..take {
+            let gr = row0 + done + r;
+            let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+            patch_row_into(
+                &xd[bi * img..(bi + 1) * img],
+                s,
+                pix / ow,
+                pix % ow,
+                &mut patch[r * k..(r + 1) * k],
+            );
+        }
+        kernel(&patch[..take * k], &mut out[done * n..(done + take) * n]);
+        done += take;
+    }
+}
+
+/// Row-tile `out` across the worker pool (same partition as
+/// [`crate::gemm::tiled`]) and run [`conv_rows`] on each tile. Serial
+/// parallelism runs inline with no thread spawned.
+fn conv_tiled<K: Fn(&[i8], &mut [i32]) + Sync>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    par: Parallelism,
+    kernel: K,
+) {
+    let threads = par.get().min(m);
+    if threads <= 1 {
+        conv_rows(xd, s, out, 0, k, n, &kernel);
+        return;
+    }
+    let rows_per_tile = m.div_ceil(threads);
+    let kref = &kernel;
+    std::thread::scope(|sc| {
+        for (ti, tile) in out.chunks_mut(rows_per_tile * n).enumerate() {
+            let row0 = ti * rows_per_tile;
+            sc.spawn(move || conv_rows(xd, s, tile, row0, k, n, kref));
+        }
+    });
+}
+
+/// Output tensor for a conv: batched input keeps the batch axis.
+fn conv_output(batched: bool, batch: usize, s: &ConvShape) -> TensorI32 {
+    if batched {
+        TensorI32::zeros(&[batch, s.oh(), s.ow(), s.oc])
+    } else {
+        TensorI32::zeros(&[s.oh(), s.ow(), s.oc])
+    }
+}
+
+/// Fused streaming convolution, dense INT8 weights: output
+/// `[([b,] oh, ow, oc)]` INT32, bit-exact with
+/// [`crate::gemm::conv::conv2d_direct`] per image, computed without ever
+/// materializing the `[M×K]` IM2COL operand. `x` is `[h, w, c]` or
+/// `[b, h, w, c]` NHWC; `w` is `[kh, kw, c, oc]` or `[K, oc]`.
+pub fn conv2d_i8(x: &TensorI8, w: &TensorI8, s: &ConvShape, par: Parallelism) -> TensorI32 {
+    let batch = batch_of(x, s);
+    check_weights(w, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output(x.shape().len() == 4, batch, s);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let (xd, wd) = (x.data(), w.data());
+    conv_tiled(xd, s, c.data_mut(), m, k, n, par, |patch, out| {
+        crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
+    });
+    c
+}
+
+/// Fused streaming convolution over DBB-compressed weights (`w` encodes the
+/// `[K, oc]` GEMM operand): the CSC decode happens once, every worker reads
+/// it and generates its own patch rows. Bit-exact with
+/// [`conv2d_i8`] on `w.decompress()`.
+pub fn conv2d_dbb_i8(x: &TensorI8, w: &DbbMatrix, s: &ConvShape, par: Parallelism) -> TensorI32 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output(x.shape().len() == 4, batch, s);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let (col_ptr, entries) = crate::gemm::dbb_decode_csc(w);
+    let xd = x.data();
+    conv_tiled(xd, s, c.data_mut(), m, k, n, par, |patch, out| {
+        crate::gemm::dbb_rows_i8(patch, &col_ptr, &entries, out, 0, k, n)
+    });
+    c
+}
+
+/// Fused f32 convolution forward for the training substrate: returns the
+/// GEMM-layout result `[b·oh·ow, oc]`, **bit-exact** with
+/// `matmul(im2col_f32(x), w)` — each generated row runs the identical
+/// zero-skipping `ikj` inner loop, so the f32 accumulation order is
+/// unchanged — while the `[M×K]` patch matrix is never stored. `w` is the
+/// train-layout `[K, oc]` weight.
+pub fn conv2d_f32(x: &TensorF32, w: &TensorF32, s: &ConvShape) -> TensorF32 {
+    let batch = batch_of(x, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    assert_eq!(w.shape(), [k, n], "train conv weight is [K, oc]");
+    let (oh, ow) = (s.oh(), s.ow());
+    let m = batch * oh * ow;
+    let mut c = vec![0f32; m * n];
+    let (xd, wd) = (x.data(), w.data());
+    let img = s.h * s.w * s.c;
+    let mut row = vec![0f32; k];
+    for gr in 0..m {
+        let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+        patch_row_into(&xd[bi * img..(bi + 1) * img], s, pix / ow, pix % ow, &mut row);
+        let crow = &mut c[gr * n..(gr + 1) * n];
+        for (kk, &av) in row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &wd[kk * n..(kk + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    TensorF32::from_vec(&[m, n], c)
+}
+
+/// Streaming weight gradient for the f32 train path:
+/// `dW[K, oc] = Σ_pixels patch_row ⊗ dy_row`, **bit-exact** with
+/// `matmul_tn(im2col_f32(x), dy)` (same pixel-major accumulation order),
+/// regenerating each patch row instead of reading a stored `[M×K]` matrix —
+/// which is why [`crate::train::layers::Conv2d`] only has to retain the raw
+/// input between forward and backward.
+pub fn conv2d_dw_f32(x: &TensorF32, dy: &TensorF32, s: &ConvShape) -> TensorF32 {
+    let batch = batch_of(x, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let (oh, ow) = (s.oh(), s.ow());
+    let m = batch * oh * ow;
+    assert_eq!(dy.shape(), [m, n], "dy is [b·oh·ow, oc]");
+    let mut c = vec![0f32; k * n];
+    let (xd, dyd) = (x.data(), dy.data());
+    let img = s.h * s.w * s.c;
+    let mut row = vec![0f32; k];
+    for gr in 0..m {
+        let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+        patch_row_into(&xd[bi * img..(bi + 1) * img], s, pix / ow, pix % ow, &mut row);
+        let brow = &dyd[gr * n..(gr + 1) * n];
+        for (i, &av) in row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    TensorF32::from_vec(&[k, n], c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::prune::prune_i8;
+    use crate::gemm;
+    use crate::gemm::conv::{conv2d_direct, im2col, weights_to_gemm};
+    use crate::train::linalg::{im2col_f32, matmul, matmul_tn, Conv2dShape};
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    fn rand_shape(rng: &mut Rng) -> ConvShape {
+        let kh = [1usize, 3, 5][rng.below(3)];
+        let stride = rng.below(2) + 1;
+        let pad = rng.below(kh.div_ceil(2));
+        ConvShape {
+            h: kh + rng.below(6) + stride,
+            w: kh + rng.below(6) + stride,
+            c: rng.below(8) + 1,
+            kh,
+            kw: kh,
+            oc: rng.below(8) + 1,
+            stride,
+            pad,
+        }
+    }
+
+    #[test]
+    fn fused_matches_direct_prop() {
+        check(Config::default().cases(64), |rng| {
+            let s = rand_shape(rng);
+            let threads = rng.below(8) + 1;
+            let x = TensorI8::rand(&[s.h, s.w, s.c], rng);
+            let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+            let direct = conv2d_direct(&x, &w, &s);
+            let fused = conv2d_i8(&x, &w, &s, Parallelism::threads(threads));
+            assert_eq!(fused.shape(), direct.shape());
+            assert_eq!(fused.data(), direct.data(), "shape={s:?} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn batch_folds_into_m() {
+        // [b,h,w,c] input == per-image direct conv, concatenated
+        let mut rng = Rng::new(5);
+        let s = ConvShape { h: 6, w: 5, c: 3, kh: 3, kw: 3, oc: 4, stride: 1, pad: 1 };
+        let b = 3usize;
+        let x = TensorI8::rand(&[b, s.h, s.w, s.c], &mut rng);
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], &mut rng);
+        let fused = conv2d_i8(&x, &w, &s, Parallelism::threads(4));
+        assert_eq!(fused.shape(), &[b, s.oh(), s.ow(), s.oc]);
+        let img = s.h * s.w * s.c;
+        let out = s.oh() * s.ow() * s.oc;
+        for bi in 0..b {
+            let xi = TensorI8::from_vec(
+                &[s.h, s.w, s.c],
+                x.data()[bi * img..(bi + 1) * img].to_vec(),
+            );
+            let di = conv2d_direct(&xi, &w, &s);
+            assert_eq!(&fused.data()[bi * out..(bi + 1) * out], di.data(), "image {bi}");
+        }
+    }
+
+    #[test]
+    fn fused_dbb_matches_materialized_dbb_prop() {
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let bz = 8usize;
+            let nnz = rng.below(bz) + 1; // DBB bounds 1..=BZ
+            let threads = rng.below(8) + 1;
+            let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.3, rng);
+            let wd = prune_i8(&TensorI8::rand(&[s.gemm_k(), s.oc], rng), bz, nnz);
+            let enc = crate::dbb::DbbMatrix::compress(&wd, bz).unwrap();
+            let a = im2col(&x, &s);
+            let want = gemm::dbb_i8(&a, &enc);
+            let got = conv2d_dbb_i8(&x, &enc, &s, Parallelism::threads(threads));
+            assert_eq!(got.data(), want.data(), "shape={s:?} nnz={nnz} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn serial_and_parallel_identical() {
+        let mut rng = Rng::new(9);
+        let s = ConvShape { h: 9, w: 9, c: 4, kh: 3, kw: 3, oc: 5, stride: 2, pad: 1 };
+        let x = TensorI8::rand(&[s.h, s.w, s.c], &mut rng);
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], &mut rng);
+        assert_eq!(
+            conv2d_i8(&x, &w, &s, Parallelism::serial()).data(),
+            conv2d_i8(&x, &w, &s, Parallelism::threads(7)).data()
+        );
+    }
+
+    #[test]
+    fn gemm_layout_weights_accepted() {
+        let mut rng = Rng::new(10);
+        let s = ConvShape { h: 5, w: 5, c: 2, kh: 3, kw: 3, oc: 3, stride: 1, pad: 0 };
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], &mut rng);
+        let x = TensorI8::rand(&[s.h, s.w, s.c], &mut rng);
+        let wg = weights_to_gemm(&w, &s);
+        assert_eq!(
+            conv2d_i8(&x, &w, &s, Parallelism::serial()).data(),
+            conv2d_i8(&x, &wg, &s, Parallelism::serial()).data()
+        );
+    }
+
+    #[test]
+    fn f32_forward_bit_exact_with_materialized_path() {
+        check(Config::default().cases(32), |rng| {
+            let s = rand_shape(rng);
+            let b = rng.below(3) + 1;
+            let mut frng = Rng::new(rng.next_u64());
+            let x = TensorF32::randn(&[b, s.h, s.w, s.c], 1.0, &mut frng);
+            let w = TensorF32::randn(&[s.gemm_k(), s.oc], 0.5, &mut frng);
+            let cs = Conv2dShape {
+                h: s.h,
+                w: s.w,
+                c: s.c,
+                k: s.kh,
+                oc: s.oc,
+                stride: s.stride,
+                pad: s.pad,
+            };
+            let want = matmul(&im2col_f32(&x, &cs), &w);
+            let got = conv2d_f32(&x, &w, &s);
+            assert_eq!(got.shape(), want.shape());
+            for (g, t) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), t.to_bits(), "shape={s:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn f32_weight_grad_bit_exact_with_materialized_path() {
+        check(Config::default().cases(32), |rng| {
+            let s = rand_shape(rng);
+            let b = rng.below(2) + 1;
+            let mut frng = Rng::new(rng.next_u64());
+            let x = TensorF32::randn(&[b, s.h, s.w, s.c], 1.0, &mut frng);
+            let m = b * s.gemm_m();
+            let dy = TensorF32::randn(&[m, s.oc], 1.0, &mut frng);
+            let cs = Conv2dShape {
+                h: s.h,
+                w: s.w,
+                c: s.c,
+                k: s.kh,
+                oc: s.oc,
+                stride: s.stride,
+                pad: s.pad,
+            };
+            let want = matmul_tn(&im2col_f32(&x, &cs), &dy);
+            let got = conv2d_dw_f32(&x, &dy, &s);
+            for (g, t) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), t.to_bits(), "shape={s:?}");
+            }
+        });
+    }
+
+    #[test]
+    fn peak_operand_is_tile_not_matrix() {
+        let s = ConvShape { h: 56, w: 56, c: 64, kh: 3, kw: 3, oc: 64, stride: 1, pad: 1 };
+        let fused = peak_operand_bytes(&s, Parallelism::threads(8));
+        let materialized = s.gemm_m() * s.gemm_k();
+        assert_eq!(fused, 8 * PATCH_ROWS * s.gemm_k());
+        assert!(fused * 10 < materialized, "{fused} vs {materialized}");
+    }
+}

@@ -18,8 +18,21 @@
 //! [`crate::util::Parallelism`]: `Parallelism::auto()` (the default) uses
 //! `std::thread::available_parallelism()`, `Parallelism::serial()` falls
 //! back to the exact single-threaded path with no threads spawned.
+//!
+//! ## Convolution: fused vs materialized
+//!
+//! Convolutions have two lowerings onto these kernels. The *materializing*
+//! path ([`conv::im2col`] + a GEMM) builds the full `[M×K]` patch matrix
+//! first — it is the test oracle's lowering, kept because its output is the
+//! literal GEMM operand the hardware models reason about. The *production*
+//! path is [`fused`]: [`fused::conv2d_i8`] / [`fused::conv2d_dbb_i8`]
+//! generate patch rows on the fly inside the tiled worker pool (paper
+//! §IV-C's hardware IM2COL unit, in software), never allocating the `M×K`
+//! operand — peak extra memory is `O(threads · PATCH_ROWS · K)` — and are
+//! bit-exact with [`conv::conv2d_direct`] and with the materializing path.
 
 pub mod conv;
+pub mod fused;
 pub mod tiled;
 
 use crate::dbb::DbbMatrix;

@@ -37,11 +37,16 @@ pub struct Layer {
 impl Layer {
     /// GEMM dimensions `(M, K, N)` for this layer at batch 1 (conv M is
     /// output pixels).
+    ///
+    /// Depthwise convs reduce each output channel over the `kh·kw` window of
+    /// a *single* input channel, so their GEMM-equivalent K is `kh·kw` — not
+    /// `kh·kw·c`, which would overcount the sampled profile and
+    /// `WeightStats` by a factor of `c`. With this accounting
+    /// `M·K·N == macs()` and `K·N == weights()` hold for every layer kind.
     pub fn gemm_dims(&self) -> (usize, usize, usize) {
         match self.kind {
-            LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => {
-                (s.gemm_m(), s.gemm_k(), s.gemm_n())
-            }
+            LayerKind::Conv(s) => (s.gemm_m(), s.gemm_k(), s.gemm_n()),
+            LayerKind::DepthwiseConv(s) => (s.gemm_m(), s.kh * s.kw, s.oc),
             LayerKind::Fc(i, o) => (1, i, o),
         }
     }
@@ -372,14 +377,31 @@ mod tests {
 
     #[test]
     fn gemm_dims_consistent_with_macs() {
+        // every layer kind, depthwise included (regression: DepthwiseConv
+        // used to report K = kh·kw·c, overcounting by a factor of c)
         for m in all_models() {
             for l in &m.layers {
-                if matches!(l.kind, LayerKind::Conv(_) | LayerKind::Fc(..)) {
-                    let (mm, k, n) = l.gemm_dims();
-                    assert_eq!((mm * k * n) as u64, l.macs(), "{}/{}", m.name, l.name);
-                }
+                let (mm, k, n) = l.gemm_dims();
+                assert_eq!((mm * k * n) as u64, l.macs(), "{}/{}", m.name, l.name);
             }
         }
+    }
+
+    #[test]
+    fn depthwise_gemm_dims_match_weights_and_macs() {
+        let m = mobilenet_v1();
+        let dw = m
+            .layers
+            .iter()
+            .find(|l| matches!(l.kind, LayerKind::DepthwiseConv(_)))
+            .unwrap();
+        let s = dw.conv_shape().unwrap();
+        let (mm, k, n) = dw.gemm_dims();
+        assert_eq!(k, s.kh * s.kw, "depthwise K is one window, not kh·kw·c");
+        assert_eq!(n, s.oc);
+        assert_eq!(mm, s.oh() * s.ow());
+        assert_eq!(k * n, dw.weights(), "{}", dw.name);
+        assert_eq!((mm * k * n) as u64, dw.macs(), "{}", dw.name);
     }
 
     #[test]

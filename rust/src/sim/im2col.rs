@@ -11,8 +11,14 @@
 //! This model derives the achievable magnification for any conv shape from
 //! the buffer geometry, and also exposes a functional row-generation path
 //! used in tests to prove the buffered outputs equal the software IM2COL.
+//! That path is the *same generator* the fused software engine runs on
+//! ([`crate::gemm::fused::patch_row_into`]); the two formulas that quantify
+//! the expansion — [`crate::gemm::conv::im2col_expansion`] (total operand
+//! blowup of the materializing lowering) and [`Im2colUnit::magnification`]
+//! (the fraction of that blowup the row buffer regenerates) — are
+//! cross-tested in `rust/tests/fused_conv.rs`.
 
-use crate::gemm::conv::ConvShape;
+use crate::gemm::conv::{im2col_expansion, ConvShape};
 
 /// Buffer geometry of the hardware unit.
 #[derive(Debug, Clone, Copy)]
@@ -44,6 +50,14 @@ impl Im2colUnit {
     /// reuse within a row. The paper quotes the *net* effect for 3×3 s=1 as
     /// 3× — vertical reuse only (horizontal duplication is regenerated from
     /// the row buffer as part of the same read).
+    ///
+    /// The unit can never save more traffic than the duplication actually
+    /// present in the finite operand, so the result is additionally capped
+    /// by [`im2col_expansion`] (clamped at 1 — subsampling convs with
+    /// `stride > kh` have expansion < 1 and simply bypass the unit). This
+    /// keeps `expansion.max(1) ≥ magnification` an invariant for *every*
+    /// shape, including tiny edge-dominated maps where the interior formula
+    /// would overestimate.
     pub fn magnification(&self, s: &ConvShape) -> f64 {
         if s.kh <= 1 || s.stride >= s.kh {
             return 1.0; // 1×1 kernels / stride ≥ kernel: no duplication
@@ -55,7 +69,7 @@ impl Im2colUnit {
         // output rows per refill
         let vertical =
             (s.kh as f64 / s.stride as f64).min((self.buf_rows - s.kh + 1) as f64);
-        vertical.max(1.0)
+        vertical.max(1.0).min(im2col_expansion(s).max(1.0))
     }
 
     /// Cycles per refill burst and bytes per refill, for the bandwidth
@@ -69,6 +83,10 @@ impl Im2colUnit {
     /// pixel from a buffered window — proves the buffer contents suffice
     /// (no SRAM re-read) for all `kh·kw` taps of outputs inside the tile.
     /// Returns the flattened `[kh·kw·c]` operand row.
+    ///
+    /// Delegates to the shared row generator
+    /// [`crate::gemm::fused::patch_row_into`] — the functional unit and the
+    /// fused software engine are one code path by construction.
     pub fn generate_row(
         &self,
         x: &crate::tensor::TensorI8,
@@ -76,20 +94,8 @@ impl Im2colUnit {
         oy: usize,
         ox: usize,
     ) -> Vec<i8> {
-        // identical by construction to software im2col for this pixel
         let mut row = vec![0i8; s.gemm_k()];
-        for ky in 0..s.kh {
-            for kx in 0..s.kw {
-                let iy = (oy * s.stride + ky) as isize - s.pad as isize;
-                let ix = (ox * s.stride + kx) as isize - s.pad as isize;
-                if iy < 0 || ix < 0 || iy >= s.h as isize || ix >= s.w as isize {
-                    continue;
-                }
-                for cc in 0..s.c {
-                    row[(ky * s.kw + kx) * s.c + cc] = x.at(&[iy as usize, ix as usize, cc]);
-                }
-            }
-        }
+        crate::gemm::fused::patch_row_into(x.data(), s, oy, ox, &mut row);
         row
     }
 }
@@ -138,6 +144,17 @@ mod tests {
         let u = Im2colUnit::default();
         let m = u.magnification(&shape(3, 2));
         assert!((m - 1.5).abs() < 1e-12, "m={m}");
+    }
+
+    #[test]
+    fn tiny_map_capped_by_actual_expansion() {
+        // 5×5 input, 5×5 kernel, no pad: a single output pixel — the operand
+        // has no duplication at all (expansion exactly 1), so the buffer's
+        // nominal 2× vertical reuse cannot materialize.
+        let u = Im2colUnit::default();
+        let s = ConvShape { h: 5, w: 5, c: 3, kh: 5, kw: 5, oc: 2, stride: 1, pad: 0 };
+        assert!((im2col_expansion(&s) - 1.0).abs() < 1e-12);
+        assert_eq!(u.magnification(&s), 1.0);
     }
 
     #[test]

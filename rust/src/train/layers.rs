@@ -1,15 +1,17 @@
 //! Trainable layers with forward/backward passes.
 //!
 //! The layer set is exactly what the paper's five benchmark CNNs need:
-//! conv (via im2col + GEMM — the same lowering the accelerator uses),
-//! fully-connected, ReLU, 2×2 max-pool and flatten. Weights live in GEMM
-//! layout (`[K, N]`, K = kh·kw·cin channel-fastest) so the DBB pruning
-//! masks apply to the same blocks the hardware sees.
+//! conv (streaming IM2COL fused into the GEMM — the same §IV-C design the
+//! accelerator uses in hardware), fully-connected, ReLU, 2×2 max-pool and
+//! flatten. Weights live in GEMM layout (`[K, N]`, K = kh·kw·cin
+//! channel-fastest) so the DBB pruning masks apply to the same blocks the
+//! hardware sees.
 
+use crate::gemm::fused;
 use crate::tensor::TensorF32;
 use crate::util::Rng;
 
-use super::linalg::{col2im_f32, im2col_f32, matmul, matmul_tn, Conv2dShape};
+use super::linalg::{col2im_f32, matmul, Conv2dShape};
 
 /// A trainable layer.
 pub trait Layer {
@@ -30,8 +32,14 @@ pub trait Layer {
     fn name(&self) -> &str;
 }
 
-/// Convolution via im2col + GEMM. Input `[B, H, W, C]`, output
-/// `[B, OH, OW, OC]`. Weight `[K, OC]` with `K = k·k·c` (GEMM layout).
+/// Convolution via the fused streaming-IM2COL GEMM
+/// ([`crate::gemm::fused::conv2d_f32`]): the `[M×K]` patch matrix is never
+/// materialized — forward generates rows on the fly, and backward retains
+/// only the raw input (`O(B·H·W·C)`) and regenerates patches for the
+/// streaming weight-gradient ([`crate::gemm::fused::conv2d_dw_f32`]).
+/// Input `[B, H, W, C]`, output `[B, OH, OW, OC]`. Weight `[K, OC]` with
+/// `K = k·k·c` (GEMM layout). Bit-exact with the materializing
+/// `im2col_f32` + `matmul` lowering, which survives as the test oracle.
 pub struct Conv2d {
     /// Geometry.
     pub shape: Conv2dShape,
@@ -43,7 +51,7 @@ pub struct Conv2d {
     db: TensorF32,
     mw: TensorF32,
     mb: TensorF32,
-    cols: Option<TensorF32>,
+    x: Option<TensorF32>,
     batch: usize,
     label: String,
 }
@@ -61,7 +69,7 @@ impl Conv2d {
             db: TensorF32::zeros(&[shape.oc]),
             mw: TensorF32::zeros(&[k, shape.oc]),
             mb: TensorF32::zeros(&[shape.oc]),
-            cols: None,
+            x: None,
             batch: 0,
             label: label.to_string(),
         }
@@ -73,8 +81,7 @@ impl Layer for Conv2d {
         let b = x.shape()[0];
         self.batch = b;
         let s = self.shape;
-        let cols = im2col_f32(x, &s);
-        let mut y = matmul(&cols, &self.w);
+        let mut y = fused::conv2d_f32(x, &self.w, &s.as_conv());
         let oc = s.oc;
         for row in y.data_mut().chunks_mut(oc) {
             for (v, bias) in row.iter_mut().zip(self.b.data()) {
@@ -82,7 +89,7 @@ impl Layer for Conv2d {
             }
         }
         if train {
-            self.cols = Some(cols);
+            self.x = Some(x.clone());
         }
         y.reshape(&[b, s.oh(), s.ow(), oc])
     }
@@ -91,9 +98,9 @@ impl Layer for Conv2d {
         let s = self.shape;
         let m = self.batch * s.oh() * s.ow();
         let dy2 = dy.reshape(&[m, s.oc]);
-        let cols = self.cols.take().expect("forward(train=true) first");
-        // dW = colsᵀ · dy
-        self.dw = matmul_tn(&cols, &dy2);
+        let x = self.x.take().expect("forward(train=true) first");
+        // dW = colsᵀ · dy, patches regenerated on the fly
+        self.dw = fused::conv2d_dw_f32(&x, &dy2, &s.as_conv());
         // db = Σ rows
         let mut db = vec![0f32; s.oc];
         for row in dy2.data().chunks(s.oc) {
@@ -102,7 +109,8 @@ impl Layer for Conv2d {
             }
         }
         self.db = TensorF32::from_vec(&[s.oc], db);
-        // dX = col2im(dy · Wᵀ)
+        // dX = col2im(dy · Wᵀ) — the adjoint stays materialized: its operand
+        // is dy·Wᵀ (gradients, not duplicated activations)
         let wt = self.w.transpose2d(); // [N, K]
         let dcols = matmul(&dy2, &wt);
         col2im_f32(&dcols, &s, self.batch)
@@ -372,6 +380,41 @@ mod tests {
                 "elem {i}: fd={fd} analytic={an}"
             );
         }
+    }
+
+    #[test]
+    fn conv_forward_bit_exact_with_materialized_oracle() {
+        // the fused layer must reproduce the old im2col+matmul lowering to
+        // the last bit (same per-row f32 accumulation order)
+        use super::super::linalg::{im2col_f32, matmul};
+        use crate::util::prop::{check, Config};
+        check(Config::default().cases(24), |rng| {
+            let k = [1usize, 3, 5][rng.below(3)];
+            let s = Conv2dShape {
+                h: k + rng.below(5) + 1,
+                w: k + rng.below(5) + 1,
+                c: rng.below(4) + 1,
+                k,
+                oc: rng.below(4) + 1,
+                stride: rng.below(2) + 1,
+                pad: rng.below(k.div_ceil(2)),
+            };
+            let b = rng.below(3) + 1;
+            let mut frng = Rng::new(rng.next_u64());
+            let mut conv = Conv2d::new("c", s, &mut frng);
+            let x = TensorF32::randn(&[b, s.h, s.w, s.c], 1.0, &mut frng);
+            let got = conv.forward(&x, false);
+            let mut want = matmul(&im2col_f32(&x, &s), &conv.w);
+            for row in want.data_mut().chunks_mut(s.oc) {
+                for (v, bias) in row.iter_mut().zip(conv.b.data()) {
+                    *v += bias;
+                }
+            }
+            assert_eq!(got.shape(), &[b, s.oh(), s.ow(), s.oc]);
+            for (g, t) in got.data().iter().zip(want.data()) {
+                assert_eq!(g.to_bits(), t.to_bits(), "shape={s:?}");
+            }
+        });
     }
 
     #[test]

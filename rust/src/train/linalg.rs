@@ -112,9 +112,29 @@ impl Conv2dShape {
     pub fn gemm_k(&self) -> usize {
         self.k * self.k * self.c
     }
+
+    /// The crate-wide [`crate::gemm::conv::ConvShape`] view of this
+    /// geometry (square kernel) — what the fused streaming engine consumes.
+    pub fn as_conv(&self) -> crate::gemm::conv::ConvShape {
+        crate::gemm::conv::ConvShape {
+            h: self.h,
+            w: self.w,
+            c: self.c,
+            kh: self.k,
+            kw: self.k,
+            oc: self.oc,
+            stride: self.stride,
+            pad: self.pad,
+        }
+    }
 }
 
 /// IM2COL for a batched `[B, H, W, C]` f32 tensor → `[B·OH·OW, K·K·C]`.
+///
+/// Since the fused engine landed this materializing lowering is the *test
+/// oracle* for the train path — [`crate::train::layers::Conv2d`] runs on
+/// [`crate::gemm::fused::conv2d_f32`], which is bit-exact with
+/// `matmul(im2col_f32(x), w)` without ever storing the patch matrix.
 pub fn im2col_f32(x: &TensorF32, s: &Conv2dShape) -> TensorF32 {
     let b = x.shape()[0];
     let (oh, ow, kk) = (s.oh(), s.ow(), s.gemm_k());

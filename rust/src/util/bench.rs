@@ -4,8 +4,15 @@
 //! registers closures, and calls [`BenchSet::run`], which handles CLI filter
 //! arguments (so `cargo bench -- fig9` runs only matching entries), warmup,
 //! adaptive repetition and robust statistics.
+//!
+//! Besides the human-readable lines, [`BenchSet::run`] writes every timed
+//! result to `BENCH_<set>.json` in the working directory (name,
+//! median/mean/stddev in ns, sample counts) so the perf trajectory is
+//! machine-readable — CI uploads the file as an artifact.
 
+use super::json::Json;
 use super::stats;
+use std::collections::BTreeMap;
 use std::hint::black_box;
 use std::time::{Duration, Instant};
 
@@ -27,6 +34,19 @@ pub struct Measurement {
 }
 
 impl Measurement {
+    /// Machine-readable view (ns-denominated; integers exact in f64 far
+    /// beyond any realistic duration).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("median_ns".to_string(), Json::Num(self.median.as_nanos() as f64));
+        m.insert("mean_ns".to_string(), Json::Num(self.mean.as_nanos() as f64));
+        m.insert("stddev_ns".to_string(), Json::Num(self.stddev.as_nanos() as f64));
+        m.insert("samples".to_string(), Json::Num(self.samples as f64));
+        m.insert("iters_per_sample".to_string(), Json::Num(self.iters_per_sample as f64));
+        Json::Obj(m)
+    }
+
     /// criterion-like one-line rendering.
     pub fn render(&self) -> String {
         format!(
@@ -142,7 +162,8 @@ impl BenchSet {
         self
     }
 
-    /// Parse CLI args (`cargo bench -- <filter>`), run matching entries.
+    /// Parse CLI args (`cargo bench -- <filter>`), run matching entries,
+    /// and write the timed results to `BENCH_<set>.json`.
     pub fn run(&mut self) {
         let args: Vec<String> = std::env::args().skip(1).collect();
         // cargo passes --bench; ignore flags, keep free-form filters
@@ -156,6 +177,7 @@ impl BenchSet {
                 f();
             }
         }
+        let mut measured: Vec<Measurement> = Vec::new();
         for (name, f) in self.entries.iter_mut() {
             if matches(name) {
                 let m = time_fn(
@@ -166,6 +188,20 @@ impl BenchSet {
                     f,
                 );
                 println!("{}", m.render());
+                measured.push(m);
+            }
+        }
+        if !measured.is_empty() {
+            let path = format!("BENCH_{}.json", self.name);
+            let mut obj = BTreeMap::new();
+            obj.insert("bench".to_string(), Json::Str(self.name.clone()));
+            obj.insert(
+                "results".to_string(),
+                Json::Arr(measured.iter().map(Measurement::to_json).collect()),
+            );
+            match std::fs::write(&path, format!("{}\n", Json::Obj(obj))) {
+                Ok(()) => println!("(machine-readable results → {path})"),
+                Err(e) => eprintln!("(could not write {path}: {e})"),
             }
         }
     }
@@ -190,6 +226,26 @@ mod tests {
         assert_eq!(m.samples, 3);
         assert!(m.iters_per_sample >= 1);
         assert!(m.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn measurement_json_roundtrips() {
+        let m = Measurement {
+            name: "gemm/x".into(),
+            median: Duration::from_micros(12),
+            mean: Duration::from_micros(13),
+            stddev: Duration::from_nanos(500),
+            samples: 10,
+            iters_per_sample: 4,
+        };
+        let j = m.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str(), Some("gemm/x"));
+        assert_eq!(parsed.get("median_ns").unwrap().as_f64(), Some(12_000.0));
+        assert_eq!(parsed.get("mean_ns").unwrap().as_f64(), Some(13_000.0));
+        assert_eq!(parsed.get("stddev_ns").unwrap().as_f64(), Some(500.0));
+        assert_eq!(parsed.get("samples").unwrap().as_usize(), Some(10));
+        assert_eq!(parsed.get("iters_per_sample").unwrap().as_usize(), Some(4));
     }
 
     #[test]

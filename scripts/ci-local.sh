@@ -22,7 +22,10 @@ fi
 step cargo test -q
 step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
+step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step cargo bench --no-run
+step cargo bench --bench perf_hotpath -- gemm/ conv/
+echo "(bench results recorded in BENCH_perf_hotpath.json)"
 
 echo
 echo "ci-local: all gates green"
