@@ -57,6 +57,31 @@ fn main() {
         bb(ssta::sim::accel::profile_model(&m, 3, 8, 42));
     });
 
+    // ---- prepared-model engine: encode once, execute many (§II-A) ----
+    // Amortization triplet on the served convnet5: `prepare` is the
+    // first-call price (synthesize + top-k encode + CSC-pack every layer),
+    // `execute_prepared` is the steady-state price (zero encode/decode,
+    // scratch reused), and `profile_unprepared` is what every call paid
+    // before this engine existed (prepare + execute, per call).
+    {
+        let m = models::convnet5();
+        set.bench("engine/convnet5_prepare_first_call", move || {
+            bb(ssta::engine::PreparedModel::prepare(&m, 3, 8, 42, Parallelism::auto()));
+        });
+
+        let m2 = models::convnet5();
+        let prepared = ssta::engine::PreparedModel::prepare(&m2, 3, 8, 42, Parallelism::auto());
+        let input = prepared.seed_input().clone();
+        set.bench("engine/convnet5_execute_prepared_steady", move || {
+            bb(prepared.execute(&input, Parallelism::auto()));
+        });
+
+        let m3 = models::convnet5();
+        set.bench("engine/convnet5_profile_unprepared", move || {
+            bb(ssta::sim::accel::profile_model(&m3, 3, 8, 42));
+        });
+    }
+
     // ---- detailed engine (ground truth; used at small scale) ----
     {
         let mut rng = Rng::new(1);
@@ -113,6 +138,15 @@ fn main() {
         });
         set.bench("gemm/dbb_i8_512x512x512_tiled_auto", move || {
             bb(ssta::gemm::tiled::dbb_i8(&a2, &w2, Parallelism::auto()));
+        });
+
+        // packed operand: the per-call CSC decode amortized away
+        let mut rng = Rng::new(7);
+        let a3 = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let wd3 = prune_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 3);
+        let packed = DbbMatrix::compress_with_bound(&wd3, 8, 3).unwrap().pack();
+        set.bench("gemm/dbb_i8_512x512x512_packed_auto", move || {
+            bb(ssta::gemm::tiled::dbb_i8_packed(&a3, &packed, Parallelism::auto()));
         });
     }
 

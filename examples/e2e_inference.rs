@@ -17,9 +17,10 @@
 //! make artifacts && cargo run --release --example e2e_inference -- --requests 256
 //! ```
 //!
-//! Before touching the artifacts it also proves the fused streaming-IM2COL
-//! conv engine (paper §IV-C in software) on a ConvNet-5 layer — that part
-//! runs fully offline.
+//! Before touching the artifacts it also proves, fully offline, the fused
+//! streaming-IM2COL conv engine (paper §IV-C in software) on a ConvNet-5
+//! layer and the prepare-once/execute-many engine (`ssta::engine`, paper
+//! §II-A's offline weight encode) on the whole served model.
 
 use std::time::{Duration, Instant};
 
@@ -62,6 +63,28 @@ fn fused_conv_showcase() {
     );
 }
 
+/// Prepare-once/execute-many on the served model (paper §II-A's
+/// offline-encode split, offline-runnable): the first call pays the weight
+/// encode + CSC pack, every execute after that streams packed operands.
+fn prepared_engine_showcase() {
+    let m = ssta::models::convnet5();
+    let par = Parallelism::auto();
+    let t0 = Instant::now();
+    let prepared = ssta::engine::PreparedModel::prepare(&m, 3, 8, 42, par);
+    let t_prep = t0.elapsed();
+    let t1 = Instant::now();
+    let first = prepared.execute(prepared.seed_input(), par);
+    let t_exec = t1.elapsed();
+    let again = prepared.execute(prepared.seed_input(), par);
+    assert_eq!(first.output, again.output, "execute must be pure");
+    println!(
+        "prepared {}: encode+pack once {t_prep:.2?} ({} operand B), \
+         then execute {t_exec:.2?}/call with zero encode work",
+        prepared.model_name(),
+        prepared.operand_bytes(),
+    );
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     let n = args.opt_as::<usize>("requests", 256);
@@ -71,6 +94,8 @@ fn main() -> Result<()> {
 
     // ---- offline: fused streaming conv vs the materializing lowering ----
     fused_conv_showcase();
+    // ---- offline: the prepare-once/execute-many engine ----
+    prepared_engine_showcase();
 
     // ---- golden replay path: direct runtime, batch-1 ----
     let mut rng = Rng::new(7);
@@ -139,6 +164,15 @@ fn main() -> Result<()> {
         n as f64 / wall.as_secs_f64()
     );
     println!("batching: {}", m.summary());
+    println!(
+        "latency percentiles ({} of {} samples held in the reservoir): \
+         p50={}µs p95={}µs p99={}µs",
+        m.latency_us.samples().len(),
+        m.latency_us.seen(),
+        m.latency_pct(50.0),
+        m.latency_pct(95.0),
+        m.latency_pct(99.0),
+    );
 
     // ---- the hardware twin's verdict (the paper's metric) ----
     let f = design.tech.freq_hz();

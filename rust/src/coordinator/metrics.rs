@@ -1,9 +1,71 @@
-//! Coordinator metrics: request/batch counters, latency distribution and
-//! the hardware twin's aggregate (cycles, energy, effective TOPS).
+//! Coordinator metrics: request/batch counters, latency percentiles over a
+//! fixed-size sample reservoir, and the hardware twin's aggregate (cycles,
+//! energy, effective TOPS).
 
 use std::time::Duration;
 
-use crate::util::stats;
+use crate::util::{stats, Rng};
+
+/// Samples held by a [`Reservoir`] — enough for stable p99 estimates while
+/// keeping a long-running coordinator's memory bounded.
+const RESERVOIR_CAP: usize = 1024;
+
+/// Fixed-size uniform sample reservoir (Vitter's Algorithm R with the
+/// in-tree deterministic [`Rng`]): the first `RESERVOIR_CAP` (1024) values
+/// are kept verbatim; afterwards the `i`-th value replaces a random held
+/// sample with probability `cap / i`, so every value seen has equal
+/// probability of being in the sample. Memory stays O(cap) no matter how
+/// many requests a serving process handles.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    samples: Vec<u64>,
+    seen: u64,
+    rng: Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            rng: Rng::new(0x5eed_5a3b),
+        }
+    }
+}
+
+impl Reservoir {
+    /// Offer one value to the reservoir.
+    pub fn push(&mut self, v: u64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.below(self.seen as usize);
+            if j < RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    /// Total values offered (not the held sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Currently held samples.
+    pub fn samples(&self) -> &[u64] {
+        &self.samples
+    }
+
+    /// p-th percentile (0..=100) over the held sample; 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        let v: Vec<f64> = self.samples.iter().map(|&x| x as f64).collect();
+        stats::percentile(&v, p) as u64
+    }
+}
 
 /// Aggregated serving metrics (snapshot-able).
 #[derive(Debug, Clone, Default)]
@@ -14,10 +76,10 @@ pub struct Metrics {
     pub batches: u64,
     /// Rows executed including padding.
     pub padded_rows: u64,
-    /// Per-request end-to-end latency samples (µs).
-    pub latency_us: Vec<u64>,
-    /// Per-batch XLA execute time samples (µs).
-    pub execute_us: Vec<u64>,
+    /// Per-request end-to-end latency reservoir (µs).
+    pub latency_us: Reservoir,
+    /// Per-batch XLA execute time reservoir (µs).
+    pub execute_us: Reservoir,
     /// Simulated accelerator cycles over all batches.
     pub sim_cycles: u64,
     /// Simulated accelerator energy over all batches (mJ).
@@ -60,13 +122,9 @@ impl Metrics {
         self.requests as f64 / total as f64
     }
 
-    /// Latency percentile in µs.
+    /// Latency percentile in µs (over the sample reservoir).
     pub fn latency_pct(&self, p: f64) -> u64 {
-        let v: Vec<f64> = self.latency_us.iter().map(|&x| x as f64).collect();
-        if v.is_empty() {
-            return 0;
-        }
-        stats::percentile(&v, p) as u64
+        self.latency_us.percentile(p)
     }
 
     /// Simulated effective TOPS of the hardware twin at `freq_hz`.
@@ -90,13 +148,14 @@ impl Metrics {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "requests={} batches={} occupancy={:.2} p50={}us p95={}us sim_cycles={} \
-             sim_energy={:.2}mJ",
+            "requests={} batches={} occupancy={:.2} p50={}us p95={}us p99={}us \
+             sim_cycles={} sim_energy={:.2}mJ",
             self.requests,
             self.batches,
             self.occupancy(),
             self.latency_pct(50.0),
             self.latency_pct(95.0),
+            self.latency_pct(99.0),
             self.sim_cycles,
             self.sim_energy_mj,
         )
@@ -134,6 +193,34 @@ mod tests {
         }
         assert!(m.latency_pct(50.0) >= 49 && m.latency_pct(50.0) <= 51);
         assert!(m.latency_pct(95.0) >= 94);
+        assert!(m.latency_pct(99.0) >= m.latency_pct(95.0));
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_stays_representative() {
+        let mut r = Reservoir::default();
+        // 100k values uniform over 0..10_000 µs
+        for i in 0..100_000u64 {
+            r.push(i % 10_000);
+        }
+        assert_eq!(r.seen(), 100_000);
+        assert_eq!(r.samples().len(), RESERVOIR_CAP, "memory stays bounded");
+        // sampled percentiles track the true distribution within a loose band
+        let p50 = r.percentile(50.0);
+        let p99 = r.percentile(99.0);
+        assert!((4_000..=6_000).contains(&p50), "p50={p50}");
+        assert!(p99 >= 9_000, "p99={p99}");
+    }
+
+    #[test]
+    fn reservoir_below_cap_is_exact() {
+        let mut r = Reservoir::default();
+        for i in 1..=100u64 {
+            r.push(i);
+        }
+        assert_eq!(r.samples().len(), 100);
+        assert_eq!(r.percentile(100.0), 100);
+        assert_eq!(r.percentile(0.0), 1);
     }
 
     #[test]

@@ -43,10 +43,16 @@ pub struct Config {
     pub artifacts_dir: std::path::PathBuf,
     /// Hardware-twin design point for the timing path.
     pub design: Design,
-    /// Activation sparsity assumed by the twin (measured values come from
-    /// the functional profile; 0.5 is the paper's typical operating point).
+    /// Activation sparsity the twin *assumes* when no functional profile is
+    /// available (`measured_sparsity: false`); 0.5 is the paper's typical
+    /// operating point. Must lie in `[0, 1]` — validated at
+    /// [`Coordinator::start`]. With `measured_sparsity: true` (the
+    /// default) the twin instead consumes the per-layer sparsities measured
+    /// by the prepared model's functional profile.
     pub act_sparsity: f64,
-    /// Batch flush timeout.
+    /// Batch flush timeout. Must be non-zero — validated at
+    /// [`Coordinator::start`] (a zero timeout degenerates every queue
+    /// check into an immediate flush, serving nothing but batch-1).
     pub max_wait: Duration,
     /// Worker-pool width for the hardware twin's per-layer timing on the
     /// batched execution path. Defaults to `Parallelism::serial()`: the
@@ -54,6 +60,11 @@ pub struct Config {
     /// would cost more latency than it saves. Set `Parallelism::auto()` /
     /// `threads(n)` when serving deeper models.
     pub parallelism: Parallelism,
+    /// Build one [`crate::engine::PreparedModel`] of the served network at
+    /// startup, run its seeded functional profile once, and feed the twin
+    /// *measured* per-layer activation sparsities instead of the
+    /// `act_sparsity` scalar. Default `true`.
+    pub measured_sparsity: bool,
 }
 
 impl Default for Config {
@@ -64,7 +75,28 @@ impl Default for Config {
             act_sparsity: 0.5,
             max_wait: Duration::from_millis(2),
             parallelism: Parallelism::serial(),
+            measured_sparsity: true,
         }
+    }
+}
+
+impl Config {
+    /// Reject configurations that today would be silently accepted and
+    /// misbehave at runtime.
+    fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.act_sparsity) {
+            bail!(
+                "coordinator config: act_sparsity must be a fraction in [0, 1], got {}",
+                self.act_sparsity
+            );
+        }
+        if self.max_wait == Duration::ZERO {
+            bail!(
+                "coordinator config: max_wait must be non-zero (a zero batch window \
+                 flushes every request alone and defeats batching)"
+            );
+        }
+        Ok(())
     }
 }
 
@@ -88,9 +120,12 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the leader thread; compiles the model executables up front so
-    /// the first request doesn't pay compile latency.
+    /// Start the leader thread; compiles the model executables and prepares
+    /// the hardware twin's model up front so the first request pays neither
+    /// compile nor weight-encode latency. Fails fast on an invalid
+    /// [`Config`].
     pub fn start(cfg: Config) -> Result<Coordinator> {
+        cfg.validate()?;
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let metrics2 = metrics.clone();
@@ -168,6 +203,10 @@ impl Handle {
     }
 }
 
+/// Seed for the twin's prepared-model functional profile (fixed so the
+/// measured per-layer sparsities are reproducible across restarts).
+const TWIN_SEED: u64 = 42;
+
 /// The hardware twin: layer profiles of the served model on the configured
 /// design, scaled per executed batch.
 struct Twin {
@@ -177,11 +216,25 @@ struct Twin {
 }
 
 impl Twin {
+    /// Twin with an *assumed* uniform activation sparsity (the
+    /// `measured_sparsity: false` path and the Fig-12-style sweeps).
     fn new(design: Design, nnz: usize, act_sparsity: f64, par: Parallelism) -> Twin {
         let model = crate::models::convnet5();
         Twin {
             design,
             profiles_b1: profile_model_fixed_act(&model, nnz, 8, act_sparsity),
+            par,
+        }
+    }
+
+    /// Twin consuming an existing per-layer profile — the coordinator hands
+    /// it the *measured* sparsities of the prepared model's functional
+    /// profile, so the simulated cycles/energy reflect the layer-by-layer
+    /// sparsity variation instead of one assumed scalar.
+    fn from_profiles(design: Design, profiles_b1: Vec<LayerProfile>, par: Parallelism) -> Twin {
+        Twin {
+            design,
+            profiles_b1,
             par,
         }
     }
@@ -250,7 +303,21 @@ fn leader_loop(
         }
     };
     let policy = BatchPolicy::new(sizes, cfg.max_wait);
-    let twin = Twin::new(cfg.design, nnz, cfg.act_sparsity, cfg.parallelism);
+    // Prepare-once at startup: the served model is lowered into a
+    // PreparedModel (the one-time weight encode/pack) and functionally
+    // profiled exactly once; the twin consumes that profile's measured
+    // per-layer activation sparsities (paper Fig. 11) for every batch it
+    // simulates. Per-batch *functional* execution stays on the XLA
+    // runtime — only the profile outlives this block.
+    let twin = if cfg.measured_sparsity {
+        let model = crate::models::convnet5();
+        let mut prepared =
+            crate::engine::PreparedModel::prepare(&model, nnz, 8, TWIN_SEED, cfg.parallelism);
+        let profiles = prepared.profile(cfg.parallelism);
+        Twin::from_profiles(cfg.design, profiles, cfg.parallelism)
+    } else {
+        Twin::new(cfg.design, nnz, cfg.act_sparsity, cfg.parallelism)
+    };
     let mut queue: Vec<InferRequest> = Vec::new();
 
     loop {
@@ -461,6 +528,43 @@ mod tests {
         assert!(m.sim_energy_mj > 0.0);
         assert!(m.sim_effective_tops(1e9) > 0.0);
         c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejects_invalid_config_before_startup() {
+        // validation fires before the runtime opens, so no artifacts needed
+        let e = Coordinator::start(Config { act_sparsity: 1.5, ..Config::default() })
+            .err()
+            .expect("act_sparsity > 1 must be rejected");
+        assert!(e.to_string().contains("act_sparsity"), "{e}");
+        assert!(Coordinator::start(Config { act_sparsity: -0.1, ..Config::default() }).is_err());
+        assert!(
+            Coordinator::start(Config { act_sparsity: f64::NAN, ..Config::default() }).is_err()
+        );
+        let e = Coordinator::start(Config { max_wait: Duration::ZERO, ..Config::default() })
+            .err()
+            .expect("zero max_wait must be rejected");
+        assert!(e.to_string().contains("max_wait"), "{e}");
+    }
+
+    #[test]
+    fn measured_twin_consumes_per_layer_sparsities() {
+        // the startup path's twin: one PreparedModel, profiled once
+        let mut pm = crate::engine::PreparedModel::prepare(
+            &crate::models::convnet5(),
+            4,
+            8,
+            TWIN_SEED,
+            Parallelism::serial(),
+        );
+        let measured = pm.profile(Parallelism::serial());
+        let spread: Vec<f64> = measured.iter().map(|p| p.act_sparsity).collect();
+        let min = spread.iter().cloned().fold(f64::MAX, f64::min);
+        let max = spread.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(max > min, "measured sparsity must vary per layer: {spread:?}");
+        let twin = Twin::from_profiles(Design::paper_optimal(), measured, Parallelism::serial());
+        let (c, e, m) = twin.simulate(4);
+        assert!(c > 0 && e > 0.0 && m > 0);
     }
 
     #[test]

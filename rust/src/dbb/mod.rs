@@ -258,6 +258,14 @@ impl DbbMatrix {
         })
     }
 
+    /// Decode into the flattened per-column CSC stream the GEMM row kernels
+    /// consume ([`crate::gemm::DbbPacked`]) — the one-time "compile" step of
+    /// the prepare-once/execute-many split: pack here, then every
+    /// `*_packed` GEMM/conv reuses the stream with zero decode work.
+    pub fn pack(&self) -> crate::gemm::DbbPacked {
+        crate::gemm::DbbPacked::pack(self)
+    }
+
     /// Decode back to the dense `K×N` matrix.
     pub fn decompress(&self) -> TensorI8 {
         let mut w = TensorI8::zeros(&[self.k, self.n]);
@@ -411,6 +419,27 @@ mod tests {
                 mt.sort_unstable();
                 assert_eq!(mf, mt);
             }
+        });
+    }
+
+    #[test]
+    fn pack_stream_covers_every_nonzero() {
+        check(Config::default().cases(32), |rng| {
+            let w = TensorI8::rand_sparse(&[24, 6], 0.6, rng);
+            let c = DbbMatrix::compress(&w, 8).unwrap();
+            let p = c.pack();
+            assert_eq!((p.k, p.n, p.bz, p.bound), (c.k, c.n, c.bz, c.bound));
+            assert_eq!(p.total_nnz(), c.total_nnz());
+            assert_eq!(p.col_ptr().len(), c.n + 1);
+            assert_eq!(*p.col_ptr().last().unwrap(), p.entries().len());
+            // the stream decodes back to the dense matrix
+            let mut dense = TensorI8::zeros(&[c.k, c.n]);
+            for col in 0..c.n {
+                for &(kk, v) in &p.entries()[p.col_ptr()[col]..p.col_ptr()[col + 1]] {
+                    dense.set(&[kk as usize, col], v as i8);
+                }
+            }
+            assert_eq!(dense, c.decompress());
         });
     }
 

@@ -1,0 +1,502 @@
+//! Prepared-model inference engine: pack operands once, execute many.
+//!
+//! The paper's whole deployment story (§II-A) is an offline/online split:
+//! DBB weights are *encoded offline* and the accelerator *streams* the
+//! fixed-rate compressed operand at runtime — encoding cost is paid once
+//! per model, never per inference. This module is that split in software.
+//! [`PreparedModel::prepare`] lowers each layer of a [`Model`] exactly once
+//! into a [`PreparedLayer`]:
+//!
+//! * a **packed weight operand** ([`PackedOperand`]) — either the flattened
+//!   `(col_ptr, entries)` CSC stream ([`crate::gemm::DbbPacked`]) that the
+//!   DBB row kernels consume, decoded here and never again, or a dense
+//!   `[K, N]` INT8 matrix for layers that run unpruned;
+//! * a **fused-conv descriptor** ([`SampleShape`]) — the sampled window
+//!   geometry (same kernel/stride/pad as the full layer) the functional
+//!   pass convolves, plus the static profile facts (GEMM `M`, IM2COL
+//!   magnification, raw activation bytes) the timing model needs;
+//! * a share of the model's **preallocated per-worker scratch arena**
+//!   ([`crate::gemm::fused::PatchScratch`]) — the streaming-IM2COL row
+//!   buffers every conv layer draws from.
+//!
+//! [`PreparedModel::execute`] then runs the whole network through the
+//! existing [`crate::gemm::fused`] / [`crate::gemm::tiled`] kernels with
+//! **zero encode/decode work and zero per-call weight-operand allocation**,
+//! bit-exact with the per-call-encoding path it replaced (the shared
+//! `dbb_rows_i8`-family inner kernels guarantee it).
+//! [`PreparedModel::profile`] replays the seeded sampled inference of
+//! `sim::accel::profile_model` — same seed, same RNG draw order, same
+//! per-layer activation sparsities to the last bit — and records the
+//! measured sparsities *into* the prepared model, where the serving
+//! coordinator's hardware twin reads them.
+
+use crate::dbb::DbbMatrix;
+use crate::gemm::conv::ConvShape;
+use crate::gemm::fused::{self, PatchScratch};
+use crate::gemm::tiled;
+use crate::gemm::DbbPacked;
+use crate::models::{LayerKind, Model};
+use crate::sim::accel::{requant_relu, LayerProfile};
+use crate::sim::analytic::WeightStats;
+use crate::sim::im2col::Im2colUnit;
+use crate::tensor::TensorI8;
+use crate::util::par::map_indexed;
+use crate::util::{Parallelism, Rng};
+use std::sync::Mutex;
+
+/// Cap on sampled GEMM rows/cols for the functional sparsity measurement
+/// (keeps ResNet/VGG preparation fast; sparsity is a statistical mean over
+/// ≥64k requantized outputs per layer at these caps — §Perf).
+const SAMPLE_ROWS: usize = 256;
+const SAMPLE_COLS: usize = 256;
+/// Width (in output pixels) of the sampled conv window; the height is then
+/// chosen so the window holds at most [`SAMPLE_ROWS`] output pixels.
+const SAMPLE_WIN_COLS: usize = 16;
+
+/// Zero fraction of the synthetic input image fed to the first layer:
+/// natural images are dense (≈0% zeros after normalization).
+const SEED_ACT_SPARSITY: f32 = 0.02;
+
+/// Conv geometry of the sampled sub-window: same kernel/stride/pad as the
+/// full layer, input cropped so the output window has ≤ [`SAMPLE_ROWS`]
+/// pixels. `c`/`ns` override channels (depthwise samples one channel).
+fn sample_shape(s: &ConvShape, c: usize, ns: usize) -> ConvShape {
+    let ow_s = s.ow().min(SAMPLE_WIN_COLS).max(1);
+    let oh_s = s.oh().min((SAMPLE_ROWS / ow_s).max(1));
+    ConvShape {
+        h: ((oh_s - 1) * s.stride + s.kh).saturating_sub(2 * s.pad).max(1),
+        w: ((ow_s - 1) * s.stride + s.kw).saturating_sub(2 * s.pad).max(1),
+        c,
+        kh: s.kh,
+        kw: s.kw,
+        oc: ns,
+        stride: s.stride,
+        pad: s.pad,
+    }
+}
+
+/// Fit a propagated feature map to a layer's sampled input shape by
+/// wrap-around tiling (spatial dims and channels), preserving the measured
+/// value/zero structure. An exact-shape match is an identity copy, which is
+/// what keeps [`PreparedModel::profile`] bit-exact: the stored seed input
+/// passes through unchanged.
+fn fit_fmap_from(p: &TensorI8, h: usize, w: usize, c: usize) -> TensorI8 {
+    if p.shape().len() != 3 {
+        // non-spatial input (matrix / flat vector): wrap the raw data
+        let pd = p.data();
+        let data = (0..h * w * c).map(|i| pd[i % pd.len()]).collect();
+        return TensorI8::from_vec(&[h, w, c], data);
+    }
+    let (ph, pw, pc) = (p.shape()[0], p.shape()[1], p.shape()[2]);
+    let mut out = TensorI8::zeros(&[h, w, c]);
+    for y in 0..h {
+        for x in 0..w {
+            for ci in 0..c {
+                out.set(&[y, x, ci], p.at(&[y % ph, x % pw, ci % pc]));
+            }
+        }
+    }
+    out
+}
+
+/// FC analogue of [`fit_fmap_from`]: wrap the flattened feature map into an
+/// `[m, k]` operand sample.
+fn fit_matrix_from(p: &TensorI8, m: usize, k: usize) -> TensorI8 {
+    let pd = p.data();
+    TensorI8::from_vec(&[m, k], (0..m * k).map(|i| pd[i % pd.len()]).collect())
+}
+
+/// The fused-conv descriptor of a prepared layer: what geometry the
+/// functional pass runs (the sampled window keeps the full layer's
+/// kernel/stride/pad; FC layers sample GEMM rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SampleShape {
+    /// Sampled conv window (standard or depthwise; depthwise samples one
+    /// channel).
+    Conv(ConvShape),
+    /// Sampled FC GEMM: `m` rows over the layer's full `k`.
+    Fc {
+        /// Sampled GEMM rows (`min(M, SAMPLE_ROWS)`).
+        m: usize,
+        /// Reduction dim (the layer's full input features).
+        k: usize,
+    },
+}
+
+/// A weight operand lowered exactly once at prepare time.
+#[derive(Debug, Clone)]
+pub enum PackedOperand {
+    /// DBB-bounded layer: the flattened CSC stream, decoded at prepare.
+    Dbb(DbbPacked),
+    /// Dense-fallback layer (non-prunable / bound == bz): the `[K, N]`
+    /// GEMM right operand.
+    Dense(TensorI8),
+}
+
+impl PackedOperand {
+    /// Host bytes of the packed operand held in steady state.
+    pub fn operand_bytes(&self) -> usize {
+        match self {
+            PackedOperand::Dbb(p) => p.operand_bytes(),
+            PackedOperand::Dense(w) => w.len(),
+        }
+    }
+}
+
+/// One layer, lowered once: packed operand + sampled geometry + the static
+/// profile facts the timing/power models consume.
+#[derive(Debug, Clone)]
+pub struct PreparedLayer {
+    /// Layer name.
+    pub name: String,
+    /// Full-layer GEMM rows (output pixels × batch 1).
+    pub m: usize,
+    /// Weight statistics (synthetic-exact for magnitude-pruned weights).
+    pub weights: WeightStats,
+    /// Sampled execution geometry.
+    pub sample: SampleShape,
+    /// The weight operand, encoded/decoded exactly once.
+    pub operand: PackedOperand,
+    /// IM2COL duplication this layer offers (1.0 for FC/1×1).
+    pub im2col_magnification: f64,
+    /// Raw input bytes (feature map / FC input vector).
+    pub raw_act_bytes: u64,
+    /// Output elements (for MCU post-processing).
+    pub out_elems: u64,
+    /// Followed by ReLU?
+    pub relu: bool,
+}
+
+/// Result of one [`PreparedModel::execute`] pass.
+#[derive(Debug, Clone)]
+pub struct Execution {
+    /// Final layer's requantized INT8 output.
+    pub output: TensorI8,
+    /// Measured input-activation zero fraction per layer.
+    pub act_sparsity: Vec<f64>,
+}
+
+/// A model lowered once, executable many times: the software twin of the
+/// paper's offline-encode / runtime-stream split (§II-A).
+#[derive(Debug)]
+pub struct PreparedModel {
+    name: &'static str,
+    nnz: usize,
+    bz: usize,
+    seed: u64,
+    layers: Vec<PreparedLayer>,
+    seed_input: TensorI8,
+    /// Recorded by [`Self::profile`]; empty until a functional profile ran.
+    measured_act: Vec<f64>,
+    /// Per-worker streaming-IM2COL row buffers, preallocated at prepare and
+    /// reused by every [`Self::execute`] (concurrent executes fall back to
+    /// a transient arena rather than blocking).
+    scratch: Mutex<PatchScratch>,
+}
+
+impl PreparedModel {
+    /// Lower every layer of `model` exactly once: draw the synthetic
+    /// DBB-pruned INT8 weights from `seed` (identical RNG draw order to the
+    /// historical per-call path, so measured sparsities reproduce
+    /// bit-for-bit), encode + pack each prunable layer's operand on the
+    /// `par` worker pool, and preallocate the per-worker scratch arena.
+    ///
+    /// `nnz` is the model-wide DBB target (paper Table I, e.g. 3/8 for
+    /// ResNet-50); non-prunable layers fall back to dense.
+    pub fn prepare(model: &Model, nnz: usize, bz: usize, seed: u64, par: Parallelism) -> Self {
+        let mut rng = Rng::new(seed);
+        let nlayers = model.layers.len();
+
+        // Pass 1 (serial): draw the synthetic weights — and, right after the
+        // first layer's weights, the seed input — in the exact RNG order the
+        // per-call profiler used, so seeded results are unchanged.
+        let mut dense = Vec::with_capacity(nlayers);
+        let mut samples = Vec::with_capacity(nlayers);
+        let mut seed_input: Option<TensorI8> = None;
+        for l in &model.layers {
+            let (m, k, n) = l.gemm_dims();
+            let ns = n.min(SAMPLE_COLS);
+            let w_dense = TensorI8::rand(&[k, ns], &mut rng);
+            let sample = match l.kind {
+                LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => {
+                    let chans = if matches!(l.kind, LayerKind::Conv(_)) { s.c } else { 1 };
+                    SampleShape::Conv(sample_shape(&s, chans, ns))
+                }
+                LayerKind::Fc(..) => SampleShape::Fc { m: m.min(SAMPLE_ROWS), k },
+            };
+            if seed_input.is_none() {
+                seed_input = Some(match sample {
+                    SampleShape::Conv(ss) => {
+                        TensorI8::rand_sparse(&[ss.h, ss.w, ss.c], SEED_ACT_SPARSITY, &mut rng)
+                    }
+                    SampleShape::Fc { m, k } => {
+                        TensorI8::rand_sparse(&[m, k], SEED_ACT_SPARSITY, &mut rng)
+                    }
+                });
+            }
+            dense.push(w_dense);
+            samples.push(sample);
+        }
+
+        // Pass 2 (worker pool): the one-time encode — fused top-k prune +
+        // DBB compress + CSC pack per prunable layer. This is the *only*
+        // place the engine ever encodes or decodes a weight operand.
+        let operands: Vec<PackedOperand> = map_indexed(nlayers, par, |li| {
+            let l = &model.layers[li];
+            let bound = l.dbb_bound(nnz, bz);
+            if bound < bz {
+                let enc =
+                    DbbMatrix::compress_topk(&dense[li], bz, bound).expect("valid block size");
+                PackedOperand::Dbb(enc.pack())
+            } else {
+                PackedOperand::Dense(dense[li].clone())
+            }
+        });
+
+        let layers: Vec<PreparedLayer> = model
+            .layers
+            .iter()
+            .zip(samples)
+            .zip(operands)
+            .enumerate()
+            .map(|(li, ((l, sample), operand))| {
+                let (m, k, n) = l.gemm_dims();
+                let bound = l.dbb_bound(nnz, bz);
+                let (im2c, raw) = match l.kind {
+                    LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => (
+                        Im2colUnit::default().magnification(&s),
+                        (s.h * s.w * s.c) as u64,
+                    ),
+                    LayerKind::Fc(i, _) => (1.0, i as u64),
+                };
+                PreparedLayer {
+                    name: l.name.clone(),
+                    m,
+                    weights: WeightStats::synthetic(k, n, bz, bound),
+                    sample,
+                    operand,
+                    im2col_magnification: im2c,
+                    raw_act_bytes: raw,
+                    out_elems: (m * n) as u64,
+                    relu: li + 1 < nlayers,
+                }
+            })
+            .collect();
+
+        let max_k = layers
+            .iter()
+            .filter_map(|l| match l.sample {
+                SampleShape::Conv(ss) => Some(ss.gemm_k()),
+                SampleShape::Fc { .. } => None,
+            })
+            .max()
+            .unwrap_or(0);
+        PreparedModel {
+            name: model.name,
+            nnz,
+            bz,
+            seed,
+            layers,
+            seed_input: seed_input.unwrap_or_else(|| TensorI8::zeros(&[1, 1, 1])),
+            measured_act: Vec::new(),
+            scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
+        }
+    }
+
+    /// Run the whole network on `input` (any non-empty feature map /
+    /// matrix; it is wrap-fitted to the first layer's sampled shape) with
+    /// zero encode/decode work: every layer streams its prepared operand
+    /// through the fused/tiled kernels. Repeated calls with the same input
+    /// return identical results — the engine holds no mutable state beyond
+    /// the scratch buffers, which are fully rewritten before every read.
+    pub fn execute(&self, input: &TensorI8, par: Parallelism) -> Execution {
+        match self.scratch.try_lock() {
+            Ok(mut guard) => self.execute_with(input, par, &mut guard),
+            // a panicked execute poisoned the arena: the buffers are fully
+            // rewritten before every read, so reclaiming them is safe
+            Err(std::sync::TryLockError::Poisoned(p)) => {
+                self.execute_with(input, par, &mut p.into_inner())
+            }
+            // another execute holds the arena: run on a transient one
+            Err(std::sync::TryLockError::WouldBlock) => {
+                self.execute_with(input, par, &mut PatchScratch::new())
+            }
+        }
+    }
+
+    /// [`Self::execute`] on a caller-owned scratch arena.
+    pub fn execute_with(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        scratch: &mut PatchScratch,
+    ) -> Execution {
+        assert!(!input.is_empty(), "execute input must be non-empty");
+        let mut act_sparsity = Vec::with_capacity(self.layers.len());
+        let mut fmap: Option<TensorI8> = None;
+        for l in &self.layers {
+            let prev = fmap.as_ref().unwrap_or(input);
+            let (acc, in_s) = match l.sample {
+                SampleShape::Conv(ss) => {
+                    let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
+                    let in_s = x.sparsity();
+                    let acc = match &l.operand {
+                        PackedOperand::Dbb(p) => {
+                            fused::conv2d_dbb_i8_packed_with(&x, p, &ss, par, scratch)
+                        }
+                        PackedOperand::Dense(w) => fused::conv2d_i8_with(&x, w, &ss, par, scratch),
+                    };
+                    (acc, in_s)
+                }
+                SampleShape::Fc { m, k } => {
+                    let a = fit_matrix_from(prev, m, k);
+                    let in_s = a.sparsity();
+                    let acc = match &l.operand {
+                        PackedOperand::Dbb(p) => tiled::dbb_i8_packed(&a, p, par),
+                        PackedOperand::Dense(w) => tiled::dense_i8(&a, w, par),
+                    };
+                    (acc, in_s)
+                }
+            };
+            act_sparsity.push(in_s);
+            let out = requant_relu(&acc, l.relu);
+            // propagate: conv outputs keep spatial form, FC outputs become
+            // a 1×m×n map
+            fmap = Some(if out.shape().len() == 3 {
+                out
+            } else {
+                let (om, on) = (out.shape()[0], out.shape()[1]);
+                out.reshape(&[1, om, on])
+            });
+        }
+        Execution {
+            output: fmap.unwrap_or_else(|| input.clone()),
+            act_sparsity,
+        }
+    }
+
+    /// Replay the seeded sampled functional inference (the historical
+    /// `profile_model` pass), record the measured per-layer activation
+    /// sparsities into the model, and return the layer profiles the
+    /// timing/power models consume. Bit-exact with the per-call-encoding
+    /// path for the same `(model, nnz, bz, seed)` at any worker-pool width.
+    pub fn profile(&mut self, par: Parallelism) -> Vec<LayerProfile> {
+        let rec = self.execute(&self.seed_input, par);
+        self.measured_act = rec.act_sparsity;
+        self.profiles().expect("profile just ran")
+    }
+
+    /// Layer profiles with *measured* activation sparsity — available once
+    /// [`Self::profile`] has run, `None` before (the serving twin falls
+    /// back to an assumed scalar in that case).
+    pub fn profiles(&self) -> Option<Vec<LayerProfile>> {
+        if self.measured_act.len() != self.layers.len() {
+            return None;
+        }
+        Some(
+            self.layers
+                .iter()
+                .zip(&self.measured_act)
+                .map(|(l, &act)| LayerProfile {
+                    name: l.name.clone(),
+                    m: l.m,
+                    weights: l.weights,
+                    act_sparsity: act,
+                    im2col_magnification: l.im2col_magnification,
+                    raw_act_bytes: l.raw_act_bytes,
+                    out_elems: l.out_elems,
+                    relu: l.relu,
+                })
+                .collect(),
+        )
+    }
+
+    /// The prepared layers, in execution order.
+    pub fn layers(&self) -> &[PreparedLayer] {
+        &self.layers
+    }
+
+    /// The seeded input sample the profile pass feeds to the first layer.
+    pub fn seed_input(&self) -> &TensorI8 {
+        &self.seed_input
+    }
+
+    /// Model name this was prepared from.
+    pub fn model_name(&self) -> &'static str {
+        self.name
+    }
+
+    /// `(nnz, bz, seed)` the model was prepared with.
+    pub fn encoding(&self) -> (usize, usize, u64) {
+        (self.nnz, self.bz, self.seed)
+    }
+
+    /// Total host bytes of all packed weight operands (steady-state
+    /// weight-memory footprint of the executor).
+    pub fn operand_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.operand.operand_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn prepare_lowers_every_layer_once() {
+        let m = models::convnet5();
+        let pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+        assert_eq!(pm.layers().len(), m.layers.len());
+        assert_eq!(pm.model_name(), m.name);
+        assert_eq!(pm.encoding(), (3, 8, 42));
+        // prunable layers carry a packed DBB stream, the rest dense
+        for (pl, l) in pm.layers().iter().zip(&m.layers) {
+            match (&pl.operand, l.prunable) {
+                (PackedOperand::Dbb(p), true) => assert!(p.total_nnz() > 0),
+                (PackedOperand::Dense(w), false) => assert!(!w.is_empty()),
+                (op, prunable) => {
+                    panic!("{}: operand {op:?} vs prunable={prunable}", pl.name)
+                }
+            }
+        }
+        assert!(pm.operand_bytes() > 0);
+        assert!(pm.profiles().is_none(), "no functional profile ran yet");
+    }
+
+    #[test]
+    fn repeated_execute_is_pure() {
+        let m = models::lenet5();
+        let pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::threads(3));
+        let a = pm.execute(pm.seed_input(), Parallelism::threads(3));
+        let b = pm.execute(pm.seed_input(), Parallelism::threads(3));
+        assert_eq!(a.output, b.output);
+        assert_eq!(a.act_sparsity, b.act_sparsity);
+    }
+
+    #[test]
+    fn execute_accepts_non_spatial_input() {
+        // the documented contract: any non-empty input is wrap-fitted,
+        // including a 2-D matrix fed to a conv-first model
+        let m = models::convnet5();
+        let pm = PreparedModel::prepare(&m, 3, 8, 1, Parallelism::serial());
+        let mut rng = Rng::new(2);
+        let flat = TensorI8::rand(&[10, 27], &mut rng);
+        let rec = pm.execute(&flat, Parallelism::serial());
+        assert_eq!(rec.act_sparsity.len(), m.layers.len());
+        assert!(!rec.output.is_empty());
+    }
+
+    #[test]
+    fn profile_records_measured_sparsity() {
+        let m = models::convnet5();
+        let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+        let profiles = pm.profile(Parallelism::serial());
+        assert_eq!(profiles.len(), m.layers.len());
+        assert!(pm.profiles().is_some());
+        // first layer sees the near-dense seed input
+        assert!(profiles[0].act_sparsity < 0.1, "{}", profiles[0].act_sparsity);
+        // ReLU layers downstream are measurably sparse
+        assert!(profiles.iter().skip(1).any(|p| p.act_sparsity > 0.2));
+    }
+}

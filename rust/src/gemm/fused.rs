@@ -31,12 +31,57 @@ pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
+use crate::gemm::DbbPacked;
 use crate::tensor::{Tensor, TensorF32, TensorI32, TensorI8};
 
 /// Patch rows generated per inner-kernel call — the software row buffer.
 /// Small enough to stay L1-resident next to the weight stream, large enough
 /// to amortize the generation loop.
 pub const PATCH_ROWS: usize = 8;
+
+/// Reusable per-worker patch-row buffers — the preallocated form of the
+/// software row buffer ([`PATCH_ROWS`]` × K` i8 per worker). The `*_with`
+/// conv entry points draw their buffers from a `PatchScratch` instead of
+/// allocating per call, so a caller that executes many convolutions (the
+/// [`crate::engine`] prepared-model executor) pays the allocation once;
+/// buffers grow on demand and every patch row is fully rewritten before it
+/// is read, so reuse across layers of different `K` is safe.
+#[derive(Debug, Default)]
+pub struct PatchScratch {
+    bufs: Vec<Vec<i8>>,
+}
+
+impl PatchScratch {
+    /// Empty scratch; buffers materialize on first use.
+    pub fn new() -> Self {
+        PatchScratch::default()
+    }
+
+    /// Scratch with `workers` buffers of `PATCH_ROWS · k` bytes ready.
+    pub fn preallocate(workers: usize, k: usize) -> Self {
+        let mut s = PatchScratch::new();
+        s.reserve(workers, k);
+        s
+    }
+
+    /// Ensure at least `workers` buffers of `PATCH_ROWS · k` bytes each.
+    pub fn reserve(&mut self, workers: usize, k: usize) {
+        if self.bufs.len() < workers {
+            self.bufs.resize_with(workers, Vec::new);
+        }
+        let need = PATCH_ROWS * k;
+        for b in &mut self.bufs[..workers] {
+            if b.len() < need {
+                b.resize(need, 0);
+            }
+        }
+    }
+
+    fn take(&mut self, workers: usize, k: usize) -> &mut [Vec<i8>] {
+        self.reserve(workers, k);
+        &mut self.bufs[..workers]
+    }
+}
 
 /// Write the IM2COL operand row of output pixel `(oy, ox)` (one image,
 /// layout `[h, w, c]`, channel-innermost K) into `row`
@@ -125,12 +170,13 @@ fn conv_rows<K: Fn(&[i8], &mut [i32])>(
     row0: usize,
     k: usize,
     n: usize,
+    patch: &mut [i8],
     kernel: &K,
 ) {
+    debug_assert!(patch.len() >= PATCH_ROWS * k);
     let (oh, ow) = (s.oh(), s.ow());
     let img = s.h * s.w * s.c;
     let rows = out.len() / n;
-    let mut patch = vec![0i8; PATCH_ROWS * k];
     let mut done = 0usize;
     while done < rows {
         let take = PATCH_ROWS.min(rows - done);
@@ -151,8 +197,9 @@ fn conv_rows<K: Fn(&[i8], &mut [i32])>(
 }
 
 /// Row-tile `out` across the worker pool (same partition as
-/// [`crate::gemm::tiled`]) and run [`conv_rows`] on each tile. Serial
-/// parallelism runs inline with no thread spawned.
+/// [`crate::gemm::tiled`]) and run [`conv_rows`] on each tile, each worker
+/// on its own scratch buffer. Serial parallelism runs inline with no thread
+/// spawned.
 fn conv_tiled<K: Fn(&[i8], &mut [i32]) + Sync>(
     xd: &[i8],
     s: &ConvShape,
@@ -161,19 +208,23 @@ fn conv_tiled<K: Fn(&[i8], &mut [i32]) + Sync>(
     k: usize,
     n: usize,
     par: Parallelism,
+    scratch: &mut PatchScratch,
     kernel: K,
 ) {
     let threads = par.get().min(m);
+    let patches = scratch.take(threads.max(1), k);
     if threads <= 1 {
-        conv_rows(xd, s, out, 0, k, n, &kernel);
+        conv_rows(xd, s, out, 0, k, n, &mut patches[0], &kernel);
         return;
     }
     let rows_per_tile = m.div_ceil(threads);
     let kref = &kernel;
     std::thread::scope(|sc| {
-        for (ti, tile) in out.chunks_mut(rows_per_tile * n).enumerate() {
+        for ((ti, tile), buf) in
+            out.chunks_mut(rows_per_tile * n).enumerate().zip(patches.iter_mut())
+        {
             let row0 = ti * rows_per_tile;
-            sc.spawn(move || conv_rows(xd, s, tile, row0, k, n, kref));
+            sc.spawn(move || conv_rows(xd, s, tile, row0, k, n, buf, kref));
         }
     });
 }
@@ -193,6 +244,18 @@ fn conv_output(batched: bool, batch: usize, s: &ConvShape) -> TensorI32 {
 /// materializing the `[M×K]` IM2COL operand. `x` is `[h, w, c]` or
 /// `[b, h, w, c]` NHWC; `w` is `[kh, kw, c, oc]` or `[K, oc]`.
 pub fn conv2d_i8(x: &TensorI8, w: &TensorI8, s: &ConvShape, par: Parallelism) -> TensorI32 {
+    conv2d_i8_with(x, w, s, par, &mut PatchScratch::new())
+}
+
+/// [`conv2d_i8`] drawing its per-worker row buffers from a caller-owned
+/// [`PatchScratch`] (zero per-call buffer allocation in steady state).
+pub fn conv2d_i8_with(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
     let batch = batch_of(x, s);
     check_weights(w, s);
     let (k, n) = (s.gemm_k(), s.oc);
@@ -202,17 +265,45 @@ pub fn conv2d_i8(x: &TensorI8, w: &TensorI8, s: &ConvShape, par: Parallelism) ->
         return c;
     }
     let (xd, wd) = (x.data(), w.data());
-    conv_tiled(xd, s, c.data_mut(), m, k, n, par, |patch, out| {
+    conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
         crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
     });
     c
 }
 
 /// Fused streaming convolution over DBB-compressed weights (`w` encodes the
-/// `[K, oc]` GEMM operand): the CSC decode happens once, every worker reads
-/// it and generates its own patch rows. Bit-exact with
-/// [`conv2d_i8`] on `w.decompress()`.
+/// `[K, oc]` GEMM operand): the CSC decode happens once per call, every
+/// worker reads it and generates its own patch rows. Bit-exact with
+/// [`conv2d_i8`] on `w.decompress()`. Hot loops that reuse one weight
+/// matrix should pack it once ([`DbbPacked::pack`]) and call
+/// [`conv2d_dbb_i8_packed`] instead.
 pub fn conv2d_dbb_i8(x: &TensorI8, w: &DbbMatrix, s: &ConvShape, par: Parallelism) -> TensorI32 {
+    conv2d_dbb_i8_packed(x, &DbbPacked::pack(w), s, par)
+}
+
+/// [`conv2d_dbb_i8`] on a pre-decoded operand: zero per-call decode work,
+/// bit-exact with the per-call-decoding path (identical stream into the
+/// identical inner kernel).
+pub fn conv2d_dbb_i8_packed(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+) -> TensorI32 {
+    conv2d_dbb_i8_packed_with(x, w, s, par, &mut PatchScratch::new())
+}
+
+/// [`conv2d_dbb_i8_packed`] drawing its per-worker row buffers from a
+/// caller-owned [`PatchScratch`] — the fully prepared hot path: no encode,
+/// no decode, no buffer allocation per call ([`crate::engine`] runs every
+/// prepared conv layer through this entry point).
+pub fn conv2d_dbb_i8_packed_with(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
     let batch = batch_of(x, s);
     assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
     assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
@@ -222,10 +313,10 @@ pub fn conv2d_dbb_i8(x: &TensorI8, w: &DbbMatrix, s: &ConvShape, par: Parallelis
     if m == 0 || n == 0 {
         return c;
     }
-    let (col_ptr, entries) = crate::gemm::dbb_decode_csc(w);
+    let (cp, en) = (w.col_ptr(), w.entries());
     let xd = x.data();
-    conv_tiled(xd, s, c.data_mut(), m, k, n, par, |patch, out| {
-        crate::gemm::dbb_rows_i8(patch, &col_ptr, &entries, out, 0, k, n)
+    conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+        crate::gemm::dbb_rows_i8(patch, cp, en, out, 0, k, n)
     });
     c
 }
@@ -371,6 +462,36 @@ mod tests {
             let a = im2col(&x, &s);
             let want = gemm::dbb_i8(&a, &enc);
             let got = conv2d_dbb_i8(&x, &enc, &s, Parallelism::threads(threads));
+            assert_eq!(got.data(), want.data(), "shape={s:?} nnz={nnz} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn packed_conv_equals_per_call_decode_prop() {
+        // one shared scratch across every case: buffer reuse over varying
+        // shapes/K must never change a bit
+        let scratch = std::cell::RefCell::new(PatchScratch::new());
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let bz = 8usize;
+            let nnz = rng.below(bz) + 1;
+            let threads = rng.below(8) + 1;
+            let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.3, rng);
+            let w = crate::dbb::DbbMatrix::compress_topk(
+                &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+                bz,
+                nnz,
+            )
+            .unwrap();
+            let packed = DbbPacked::pack(&w);
+            let want = conv2d_dbb_i8(&x, &w, &s, Parallelism::threads(threads));
+            let got = conv2d_dbb_i8_packed_with(
+                &x,
+                &packed,
+                &s,
+                Parallelism::threads(threads),
+                &mut scratch.borrow_mut(),
+            );
             assert_eq!(got.data(), want.data(), "shape={s:?} nnz={nnz} threads={threads}");
         });
     }

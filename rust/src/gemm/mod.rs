@@ -83,13 +83,82 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
 /// compressed form — the functional model of the time-unrolled S8DP1
 /// datapath: for each block, each stored non-zero selects (muxes) the
 /// activation at its bitmask position.
+///
+/// Decodes the CSC stream per call; hot loops that reuse one weight matrix
+/// should pack once ([`DbbPacked::pack`]) and call [`dbb_i8_packed`] — the
+/// prepare-once/execute-many split of [`crate::engine`].
 pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix) -> TensorI32 {
+    dbb_i8_packed(a, &DbbPacked::pack(w))
+}
+
+/// [`dbb_i8`] on a pre-decoded operand: zero per-call decode work. Bit-exact
+/// with [`dbb_i8`] on the matrix the operand was packed from (both run the
+/// identical `dbb_rows_i8` inner kernel on the identical stream).
+pub fn dbb_i8_packed(a: &TensorI8, w: &DbbPacked) -> TensorI32 {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
     let mut c = TensorI32::zeros(&[m, w.n]);
-    let (col_ptr, entries) = dbb_decode_csc(w);
-    dbb_rows_i8(a.data(), &col_ptr, &entries, c.data_mut(), 0, k, w.n);
+    dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
     c
+}
+
+/// A DBB weight operand decoded once into the flattened per-column
+/// `(col_ptr, entries)` CSC stream the row kernels consume — the software
+/// form of the paper's §II-A offline-encoded weight stream. Packing is the
+/// one-time "compile" step; every GEMM/conv that takes a `DbbPacked`
+/// ([`dbb_i8_packed`], [`tiled::dbb_i8_packed`],
+/// [`fused::conv2d_dbb_i8_packed`]) runs with zero per-call decode work and
+/// is bit-exact with its per-call-decoding counterpart, because both feed
+/// the identical stream to the shared `dbb_rows_i8` inner kernel.
+#[derive(Debug, Clone)]
+pub struct DbbPacked {
+    /// Reduction dim of the dense matrix.
+    pub k: usize,
+    /// Output channels.
+    pub n: usize,
+    /// Block size the source matrix was encoded with.
+    pub bz: usize,
+    /// Density bound (max NNZ/block) of the source encoding.
+    pub bound: usize,
+    col_ptr: Vec<usize>,
+    entries: Vec<(u32, i32)>,
+}
+
+impl DbbPacked {
+    /// Decode a compressed matrix into the flattened CSC stream, once.
+    pub fn pack(w: &DbbMatrix) -> DbbPacked {
+        let (col_ptr, entries) = dbb_decode_csc(w);
+        DbbPacked {
+            k: w.k,
+            n: w.n,
+            bz: w.bz,
+            bound: w.bound,
+            col_ptr,
+            entries,
+        }
+    }
+
+    /// Per-column offsets into [`Self::entries`] (`n + 1` values).
+    pub fn col_ptr(&self) -> &[usize] {
+        &self.col_ptr
+    }
+
+    /// The `(k-index, value)` stream, column-major.
+    pub fn entries(&self) -> &[(u32, i32)] {
+        &self.entries
+    }
+
+    /// Stored non-zeros.
+    pub fn total_nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Host bytes the packed stream occupies (the steady-state operand
+    /// footprint an executor holds per layer).
+    pub fn operand_bytes(&self) -> usize {
+        self.col_ptr.len() * std::mem::size_of::<usize>()
+            + self.entries.len() * std::mem::size_of::<(u32, i32)>()
+    }
 }
 
 /// Decode a compressed operand once into a per-column (k-index, value)
@@ -211,6 +280,26 @@ mod tests {
         // 2/8 bound: executed = M * (64/8) * 2 * 32 = dense/4
         assert_eq!(dbb_executed_macs(16, &w), 16 * 8 * 2 * 32);
         assert_eq!(effective_ops(16, 64, 32), 2 * 16 * 64 * 32);
+    }
+
+    #[test]
+    fn packed_equals_per_call_decode_prop() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(12) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(16) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let a = TensorI8::rand(&[m, k], rng);
+            let w = DbbMatrix::compress_topk(&TensorI8::rand(&[k, n], rng), bz, nnz).unwrap();
+            let packed = DbbPacked::pack(&w);
+            assert_eq!(packed.total_nnz(), w.total_nnz());
+            assert_eq!(
+                dbb_i8_packed(&a, &packed).data(),
+                dbb_i8(&a, &w).data(),
+                "m={m} k={k} n={n} bz={bz} nnz={nnz}"
+            );
+        });
     }
 
     #[test]

@@ -17,6 +17,7 @@
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
+use crate::gemm::DbbPacked;
 use crate::tensor::{TensorI32, TensorI8};
 
 /// Parallel dense GEMM: `C[M×N] = A[M×K] · W[K×N]`, INT8 operands, INT32
@@ -42,19 +43,27 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8, par: Parallelism) -> TensorI32 {
 }
 
 /// Parallel DBB-sparse GEMM: `C = A · decompress(W)` on the compressed
-/// form. The CSC decode happens once; all workers read it. Bit-exact with
-/// [`crate::gemm::dbb_i8`].
+/// form. The CSC decode happens once per call; all workers read it.
+/// Bit-exact with [`crate::gemm::dbb_i8`]. Hot loops that reuse one weight
+/// matrix should pack it once ([`DbbPacked::pack`]) and call
+/// [`dbb_i8_packed`] instead.
 pub fn dbb_i8(a: &TensorI8, w: &DbbMatrix, par: Parallelism) -> TensorI32 {
+    dbb_i8_packed(a, &DbbPacked::pack(w), par)
+}
+
+/// [`dbb_i8`] on a pre-decoded operand: zero per-call decode work, same
+/// row-tiling, same `dbb_rows_i8` inner kernel — bit-exact with the
+/// per-call-decoding path for every thread count.
+pub fn dbb_i8_packed(a: &TensorI8, w: &DbbPacked, par: Parallelism) -> TensorI32 {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
     if par.get() <= 1 || m <= 1 || w.n == 0 {
-        return crate::gemm::dbb_i8(a, w);
+        return crate::gemm::dbb_i8_packed(a, w);
     }
     let n = w.n;
     let mut c = TensorI32::zeros(&[m, n]);
-    let (col_ptr, entries) = crate::gemm::dbb_decode_csc(w);
     let ad = a.data();
-    let (cp, en) = (&col_ptr[..], &entries[..]);
+    let (cp, en) = (w.col_ptr(), w.entries());
     let rows_per_tile = m.div_ceil(par.get().min(m));
     std::thread::scope(|s| {
         for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
@@ -144,6 +153,27 @@ mod tests {
             dense_i8(&a, &w, Parallelism::serial()).data(),
             gemm::dense_i8(&a, &w).data()
         );
+    }
+
+    #[test]
+    fn dbb_packed_equals_per_call_decode_prop() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(32) + 1;
+            let k = rng.below(64) + 1;
+            let n = rng.below(20) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let threads = rng.below(8) + 1;
+            let a = TensorI8::rand_sparse(&[m, k], 0.4, rng);
+            let wd = prune_i8(&TensorI8::rand(&[k, n], rng), bz, nnz);
+            let w = DbbMatrix::compress(&wd, bz).unwrap();
+            let packed = DbbPacked::pack(&w);
+            assert_eq!(
+                dbb_i8_packed(&a, &packed, Parallelism::threads(threads)).data(),
+                gemm::dbb_i8(&a, &w).data(),
+                "m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads}"
+            );
+        });
     }
 
     #[test]

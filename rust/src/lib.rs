@@ -25,6 +25,7 @@ pub mod baselines;
 pub mod cli;
 pub mod coordinator;
 pub mod dbb;
+pub mod engine;
 pub mod gemm;
 pub mod harness;
 pub mod models;

@@ -72,6 +72,19 @@ impl Layer {
         }
     }
 
+    /// DBB density bound this layer runs at under a model-wide target
+    /// `nnz` (paper Table I): prunable layers are bounded at `nnz`,
+    /// non-prunable layers (first convs, depthwise) fall back to dense
+    /// (`bound == bz`). Shared by the layer profiler and the prepared-model
+    /// engine so both lower a model to identical per-layer encodings.
+    pub fn dbb_bound(&self, nnz: usize, bz: usize) -> usize {
+        if self.prunable {
+            nnz.min(bz)
+        } else {
+            bz
+        }
+    }
+
     /// Convolution shape if this is a conv layer.
     pub fn conv_shape(&self) -> Option<ConvShape> {
         match self.kind {
@@ -402,6 +415,20 @@ mod tests {
         assert_eq!(mm, s.oh() * s.ow());
         assert_eq!(k * n, dw.weights(), "{}", dw.name);
         assert_eq!((mm * k * n) as u64, dw.macs(), "{}", dw.name);
+    }
+
+    #[test]
+    fn dbb_bound_dense_fallback() {
+        let m = mobilenet_v1();
+        let dw = m
+            .layers
+            .iter()
+            .find(|l| matches!(l.kind, LayerKind::DepthwiseConv(_)))
+            .unwrap();
+        assert_eq!(dw.dbb_bound(3, 8), 8, "non-prunable layers run dense");
+        let pw = m.layers.iter().find(|l| l.name.ends_with("/pw")).unwrap();
+        assert_eq!(pw.dbb_bound(3, 8), 3);
+        assert_eq!(pw.dbb_bound(12, 8), 8, "bound clamps at bz");
     }
 
     #[test]

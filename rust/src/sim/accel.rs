@@ -14,80 +14,21 @@
 //! matrix — reproducing the layer-by-layer sparsity variation the paper
 //! annotates above the Fig. 11 bars. For the sensitivity sweeps (Fig. 12's
 //! 50%/80% curves) use [`profile_model_fixed_act`].
+//!
+//! The sampled functional pass itself lives in [`crate::engine`]
+//! (prepare-once/execute-many): [`profile_model`] lowers the model into a
+//! [`crate::engine::PreparedModel`] — weights encoded and CSC-packed
+//! exactly once — and replays one seeded execute over the packed operands.
 
 use super::analytic::{gemm_timing_stats, WeightStats};
 use super::im2col::Im2colUnit;
 use super::mcu::McuComplex;
 use super::EventCounts;
 use crate::arch::Design;
-use crate::gemm;
-use crate::gemm::conv::ConvShape;
-use crate::gemm::fused;
-use crate::models::{Layer, LayerKind, Model};
+use crate::models::{LayerKind, Model};
 use crate::tensor::TensorI8;
 use crate::util::par::map_indexed;
-use crate::util::{Parallelism, Rng};
-
-/// Cap on sampled GEMM rows/cols for the functional sparsity measurement
-/// (keeps ResNet/VGG profiling fast; sparsity is a statistical mean over
-/// ≥64k requantized outputs per layer at these caps — §Perf).
-const SAMPLE_ROWS: usize = 256;
-const SAMPLE_COLS: usize = 256;
-/// Width (in output pixels) of the sampled conv window; the height is then
-/// chosen so the window holds at most [`SAMPLE_ROWS`] output pixels.
-const SAMPLE_WIN_COLS: usize = 16;
-
-/// Conv geometry of the sampled sub-window: same kernel/stride/pad as the
-/// full layer, input cropped so the output window has ≤ [`SAMPLE_ROWS`]
-/// pixels. `c`/`ns` override channels (depthwise samples one channel).
-fn sample_shape(s: &ConvShape, c: usize, ns: usize) -> ConvShape {
-    let ow_s = s.ow().min(SAMPLE_WIN_COLS).max(1);
-    let oh_s = s.oh().min((SAMPLE_ROWS / ow_s).max(1));
-    ConvShape {
-        h: ((oh_s - 1) * s.stride + s.kh).saturating_sub(2 * s.pad).max(1),
-        w: ((ow_s - 1) * s.stride + s.kw).saturating_sub(2 * s.pad).max(1),
-        c,
-        kh: s.kh,
-        kw: s.kw,
-        oc: ns,
-        stride: s.stride,
-        pad: s.pad,
-    }
-}
-
-/// Zero fraction of the synthetic input image fed to the first layer:
-/// natural images are dense (≈0% zeros after normalization).
-const SEED_ACT_SPARSITY: f32 = 0.02;
-
-/// Fit the propagated feature map to the next layer's sampled input shape
-/// by wrap-around tiling (spatial dims and channels), preserving the
-/// measured value/zero structure. With no map yet (first layer), draw a
-/// random near-dense one ([`SEED_ACT_SPARSITY`]).
-fn fit_fmap(prev: Option<&TensorI8>, h: usize, w: usize, c: usize, rng: &mut Rng) -> TensorI8 {
-    let Some(p) = prev.filter(|p| !p.is_empty()) else {
-        return TensorI8::rand_sparse(&[h, w, c], SEED_ACT_SPARSITY, rng);
-    };
-    let (ph, pw, pc) = (p.shape()[0], p.shape()[1], p.shape()[2]);
-    let mut out = TensorI8::zeros(&[h, w, c]);
-    for y in 0..h {
-        for x in 0..w {
-            for ci in 0..c {
-                out.set(&[y, x, ci], p.at(&[y % ph, x % pw, ci % pc]));
-            }
-        }
-    }
-    out
-}
-
-/// FC analogue of [`fit_fmap`]: wrap the flattened feature map into an
-/// `[m, k]` operand sample.
-fn fit_matrix(prev: Option<&TensorI8>, m: usize, k: usize, rng: &mut Rng) -> TensorI8 {
-    let Some(p) = prev.filter(|p| !p.is_empty()) else {
-        return TensorI8::rand_sparse(&[m, k], SEED_ACT_SPARSITY, rng);
-    };
-    let pd = p.data();
-    TensorI8::from_vec(&[m, k], (0..m * k).map(|i| pd[i % pd.len()]).collect())
-}
+use crate::util::Parallelism;
 
 /// Everything the timing/power model needs to know about one layer.
 #[derive(Debug, Clone)]
@@ -153,16 +94,6 @@ impl NetworkTiming {
     }
 }
 
-/// DBB bound for a layer under a model-wide target `nnz` (non-prunable
-/// layers run dense).
-fn layer_bound(l: &Layer, nnz: usize, bz: usize) -> usize {
-    if l.prunable {
-        nnz.min(bz)
-    } else {
-        bz
-    }
-}
-
 /// Functional profile of a model: synthesize DBB-pruned INT8 weights,
 /// run a sampled forward pass, measure per-layer activation sparsity.
 ///
@@ -173,6 +104,12 @@ fn layer_bound(l: &Layer, nnz: usize, bz: usize) -> usize {
 /// run on the tiled parallel engine. Both are bit-exact with their serial
 /// paths at any worker-pool width, so the measured sparsities are
 /// reproducible.
+///
+/// Since the prepared-model engine landed this is a thin wrapper over
+/// [`crate::engine::PreparedModel`]: prepare (the one-time weight
+/// encode/pack) + profile (the sampled execute). Callers that profile or
+/// serve the same model repeatedly should hold the `PreparedModel`
+/// themselves and amortize the prepare across calls.
 pub fn profile_model(model: &Model, nnz: usize, bz: usize, seed: u64) -> Vec<LayerProfile> {
     profile_model_with(model, nnz, bz, seed, Parallelism::auto())
 }
@@ -187,85 +124,8 @@ pub fn profile_model_with(
     seed: u64,
     par: Parallelism,
 ) -> Vec<LayerProfile> {
-    let mut rng = Rng::new(seed);
-    let mut profiles = Vec::with_capacity(model.layers.len());
-    // sampled feature map propagated layer to layer (None before layer 1,
-    // where a near-dense random image is drawn instead)
-    let mut fmap: Option<TensorI8> = None;
-    let nlayers = model.layers.len();
-    for (li, l) in model.layers.iter().enumerate() {
-        let (m, k, n) = l.gemm_dims();
-        let bound = layer_bound(l, nnz, bz);
-        let relu = li + 1 < nlayers;
-        let ns = n.min(SAMPLE_COLS);
-
-        // ---- sampled functional pass to measure output sparsity ----
-        // Conv layers convolve a real window of the propagated feature map
-        // on the fused streaming engine (the operand has genuine IM2COL
-        // structure: duplicated pixels, padding zeros). Depthwise layers
-        // sample one channel (their GEMM K is a single kh·kw window). FC
-        // layers stay plain GEMMs. Sparse layers run the fused top-k
-        // encode + zero-skipping compressed GEMM (§Perf, EXPERIMENTS.md).
-        let w_dense = TensorI8::rand(&[k, ns], &mut rng);
-        let (acc, in_s) = match l.kind {
-            LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => {
-                let chans = if matches!(l.kind, LayerKind::Conv(_)) { s.c } else { 1 };
-                let ss = sample_shape(&s, chans, ns);
-                let x = fit_fmap(fmap.as_ref(), ss.h, ss.w, ss.c, &mut rng);
-                let in_s = x.sparsity();
-                let acc = if bound < bz {
-                    let enc = crate::dbb::DbbMatrix::compress_topk(&w_dense, bz, bound)
-                        .expect("valid block size");
-                    fused::conv2d_dbb_i8(&x, &enc, &ss, par)
-                } else {
-                    fused::conv2d_i8(&x, &w_dense, &ss, par)
-                };
-                (acc, in_s)
-            }
-            LayerKind::Fc(..) => {
-                let ms = m.min(SAMPLE_ROWS);
-                let a = fit_matrix(fmap.as_ref(), ms, k, &mut rng);
-                let in_s = a.sparsity();
-                let acc = if bound < bz {
-                    let enc = crate::dbb::DbbMatrix::compress_topk(&w_dense, bz, bound)
-                        .expect("valid block size");
-                    gemm::tiled::dbb_i8(&a, &enc, par)
-                } else {
-                    gemm::tiled::dense_i8(&a, &w_dense, par)
-                };
-                (acc, in_s)
-            }
-        };
-        let out = requant_relu(&acc, relu);
-
-        let (im2c, raw) = match l.kind {
-            LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => (
-                Im2colUnit::default().magnification(&s),
-                (s.h * s.w * s.c) as u64,
-            ),
-            LayerKind::Fc(i, _) => (1.0, i as u64),
-        };
-
-        profiles.push(LayerProfile {
-            name: l.name.clone(),
-            m,
-            weights: WeightStats::synthetic(k, n, bz, bound),
-            act_sparsity: in_s,
-            im2col_magnification: im2c,
-            raw_act_bytes: raw,
-            out_elems: (m * n) as u64,
-            relu,
-        });
-        // propagate: conv outputs keep spatial form, FC outputs become a
-        // 1×m×n map
-        fmap = Some(if out.shape().len() == 3 {
-            out
-        } else {
-            let (om, on) = (out.shape()[0], out.shape()[1]);
-            out.reshape(&[1, om, on])
-        });
-    }
-    profiles
+    let mut pm = crate::engine::PreparedModel::prepare(model, nnz, bz, seed, par);
+    pm.profile(par)
 }
 
 /// Profile with a *fixed* activation sparsity everywhere (paper Fig. 12's
@@ -283,7 +143,7 @@ pub fn profile_model_fixed_act(
         .enumerate()
         .map(|(li, l)| {
             let (m, k, n) = l.gemm_dims();
-            let bound = layer_bound(l, nnz, bz);
+            let bound = l.dbb_bound(nnz, bz);
             let (im2c, raw) = match l.kind {
                 LayerKind::Conv(s) | LayerKind::DepthwiseConv(s) => (
                     Im2colUnit::default().magnification(&s),

@@ -1,0 +1,234 @@
+//! Property suite for the prepared-model inference engine
+//! (`ssta::engine`): prepare-once/execute-many must be bit-exact with the
+//! historical per-call path that re-encoded weights on every invocation.
+//!
+//! The oracle below *is* that historical path, reconstructed from the
+//! public per-call APIs: draw synthetic weights layer by layer from the
+//! seed, `compress_topk` each prunable layer **inside the layer loop**,
+//! run the per-call-decoding `fused`/`tiled` kernels, requantize and
+//! propagate. The prepared engine must reproduce its per-layer activation
+//! sparsities and outputs to the last bit — across layer kinds
+//! (conv / depthwise / FC), every DBB bound in `1..=BZ`, serial and
+//! multi-threaded pools, and repeated executes.
+
+use ssta::dbb::DbbMatrix;
+use ssta::engine::{PreparedModel, SampleShape};
+use ssta::gemm::conv::ConvShape;
+use ssta::gemm::fused;
+use ssta::gemm::tiled;
+use ssta::models::{Layer, LayerKind, Model};
+use ssta::sim::accel::requant_relu;
+use ssta::tensor::TensorI8;
+use ssta::util::{Parallelism, Rng};
+
+/// Mirrors the engine's wrap-around feature-map fitting.
+fn fit_fmap(p: &TensorI8, h: usize, w: usize, c: usize) -> TensorI8 {
+    let (ph, pw, pc) = (p.shape()[0], p.shape()[1], p.shape()[2]);
+    let mut out = TensorI8::zeros(&[h, w, c]);
+    for y in 0..h {
+        for x in 0..w {
+            for ci in 0..c {
+                out.set(&[y, x, ci], p.at(&[y % ph, x % pw, ci % pc]));
+            }
+        }
+    }
+    out
+}
+
+fn fit_matrix(p: &TensorI8, m: usize, k: usize) -> TensorI8 {
+    let pd = p.data();
+    TensorI8::from_vec(&[m, k], (0..m * k).map(|i| pd[i % pd.len()]).collect())
+}
+
+/// The pre-refactor functional profile: per-call `compress_topk` in the
+/// layer loop, per-call CSC decode in every GEMM. Returns per-layer input
+/// sparsities and the final requantized output. `samples` carries the
+/// sampled geometry (read from the prepared model, whose sampling logic is
+/// the historical one moved verbatim).
+fn oracle_profile(
+    model: &Model,
+    nnz: usize,
+    bz: usize,
+    seed: u64,
+    par: Parallelism,
+    samples: &[SampleShape],
+) -> (Vec<f64>, TensorI8) {
+    const SAMPLE_COLS: usize = 256;
+    const SEED_ACT_SPARSITY: f32 = 0.02;
+    let mut rng = Rng::new(seed);
+    let nlayers = model.layers.len();
+    let mut fmap: Option<TensorI8> = None;
+    let mut sparsities = Vec::with_capacity(nlayers);
+    for (li, l) in model.layers.iter().enumerate() {
+        let (_, k, n) = l.gemm_dims();
+        let bound = l.dbb_bound(nnz, bz);
+        let relu = li + 1 < nlayers;
+        let ns = n.min(SAMPLE_COLS);
+        let w_dense = TensorI8::rand(&[k, ns], &mut rng);
+        let (acc, in_s) = match samples[li] {
+            SampleShape::Conv(ss) => {
+                let x = match &fmap {
+                    None => TensorI8::rand_sparse(
+                        &[ss.h, ss.w, ss.c],
+                        SEED_ACT_SPARSITY,
+                        &mut rng,
+                    ),
+                    Some(p) => fit_fmap(p, ss.h, ss.w, ss.c),
+                };
+                let in_s = x.sparsity();
+                let acc = if bound < bz {
+                    // the per-call encode the engine hoists into prepare
+                    let enc = DbbMatrix::compress_topk(&w_dense, bz, bound).unwrap();
+                    fused::conv2d_dbb_i8(&x, &enc, &ss, par)
+                } else {
+                    fused::conv2d_i8(&x, &w_dense, &ss, par)
+                };
+                (acc, in_s)
+            }
+            SampleShape::Fc { m: ms, k } => {
+                let a = match &fmap {
+                    None => TensorI8::rand_sparse(&[ms, k], SEED_ACT_SPARSITY, &mut rng),
+                    Some(p) => fit_matrix(p, ms, k),
+                };
+                let in_s = a.sparsity();
+                let acc = if bound < bz {
+                    let enc = DbbMatrix::compress_topk(&w_dense, bz, bound).unwrap();
+                    tiled::dbb_i8(&a, &enc, par)
+                } else {
+                    tiled::dense_i8(&a, &w_dense, par)
+                };
+                (acc, in_s)
+            }
+        };
+        sparsities.push(in_s);
+        let out = requant_relu(&acc, relu);
+        fmap = Some(if out.shape().len() == 3 {
+            out
+        } else {
+            let (om, on) = (out.shape()[0], out.shape()[1]);
+            out.reshape(&[1, om, on])
+        });
+    }
+    (sparsities, fmap.expect("model has layers"))
+}
+
+/// Small model covering every layer kind: standard conv (dense fallback +
+/// DBB), strided conv, depthwise conv, and two FC layers.
+fn tiny_mixed_model() -> Model {
+    let shp = |h, c, oc, stride, pad| ConvShape { h, w: h, c, kh: 3, kw: 3, oc, stride, pad };
+    Model {
+        name: "tiny-mix",
+        dataset: "synthetic",
+        layers: vec![
+            Layer {
+                name: "conv1".into(),
+                kind: LayerKind::Conv(shp(12, 3, 8, 1, 1)),
+                prunable: false,
+            },
+            Layer {
+                name: "conv2".into(),
+                kind: LayerKind::Conv(shp(12, 8, 16, 2, 1)),
+                prunable: true,
+            },
+            Layer {
+                name: "dw".into(),
+                kind: LayerKind::DepthwiseConv(shp(6, 16, 16, 1, 1)),
+                prunable: false,
+            },
+            Layer { name: "fc1".into(), kind: LayerKind::Fc(576, 32), prunable: true },
+            Layer { name: "fc2".into(), kind: LayerKind::Fc(32, 10), prunable: false },
+        ],
+    }
+}
+
+fn assert_prepared_matches_oracle(model: &Model, nnz: usize, bz: usize, seed: u64, threads: usize) {
+    let par = Parallelism::threads(threads);
+    let mut pm = PreparedModel::prepare(model, nnz, bz, seed, par);
+    let samples: Vec<SampleShape> = pm.layers().iter().map(|l| l.sample).collect();
+    let profiles = pm.profile(par);
+    let (want_sp, want_out) = oracle_profile(model, nnz, bz, seed, par, &samples);
+    assert_eq!(profiles.len(), want_sp.len());
+    for (p, w) in profiles.iter().zip(&want_sp) {
+        assert_eq!(
+            p.act_sparsity.to_bits(),
+            w.to_bits(),
+            "{}: prepared {} vs oracle {} (nnz={nnz} seed={seed} threads={threads})",
+            p.name,
+            p.act_sparsity,
+            w
+        );
+    }
+    let exec = pm.execute(pm.seed_input(), par);
+    assert_eq!(exec.output, want_out, "final output (nnz={nnz} seed={seed})");
+}
+
+#[test]
+fn prepared_matches_oracle_across_layer_kinds() {
+    // conv + depthwise + FC, dense fallback and DBB layers in one net
+    let m = tiny_mixed_model();
+    assert_prepared_matches_oracle(&m, 3, 8, 42, 1);
+    assert_prepared_matches_oracle(&m, 3, 8, 42, 4);
+}
+
+#[test]
+fn prepared_matches_oracle_every_dbb_bound() {
+    // nnz = 1..=BZ: every density bound, including the bound == bz dense
+    // degenerate
+    let m = tiny_mixed_model();
+    for nnz in 1..=8usize {
+        assert_prepared_matches_oracle(&m, nnz, 8, 7 + nnz as u64, 3);
+    }
+}
+
+#[test]
+fn prepared_matches_oracle_on_served_model() {
+    // convnet5 is what the serving coordinator prepares at startup
+    let m = ssta::models::convnet5();
+    assert_prepared_matches_oracle(&m, 3, 8, 42, 4);
+}
+
+#[test]
+fn serial_and_parallel_prepared_profiles_identical() {
+    let m = tiny_mixed_model();
+    let mut serial = PreparedModel::prepare(&m, 2, 8, 11, Parallelism::serial());
+    let mut auto = PreparedModel::prepare(&m, 2, 8, 11, Parallelism::auto());
+    let ps = serial.profile(Parallelism::serial());
+    let pa = auto.profile(Parallelism::auto());
+    for (a, b) in ps.iter().zip(&pa) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+    }
+}
+
+#[test]
+fn repeated_execute_has_no_state_leakage() {
+    // executes reuse the scratch arena; results must never drift
+    let m = tiny_mixed_model();
+    let pm = PreparedModel::prepare(&m, 3, 8, 5, Parallelism::threads(4));
+    let first = pm.execute(pm.seed_input(), Parallelism::threads(4));
+    for _ in 0..4 {
+        let again = pm.execute(pm.seed_input(), Parallelism::threads(4));
+        assert_eq!(again.output, first.output);
+        assert_eq!(again.act_sparsity, first.act_sparsity);
+    }
+    // a different input in between must not perturb subsequent runs
+    let mut rng = Rng::new(99);
+    let other = TensorI8::rand(&[5, 5, 3], &mut rng);
+    let _ = pm.execute(&other, Parallelism::threads(4));
+    let after = pm.execute(pm.seed_input(), Parallelism::threads(4));
+    assert_eq!(after.output, first.output);
+}
+
+#[test]
+fn profile_model_wrapper_is_the_prepared_path() {
+    // the public sim::accel wrapper and a hand-held PreparedModel agree
+    let m = tiny_mixed_model();
+    let via_wrapper = ssta::sim::accel::profile_model_with(&m, 3, 8, 42, Parallelism::serial());
+    let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+    let direct = pm.profile(Parallelism::serial());
+    for (a, b) in via_wrapper.iter().zip(&direct) {
+        assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.weights.bound, b.weights.bound);
+    }
+}

@@ -24,7 +24,7 @@ step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
 step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step cargo bench --no-run
-step cargo bench --bench perf_hotpath -- gemm/ conv/
+step cargo bench --bench perf_hotpath -- gemm/ conv/ engine/
 echo "(bench results recorded in BENCH_perf_hotpath.json)"
 
 echo
