@@ -8,6 +8,7 @@
 use ssta::arch::{space, Design, Tech};
 use ssta::dbb::{prune::prune_i8, DbbMatrix};
 use ssta::gemm::conv::{im2col, ConvShape};
+use ssta::gemm::ZeroGate;
 use ssta::models;
 use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
 use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
@@ -80,6 +81,32 @@ fn main() {
         set.bench("engine/convnet5_profile_unprepared", move || {
             bb(ssta::sim::accel::profile_model(&m3, 3, 8, 42));
         });
+
+        // steady-state execute with the activation zero-gate on Auto: the
+        // profile ran once, so Auto consults the measured per-layer act
+        // sparsities (the same values the hardware twin prices) and gates
+        // only the layers where skipping pays
+        let m4 = models::convnet5();
+        let mut gated = ssta::engine::PreparedModel::prepare(&m4, 3, 8, 42, Parallelism::auto());
+        gated.profile(Parallelism::auto());
+        let ginput = gated.seed_input().clone();
+        let probe = gated.execute_gated(&ginput, Parallelism::auto(), ZeroGate::Auto);
+        set.report("engine/convnet5_gate_decisions", move || {
+            let layers: Vec<String> = probe
+                .act_sparsity
+                .iter()
+                .zip(&probe.gate_engaged)
+                .map(|(s, g)| format!("{:.0}%{}", 100.0 * s, if *g { "(gated)" } else { "" }))
+                .collect();
+            println!(
+                "convnet5 execute_gated(Auto): per-layer act sparsity = skipped-MAC \
+                 fraction on gated layers: {}",
+                layers.join(" ")
+            );
+        });
+        set.bench("engine/convnet5_execute_gated", move || {
+            bb(gated.execute_gated(&ginput, Parallelism::auto(), ZeroGate::Auto));
+        });
     }
 
     // ---- detailed engine (ground truth; used at small scale) ----
@@ -147,6 +174,62 @@ fn main() {
         let packed = DbbMatrix::compress_with_bound(&wd3, 8, 3).unwrap().pack();
         set.bench("gemm/dbb_i8_512x512x512_packed_auto", move || {
             bb(ssta::gemm::tiled::dbb_i8_packed(&a3, &packed, Parallelism::auto()));
+        });
+    }
+
+    // ---- activation zero-gating (A-side zero-skip, paper §II) ----
+    // The gated kernels are bit-exact with the ungated entries above; what
+    // the gate buys is the skipped-MAC fraction, reported alongside the
+    // timings. 50% is the paper's typical ReLU operating point, 87.5% its
+    // high-sparsity regime (Fig. 12's sweep territory).
+    {
+        let mut rng = Rng::new(11);
+        let a50 = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let a87 = TensorI8::rand_sparse(&[512, 512], 0.875, &mut rng);
+        let w = TensorI8::rand(&[512, 512], &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 3);
+        let packed = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap().pack();
+
+        // dense gated entries skip exactly A's zero fraction of the MACs;
+        // the DBB entries skip the zero-activation share of the *stored*
+        // entries (dbb_gate_stats counts them exactly)
+        let (s50, s87) = (a50.sparsity(), a87.sparsity());
+        let (skip50, tot50) = ssta::gemm::dbb_gate_stats(&a50, &packed);
+        let (skip87, tot87) = ssta::gemm::dbb_gate_stats(&a87, &packed);
+        set.report("gemm/gated_skip_fractions", move || {
+            println!(
+                "512³ gated entries, skipped-MAC fractions: dense 50pct {s50:.3}, \
+                 dense 87pct {s87:.3}; dbb 3/8 50pct {:.3} ({skip50}/{tot50}), \
+                 dbb 3/8 87pct {:.3} ({skip87}/{tot87})",
+                skip50 as f64 / tot50 as f64,
+                skip87 as f64 / tot87 as f64,
+            );
+        });
+
+        let (w2, a50b) = (w.clone(), a50.clone());
+        set.bench("gemm/dense_i8_512_gated_50pct", move || {
+            bb(ssta::gemm::tiled::dense_i8_gated(&a50b, &w2, Parallelism::auto(), ZeroGate::On));
+        });
+        let (w3, a87b) = (w.clone(), a87.clone());
+        set.bench("gemm/dense_i8_512_gated_87pct", move || {
+            bb(ssta::gemm::tiled::dense_i8_gated(&a87b, &w3, Parallelism::auto(), ZeroGate::On));
+        });
+        let packed2 = packed.clone();
+        set.bench("gemm/dbb_i8_512_gated_50pct", move || {
+            bb(ssta::gemm::tiled::dbb_i8_packed_gated(
+                &a50,
+                &packed2,
+                Parallelism::auto(),
+                ZeroGate::On,
+            ));
+        });
+        set.bench("gemm/dbb_i8_512_gated_87pct", move || {
+            bb(ssta::gemm::tiled::dbb_i8_packed_gated(
+                &a87,
+                &packed,
+                Parallelism::auto(),
+                ZeroGate::On,
+            ));
         });
     }
 

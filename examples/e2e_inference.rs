@@ -28,7 +28,7 @@ use ssta::arch::Design;
 use ssta::cli::Args;
 use ssta::coordinator::{request::argmax, Config, Coordinator};
 use ssta::gemm::conv::{im2col, ConvShape};
-use ssta::gemm::{fused, tiled};
+use ssta::gemm::{fused, tiled, ZeroGate};
 use ssta::runtime::{HostTensor, Runtime};
 use ssta::tensor::TensorI8;
 use ssta::util::error::{Error, Result};
@@ -70,7 +70,7 @@ fn prepared_engine_showcase() {
     let m = ssta::models::convnet5();
     let par = Parallelism::auto();
     let t0 = Instant::now();
-    let prepared = ssta::engine::PreparedModel::prepare(&m, 3, 8, 42, par);
+    let mut prepared = ssta::engine::PreparedModel::prepare(&m, 3, 8, 42, par);
     let t_prep = t0.elapsed();
     let t1 = Instant::now();
     let first = prepared.execute(prepared.seed_input(), par);
@@ -82,6 +82,28 @@ fn prepared_engine_showcase() {
          then execute {t_exec:.2?}/call with zero encode work",
         prepared.model_name(),
         prepared.operand_bytes(),
+    );
+
+    // ---- A-side zero-gating on the measured sparsities (paper §II) ----
+    // profile once, then let ZeroGate::Auto pick per layer from the same
+    // measured act sparsities the hardware twin prices
+    prepared.profile(par);
+    let off = prepared.execute_gated(prepared.seed_input(), par, ZeroGate::Off);
+    let t2 = Instant::now();
+    let auto = prepared.execute_gated(prepared.seed_input(), par, ZeroGate::Auto);
+    let t_gated = t2.elapsed();
+    assert_eq!(off.output, auto.output, "zero-gating must be bit-exact");
+    let gated = auto.gate_engaged.iter().filter(|&&g| g).count();
+    println!(
+        "zero-gate Auto: {gated}/{} layers gate on measured act sparsity \
+         [{}] — gated execute {t_gated:.2?}, outputs bit-identical",
+        auto.gate_engaged.len(),
+        auto
+            .act_sparsity
+            .iter()
+            .map(|s| format!("{:.0}%", 100.0 * s))
+            .collect::<Vec<_>>()
+            .join(" "),
     );
 }
 

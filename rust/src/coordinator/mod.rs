@@ -24,6 +24,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::arch::Design;
+use crate::gemm::ZeroGate;
 use crate::power;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::accel::{network_timing_with, profile_model_fixed_act, LayerProfile};
@@ -65,6 +66,13 @@ pub struct Config {
     /// *measured* per-layer activation sparsities instead of the
     /// `act_sparsity` scalar. Default `true`.
     pub measured_sparsity: bool,
+    /// Activation zero-gating policy installed on the prepared model (its
+    /// functional profile/execute passes). Default [`ZeroGate::Auto`]:
+    /// after the startup profile, the engine's gate and the twin's priced
+    /// A-side gating consume the *same* measured per-layer sparsities —
+    /// one sparsity source. Gating is bit-exact, so this knob never
+    /// changes a served or profiled number.
+    pub zero_gate: ZeroGate,
 }
 
 impl Default for Config {
@@ -76,6 +84,7 @@ impl Default for Config {
             max_wait: Duration::from_millis(2),
             parallelism: Parallelism::serial(),
             measured_sparsity: true,
+            zero_gate: ZeroGate::default(),
         }
     }
 }
@@ -313,6 +322,7 @@ fn leader_loop(
         let model = crate::models::convnet5();
         let mut prepared =
             crate::engine::PreparedModel::prepare(&model, nnz, 8, TWIN_SEED, cfg.parallelism);
+        prepared.set_zero_gate(cfg.zero_gate);
         let profiles = prepared.profile(cfg.parallelism);
         Twin::from_profiles(cfg.design, profiles, cfg.parallelism)
     } else {
@@ -557,7 +567,14 @@ mod tests {
             TWIN_SEED,
             Parallelism::serial(),
         );
+        pm.set_zero_gate(Config::default().zero_gate);
         let measured = pm.profile(Parallelism::serial());
+        // one sparsity source: the values the twin prices are the values
+        // the engine's ZeroGate::Auto consults
+        let engine_side = pm.measured_act_sparsity().expect("profile ran");
+        for (p, &s) in measured.iter().zip(engine_side) {
+            assert_eq!(p.act_sparsity.to_bits(), s.to_bits(), "{}", p.name);
+        }
         let spread: Vec<f64> = measured.iter().map(|p| p.act_sparsity).collect();
         let min = spread.iter().cloned().fold(f64::MAX, f64::min);
         let max = spread.iter().cloned().fold(f64::MIN, f64::max);

@@ -29,12 +29,30 @@
 //! per-layer activation sparsities to the last bit — and records the
 //! measured sparsities *into* the prepared model, where the serving
 //! coordinator's hardware twin reads them.
+//!
+//! ## Activation-side zero-gating
+//!
+//! The measured per-layer sparsities are not just reported — they are *fed
+//! back into the kernels*. Every execute resolves a
+//! [`crate::gemm::ZeroGate`] policy per layer (the model-level default is
+//! [`ZeroGate::Auto`]; see [`PreparedModel::set_zero_gate`] /
+//! [`PreparedModel::execute_gated`]): `Auto` consults the layer's
+//! *measured* activation sparsity from the recorded profile (falling back
+//! to the zero fraction of the current input operand, which the execute
+//! loop measures anyway) and engages the zero-gated row kernels only where
+//! gating pays. The same measured values price the A-side gating in the
+//! hardware twin's timing model (the `act_sparsity` field of
+//! [`crate::sim::accel::LayerProfile`]) — one sparsity source for the
+//! priced datapath gate and the software gate. Gating is bit-exact, so
+//! [`Execution::output`] is identical under every policy
+//! (`rust/tests/zero_gate.rs`); the per-layer decisions are reported in
+//! [`Execution::gate_engaged`].
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
 use crate::gemm::fused::{self, PatchScratch};
 use crate::gemm::tiled;
-use crate::gemm::DbbPacked;
+use crate::gemm::{DbbPacked, ZeroGate};
 use crate::models::{LayerKind, Model};
 use crate::sim::accel::{requant_relu, LayerProfile};
 use crate::sim::analytic::WeightStats;
@@ -172,8 +190,15 @@ pub struct PreparedLayer {
 pub struct Execution {
     /// Final layer's requantized INT8 output.
     pub output: TensorI8,
-    /// Measured input-activation zero fraction per layer.
+    /// Measured zero fraction of each layer's fitted *input* operand (the
+    /// raw feature map / FC matrix as fed to the layer, before any IM2COL
+    /// expansion — the same convention as
+    /// [`crate::sim::accel::LayerProfile::act_sparsity`]).
     pub act_sparsity: Vec<f64>,
+    /// Whether the activation zero-gate engaged for each layer (always all
+    /// `false` under [`ZeroGate::Off`], all `true` under [`ZeroGate::On`];
+    /// under [`ZeroGate::Auto`] the per-layer threshold decision).
+    pub gate_engaged: Vec<bool>,
 }
 
 /// A model lowered once, executable many times: the software twin of the
@@ -188,6 +213,9 @@ pub struct PreparedModel {
     seed_input: TensorI8,
     /// Recorded by [`Self::profile`]; empty until a functional profile ran.
     measured_act: Vec<f64>,
+    /// Model-level default gating policy [`Self::execute`] applies
+    /// (default [`ZeroGate::Auto`]).
+    zero_gate: ZeroGate,
     /// Per-worker streaming-IM2COL row buffers, preallocated at prepare and
     /// reused by every [`Self::execute`] (concurrent executes fall back to
     /// a transient arena rather than blocking).
@@ -299,66 +327,124 @@ impl PreparedModel {
             layers,
             seed_input: seed_input.unwrap_or_else(|| TensorI8::zeros(&[1, 1, 1])),
             measured_act: Vec::new(),
+            zero_gate: ZeroGate::default(),
             scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
         }
+    }
+
+    /// The model-level default [`ZeroGate`] policy.
+    pub fn zero_gate(&self) -> ZeroGate {
+        self.zero_gate
+    }
+
+    /// Override the default gating policy [`Self::execute`] applies.
+    /// Gating never changes a result bit; this is a performance knob.
+    pub fn set_zero_gate(&mut self, gate: ZeroGate) {
+        self.zero_gate = gate;
+    }
+
+    /// The measured per-layer activation sparsities — `Some` once
+    /// [`Self::profile`] ran. This is the **one sparsity source** shared by
+    /// the software gate (`Auto` consults it per layer) and the hardware
+    /// twin's priced A-side gating ([`Self::profiles`] copies the same
+    /// values into [`LayerProfile::act_sparsity`]).
+    pub fn measured_act_sparsity(&self) -> Option<&[f64]> {
+        if self.measured_act.len() != self.layers.len() {
+            return None;
+        }
+        Some(&self.measured_act)
     }
 
     /// Run the whole network on `input` (any non-empty feature map /
     /// matrix; it is wrap-fitted to the first layer's sampled shape) with
     /// zero encode/decode work: every layer streams its prepared operand
-    /// through the fused/tiled kernels. Repeated calls with the same input
-    /// return identical results — the engine holds no mutable state beyond
-    /// the scratch buffers, which are fully rewritten before every read.
+    /// through the fused/tiled kernels, under the model-level default
+    /// [`ZeroGate`] policy ([`ZeroGate::Auto`] unless
+    /// [`Self::set_zero_gate`] changed it). Repeated calls with the same
+    /// input return identical results — the engine holds no mutable state
+    /// beyond the scratch buffers, which are fully rewritten before every
+    /// read, and gating never changes a bit.
     pub fn execute(&self, input: &TensorI8, par: Parallelism) -> Execution {
+        self.execute_gated(input, par, self.zero_gate)
+    }
+
+    /// [`Self::execute`] under an explicit [`ZeroGate`] policy. `Auto`
+    /// resolves per layer against the *measured* activation sparsity the
+    /// recorded profile holds for that layer (the same value the hardware
+    /// twin prices), falling back to the zero fraction of the layer's
+    /// current input operand — which the execute loop measures anyway — on
+    /// an unprofiled model. The drivers receive a pre-resolved `On`/`Off`,
+    /// so no operand is scanned twice.
+    pub fn execute_gated(&self, input: &TensorI8, par: Parallelism, gate: ZeroGate) -> Execution {
         match self.scratch.try_lock() {
-            Ok(mut guard) => self.execute_with(input, par, &mut guard),
+            Ok(mut guard) => self.execute_gated_with(input, par, gate, &mut guard),
             // a panicked execute poisoned the arena: the buffers are fully
             // rewritten before every read, so reclaiming them is safe
             Err(std::sync::TryLockError::Poisoned(p)) => {
-                self.execute_with(input, par, &mut p.into_inner())
+                self.execute_gated_with(input, par, gate, &mut p.into_inner())
             }
             // another execute holds the arena: run on a transient one
             Err(std::sync::TryLockError::WouldBlock) => {
-                self.execute_with(input, par, &mut PatchScratch::new())
+                self.execute_gated_with(input, par, gate, &mut PatchScratch::new())
             }
         }
     }
 
-    /// [`Self::execute`] on a caller-owned scratch arena.
+    /// [`Self::execute`] on a caller-owned scratch arena (model-level
+    /// default gating policy).
     pub fn execute_with(
         &self,
         input: &TensorI8,
         par: Parallelism,
         scratch: &mut PatchScratch,
     ) -> Execution {
+        self.execute_gated_with(input, par, self.zero_gate, scratch)
+    }
+
+    /// [`Self::execute_gated`] on a caller-owned scratch arena.
+    pub fn execute_gated_with(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        gate: ZeroGate,
+        scratch: &mut PatchScratch,
+    ) -> Execution {
         assert!(!input.is_empty(), "execute input must be non-empty");
         let mut act_sparsity = Vec::with_capacity(self.layers.len());
+        let mut gate_engaged = Vec::with_capacity(self.layers.len());
         let mut fmap: Option<TensorI8> = None;
-        for l in &self.layers {
+        for (li, l) in self.layers.iter().enumerate() {
             let prev = fmap.as_ref().unwrap_or(input);
-            let (acc, in_s) = match l.sample {
+            let (acc, in_s, engaged) = match l.sample {
                 SampleShape::Conv(ss) => {
                     let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
                     let in_s = x.sparsity();
+                    let engaged = gate.engaged(self.measured_act.get(li).copied().unwrap_or(in_s));
+                    let g = ZeroGate::resolved(engaged);
                     let acc = match &l.operand {
                         PackedOperand::Dbb(p) => {
-                            fused::conv2d_dbb_i8_packed_with(&x, p, &ss, par, scratch)
+                            fused::conv2d_dbb_i8_packed_gated_with(&x, p, &ss, par, g, scratch)
                         }
-                        PackedOperand::Dense(w) => fused::conv2d_i8_with(&x, w, &ss, par, scratch),
+                        PackedOperand::Dense(w) => {
+                            fused::conv2d_i8_gated_with(&x, w, &ss, par, g, scratch)
+                        }
                     };
-                    (acc, in_s)
+                    (acc, in_s, engaged)
                 }
                 SampleShape::Fc { m, k } => {
                     let a = fit_matrix_from(prev, m, k);
                     let in_s = a.sparsity();
+                    let engaged = gate.engaged(self.measured_act.get(li).copied().unwrap_or(in_s));
+                    let g = ZeroGate::resolved(engaged);
                     let acc = match &l.operand {
-                        PackedOperand::Dbb(p) => tiled::dbb_i8_packed(&a, p, par),
-                        PackedOperand::Dense(w) => tiled::dense_i8(&a, w, par),
+                        PackedOperand::Dbb(p) => tiled::dbb_i8_packed_gated(&a, p, par, g),
+                        PackedOperand::Dense(w) => tiled::dense_i8_gated(&a, w, par, g),
                     };
-                    (acc, in_s)
+                    (acc, in_s, engaged)
                 }
             };
             act_sparsity.push(in_s);
+            gate_engaged.push(engaged);
             let out = requant_relu(&acc, l.relu);
             // propagate: conv outputs keep spatial form, FC outputs become
             // a 1×m×n map
@@ -372,6 +458,7 @@ impl PreparedModel {
         Execution {
             output: fmap.unwrap_or_else(|| input.clone()),
             act_sparsity,
+            gate_engaged,
         }
     }
 
@@ -379,7 +466,9 @@ impl PreparedModel {
     /// `profile_model` pass), record the measured per-layer activation
     /// sparsities into the model, and return the layer profiles the
     /// timing/power models consume. Bit-exact with the per-call-encoding
-    /// path for the same `(model, nnz, bz, seed)` at any worker-pool width.
+    /// path for the same `(model, nnz, bz, seed)` at any worker-pool width
+    /// and under any [`ZeroGate`] policy (gating never changes a bit, so
+    /// the recorded sparsities are gating-invariant).
     pub fn profile(&mut self, par: Parallelism) -> Vec<LayerProfile> {
         let rec = self.execute(&self.seed_input, par);
         self.measured_act = rec.act_sparsity;
@@ -485,6 +574,48 @@ mod tests {
         let rec = pm.execute(&flat, Parallelism::serial());
         assert_eq!(rec.act_sparsity.len(), m.layers.len());
         assert!(!rec.output.is_empty());
+    }
+
+    #[test]
+    fn gate_policies_share_one_output_and_report_decisions() {
+        let m = models::lenet5();
+        let pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::serial());
+        let par = Parallelism::serial();
+        let off = pm.execute_gated(pm.seed_input(), par, ZeroGate::Off);
+        let on = pm.execute_gated(pm.seed_input(), par, ZeroGate::On);
+        let auto = pm.execute_gated(pm.seed_input(), par, ZeroGate::Auto);
+        assert_eq!(off.output, on.output, "gating must be bit-exact");
+        assert_eq!(off.output, auto.output);
+        assert_eq!(off.act_sparsity, on.act_sparsity);
+        assert!(off.gate_engaged.iter().all(|&g| !g));
+        assert!(on.gate_engaged.iter().all(|&g| g));
+        // Auto mirrors the per-layer threshold on the measured input
+        // sparsities (unprofiled model → current-operand fallback)
+        for (li, (&s, &g)) in auto.act_sparsity.iter().zip(&auto.gate_engaged).enumerate() {
+            assert_eq!(g, ZeroGate::Auto.engaged(s), "layer {li}: s={s}");
+        }
+    }
+
+    #[test]
+    fn auto_consults_recorded_profile_after_profiling() {
+        let m = models::convnet5();
+        let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+        assert_eq!(pm.zero_gate(), ZeroGate::Auto, "default policy");
+        assert!(pm.measured_act_sparsity().is_none());
+        pm.profile(Parallelism::serial());
+        let measured = pm.measured_act_sparsity().expect("profile ran").to_vec();
+        // same sparsity source as the twin's priced profiles
+        let profiles = pm.profiles().unwrap();
+        for (p, &s) in profiles.iter().zip(&measured) {
+            assert_eq!(p.act_sparsity.to_bits(), s.to_bits(), "{}", p.name);
+        }
+        // Auto decisions on the seed input now follow the recorded values
+        let auto = pm.execute_gated(pm.seed_input(), Parallelism::serial(), ZeroGate::Auto);
+        for (li, (&s, &g)) in measured.iter().zip(&auto.gate_engaged).enumerate() {
+            assert_eq!(g, ZeroGate::Auto.engaged(s), "layer {li}: measured={s}");
+        }
+        // the seed input is near-dense (2% zeros): layer 0 must not gate
+        assert!(!auto.gate_engaged[0], "near-dense first layer must not gate");
     }
 
     #[test]

@@ -26,12 +26,19 @@
 //! order-independent) and, for the f32 training variant, bit-exact with
 //! `im2col_f32` + `matmul` (the per-row accumulation order is preserved).
 //! Property-tested here and in `rust/tests/fused_conv.rs`.
+//!
+//! The `*_gated` INT8 entry points additionally take a
+//! [`crate::gemm::ZeroGate`] policy: when the gate engages, the generated
+//! patch rows stream through the zero-gated row kernels, so zero
+//! activations — including the IM2COL padding zeros the row generator
+//! writes — skip their multiplies entirely, still bit-exact
+//! (`rust/tests/zero_gate.rs`).
 
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
-use crate::gemm::DbbPacked;
+use crate::gemm::{DbbPacked, ZeroGate};
 use crate::tensor::{Tensor, TensorF32, TensorI32, TensorI8};
 
 /// Patch rows generated per inner-kernel call — the software row buffer.
@@ -256,6 +263,36 @@ pub fn conv2d_i8_with(
     par: Parallelism,
     scratch: &mut PatchScratch,
 ) -> TensorI32 {
+    conv2d_i8_gated_with(x, w, s, par, ZeroGate::Off, scratch)
+}
+
+/// [`conv2d_i8`] under a [`ZeroGate`] policy (transient scratch).
+pub fn conv2d_i8_gated(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+) -> TensorI32 {
+    conv2d_i8_gated_with(x, w, s, par, gate, &mut PatchScratch::new())
+}
+
+/// [`conv2d_i8_with`] under a [`ZeroGate`] policy: when the gate engages,
+/// each generated patch-row chunk streams through the zero-gated row kernel
+/// instead — zero activations (including every IM2COL padding zero the row
+/// generator writes) skip their multiplies. `Auto` measures the *raw
+/// feature map* once (O(H·W·C), far below the conv work); the IM2COL
+/// operand's zero fraction is at least that (padding only adds zeros), so
+/// `Auto` under-engages, never over-engages. Bit-exact with
+/// [`conv2d_i8_with`] under every policy.
+pub fn conv2d_i8_gated_with(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
     let batch = batch_of(x, s);
     check_weights(w, s);
     let (k, n) = (s.gemm_k(), s.oc);
@@ -265,9 +302,15 @@ pub fn conv2d_i8_with(
         return c;
     }
     let (xd, wd) = (x.data(), w.data());
-    conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-        crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
-    });
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::dense_rows_i8_gated(patch, wd, out, 0, k, n)
+        });
+    } else {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
+        });
+    }
     c
 }
 
@@ -304,6 +347,37 @@ pub fn conv2d_dbb_i8_packed_with(
     par: Parallelism,
     scratch: &mut PatchScratch,
 ) -> TensorI32 {
+    conv2d_dbb_i8_packed_gated_with(x, w, s, par, ZeroGate::Off, scratch)
+}
+
+/// [`conv2d_dbb_i8_packed`] under a [`ZeroGate`] policy (transient
+/// scratch).
+pub fn conv2d_dbb_i8_packed_gated(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+) -> TensorI32 {
+    conv2d_dbb_i8_packed_gated_with(x, w, s, par, gate, &mut PatchScratch::new())
+}
+
+/// [`conv2d_dbb_i8_packed_with`] under a [`ZeroGate`] policy — the fully
+/// prepared *and* gated hot path: no encode, no decode, no per-call buffer
+/// allocation, and zero activations skip their MACs (both operand
+/// sparsities exploited at once, the paper's joint-sparsity claim in
+/// software). `Auto` measures the raw feature map once; see
+/// [`conv2d_i8_gated_with`] for why that is a safe under-estimate of the
+/// IM2COL operand's zero fraction. Bit-exact with
+/// [`conv2d_dbb_i8_packed_with`] under every policy.
+pub fn conv2d_dbb_i8_packed_gated_with(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
     let batch = batch_of(x, s);
     assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
     assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
@@ -315,9 +389,15 @@ pub fn conv2d_dbb_i8_packed_with(
     }
     let (cp, en) = (w.col_ptr(), w.entries());
     let xd = x.data();
-    conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-        crate::gemm::dbb_rows_i8(patch, cp, en, out, 0, k, n)
-    });
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::dbb_rows_i8_gated(patch, cp, en, out, 0, k, n)
+        });
+    } else {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::dbb_rows_i8(patch, cp, en, out, 0, k, n)
+        });
+    }
     c
 }
 
@@ -493,6 +573,36 @@ mod tests {
                 &mut scratch.borrow_mut(),
             );
             assert_eq!(got.data(), want.data(), "shape={s:?} nnz={nnz} threads={threads}");
+        });
+    }
+
+    #[test]
+    fn gated_conv_bit_exact_prop() {
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let threads = rng.below(8) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let gate = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On][rng.below(3)];
+            let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], p_zero, rng);
+            let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+            let par = Parallelism::threads(threads);
+            assert_eq!(
+                conv2d_i8_gated(&x, &w, &s, par, gate).data(),
+                conv2d_i8(&x, &w, &s, par).data(),
+                "shape={s:?} threads={threads} p={p_zero} gate={gate:?}"
+            );
+            let wg = crate::dbb::DbbMatrix::compress_topk(
+                &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+                8,
+                rng.below(8) + 1,
+            )
+            .unwrap();
+            let packed = DbbPacked::pack(&wg);
+            assert_eq!(
+                conv2d_dbb_i8_packed_gated(&x, &packed, &s, par, gate).data(),
+                conv2d_dbb_i8_packed(&x, &packed, &s, par).data(),
+                "dbb shape={s:?} threads={threads} p={p_zero} gate={gate:?}"
+            );
         });
     }
 

@@ -30,6 +30,26 @@
 //! §IV-C's hardware IM2COL unit, in software), never allocating the `M×K`
 //! operand — peak extra memory is `O(threads · PATCH_ROWS · K)` — and are
 //! bit-exact with [`conv::conv2d_direct`] and with the materializing path.
+//!
+//! ## Activation-side zero-gating
+//!
+//! The paper's datapath exploits *both* operand sparsities: weight zeros
+//! are compressed away offline by the DBB encoding, while activation zeros
+//! are **gated in the datapath** — a zero activation suppresses the MAC's
+//! switching at runtime (§II, and the Fig. 12 sweeps at 50%/80% activation
+//! sparsity). The software analogue is the [`ZeroGate`] policy: the gated
+//! kernel variants (`dense_rows_i8_gated` / `dbb_rows_i8_gated`, reached
+//! through the `*_gated` entry points of this module, [`tiled`] and
+//! [`fused`]) run a cheap per-row occupancy scan over the A operand — O(K),
+//! amortized across all `N` output columns — and skip the multiply for every
+//! zero activation entry. Skipping is **bit-exact**: a zero activation
+//! contributes exactly 0 to the INT32 accumulator and the surviving terms
+//! accumulate in the unchanged order, so gated and ungated results are
+//! identical to the bit (property-tested in `rust/tests/zero_gate.rs`).
+//! `ZeroGate::Auto` engages the gate only when the measured A-side zero
+//! fraction clears [`ZeroGate::AUTO_THRESHOLD`]; the end-to-end consumer is
+//! [`crate::engine::PreparedModel::execute`], which resolves `Auto` per
+//! layer from the activation sparsities its own profile pass measured.
 
 pub mod conv;
 pub mod fused;
@@ -37,6 +57,75 @@ pub mod tiled;
 
 use crate::dbb::DbbMatrix;
 use crate::tensor::{TensorI32, TensorI8};
+
+/// Activation-side zero-gating policy — the software form of the paper's
+/// A-operand MAC gating (§II: a zero activation suppresses the multiply in
+/// the datapath; the DBB encoding only ever compresses the weight side).
+///
+/// Gating never changes a result bit (`dense_rows_i8_gated` /
+/// `dbb_rows_i8_gated` skip terms that are exactly 0 in the INT32
+/// accumulation and keep the surviving order), so the policy is purely a
+/// performance knob:
+///
+/// * [`ZeroGate::Off`] — the ungated inner kernels, branch-free per DBB
+///   entry. Right when the A operand is dense.
+/// * [`ZeroGate::On`] — always run the per-row occupancy scan and skip
+///   zero-activation multiplies.
+/// * [`ZeroGate::Auto`] (default) — measure (or be told) the A-side zero
+///   fraction and gate only when it clears [`ZeroGate::AUTO_THRESHOLD`].
+///   At the GEMM/conv driver level the measurement is one `O(M·K)` /
+///   `O(H·W·C)` scan of the operand the caller already holds;
+///   [`crate::engine::PreparedModel::execute`] resolves `Auto` per layer
+///   from its profiled activation sparsities and passes the drivers a
+///   pre-resolved `On`/`Off`, so no operand is ever scanned twice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ZeroGate {
+    /// Never gate: the exact pre-gating code path.
+    Off,
+    /// Gate when the measured A-side zero fraction clears
+    /// [`ZeroGate::AUTO_THRESHOLD`].
+    #[default]
+    Auto,
+    /// Always gate.
+    On,
+}
+
+impl ZeroGate {
+    /// A-side zero fraction above which `Auto` engages the gate. Below it
+    /// the per-row occupancy scan and the per-entry zero test cost more
+    /// than the multiplies they would skip; well above it the DBB walk
+    /// drops a proportional fraction of its MACs.
+    pub const AUTO_THRESHOLD: f64 = 0.25;
+
+    /// Resolve the policy against a measured A-side zero fraction.
+    pub fn engaged(self, act_sparsity: f64) -> bool {
+        match self {
+            ZeroGate::Off => false,
+            ZeroGate::On => true,
+            ZeroGate::Auto => act_sparsity >= Self::AUTO_THRESHOLD,
+        }
+    }
+
+    /// [`Self::engaged`] with the measurement deferred, so `Off`/`On` never
+    /// pay the operand scan.
+    pub(crate) fn resolve_with<F: FnOnce() -> f64>(self, measure: F) -> bool {
+        match self {
+            ZeroGate::Off => false,
+            ZeroGate::On => true,
+            ZeroGate::Auto => measure() >= Self::AUTO_THRESHOLD,
+        }
+    }
+
+    /// The policy collapsed to a pre-resolved `On`/`Off` (what the engine
+    /// hands the kernel drivers after consulting its measured profile).
+    pub fn resolved(engage: bool) -> ZeroGate {
+        if engage {
+            ZeroGate::On
+        } else {
+            ZeroGate::Off
+        }
+    }
+}
 
 /// Inner kernel shared by the serial and tiled dense GEMMs: accumulate the
 /// output rows `row0..row0 + out.len()/n` into `out` (a row-contiguous
@@ -69,6 +158,49 @@ pub(crate) fn dense_rows_i8(
     }
 }
 
+/// Zero-gated variant of [`dense_rows_i8`]: a run-length zero-skip pass
+/// over each A row — zero runs are consumed at one compare per element
+/// *outside* the `N`-wide MAC loop (the occupancy scan, O(K), amortized
+/// across all `N` columns) and only the non-zero runs stream through the
+/// multiplies, branch-free within a run. An all-zero row skips its `K·N`
+/// MACs outright; no scratch is allocated. Bit-exact with the ungated
+/// kernel: the surviving terms are the exact terms it accumulates, in the
+/// same order.
+pub(crate) fn dense_rows_i8_gated(
+    ad: &[i8],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..row * k + k];
+        let mut kk = 0usize;
+        while kk < k {
+            if arow[kk] == 0 {
+                kk += 1;
+                continue;
+            }
+            let start = kk;
+            while kk < k && arow[kk] != 0 {
+                kk += 1;
+            }
+            for kidx in start..kk {
+                let av = arow[kidx] as i32;
+                let wrow = &wd[kidx * n..kidx * n + n];
+                for (cv, &wv) in crow.iter_mut().zip(wrow) {
+                    *cv += av * wv as i32;
+                }
+            }
+        }
+    }
+}
+
 /// Dense GEMM: `C[M×N] = A[M×K] · W[K×N]`, INT8 operands, INT32 accumulate.
 pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
     let (m, k) = (a.shape()[0], a.shape()[1]);
@@ -76,6 +208,22 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
     assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
     let mut c = TensorI32::zeros(&[m, n]);
     dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
+    c
+}
+
+/// [`dense_i8`] under a [`ZeroGate`] policy: `Auto` measures `A`'s zero
+/// fraction once (O(M·K), a ~`1/N` fraction of the MAC work) and gates when
+/// it clears the threshold. Bit-exact with [`dense_i8`] under every policy.
+pub fn dense_i8_gated(a: &TensorI8, w: &TensorI8, gate: ZeroGate) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
+    let mut c = TensorI32::zeros(&[m, n]);
+    if gate.resolve_with(|| a.sparsity()) {
+        dense_rows_i8_gated(a.data(), w.data(), c.data_mut(), 0, k, n);
+    } else {
+        dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
+    }
     c
 }
 
@@ -216,6 +364,99 @@ pub(crate) fn dbb_rows_i8(
     }
 }
 
+/// Zero-gated variant of [`dbb_rows_i8`]: a per-row occupancy scan (O(K),
+/// amortized across all `N` columns) classifies each A row once —
+///
+/// * **all-zero** rows write zeros and skip every one of their
+///   `N · entries-per-column` MACs;
+/// * **fully dense** rows take the ungated branch-free walk (the gate has
+///   nothing to skip, so it must not pay the per-entry test);
+/// * **mixed** rows walk the weight stream with the gate armed: each stored
+///   entry muxes its activation, and a zero activation skips the multiply.
+///
+/// Bit-exact with [`dbb_rows_i8`]: a skipped term contributes exactly 0 to
+/// the INT32 accumulator and the surviving terms keep their stream order.
+pub(crate) fn dbb_rows_i8_gated(
+    ad: &[i8],
+    col_ptr: &[usize],
+    entries: &[(u32, i32)],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..(row + 1) * k];
+        let nnz = k - arow.iter().filter(|&&a| a == 0).count();
+        if nnz == 0 {
+            crow.fill(0);
+            continue;
+        }
+        if nnz == k {
+            for (col, cv) in crow.iter_mut().enumerate() {
+                let mut acc = 0i32;
+                for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
+                    acc += arow[kk as usize] as i32 * wv;
+                }
+                *cv = acc;
+            }
+            continue;
+        }
+        for (col, cv) in crow.iter_mut().enumerate() {
+            let mut acc = 0i32;
+            for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
+                let av = arow[kk as usize] as i32;
+                // the gate: a zero activation suppresses the MAC
+                if av != 0 {
+                    acc += av * wv;
+                }
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// [`dbb_i8_packed`] under a [`ZeroGate`] policy: `Auto` measures `A`'s
+/// zero fraction once and gates when it clears the threshold. Bit-exact
+/// with [`dbb_i8_packed`] under every policy.
+pub fn dbb_i8_packed_gated(a: &TensorI8, w: &DbbPacked, gate: ZeroGate) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
+    let mut c = TensorI32::zeros(&[m, w.n]);
+    if gate.resolve_with(|| a.sparsity()) {
+        dbb_rows_i8_gated(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
+    } else {
+        dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
+    }
+    c
+}
+
+/// MACs the activation gate skips for a DBB GEMM `A · decompress(W)`:
+/// every `(row, stored-entry)` pair whose muxed activation `A[row, kk]` is
+/// exactly zero. Returns `(skipped, executed_total)` where `executed_total
+/// = M · total_nnz` is what the ungated DBB walk multiplies — the
+/// skipped-MAC fraction the gated benches report alongside their timings.
+pub fn dbb_gate_stats(a: &TensorI8, w: &DbbPacked) -> (u64, u64) {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "gate stats inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
+    let ad = a.data();
+    // zero-row counts per k index: zc[kk] = rows whose A[row, kk] == 0
+    let mut zc = vec![0u64; k];
+    for row in 0..m {
+        for (kk, &v) in ad[row * k..(row + 1) * k].iter().enumerate() {
+            if v == 0 {
+                zc[kk] += 1;
+            }
+        }
+    }
+    let skipped = w.entries().iter().map(|&(kk, _)| zc[kk as usize]).sum();
+    (skipped, m as u64 * w.entries().len() as u64)
+}
+
 /// Count of effective MAC operations for a DBB GEMM (per paper Table V
 /// footnote: "effective operations" = 2 × dense MAC count, independent of
 /// how many the hardware actually executed).
@@ -309,5 +550,54 @@ mod tests {
         let wd = TensorI8::rand(&[8, 4], &mut rng);
         let w = DbbMatrix::compress(&wd, 8).unwrap();
         assert!(dbb_i8(&a, &w).data().iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn gated_serial_kernels_bit_exact_prop() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(12) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(16) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+            let wd = TensorI8::rand(&[k, n], rng);
+            let gate = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On][rng.below(3)];
+            assert_eq!(
+                dense_i8_gated(&a, &wd, gate).data(),
+                dense_i8(&a, &wd).data(),
+                "dense m={m} k={k} n={n} p={p_zero} gate={gate:?}"
+            );
+            let w = DbbMatrix::compress_topk(&wd, 8, rng.below(8) + 1).unwrap();
+            let packed = DbbPacked::pack(&w);
+            assert_eq!(
+                dbb_i8_packed_gated(&a, &packed, gate).data(),
+                dbb_i8_packed(&a, &packed).data(),
+                "dbb m={m} k={k} n={n} p={p_zero} gate={gate:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn auto_threshold_engages_on_measured_sparsity() {
+        assert!(!ZeroGate::Off.engaged(1.0));
+        assert!(ZeroGate::On.engaged(0.0));
+        assert!(!ZeroGate::Auto.engaged(ZeroGate::AUTO_THRESHOLD - 0.01));
+        assert!(ZeroGate::Auto.engaged(ZeroGate::AUTO_THRESHOLD));
+        assert!(ZeroGate::Auto.engaged(0.8));
+        assert_eq!(ZeroGate::resolved(true), ZeroGate::On);
+        assert_eq!(ZeroGate::resolved(false), ZeroGate::Off);
+    }
+
+    #[test]
+    fn dbb_gate_stats_counts_skippable_macs() {
+        // A: row 0 all-zero, row 1 dense → exactly half the entry-row
+        // pairs are skippable
+        let a = TensorI8::from_vec(&[2, 8], vec![0, 0, 0, 0, 0, 0, 0, 0, 1, 2, 3, 4, 5, 6, 7, 8]);
+        let mut rng = Rng::new(11);
+        let w = DbbMatrix::compress_topk(&TensorI8::rand(&[8, 4], &mut rng), 8, 3).unwrap();
+        let packed = DbbPacked::pack(&w);
+        let (skipped, total) = dbb_gate_stats(&a, &packed);
+        assert_eq!(total, 2 * packed.total_nnz() as u64);
+        assert_eq!(skipped, packed.total_nnz() as u64);
     }
 }

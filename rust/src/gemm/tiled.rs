@@ -17,8 +17,31 @@
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
-use crate::gemm::DbbPacked;
+use crate::gemm::{DbbPacked, ZeroGate};
 use crate::tensor::{TensorI32, TensorI8};
+
+/// Shared row-tiling scaffold of every GEMM driver in this module:
+/// partition the `m × n` output into row-contiguous per-worker tiles (the
+/// one tile split, so every driver is bit-exact under the same partition)
+/// and run `kernel(tile, row0)` on each from the scoped pool. Callers have
+/// already taken the serial fallback, so `par.get() > 1`, `m > 1`, `n > 0`.
+fn row_tiled<K: Fn(&mut [i32], usize) + Sync>(
+    m: usize,
+    n: usize,
+    par: Parallelism,
+    kernel: K,
+) -> TensorI32 {
+    let mut c = TensorI32::zeros(&[m, n]);
+    let rows_per_tile = m.div_ceil(par.get().min(m));
+    let kref = &kernel;
+    std::thread::scope(|s| {
+        for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
+            let row0 = ti * rows_per_tile;
+            s.spawn(move || kref(tile, row0));
+        }
+    });
+    c
+}
 
 /// Parallel dense GEMM: `C[M×N] = A[M×K] · W[K×N]`, INT8 operands, INT32
 /// accumulate. Bit-exact with [`crate::gemm::dense_i8`].
@@ -29,17 +52,30 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8, par: Parallelism) -> TensorI32 {
     if par.get() <= 1 || m <= 1 || n == 0 {
         return crate::gemm::dense_i8(a, w);
     }
-    let mut c = TensorI32::zeros(&[m, n]);
-    let ad = a.data();
-    let wd = w.data();
-    let rows_per_tile = m.div_ceil(par.get().min(m));
-    std::thread::scope(|s| {
-        for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
-            let row0 = ti * rows_per_tile;
-            s.spawn(move || crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n));
-        }
-    });
-    c
+    let (ad, wd) = (a.data(), w.data());
+    row_tiled(m, n, par, |tile, row0| crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n))
+}
+
+/// [`dense_i8`] under a [`ZeroGate`] policy: each worker runs the
+/// zero-gated row kernel when the gate engages (`Auto` measures `A`'s zero
+/// fraction once, before the pool spawns). Bit-exact with [`dense_i8`] for
+/// every policy and thread count.
+pub fn dense_i8_gated(a: &TensorI8, w: &TensorI8, par: Parallelism, gate: ZeroGate) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
+    let engaged = gate.resolve_with(|| a.sparsity());
+    if par.get() <= 1 || m <= 1 || n == 0 {
+        return crate::gemm::dense_i8_gated(a, w, ZeroGate::resolved(engaged));
+    }
+    let (ad, wd) = (a.data(), w.data());
+    if engaged {
+        row_tiled(m, n, par, |tile, row0| {
+            crate::gemm::dense_rows_i8_gated(ad, wd, tile, row0, k, n)
+        })
+    } else {
+        row_tiled(m, n, par, |tile, row0| crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n))
+    }
 }
 
 /// Parallel DBB-sparse GEMM: `C = A · decompress(W)` on the compressed
@@ -60,18 +96,38 @@ pub fn dbb_i8_packed(a: &TensorI8, w: &DbbPacked, par: Parallelism) -> TensorI32
     if par.get() <= 1 || m <= 1 || w.n == 0 {
         return crate::gemm::dbb_i8_packed(a, w);
     }
-    let n = w.n;
-    let mut c = TensorI32::zeros(&[m, n]);
     let ad = a.data();
     let (cp, en) = (w.col_ptr(), w.entries());
-    let rows_per_tile = m.div_ceil(par.get().min(m));
-    std::thread::scope(|s| {
-        for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
-            let row0 = ti * rows_per_tile;
-            s.spawn(move || crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, n));
-        }
-    });
-    c
+    row_tiled(m, w.n, par, |tile, row0| crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n))
+}
+
+/// [`dbb_i8_packed`] under a [`ZeroGate`] policy: each worker runs the
+/// zero-gated CSC row kernel when the gate engages (`Auto` measures `A`'s
+/// zero fraction once, before the pool spawns). Bit-exact with
+/// [`dbb_i8_packed`] for every policy and thread count.
+pub fn dbb_i8_packed_gated(
+    a: &TensorI8,
+    w: &DbbPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
+    let engaged = gate.resolve_with(|| a.sparsity());
+    if par.get() <= 1 || m <= 1 || w.n == 0 {
+        return crate::gemm::dbb_i8_packed_gated(a, w, ZeroGate::resolved(engaged));
+    }
+    let ad = a.data();
+    let (cp, en) = (w.col_ptr(), w.entries());
+    if engaged {
+        row_tiled(m, w.n, par, |tile, row0| {
+            crate::gemm::dbb_rows_i8_gated(ad, cp, en, tile, row0, k, w.n)
+        })
+    } else {
+        row_tiled(m, w.n, par, |tile, row0| {
+            crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
+        })
+    }
 }
 
 #[cfg(test)]
@@ -172,6 +228,33 @@ mod tests {
                 dbb_i8_packed(&a, &packed, Parallelism::threads(threads)).data(),
                 gemm::dbb_i8(&a, &w).data(),
                 "m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads}"
+            );
+        });
+    }
+
+    #[test]
+    fn gated_tiled_bit_exact_prop() {
+        // every policy × random sparsity × thread counts incl. M < threads
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(24) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(16) + 1;
+            let threads = rng.below(8) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let gate = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+            let w = TensorI8::rand(&[k, n], rng);
+            assert_eq!(
+                dense_i8_gated(&a, &w, Parallelism::threads(threads), gate).data(),
+                gemm::dense_i8(&a, &w).data(),
+                "dense m={m} k={k} n={n} threads={threads} p={p_zero} gate={gate:?}"
+            );
+            let enc = DbbMatrix::compress_topk(&w, 8, rng.below(8) + 1).unwrap();
+            let packed = DbbPacked::pack(&enc);
+            assert_eq!(
+                dbb_i8_packed_gated(&a, &packed, Parallelism::threads(threads), gate).data(),
+                gemm::dbb_i8(&a, &enc).data(),
+                "dbb m={m} k={k} n={n} threads={threads} p={p_zero} gate={gate:?}"
             );
         });
     }

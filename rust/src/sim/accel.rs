@@ -19,6 +19,13 @@
 //! (prepare-once/execute-many): [`profile_model`] lowers the model into a
 //! [`crate::engine::PreparedModel`] — weights encoded and CSC-packed
 //! exactly once — and replays one seeded execute over the packed operands.
+//!
+//! The measured [`LayerProfile::act_sparsity`] is the **one sparsity
+//! source** for both uses of activation sparsity in this codebase: the
+//! analytic model prices the datapath's A-side MAC gating with it
+//! (`macs_gated` in [`gemm_timing_stats`]'s event counts), and the software
+//! kernels' [`crate::gemm::ZeroGate::Auto`] consults the same per-layer
+//! value to decide where the zero-skip pass pays.
 
 use super::analytic::{gemm_timing_stats, WeightStats};
 use super::im2col::Im2colUnit;
@@ -39,7 +46,17 @@ pub struct LayerProfile {
     pub m: usize,
     /// Weight statistics (synthetic-exact for magnitude-pruned weights).
     pub weights: WeightStats,
-    /// Input activation zero fraction.
+    /// Zero fraction of the layer's *raw input* operand — the feature map
+    /// (or FC matrix) as fed to the layer, **before** IM2COL expansion.
+    /// That is exactly what [`crate::engine::PreparedModel::profile`]
+    /// records (the zero fraction of the fitted input it convolves; pinned
+    /// by `recorded_act_sparsity_is_raw_input_zero_fraction`). The timing
+    /// model applies it as the A-operand zero fraction of the GEMM — a
+    /// slight *under*-estimate for padded convolutions, since IM2COL
+    /// duplication preserves the zero fraction and padding only adds
+    /// zeros. The software kernels' [`crate::gemm::ZeroGate::Auto`]
+    /// consults the same measured value, so the priced datapath gate and
+    /// the software gate share one sparsity source.
     pub act_sparsity: f64,
     /// IM2COL duplication this layer offers (1.0 for FC/1×1).
     pub im2col_magnification: f64,
@@ -443,6 +460,29 @@ mod tests {
         let tp = network_timing_with(&d, &ps, Parallelism::threads(4));
         assert_eq!(ts.total, tp.total);
         assert_eq!(ts.dense_macs, tp.dense_macs);
+    }
+
+    #[test]
+    fn recorded_act_sparsity_is_raw_input_zero_fraction() {
+        // Pin the convention the LayerProfile docs promise: act_sparsity is
+        // the zero fraction of the layer's raw fitted *input* operand,
+        // before IM2COL expansion. For layer 0 the fitted input IS the
+        // stored seed input (identity fit), so the recorded value must
+        // equal its zero fraction to the bit.
+        let m = models::convnet5();
+        let mut pm = crate::engine::PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+        let profiles = pm.profile(Parallelism::serial());
+        let seed_s = pm.seed_input().sparsity();
+        assert_eq!(
+            profiles[0].act_sparsity.to_bits(),
+            seed_s.to_bits(),
+            "layer 0 act_sparsity {} != seed input zero fraction {}",
+            profiles[0].act_sparsity,
+            seed_s
+        );
+        // and it is an *input*-side quantity: the near-dense seed input
+        // (2% zeros) must not be confused with layer 0's post-ReLU output
+        assert!(profiles[0].act_sparsity < 0.1);
     }
 
     #[test]

@@ -1,0 +1,219 @@
+//! Property suite for activation-side zero-gating (`ssta::gemm::ZeroGate`):
+//! the gated kernels must be **bit-exact** with their ungated counterparts
+//! under every policy, for every operand sparsity (0.0 / 0.5 / 1.0,
+//! including all-zero rows), every layer kind (dense GEMM, DBB GEMM,
+//! fused conv), and every worker-pool width (including `M < threads`);
+//! `Auto` must follow its documented threshold; and
+//! `PreparedModel::execute` must stay pure with gating forced on.
+
+use ssta::dbb::DbbMatrix;
+use ssta::engine::PreparedModel;
+use ssta::gemm;
+use ssta::gemm::conv::ConvShape;
+use ssta::gemm::{fused, tiled, DbbPacked, ZeroGate};
+use ssta::models;
+use ssta::tensor::TensorI8;
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+const GATES: [ZeroGate; 3] = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On];
+const SPARSITIES: [f32; 3] = [0.0, 0.5, 1.0];
+
+#[test]
+fn dense_gated_bit_exact_across_sparsity_and_threads() {
+    check(Config::default().cases(96), |rng| {
+        let m = rng.below(40) + 1;
+        let k = rng.below(64) + 1;
+        let n = rng.below(24) + 1;
+        let threads = rng.below(8) + 1; // includes M < threads
+        let p_zero = SPARSITIES[rng.below(3)];
+        let gate = GATES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let w = TensorI8::rand(&[k, n], rng);
+        let want = gemm::dense_i8(&a, &w);
+        assert_eq!(
+            gemm::dense_i8_gated(&a, &w, gate).data(),
+            want.data(),
+            "serial m={m} k={k} n={n} p={p_zero} gate={gate:?}"
+        );
+        assert_eq!(
+            tiled::dense_i8_gated(&a, &w, Parallelism::threads(threads), gate).data(),
+            want.data(),
+            "tiled m={m} k={k} n={n} threads={threads} p={p_zero} gate={gate:?}"
+        );
+    });
+}
+
+#[test]
+fn dbb_gated_bit_exact_across_sparsity_and_threads() {
+    check(Config::default().cases(96), |rng| {
+        let m = rng.below(32) + 1;
+        let k = rng.below(64) + 1;
+        let n = rng.below(20) + 1;
+        let bz = [4usize, 8, 16][rng.below(3)];
+        let nnz = rng.below(bz) + 1; // DBB bounds 1..=BZ
+        let threads = rng.below(8) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let gate = GATES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let w = DbbMatrix::compress_topk(&TensorI8::rand(&[k, n], rng), bz, nnz).unwrap();
+        let packed = DbbPacked::pack(&w);
+        let want = gemm::dbb_i8(&a, &w);
+        assert_eq!(
+            gemm::dbb_i8_packed_gated(&a, &packed, gate).data(),
+            want.data(),
+            "serial m={m} k={k} n={n} bz={bz} nnz={nnz} p={p_zero} gate={gate:?}"
+        );
+        assert_eq!(
+            tiled::dbb_i8_packed_gated(&a, &packed, Parallelism::threads(threads), gate).data(),
+            want.data(),
+            "tiled m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads} p={p_zero} \
+             gate={gate:?}"
+        );
+    });
+}
+
+#[test]
+fn fused_conv_gated_bit_exact_across_sparsity_and_threads() {
+    check(Config::default().cases(64), |rng| {
+        let kh = [1usize, 3, 5][rng.below(3)];
+        let stride = rng.below(2) + 1;
+        let s = ConvShape {
+            h: kh + rng.below(6) + stride,
+            w: kh + rng.below(6) + stride,
+            c: rng.below(8) + 1,
+            kh,
+            kw: kh,
+            oc: rng.below(8) + 1,
+            stride,
+            pad: rng.below(kh.div_ceil(2)),
+        };
+        let threads = rng.below(8) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let gate = GATES[rng.below(3)];
+        let par = Parallelism::threads(threads);
+        let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], p_zero, rng);
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+        assert_eq!(
+            fused::conv2d_i8_gated(&x, &w, &s, par, gate).data(),
+            fused::conv2d_i8(&x, &w, &s, par).data(),
+            "dense conv shape={s:?} threads={threads} p={p_zero} gate={gate:?}"
+        );
+        let enc = DbbMatrix::compress_topk(
+            &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+            8,
+            rng.below(8) + 1,
+        )
+        .unwrap();
+        let packed = DbbPacked::pack(&enc);
+        assert_eq!(
+            fused::conv2d_dbb_i8_packed_gated(&x, &packed, &s, par, gate).data(),
+            fused::conv2d_dbb_i8_packed(&x, &packed, &s, par).data(),
+            "dbb conv shape={s:?} threads={threads} p={p_zero} gate={gate:?}"
+        );
+    });
+}
+
+#[test]
+fn all_zero_operand_gives_zero_output_under_every_gate() {
+    // the degenerate case the gate optimizes hardest: every row skipped
+    let a = TensorI8::zeros(&[5, 24]);
+    let mut rng = Rng::new(3);
+    let wd = TensorI8::rand(&[24, 7], &mut rng);
+    let enc = DbbMatrix::compress_topk(&wd, 8, 3).unwrap();
+    let packed = DbbPacked::pack(&enc);
+    for gate in GATES {
+        assert!(
+            gemm::dense_i8_gated(&a, &wd, gate).data().iter().all(|&v| v == 0),
+            "dense gate={gate:?}"
+        );
+        assert!(
+            tiled::dbb_i8_packed_gated(&a, &packed, Parallelism::threads(8), gate)
+                .data()
+                .iter()
+                .all(|&v| v == 0),
+            "dbb gate={gate:?}"
+        );
+    }
+}
+
+#[test]
+fn auto_threshold_boundary() {
+    // the documented contract: Auto engages exactly at AUTO_THRESHOLD
+    assert!(!ZeroGate::Auto.engaged(0.0));
+    assert!(!ZeroGate::Auto.engaged(ZeroGate::AUTO_THRESHOLD - f64::EPSILON));
+    assert!(ZeroGate::Auto.engaged(ZeroGate::AUTO_THRESHOLD));
+    assert!(ZeroGate::Auto.engaged(1.0));
+    // Off/On ignore the measurement entirely
+    for s in [0.0, 0.5, 1.0] {
+        assert!(!ZeroGate::Off.engaged(s));
+        assert!(ZeroGate::On.engaged(s));
+    }
+}
+
+#[test]
+fn auto_resolves_per_layer_in_the_engine() {
+    // a dense input must leave Auto off; an all-zero input must engage it
+    // (unprofiled model: Auto falls back to the measured input operand)
+    let m = models::lenet5();
+    let pm = PreparedModel::prepare(&m, 2, 8, 5, Parallelism::serial());
+    let mut rng = Rng::new(8);
+    let dense_in = TensorI8::rand(&[28, 28, 1], &mut rng);
+    let run = pm.execute_gated(&dense_in, Parallelism::serial(), ZeroGate::Auto);
+    assert!(
+        !run.gate_engaged[0],
+        "dense input (sparsity {}) must not gate layer 0",
+        run.act_sparsity[0]
+    );
+    let zero_in = TensorI8::zeros(&[28, 28, 1]);
+    let run = pm.execute_gated(&zero_in, Parallelism::serial(), ZeroGate::Auto);
+    assert!(run.gate_engaged[0], "all-zero input must gate layer 0");
+    // per-layer decisions always mirror the threshold on the consulted
+    // sparsity (here: the measured input operand of each layer)
+    for (li, (&s, &g)) in run.act_sparsity.iter().zip(&run.gate_engaged).enumerate() {
+        assert_eq!(g, ZeroGate::Auto.engaged(s), "layer {li}: s={s}");
+    }
+}
+
+#[test]
+fn execute_purity_with_gating_on() {
+    // repeated gated executes must be bit-identical — the gate introduces
+    // no mutable state (scratch buffers are rewritten before every read)
+    let m = models::convnet5();
+    let pm = PreparedModel::prepare(&m, 3, 8, 7, Parallelism::threads(4));
+    let par = Parallelism::threads(4);
+    let first = pm.execute_gated(pm.seed_input(), par, ZeroGate::On);
+    for _ in 0..3 {
+        let again = pm.execute_gated(pm.seed_input(), par, ZeroGate::On);
+        assert_eq!(first.output, again.output);
+        assert_eq!(first.act_sparsity, again.act_sparsity);
+        assert_eq!(first.gate_engaged, again.gate_engaged);
+    }
+    // interleave a different input, then re-check: no cross-contamination
+    let mut rng = Rng::new(9);
+    let other = TensorI8::rand_sparse(&[32, 32, 3], 0.6, &mut rng);
+    let _ = pm.execute_gated(&other, par, ZeroGate::On);
+    let after = pm.execute_gated(pm.seed_input(), par, ZeroGate::On);
+    assert_eq!(first.output, after.output);
+
+    // and gating must not perturb what execute reports against Off
+    let off = pm.execute_gated(pm.seed_input(), par, ZeroGate::Off);
+    assert_eq!(first.output, off.output);
+    assert_eq!(first.act_sparsity, off.act_sparsity);
+}
+
+#[test]
+fn profile_is_gating_invariant() {
+    // measured sparsities must be identical whatever policy the model
+    // defaults to — the twin's priced profile cannot depend on the gate
+    let m = models::convnet5();
+    let mut off = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+    off.set_zero_gate(ZeroGate::Off);
+    let mut on = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+    on.set_zero_gate(ZeroGate::On);
+    let p_off = off.profile(Parallelism::serial());
+    let p_on = on.profile(Parallelism::serial());
+    for (a, b) in p_off.iter().zip(&p_on) {
+        assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+    }
+}

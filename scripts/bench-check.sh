@@ -1,0 +1,164 @@
+#!/usr/bin/env bash
+# Bench-regression gate: compare a fresh BENCH_perf_hotpath.json (written by
+# `cargo bench --bench perf_hotpath -- gemm/ conv/ engine/`, see util::bench)
+# against the committed baseline and fail on a >35% median regression in any
+# tracked `gemm/`, `conv/` or `engine/` entry. Prints a per-entry delta
+# table either way.
+#
+#   scripts/bench-check.sh                       # compare ./BENCH_perf_hotpath.json
+#   scripts/bench-check.sh fresh.json            # compare an explicit file
+#   scripts/bench-check.sh fresh.json base.json  # explicit baseline too
+#   scripts/bench-check.sh --rebaseline f.json   # accept f.json as the new baseline
+#
+# Re-baselining (after an intentional perf change, or to arm the gate):
+# download the `bench-perf-hotpath` artifact from a green CI run of the new
+# code, then `scripts/bench-check.sh --rebaseline <artifact.json>` and commit
+# `benches/baseline/BENCH_perf_hotpath.json`. The gate only *enforces* when
+# BOTH hold, and reports-only otherwise:
+#   * the baseline's `provenance` is `ci` (recorded from a CI bench
+#     artifact — the initial `bootstrap-estimate` baseline never enforces),
+#   * AND this run is on the machine class the baseline was recorded on:
+#     the `CI` env var is set (GitHub runners) or BENCH_CHECK_ENFORCE=1.
+# Both guards exist for the same reason: absolute medians compared across
+# machine classes gate on hardware differences, not regressions — so a
+# developer laptop running scripts/ci-local.sh gets the delta table and
+# warnings, while the GitHub job goes red.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+THRESHOLD=35 # percent — generous enough for shared-runner noise
+BASELINE="benches/baseline/BENCH_perf_hotpath.json"
+FRESH="BENCH_perf_hotpath.json"
+
+PY=python3
+command -v "$PY" >/dev/null || { echo "bench-check: python3 not found" >&2; exit 1; }
+
+if [[ "${1:-}" == "--rebaseline" ]]; then
+  SRC="${2:-$FRESH}"
+  "$PY" - "$SRC" "$BASELINE" <<'EOF'
+import json, os, sys
+
+src, dst = sys.argv[1], sys.argv[2]
+with open(src) as f:
+    doc = json.load(f)
+doc["provenance"] = "ci"
+doc["note"] = (
+    "bench-regression baseline for scripts/bench-check.sh; recorded from a "
+    "CI bench artifact via --rebaseline"
+)
+os.makedirs(os.path.dirname(dst), exist_ok=True)
+with open(dst, "w") as f:
+    json.dump(doc, f, indent=1, sort_keys=True)
+    f.write("\n")
+EOF
+  echo "bench-check: baseline updated from $SRC (provenance: ci) — commit $BASELINE"
+  exit 0
+fi
+
+[[ -n "${1:-}" ]] && FRESH="$1"
+[[ -n "${2:-}" ]] && BASELINE="$2"
+[[ -f "$FRESH" ]] || { echo "bench-check: fresh results $FRESH not found (run the bench first)" >&2; exit 1; }
+[[ -f "$BASELINE" ]] || { echo "bench-check: baseline $BASELINE not found" >&2; exit 1; }
+
+"$PY" - "$FRESH" "$BASELINE" "$THRESHOLD" <<'EOF'
+import json, os, sys
+
+fresh_path, base_path, thr = sys.argv[1], sys.argv[2], float(sys.argv[3])
+TRACKED = ("gemm/", "conv/", "engine/")
+on_baseline_machine = (
+    bool(os.environ.get("CI")) or os.environ.get("BENCH_CHECK_ENFORCE") == "1"
+)
+
+
+def medians(path):
+    with open(path) as f:
+        doc = json.load(f)
+    meds = {
+        r["name"]: float(r["median_ns"])
+        for r in doc.get("results", [])
+        if str(r.get("name", "")).startswith(TRACKED)
+    }
+    return doc, meds
+
+
+def ns(v):
+    if v is None:
+        return "-"
+    if v >= 1e6:
+        return f"{v / 1e6:.2f} ms"
+    if v >= 1e3:
+        return f"{v / 1e3:.2f} us"
+    return f"{v:.0f} ns"
+
+
+fdoc, fresh = medians(fresh_path)
+bdoc, base = medians(base_path)
+prov = bdoc.get("provenance", "ci")
+enforce = prov == "ci" and on_baseline_machine
+
+rows, regressions, missing = [], [], []
+for name in sorted(set(base) | set(fresh)):
+    if name not in fresh:
+        missing.append(name)
+        rows.append((name, base[name], None, None, "MISSING"))
+    elif name not in base:
+        rows.append((name, None, fresh[name], None, "new (no baseline)"))
+    else:
+        b, f = base[name], fresh[name]
+        delta = (f - b) / b * 100.0 if b > 0 else 0.0
+        status = "ok"
+        if delta > thr:
+            status = "REGRESSION"
+            regressions.append((name, delta))
+        rows.append((name, b, f, delta, status))
+
+w = max([len(r[0]) for r in rows] + [5])
+print(
+    f"bench-check: {fresh_path} vs {base_path} "
+    f"(fail threshold +{thr:.0f}% on medians, baseline provenance: {prov})"
+)
+print(f"{'entry':<{w}}  {'baseline':>10}  {'fresh':>10}  {'delta':>8}  status")
+for name, b, f, d, s in rows:
+    ds = "-" if d is None else f"{d:+.1f}%"
+    print(f"{name:<{w}}  {ns(b):>10}  {ns(f):>10}  {ds:>8}  {s}")
+
+fail = False
+if missing:
+    print(
+        f"\nbench-check: {len(missing)} tracked baseline entries missing from "
+        "the fresh run (bench entry renamed/removed, or the bench-smoke "
+        "filter regressed?): " + ", ".join(missing)
+    )
+    fail = True
+if regressions:
+    print(f"\nbench-check: {len(regressions)} entries regressed more than {thr:.0f}%:")
+    for name, d in regressions:
+        print(f"  {name}: {d:+.1f}%")
+    fail = True
+
+if not fail:
+    print("\nbench-check: all tracked entries within threshold")
+    sys.exit(0)
+if not enforce:
+    if prov != "ci":
+        print(
+            f"\nbench-check: baseline provenance is '{prov}' (not CI-recorded) "
+            "— reporting only, not failing the job. Arm the gate by "
+            "re-baselining from a CI bench artifact:\n"
+            "  scripts/bench-check.sh --rebaseline <downloaded BENCH_perf_hotpath.json>"
+        )
+    else:
+        print(
+            "\nbench-check: not running on the baseline's machine class (no CI "
+            "env, BENCH_CHECK_ENFORCE unset) — reporting only; the GitHub job "
+            "enforces these numbers."
+        )
+    sys.exit(0)
+print(
+    "\nbench-check: FAIL. If the change is an intentional perf trade-off, "
+    "re-baseline from this run's CI bench artifact "
+    "(scripts/bench-check.sh --rebaseline <artifact.json>) and commit the "
+    "updated benches/baseline/BENCH_perf_hotpath.json with the PR."
+)
+sys.exit(1)
+EOF

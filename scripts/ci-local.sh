@@ -26,6 +26,7 @@ step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step cargo bench --no-run
 step cargo bench --bench perf_hotpath -- gemm/ conv/ engine/
 echo "(bench results recorded in BENCH_perf_hotpath.json)"
+step scripts/bench-check.sh
 
 echo
 echo "ci-local: all gates green"
