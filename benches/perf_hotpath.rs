@@ -8,7 +8,7 @@
 use ssta::arch::{space, Design, Tech};
 use ssta::dbb::{prune::prune_i8, DbbMatrix};
 use ssta::gemm::conv::{im2col, ConvShape};
-use ssta::gemm::ZeroGate;
+use ssta::gemm::{ActDbb, ActPolicy, ZeroGate};
 use ssta::models;
 use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
 use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
@@ -106,6 +106,19 @@ fn main() {
         });
         set.bench("engine/convnet5_execute_gated", move || {
             bb(gated.execute_gated(&ginput, Parallelism::auto(), ZeroGate::Auto));
+        });
+
+        // steady-state execute with the activation operand DBB-*encoded*
+        // everywhere (ActPolicy::Encode): the joint A-DBB kernels consume a
+        // compressed stream on both sides of the MAC — compare against
+        // execute_prepared_steady (Off) and execute_gated (Gate) for the
+        // three tiers of the policy ladder
+        let m5 = models::convnet5();
+        let mut encm = ssta::engine::PreparedModel::prepare(&m5, 3, 8, 42, Parallelism::auto());
+        encm.profile(Parallelism::auto());
+        let einput = encm.seed_input().clone();
+        set.bench("engine/convnet5_execute_encoded", move || {
+            bb(encm.execute_policy(&einput, Parallelism::auto(), ActPolicy::Encode));
         });
     }
 
@@ -230,6 +243,43 @@ fn main() {
                 Parallelism::auto(),
                 ZeroGate::On,
             ));
+        });
+    }
+
+    // ---- activation-side DBB encoding (A-DBB, S2TA joint sparsity) ----
+    // The joint kernels consume an encoded A against the packed 3/8 weight
+    // stream: only (non-zero activation, stored weight) pairs reach the
+    // multiplier. The encode entry prices the runtime O(M·K) encode pass
+    // itself — what ActPolicy::Encode pays before the joint kernels run.
+    {
+        let mut rng = Rng::new(12);
+        let a50 = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let a87 = TensorI8::rand_sparse(&[512, 512], 0.875, &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 3);
+        let packed = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap().pack();
+        let e50 = ActDbb::encode(&a50, 8);
+        let e87 = ActDbb::encode(&a87, 8);
+
+        let (s50b, d50) = (e50.stream_bytes(), e50.dense_bytes());
+        let (s87b, d87) = (e87.stream_bytes(), e87.dense_bytes());
+        set.report("gemm/adbb_stream_bytes", move || {
+            println!(
+                "512² A-DBB fixed-rate stream: 50pct {s50b} B vs raw {d50} B \
+                 ({:.2}x), 87pct {s87b} B vs raw {d87} B ({:.2}x)",
+                d50 as f64 / s50b as f64,
+                d87 as f64 / s87b as f64,
+            );
+        });
+
+        set.bench("gemm/act_dbb_encode_512", move || {
+            bb(ActDbb::encode(&a50, 8));
+        });
+        let packed2 = packed.clone();
+        set.bench("gemm/adbb_i8_512_50pct", move || {
+            bb(ssta::gemm::tiled::adbb_i8_packed(&e50, &packed2, Parallelism::auto()));
+        });
+        set.bench("gemm/adbb_i8_512_87pct", move || {
+            bb(ssta::gemm::tiled::adbb_i8_packed(&e87, &packed, Parallelism::auto()));
         });
     }
 

@@ -28,7 +28,7 @@ use ssta::arch::Design;
 use ssta::cli::Args;
 use ssta::coordinator::{request::argmax, Config, Coordinator};
 use ssta::gemm::conv::{im2col, ConvShape};
-use ssta::gemm::{fused, tiled, ZeroGate};
+use ssta::gemm::{fused, tiled, ActPolicy, ZeroGate};
 use ssta::runtime::{HostTensor, Runtime};
 use ssta::tensor::TensorI8;
 use ssta::util::error::{Error, Result};
@@ -84,26 +84,35 @@ fn prepared_engine_showcase() {
         prepared.operand_bytes(),
     );
 
-    // ---- A-side zero-gating on the measured sparsities (paper §II) ----
-    // profile once, then let ZeroGate::Auto pick per layer from the same
-    // measured act sparsities the hardware twin prices
+    // ---- A-side policy on the measured sparsities (paper §II, S2TA) ----
+    // profile once, then let the three-way ActPolicy::Auto pick per layer
+    // (off / gate / encode) from the same measured act sparsities the
+    // hardware twin prices
     prepared.profile(par);
     let off = prepared.execute_gated(prepared.seed_input(), par, ZeroGate::Off);
     let t2 = Instant::now();
-    let auto = prepared.execute_gated(prepared.seed_input(), par, ZeroGate::Auto);
-    let t_gated = t2.elapsed();
-    assert_eq!(off.output, auto.output, "zero-gating must be bit-exact");
-    let gated = auto.gate_engaged.iter().filter(|&&g| g).count();
+    let auto = prepared.execute_policy(prepared.seed_input(), par, ActPolicy::Auto);
+    let t_auto = t2.elapsed();
+    assert_eq!(off.output, auto.output, "gating/encoding must be bit-exact");
+    let t3 = Instant::now();
+    let enc = prepared.execute_policy(prepared.seed_input(), par, ActPolicy::Encode);
+    let t_enc = t3.elapsed();
+    assert_eq!(off.output, enc.output, "A-DBB encoding must be bit-exact");
+    let decisions: Vec<String> = auto
+        .act_sparsity
+        .iter()
+        .zip(&auto.act_policy)
+        .map(|(s, p)| format!("{:.0}%{}", 100.0 * s, match p {
+            ActPolicy::Encode => "(encode)",
+            ActPolicy::Gate => "(gate)",
+            _ => "",
+        }))
+        .collect();
     println!(
-        "zero-gate Auto: {gated}/{} layers gate on measured act sparsity \
-         [{}] — gated execute {t_gated:.2?}, outputs bit-identical",
-        auto.gate_engaged.len(),
-        auto
-            .act_sparsity
-            .iter()
-            .map(|s| format!("{:.0}%", 100.0 * s))
-            .collect::<Vec<_>>()
-            .join(" "),
+        "act-policy Auto: per-layer measured sparsity → decision [{}] — \
+         auto execute {t_auto:.2?}, all-encoded execute {t_enc:.2?}, \
+         outputs bit-identical",
+        decisions.join(" "),
     );
 }
 

@@ -97,6 +97,7 @@ fn main() {
             m: 64, // a served batch of 64 rows
             weights: WeightStats::of(&dbb),
             act_sparsity: 0.5,
+            act_encoded: false,
             im2col_magnification: 1.0,
             raw_act_bytes: (64 * dbb.k) as u64,
             out_elems: (64 * dbb.n) as u64,

@@ -89,6 +89,7 @@ impl SmtSa {
                 // per-element indices: full dense traffic + index overhead
                 weight_sram_bytes: (stats.k as u64 * stats.n as u64) * 9 / 8,
                 act_sram_bytes: (mg * stats.k) as u64,
+                act_index_bytes: 0,
                 act_edge_bytes: (mg * stats.k) as u64,
                 out_sram_bytes: 4 * (mg * stats.n) as u64,
                 mux_selects: 0,

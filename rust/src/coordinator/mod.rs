@@ -24,7 +24,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::arch::Design;
-use crate::gemm::ZeroGate;
+use crate::gemm::ActPolicy;
 use crate::power;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::accel::{network_timing_with, profile_model_fixed_act, LayerProfile};
@@ -66,13 +66,17 @@ pub struct Config {
     /// *measured* per-layer activation sparsities instead of the
     /// `act_sparsity` scalar. Default `true`.
     pub measured_sparsity: bool,
-    /// Activation zero-gating policy installed on the prepared model (its
-    /// functional profile/execute passes). Default [`ZeroGate::Auto`]:
-    /// after the startup profile, the engine's gate and the twin's priced
-    /// A-side gating consume the *same* measured per-layer sparsities —
-    /// one sparsity source. Gating is bit-exact, so this knob never
-    /// changes a served or profiled number.
-    pub zero_gate: ZeroGate,
+    /// Three-way activation policy (off / gate / encode) installed on the
+    /// prepared model (its functional profile/execute passes). Default
+    /// [`ActPolicy::Auto`]: after the startup profile, the engine resolves
+    /// the policy per layer from the *same* measured per-layer sparsities
+    /// the twin prices — one sparsity source — and the twin prices the
+    /// resulting A-side decision too (layers the policy encodes stream
+    /// compressed activation traffic in the simulated SRAM counters,
+    /// `LayerProfile::act_encoded`). Every policy is bit-exact, so this
+    /// knob never changes a served or profiled number, only the simulated
+    /// traffic/energy and the engine's own execute cost.
+    pub act_policy: ActPolicy,
 }
 
 impl Default for Config {
@@ -84,7 +88,7 @@ impl Default for Config {
             max_wait: Duration::from_millis(2),
             parallelism: Parallelism::serial(),
             measured_sparsity: true,
-            zero_gate: ZeroGate::default(),
+            act_policy: ActPolicy::default(),
         }
     }
 }
@@ -322,7 +326,7 @@ fn leader_loop(
         let model = crate::models::convnet5();
         let mut prepared =
             crate::engine::PreparedModel::prepare(&model, nnz, 8, TWIN_SEED, cfg.parallelism);
-        prepared.set_zero_gate(cfg.zero_gate);
+        prepared.set_act_policy(cfg.act_policy);
         let profiles = prepared.profile(cfg.parallelism);
         Twin::from_profiles(cfg.design, profiles, cfg.parallelism)
     } else {
@@ -567,7 +571,7 @@ mod tests {
             TWIN_SEED,
             Parallelism::serial(),
         );
-        pm.set_zero_gate(Config::default().zero_gate);
+        pm.set_act_policy(Config::default().act_policy);
         let measured = pm.profile(Parallelism::serial());
         // one sparsity source: the values the twin prices are the values
         // the engine's ZeroGate::Auto consults

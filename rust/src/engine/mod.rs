@@ -30,29 +30,48 @@
 //! measured sparsities *into* the prepared model, where the serving
 //! coordinator's hardware twin reads them.
 //!
-//! ## Activation-side zero-gating
+//! ## The three-way activation policy: off / gate / encode
 //!
 //! The measured per-layer sparsities are not just reported — they are *fed
 //! back into the kernels*. Every execute resolves a
-//! [`crate::gemm::ZeroGate`] policy per layer (the model-level default is
-//! [`ZeroGate::Auto`]; see [`PreparedModel::set_zero_gate`] /
-//! [`PreparedModel::execute_gated`]): `Auto` consults the layer's
-//! *measured* activation sparsity from the recorded profile (falling back
-//! to the zero fraction of the current input operand, which the execute
-//! loop measures anyway) and engages the zero-gated row kernels only where
-//! gating pays. The same measured values price the A-side gating in the
-//! hardware twin's timing model (the `act_sparsity` field of
+//! [`crate::gemm::ActPolicy`] per layer (the model-level default is
+//! [`ActPolicy::Auto`]; see [`PreparedModel::set_act_policy`] /
+//! [`PreparedModel::execute_policy`]):
+//!
+//! * **Off** — stream the operand raw (dense activations);
+//! * **Gate** — the PR-4 zero-skip kernels: fetch everything, skip the
+//!   multiplies of zero activations;
+//! * **Encode** — DBB-encode the activation operand
+//!   ([`crate::gemm::ActDbb`]; conv layers encode each generated patch-row
+//!   chunk right after streaming IM2COL) and run the joint A-DBB kernels,
+//!   so zeros are never stored, streamed, or multiplied.
+//!
+//! `Auto` consults the layer's *measured* activation sparsity from the
+//! recorded profile (falling back to the zero fraction of the current
+//! input operand, which the execute loop measures anyway) and picks the
+//! tier the **modeled datapath** pays for: encode at ≥ 50% zeros (the
+//! compressed stream's traffic break-even — the software wall-clock
+//! trade-off of `Encode` vs `Gate` is host-dependent; see
+//! [`crate::gemm::ActPolicy`] and pin `Gate` where execute latency alone
+//! matters), gate at ≥ 25%, off below. The
+//! same measured values drive the hardware twin's pricing (the
+//! `act_sparsity` / `act_encoded` fields of
 //! [`crate::sim::accel::LayerProfile`]) — one sparsity source for the
-//! priced datapath gate and the software gate. Gating is bit-exact, so
-//! [`Execution::output`] is identical under every policy
-//! (`rust/tests/zero_gate.rs`); the per-layer decisions are reported in
-//! [`Execution::gate_engaged`].
+//! priced datapath and the software kernels, and the twin's A-side SRAM
+//! traffic distinguishes "skipped the multiply" (gated MACs) from "never
+//! fetched the operand" (compressed stream bytes + index overhead). Every
+//! policy is bit-exact, so [`Execution::output`] is identical under all of
+//! them (`rust/tests/zero_gate.rs`, `rust/tests/act_dbb.rs`); the
+//! per-layer decisions are reported in [`Execution::act_policy`] /
+//! [`Execution::gate_engaged`]. The legacy two-way [`ZeroGate`] surface
+//! ([`PreparedModel::set_zero_gate`] / [`PreparedModel::execute_gated`])
+//! is preserved and never encodes.
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
 use crate::gemm::fused::{self, PatchScratch};
 use crate::gemm::tiled;
-use crate::gemm::{DbbPacked, ZeroGate};
+use crate::gemm::{ActPolicy, DbbPacked, ZeroGate};
 use crate::models::{LayerKind, Model};
 use crate::sim::accel::{requant_relu, LayerProfile};
 use crate::sim::analytic::WeightStats;
@@ -60,6 +79,7 @@ use crate::sim::im2col::Im2colUnit;
 use crate::tensor::TensorI8;
 use crate::util::par::map_indexed;
 use crate::util::{Parallelism, Rng};
+use std::borrow::Cow;
 use std::sync::Mutex;
 
 /// Cap on sampled GEMM rows/cols for the functional sparsity measurement
@@ -93,35 +113,82 @@ fn sample_shape(s: &ConvShape, c: usize, ns: usize) -> ConvShape {
     }
 }
 
+/// Fill `out` with `pd` repeated end-to-end (`out[i] = pd[i % pd.len()]`),
+/// in whole-slice `copy_from_slice` chunks instead of a per-element modulo.
+fn wrap_fill(pd: &[i8], out: &mut [i8]) {
+    debug_assert!(!pd.is_empty());
+    let n = pd.len();
+    let mut done = 0usize;
+    while done < out.len() {
+        let take = n.min(out.len() - done);
+        out[done..done + take].copy_from_slice(&pd[..take]);
+        done += take;
+    }
+}
+
 /// Fit a propagated feature map to a layer's sampled input shape by
 /// wrap-around tiling (spatial dims and channels), preserving the measured
-/// value/zero structure. An exact-shape match is an identity copy, which is
-/// what keeps [`PreparedModel::profile`] bit-exact: the stored seed input
-/// passes through unchanged.
-fn fit_fmap_from(p: &TensorI8, h: usize, w: usize, c: usize) -> TensorI8 {
+/// value/zero structure. An exact-shape match **borrows** the input
+/// untouched — the zero-copy identity that keeps [`PreparedModel::profile`]
+/// bit-exact (the stored seed input passes through unchanged) and takes
+/// every aligned steady-state execute off the copy path entirely. Shape
+/// mismatches copy in the widest aligned spans available (whole rows when
+/// the widths match, channel runs when only the channel counts do) rather
+/// than per-element `at`/`set` calls — this runs on every request, for
+/// every layer (§Perf).
+fn fit_fmap_from<'p>(p: &'p TensorI8, h: usize, w: usize, c: usize) -> Cow<'p, TensorI8> {
+    if p.shape() == [h, w, c] {
+        return Cow::Borrowed(p);
+    }
     if p.shape().len() != 3 {
         // non-spatial input (matrix / flat vector): wrap the raw data
-        let pd = p.data();
-        let data = (0..h * w * c).map(|i| pd[i % pd.len()]).collect();
-        return TensorI8::from_vec(&[h, w, c], data);
+        let mut data = vec![0i8; h * w * c];
+        wrap_fill(p.data(), &mut data);
+        return Cow::Owned(TensorI8::from_vec(&[h, w, c], data));
     }
     let (ph, pw, pc) = (p.shape()[0], p.shape()[1], p.shape()[2]);
-    let mut out = TensorI8::zeros(&[h, w, c]);
-    for y in 0..h {
-        for x in 0..w {
-            for ci in 0..c {
-                out.set(&[y, x, ci], p.at(&[y % ph, x % pw, ci % pc]));
+    let pd = p.data();
+    let mut out = vec![0i8; h * w * c];
+    if pc == c {
+        for y in 0..h {
+            let srow = &pd[(y % ph) * pw * pc..(y % ph + 1) * pw * pc];
+            let drow = &mut out[y * w * c..(y + 1) * w * c];
+            if pw == w {
+                drow.copy_from_slice(srow);
+            } else {
+                for x in 0..w {
+                    let src = (x % pw) * pc;
+                    drow[x * c..(x + 1) * c].copy_from_slice(&srow[src..src + c]);
+                }
+            }
+        }
+    } else {
+        // channel-count mismatch: channels wrap too (rare — FC output fed
+        // to a conv sample); per-element fallback on raw slices
+        for y in 0..h {
+            let sy = (y % ph) * pw * pc;
+            for x in 0..w {
+                let sx = sy + (x % pw) * pc;
+                let dst = (y * w + x) * c;
+                for ci in 0..c {
+                    out[dst + ci] = pd[sx + ci % pc];
+                }
             }
         }
     }
-    out
+    Cow::Owned(TensorI8::from_vec(&[h, w, c], out))
 }
 
 /// FC analogue of [`fit_fmap_from`]: wrap the flattened feature map into an
-/// `[m, k]` operand sample.
-fn fit_matrix_from(p: &TensorI8, m: usize, k: usize) -> TensorI8 {
-    let pd = p.data();
-    TensorI8::from_vec(&[m, k], (0..m * k).map(|i| pd[i % pd.len()]).collect())
+/// `[m, k]` operand sample — borrowing on an exact shape match, chunked
+/// `copy_from_slice` otherwise.
+fn fit_matrix_from<'p>(p: &'p TensorI8, m: usize, k: usize) -> Cow<'p, TensorI8> {
+    if p.shape() == [m, k] {
+        return Cow::Borrowed(p);
+    }
+    let mut data = vec![0i8; m * k];
+    wrap_fill(p.data(), &mut data);
+    Cow::Owned(TensorI8::from_vec(&[m, k], data))
 }
 
 /// The fused-conv descriptor of a prepared layer: what geometry the
@@ -195,9 +262,14 @@ pub struct Execution {
     /// expansion — the same convention as
     /// [`crate::sim::accel::LayerProfile::act_sparsity`]).
     pub act_sparsity: Vec<f64>,
-    /// Whether the activation zero-gate engaged for each layer (always all
-    /// `false` under [`ZeroGate::Off`], all `true` under [`ZeroGate::On`];
-    /// under [`ZeroGate::Auto`] the per-layer threshold decision).
+    /// The resolved per-layer activation policy this pass ran under (never
+    /// [`ActPolicy::Auto`] — `Auto` resolves before the kernels run).
+    pub act_policy: Vec<ActPolicy>,
+    /// Whether the activation path engaged for each layer — `true` when the
+    /// resolved policy is `Gate` *or* `Encode`. Under the legacy
+    /// [`ZeroGate`] surface this is exactly the old meaning: all `false`
+    /// under [`ZeroGate::Off`], all `true` under [`ZeroGate::On`], the
+    /// per-layer threshold decision under [`ZeroGate::Auto`].
     pub gate_engaged: Vec<bool>,
 }
 
@@ -213,9 +285,9 @@ pub struct PreparedModel {
     seed_input: TensorI8,
     /// Recorded by [`Self::profile`]; empty until a functional profile ran.
     measured_act: Vec<f64>,
-    /// Model-level default gating policy [`Self::execute`] applies
-    /// (default [`ZeroGate::Auto`]).
-    zero_gate: ZeroGate,
+    /// Model-level default activation policy [`Self::execute`] applies
+    /// (default [`ActPolicy::Auto`]).
+    act_policy: ActPolicy,
     /// Per-worker streaming-IM2COL row buffers, preallocated at prepare and
     /// reused by every [`Self::execute`] (concurrent executes fall back to
     /// a transient arena rather than blocking).
@@ -269,17 +341,27 @@ impl PreparedModel {
         // Pass 2 (worker pool): the one-time encode — fused top-k prune +
         // DBB compress + CSC pack per prunable layer. This is the *only*
         // place the engine ever encodes or decodes a weight operand.
-        let operands: Vec<PackedOperand> = map_indexed(nlayers, par, |li| {
+        // Dense-fallback layers skip the pool entirely: their drawn matrix
+        // IS the operand, and it is *moved* into place below — never cloned
+        // (the unpruned layers are the largest ones; duplicating them at
+        // prepare time doubled their footprint for nothing).
+        let packed: Vec<Option<DbbPacked>> = map_indexed(nlayers, par, |li| {
             let l = &model.layers[li];
             let bound = l.dbb_bound(nnz, bz);
-            if bound < bz {
-                let enc =
-                    DbbMatrix::compress_topk(&dense[li], bz, bound).expect("valid block size");
-                PackedOperand::Dbb(enc.pack())
-            } else {
-                PackedOperand::Dense(dense[li].clone())
-            }
+            (bound < bz).then(|| {
+                DbbMatrix::compress_topk(&dense[li], bz, bound)
+                    .expect("valid block size")
+                    .pack()
+            })
         });
+        let operands: Vec<PackedOperand> = dense
+            .into_iter()
+            .zip(packed)
+            .map(|(w_dense, p)| match p {
+                Some(p) => PackedOperand::Dbb(p),
+                None => PackedOperand::Dense(w_dense),
+            })
+            .collect();
 
         let layers: Vec<PreparedLayer> = model
             .layers
@@ -327,20 +409,44 @@ impl PreparedModel {
             layers,
             seed_input: seed_input.unwrap_or_else(|| TensorI8::zeros(&[1, 1, 1])),
             measured_act: Vec::new(),
-            zero_gate: ZeroGate::default(),
+            act_policy: ActPolicy::default(),
             scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
         }
     }
 
-    /// The model-level default [`ZeroGate`] policy.
-    pub fn zero_gate(&self) -> ZeroGate {
-        self.zero_gate
+    /// The model-level default [`ActPolicy`] that [`Self::execute`]
+    /// applies.
+    pub fn act_policy(&self) -> ActPolicy {
+        self.act_policy
     }
 
-    /// Override the default gating policy [`Self::execute`] applies.
-    /// Gating never changes a result bit; this is a performance knob.
+    /// Override the default activation policy [`Self::execute`] applies.
+    /// No policy changes a result bit; this is a performance/traffic knob.
+    pub fn set_act_policy(&mut self, policy: ActPolicy) {
+        self.act_policy = policy;
+    }
+
+    /// The model-level default policy, viewed through the legacy two-way
+    /// [`ZeroGate`] surface: `Gate` and `Encode` both read as `On` (the
+    /// activation path is engaged), `Off`/`Auto` map to themselves.
+    pub fn zero_gate(&self) -> ZeroGate {
+        match self.act_policy {
+            ActPolicy::Off => ZeroGate::Off,
+            ActPolicy::Gate | ActPolicy::Encode => ZeroGate::On,
+            ActPolicy::Auto => ZeroGate::Auto,
+        }
+    }
+
+    /// Set the default policy through the legacy two-way [`ZeroGate`]
+    /// surface: `Off` → [`ActPolicy::Off`], `On` → [`ActPolicy::Gate`],
+    /// `Auto` → [`ActPolicy::Auto`] (which may resolve to `Encode` on
+    /// sufficiently sparse layers — still bit-exact).
     pub fn set_zero_gate(&mut self, gate: ZeroGate) {
-        self.zero_gate = gate;
+        self.act_policy = match gate {
+            ZeroGate::Off => ActPolicy::Off,
+            ZeroGate::On => ActPolicy::Gate,
+            ZeroGate::Auto => ActPolicy::Auto,
+        };
     }
 
     /// The measured per-layer activation sparsities — `Some` once
@@ -355,50 +461,79 @@ impl PreparedModel {
         Some(&self.measured_act)
     }
 
-    /// Run the whole network on `input` (any non-empty feature map /
-    /// matrix; it is wrap-fitted to the first layer's sampled shape) with
-    /// zero encode/decode work: every layer streams its prepared operand
-    /// through the fused/tiled kernels, under the model-level default
-    /// [`ZeroGate`] policy ([`ZeroGate::Auto`] unless
-    /// [`Self::set_zero_gate`] changed it). Repeated calls with the same
-    /// input return identical results — the engine holds no mutable state
-    /// beyond the scratch buffers, which are fully rewritten before every
-    /// read, and gating never changes a bit.
-    pub fn execute(&self, input: &TensorI8, par: Parallelism) -> Execution {
-        self.execute_gated(input, par, self.zero_gate)
+    /// Run the model's scratch arena through `f`: the preallocated arena
+    /// when it is free, a reclaimed one after a poisoning panic (the
+    /// buffers are fully rewritten before every read, so that is safe), a
+    /// transient one when a concurrent execute holds it.
+    fn with_scratch<R>(&self, f: impl FnOnce(&mut PatchScratch) -> R) -> R {
+        match self.scratch.try_lock() {
+            Ok(mut guard) => f(&mut guard),
+            Err(std::sync::TryLockError::Poisoned(p)) => f(&mut p.into_inner()),
+            Err(std::sync::TryLockError::WouldBlock) => f(&mut PatchScratch::new()),
+        }
     }
 
-    /// [`Self::execute`] under an explicit [`ZeroGate`] policy. `Auto`
+    /// Run the whole network on `input` (any non-empty feature map /
+    /// matrix; it is wrap-fitted to the first layer's sampled shape) with
+    /// zero weight encode/decode work: every layer streams its prepared
+    /// operand through the fused/tiled kernels, under the model-level
+    /// default [`ActPolicy`] ([`ActPolicy::Auto`] unless
+    /// [`Self::set_act_policy`] changed it). Repeated calls with the same
+    /// input return identical results — the engine holds no mutable state
+    /// beyond the scratch buffers, which are fully rewritten before every
+    /// read, and no activation policy changes a bit.
+    pub fn execute(&self, input: &TensorI8, par: Parallelism) -> Execution {
+        self.execute_policy(input, par, self.act_policy)
+    }
+
+    /// [`Self::execute`] under an explicit three-way [`ActPolicy`]. `Auto`
     /// resolves per layer against the *measured* activation sparsity the
     /// recorded profile holds for that layer (the same value the hardware
     /// twin prices), falling back to the zero fraction of the layer's
     /// current input operand — which the execute loop measures anyway — on
-    /// an unprofiled model. The drivers receive a pre-resolved `On`/`Off`,
-    /// so no operand is scanned twice.
+    /// an unprofiled model. The kernels receive a pre-resolved
+    /// `Off`/`Gate`/`Encode`, so no operand is scanned twice.
+    pub fn execute_policy(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        policy: ActPolicy,
+    ) -> Execution {
+        self.with_scratch(|scratch| self.execute_policy_with(input, par, policy, scratch))
+    }
+
+    /// [`Self::execute`] under an explicit legacy [`ZeroGate`] policy —
+    /// the two-way surface: it gates or not, but **never encodes** (`Auto`
+    /// here is the PR-4 gate-only auto). Bit-exact with every other path.
     pub fn execute_gated(&self, input: &TensorI8, par: Parallelism, gate: ZeroGate) -> Execution {
-        match self.scratch.try_lock() {
-            Ok(mut guard) => self.execute_gated_with(input, par, gate, &mut guard),
-            // a panicked execute poisoned the arena: the buffers are fully
-            // rewritten before every read, so reclaiming them is safe
-            Err(std::sync::TryLockError::Poisoned(p)) => {
-                self.execute_gated_with(input, par, gate, &mut p.into_inner())
-            }
-            // another execute holds the arena: run on a transient one
-            Err(std::sync::TryLockError::WouldBlock) => {
-                self.execute_gated_with(input, par, gate, &mut PatchScratch::new())
-            }
-        }
+        self.with_scratch(|scratch| self.execute_gated_with(input, par, gate, scratch))
     }
 
     /// [`Self::execute`] on a caller-owned scratch arena (model-level
-    /// default gating policy).
+    /// default activation policy).
     pub fn execute_with(
         &self,
         input: &TensorI8,
         par: Parallelism,
         scratch: &mut PatchScratch,
     ) -> Execution {
-        self.execute_gated_with(input, par, self.zero_gate, scratch)
+        self.execute_policy_with(input, par, self.act_policy, scratch)
+    }
+
+    /// [`Self::execute_policy`] on a caller-owned scratch arena.
+    pub fn execute_policy_with(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        policy: ActPolicy,
+        scratch: &mut PatchScratch,
+    ) -> Execution {
+        self.execute_resolved_with(
+            input,
+            par,
+            |li, in_s| policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s)),
+            scratch,
+        )
     }
 
     /// [`Self::execute_gated`] on a caller-owned scratch arena.
@@ -409,42 +544,93 @@ impl PreparedModel {
         gate: ZeroGate,
         scratch: &mut PatchScratch,
     ) -> Execution {
+        self.execute_resolved_with(
+            input,
+            par,
+            |li, in_s| {
+                if gate.engaged(self.measured_act.get(li).copied().unwrap_or(in_s)) {
+                    ActPolicy::Gate
+                } else {
+                    ActPolicy::Off
+                }
+            },
+            scratch,
+        )
+    }
+
+    /// The one execute loop every public variant funnels into. `resolve`
+    /// maps `(layer index, measured input zero fraction)` to the final
+    /// per-layer policy (never `Auto`); the kernels are then dispatched on
+    /// `(operand kind, policy)` — `Encode` runs the joint A-DBB kernels
+    /// (conv layers encode patch-row chunks inside the fused engine, FC
+    /// layers encode the operand once), `Gate`/`Off` run the gated/plain
+    /// kernels.
+    fn execute_resolved_with(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        resolve: impl Fn(usize, f64) -> ActPolicy,
+        scratch: &mut PatchScratch,
+    ) -> Execution {
         assert!(!input.is_empty(), "execute input must be non-empty");
         let mut act_sparsity = Vec::with_capacity(self.layers.len());
+        let mut act_policy = Vec::with_capacity(self.layers.len());
         let mut gate_engaged = Vec::with_capacity(self.layers.len());
         let mut fmap: Option<TensorI8> = None;
         for (li, l) in self.layers.iter().enumerate() {
             let prev = fmap.as_ref().unwrap_or(input);
-            let (acc, in_s, engaged) = match l.sample {
+            let (acc, in_s, pol) = match l.sample {
                 SampleShape::Conv(ss) => {
                     let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
                     let in_s = x.sparsity();
-                    let engaged = gate.engaged(self.measured_act.get(li).copied().unwrap_or(in_s));
-                    let g = ZeroGate::resolved(engaged);
-                    let acc = match &l.operand {
-                        PackedOperand::Dbb(p) => {
-                            fused::conv2d_dbb_i8_packed_gated_with(&x, p, &ss, par, g, scratch)
+                    let pol = resolve(li, in_s);
+                    debug_assert_ne!(pol, ActPolicy::Auto, "resolve must not return Auto");
+                    let acc = match (&l.operand, pol) {
+                        (PackedOperand::Dbb(p), ActPolicy::Encode) => {
+                            fused::conv2d_dbb_i8_packed_encoded_with(&x, p, &ss, par, scratch)
                         }
-                        PackedOperand::Dense(w) => {
-                            fused::conv2d_i8_gated_with(&x, w, &ss, par, g, scratch)
+                        (PackedOperand::Dbb(p), _) => fused::conv2d_dbb_i8_packed_gated_with(
+                            &x,
+                            p,
+                            &ss,
+                            par,
+                            pol.gate(),
+                            scratch,
+                        ),
+                        (PackedOperand::Dense(w), ActPolicy::Encode) => {
+                            fused::conv2d_i8_encoded_with(&x, w, &ss, par, scratch)
+                        }
+                        (PackedOperand::Dense(w), _) => {
+                            fused::conv2d_i8_gated_with(&x, w, &ss, par, pol.gate(), scratch)
                         }
                     };
-                    (acc, in_s, engaged)
+                    (acc, in_s, pol)
                 }
                 SampleShape::Fc { m, k } => {
                     let a = fit_matrix_from(prev, m, k);
                     let in_s = a.sparsity();
-                    let engaged = gate.engaged(self.measured_act.get(li).copied().unwrap_or(in_s));
-                    let g = ZeroGate::resolved(engaged);
-                    let acc = match &l.operand {
-                        PackedOperand::Dbb(p) => tiled::dbb_i8_packed_gated(&a, p, par, g),
-                        PackedOperand::Dense(w) => tiled::dense_i8_gated(&a, w, par, g),
+                    let pol = resolve(li, in_s);
+                    debug_assert_ne!(pol, ActPolicy::Auto, "resolve must not return Auto");
+                    let acc = match (&l.operand, pol) {
+                        (PackedOperand::Dbb(p), ActPolicy::Encode) => {
+                            tiled::adbb_i8_packed(scratch.act_encode(&a, self.bz), p, par)
+                        }
+                        (PackedOperand::Dbb(p), _) => {
+                            tiled::dbb_i8_packed_gated(&a, p, par, pol.gate())
+                        }
+                        (PackedOperand::Dense(w), ActPolicy::Encode) => {
+                            tiled::adbb_dense_i8(scratch.act_encode(&a, self.bz), w, par)
+                        }
+                        (PackedOperand::Dense(w), _) => {
+                            tiled::dense_i8_gated(&a, w, par, pol.gate())
+                        }
                     };
-                    (acc, in_s, engaged)
+                    (acc, in_s, pol)
                 }
             };
             act_sparsity.push(in_s);
-            gate_engaged.push(engaged);
+            act_policy.push(pol);
+            gate_engaged.push(pol != ActPolicy::Off);
             let out = requant_relu(&acc, l.relu);
             // propagate: conv outputs keep spatial form, FC outputs become
             // a 1×m×n map
@@ -458,6 +644,7 @@ impl PreparedModel {
         Execution {
             output: fmap.unwrap_or_else(|| input.clone()),
             act_sparsity,
+            act_policy,
             gate_engaged,
         }
     }
@@ -477,7 +664,13 @@ impl PreparedModel {
 
     /// Layer profiles with *measured* activation sparsity — available once
     /// [`Self::profile`] has run, `None` before (the serving twin falls
-    /// back to an assumed scalar in that case).
+    /// back to an assumed scalar in that case). Each profile also carries
+    /// the layer's resolved A-side *encode* decision
+    /// ([`LayerProfile::act_encoded`]): whether this model's
+    /// [`Self::act_policy`] would DBB-encode that layer's activations at
+    /// serve time, resolved from the same measured sparsity — so the twin
+    /// prices compressed A-stream traffic for exactly the layers the
+    /// executor compresses.
     pub fn profiles(&self) -> Option<Vec<LayerProfile>> {
         if self.measured_act.len() != self.layers.len() {
             return None;
@@ -491,6 +684,7 @@ impl PreparedModel {
                     m: l.m,
                     weights: l.weights,
                     act_sparsity: act,
+                    act_encoded: self.act_policy.resolved(act) == ActPolicy::Encode,
                     im2col_magnification: l.im2col_magnification,
                     raw_act_bytes: l.raw_act_bytes,
                     out_elems: l.out_elems,
@@ -616,6 +810,128 @@ mod tests {
         }
         // the seed input is near-dense (2% zeros): layer 0 must not gate
         assert!(!auto.gate_engaged[0], "near-dense first layer must not gate");
+    }
+
+    #[test]
+    fn dense_fallback_operand_is_held_once() {
+        // the operand footprint must be exactly the sum of the per-layer
+        // packed streams and the *moved* dense draws — pass 2 holds no
+        // second copy of any dense-fallback matrix, and the dense operand
+        // is the drawn [k, min(n, SAMPLE_COLS)] matrix itself
+        let m = models::convnet5();
+        let pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::threads(3));
+        let mut want = 0usize;
+        let mut dense_seen = 0usize;
+        for (pl, l) in pm.layers().iter().zip(&m.layers) {
+            let (_, k, n) = l.gemm_dims();
+            match &pl.operand {
+                PackedOperand::Dense(w) => {
+                    assert_eq!(w.shape(), &[k, n.min(SAMPLE_COLS)], "{}", pl.name);
+                    want += w.len();
+                    dense_seen += 1;
+                }
+                PackedOperand::Dbb(p) => want += p.operand_bytes(),
+            }
+        }
+        assert!(dense_seen > 0, "convnet5 must have a dense-fallback layer");
+        assert_eq!(pm.operand_bytes(), want);
+    }
+
+    #[test]
+    fn fit_fmap_fast_paths_match_naive_wrap() {
+        // the copy_from_slice spans and the borrow fast path must reproduce
+        // the historical per-element wrap exactly, for every alignment case
+        let mut rng = Rng::new(17);
+        let naive = |p: &TensorI8, h: usize, w: usize, c: usize| -> TensorI8 {
+            if p.shape().len() != 3 {
+                let pd = p.data();
+                let data = (0..h * w * c).map(|i| pd[i % pd.len()]).collect();
+                return TensorI8::from_vec(&[h, w, c], data);
+            }
+            let (ph, pw, pc) = (p.shape()[0], p.shape()[1], p.shape()[2]);
+            let mut out = TensorI8::zeros(&[h, w, c]);
+            for y in 0..h {
+                for x in 0..w {
+                    for ci in 0..c {
+                        out.set(&[y, x, ci], p.at(&[y % ph, x % pw, ci % pc]));
+                    }
+                }
+            }
+            out
+        };
+        // exact match (borrow), row-aligned, channel-aligned, fully ragged,
+        // and non-spatial inputs
+        let cases: Vec<(Vec<usize>, (usize, usize, usize))> = vec![
+            (vec![4, 5, 3], (4, 5, 3)),   // exact → borrow
+            (vec![2, 5, 3], (4, 5, 3)),   // rows wrap, pw == w, pc == c
+            (vec![3, 2, 3], (4, 5, 3)),   // cols wrap, pc == c
+            (vec![3, 2, 2], (4, 5, 3)),   // channels wrap too
+            (vec![1, 7, 5], (3, 4, 2)),   // everything ragged
+            (vec![6, 11], (3, 4, 2)),     // non-spatial (matrix) input
+        ];
+        for (pshape, (h, w, c)) in cases {
+            let p = TensorI8::rand_sparse(&pshape, 0.4, &mut rng);
+            let got = fit_fmap_from(&p, h, w, c);
+            let want = naive(&p, h, w, c);
+            assert_eq!(got.data(), want.data(), "pshape={pshape:?} -> [{h},{w},{c}]");
+            assert_eq!(got.shape(), want.shape());
+        }
+        // FC fit: exact borrow and wrap
+        let p = TensorI8::rand(&[6, 9], &mut rng);
+        assert_eq!(fit_matrix_from(&p, 6, 9).data(), p.data());
+        let wrapped = fit_matrix_from(&p, 4, 30);
+        for (i, &v) in wrapped.data().iter().enumerate() {
+            assert_eq!(v, p.data()[i % p.len()], "i={i}");
+        }
+    }
+
+    #[test]
+    fn three_way_policy_bit_exact_and_reported() {
+        let m = models::convnet5();
+        let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+        assert_eq!(pm.act_policy(), ActPolicy::Auto, "default policy");
+        pm.profile(Parallelism::serial());
+        let par = Parallelism::serial();
+        let off = pm.execute_policy(pm.seed_input(), par, ActPolicy::Off);
+        let gate = pm.execute_policy(pm.seed_input(), par, ActPolicy::Gate);
+        let enc = pm.execute_policy(pm.seed_input(), par, ActPolicy::Encode);
+        let auto = pm.execute_policy(pm.seed_input(), par, ActPolicy::Auto);
+        assert_eq!(off.output, gate.output, "gating must be bit-exact");
+        assert_eq!(off.output, enc.output, "A-DBB encoding must be bit-exact");
+        assert_eq!(off.output, auto.output);
+        assert!(off.act_policy.iter().all(|&p| p == ActPolicy::Off));
+        assert!(enc.act_policy.iter().all(|&p| p == ActPolicy::Encode));
+        assert!(enc.gate_engaged.iter().all(|&g| g));
+        // Auto mirrors the recorded profile through the documented tiers
+        let measured = pm.measured_act_sparsity().expect("profile ran");
+        for (li, (&s, &p)) in measured.iter().zip(&auto.act_policy).enumerate() {
+            assert_eq!(p, ActPolicy::Auto.resolved(s), "layer {li}: s={s}");
+        }
+        // profiles carry the same encode decision the executor makes
+        let profiles = pm.profiles().unwrap();
+        for (p, &pol) in profiles.iter().zip(&auto.act_policy) {
+            assert_eq!(p.act_encoded, pol == ActPolicy::Encode, "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn legacy_zero_gate_surface_maps_onto_policy() {
+        let m = models::lenet5();
+        let mut pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::serial());
+        pm.set_zero_gate(ZeroGate::On);
+        assert_eq!(pm.act_policy(), ActPolicy::Gate);
+        assert_eq!(pm.zero_gate(), ZeroGate::On);
+        pm.set_zero_gate(ZeroGate::Off);
+        assert_eq!(pm.act_policy(), ActPolicy::Off);
+        pm.set_zero_gate(ZeroGate::Auto);
+        assert_eq!(pm.zero_gate(), ZeroGate::Auto);
+        pm.set_act_policy(ActPolicy::Encode);
+        assert_eq!(pm.zero_gate(), ZeroGate::On, "Encode engages the A path");
+        // the two-way surface never encodes, even on an all-zero input
+        let zero_in = TensorI8::zeros(&[28, 28, 1]);
+        let run = pm.execute_gated(&zero_in, Parallelism::serial(), ZeroGate::Auto);
+        assert!(run.act_policy.iter().all(|&p| p != ActPolicy::Encode));
+        assert!(run.gate_engaged[0], "all-zero input must still gate");
     }
 
     #[test]

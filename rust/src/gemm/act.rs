@@ -1,0 +1,385 @@
+//! Activation-side DBB encoding — the A operand of the paper's fixed-rate
+//! compressed stream, in software.
+//!
+//! The paper's datapath consumes a *compressed* stream on both sides of the
+//! MAC: weights are DBB-encoded offline (§II-A, [`crate::dbb::DbbMatrix`] →
+//! [`crate::gemm::DbbPacked`]), and the STA (Liu et al., 2020) stream format
+//! carries per-block bitmasks + packed non-zero values at a fixed rate.
+//! S2TA (Liu et al., 2021) extends the same formulation to the *activation*
+//! operand — the joint weight×activation DBB datapath — because the big
+//! energy wins are in never *fetching* a zero operand, not merely skipping
+//! its multiply. [`ActDbb`] is that A-side stream: the time-unrolled VDBB
+//! block format [`crate::gemm::DbbPacked`] uses, but **row-major for the
+//! left operand** — each row of `A[M×K]` is blocked along `K` into
+//! `ceil(K/bz)` blocks, each block storing its non-zero values plus a
+//! `bz`-bit positional bitmask.
+//!
+//! Two differences from the weight side, both forced by *when* the encoding
+//! happens:
+//!
+//! * **Runtime, not offline.** Activations only exist at inference time, so
+//!   [`ActDbb::encode`] is a single `O(M·K)` pass the executor runs per
+//!   operand (or per generated patch-row chunk in the fused conv engine —
+//!   see `gemm::fused`'s `*_encoded` entry points).
+//! * **Lossless, not pruned.** Weights are top-k pruned *to* a bound;
+//!   activations must be reproduced exactly (bit-exactness is the
+//!   codebase's contract), so every non-zero is kept and the block bound is
+//!   *measured* (`bound = max` block occupancy, the VDBB time-unrolling
+//!   depth the hardware would run at).
+//!
+//! In memory the blocks are flattened to the per-row `(row_ptr, entries)`
+//! CSR stream the joint kernels walk — the exact mirror of `DbbPacked`'s
+//! per-column CSC flattening. [`ActDbb::stream_bytes`] reports the
+//! fixed-rate *wire* form of this exact operand (`bound` value bytes +
+//! `bz/8` bitmask bytes per block — pessimistic, since one dense block
+//! pads every block to its occupancy); the hardware twin's analytic model
+//! instead prices the *average-rate* compressed stream from the measured
+//! sparsity statistic (`crate::sim::analytic::gemm_timing_stats_enc`),
+//! because it works from layer statistics, not a concrete operand.
+//!
+//! The joint kernels (`adbb_rows_i8` behind [`adbb_i8_packed`], consuming
+//! a [`crate::gemm::DbbPacked`] weight stream; `adbb_dense_rows_i8` behind
+//! [`adbb_dense_i8`], consuming a dense `[K,N]` weight) are **bit-exact**
+//! with the ungated oracles: a term they skip has a zero activation and
+//! contributes exactly 0 to the INT32 accumulator, and the surviving terms
+//! accumulate in the identical ascending-`k` order (property-tested in
+//! `rust/tests/act_dbb.rs`).
+
+use crate::gemm::DbbPacked;
+use crate::tensor::{TensorI32, TensorI8};
+
+/// A DBB-encoded activation operand `A[M×K]`: per-block (bitmask + packed
+/// non-zeros) along `K`, flattened to the per-row `(row_ptr, entries)` CSR
+/// stream the joint row kernels consume. Encoding is **lossless** — every
+/// non-zero survives with its position — so every GEMM/conv that takes an
+/// `ActDbb` is bit-exact with its dense-A counterpart.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ActDbb {
+    /// GEMM rows of the encoded operand.
+    pub m: usize,
+    /// Reduction dim of the encoded operand.
+    pub k: usize,
+    /// Block size along `K` the stream is blocked with.
+    pub bz: usize,
+    /// Measured density bound: max non-zeros observed in any block (≥ 1 —
+    /// the hardware streams at least one slot per block, mirroring
+    /// [`crate::dbb::DbbMatrix`]). This is the VDBB time-unrolling depth of
+    /// the fixed-rate stream.
+    pub bound: usize,
+    row_ptr: Vec<usize>,
+    entries: Vec<(u32, i32)>,
+}
+
+impl ActDbb {
+    /// Encode a dense `[M, K]` INT8 activation operand, once, at runtime:
+    /// one `O(M·K)` pass recording every non-zero as a `(k-index, value)`
+    /// entry and measuring the per-block density bound. `bz` must be
+    /// `1..=16` (the [`crate::dbb::DbbMatrix`] block-size range).
+    pub fn encode(a: &TensorI8, bz: usize) -> ActDbb {
+        let mut enc = ActDbb::empty();
+        enc.encode_reuse(a, bz);
+        enc
+    }
+
+    /// An empty stream for [`Self::encode_reuse`] to fill — the seed of the
+    /// reusable-buffer encode path steady-state executors hold in their
+    /// scratch arena.
+    pub fn empty() -> ActDbb {
+        ActDbb {
+            m: 0,
+            k: 0,
+            bz: 1,
+            bound: 1,
+            row_ptr: Vec::new(),
+            entries: Vec::new(),
+        }
+    }
+
+    /// [`Self::encode`] into this existing stream: previous contents are
+    /// discarded but the buffers' capacity is retained, so a hot loop that
+    /// re-encodes per call allocates nothing in steady state (the
+    /// [`crate::engine`] executor's FC `Encode` path draws one of these
+    /// from its scratch arena). Every field is rewritten — equivalent to
+    /// `*self = ActDbb::encode(a, bz)` to the last bit.
+    pub fn encode_reuse(&mut self, a: &TensorI8, bz: usize) {
+        assert!(
+            a.shape().len() == 2,
+            "ActDbb encodes a [M, K] matrix, got shape {:?}",
+            a.shape()
+        );
+        assert!((1..=16).contains(&bz), "block size {bz} not supported (must be 1..=16)");
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let ad = a.data();
+        self.row_ptr.clear();
+        self.entries.clear();
+        self.row_ptr.reserve(m + 1);
+        self.row_ptr.push(0usize);
+        let mut bound = 0usize;
+        for row in 0..m {
+            let arow = &ad[row * k..(row + 1) * k];
+            let mut block_nnz = 0usize;
+            for (kk, &v) in arow.iter().enumerate() {
+                if kk % bz == 0 {
+                    bound = bound.max(block_nnz);
+                    block_nnz = 0;
+                }
+                if v != 0 {
+                    self.entries.push((kk as u32, v as i32));
+                    block_nnz += 1;
+                }
+            }
+            bound = bound.max(block_nnz);
+            self.row_ptr.push(self.entries.len());
+        }
+        self.m = m;
+        self.k = k;
+        self.bz = bz;
+        self.bound = bound.max(1);
+    }
+
+    /// Per-row offsets into [`Self::entries`] (`m + 1` values).
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// The `(k-index, value)` stream, row-major, ascending `k` within a row.
+    pub fn entries(&self) -> &[(u32, i32)] {
+        &self.entries
+    }
+
+    /// Stored non-zeros.
+    pub fn total_nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Zero fraction of the encoded operand (identical to the source
+    /// tensor's [`TensorI8::sparsity`]).
+    pub fn sparsity(&self) -> f64 {
+        let total = self.m * self.k;
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.entries.len() as f64 / total as f64
+    }
+
+    /// K-blocks per row (`ceil(K/bz)`; the last block is zero-padded).
+    pub fn kblocks(&self) -> usize {
+        self.k.div_ceil(self.bz)
+    }
+
+    /// Bytes of the fixed-rate compressed *wire* form of this operand: per
+    /// block, `bound` value bytes (slots padded to the measured bound so
+    /// the stream rate is fixed, paper §II-A) plus `bz/8` bitmask bytes.
+    /// A reporting/analysis view (the bench reports print it); note the
+    /// analytic twin prices A-traffic from the sparsity *statistic*
+    /// instead (average-rate, `gemm_timing_stats_enc`), which undercuts
+    /// this bound-padded figure whenever block occupancy is skewed.
+    pub fn stream_bytes(&self) -> usize {
+        self.m * self.kblocks() * (self.bound + self.bz.div_ceil(8))
+    }
+
+    /// Bytes the raw (uncompressed) operand would stream.
+    pub fn dense_bytes(&self) -> usize {
+        self.m * self.k
+    }
+
+    /// Host bytes the packed CSR form occupies.
+    pub fn operand_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.entries.len() * std::mem::size_of::<(u32, i32)>()
+    }
+}
+
+/// Joint-sparse inner kernel: encoded-A rows × the decoded per-column CSC
+/// weight stream of a [`DbbPacked`]. For each `(row, col)` the two sorted
+/// index lists (A row ascending `k`, W column ascending `k`) are
+/// merge-intersected, so only `(non-zero activation, stored weight)` pairs
+/// ever reach the multiplier — the S2TA joint-DBB datapath in software.
+///
+/// Bit-exact with [`crate::gemm::dbb_rows_i8`] on the dense form of A:
+/// every skipped term has a zero activation (contributes exactly 0 to the
+/// INT32 accumulator) and the surviving terms keep the ascending-`k`
+/// accumulation order of the weight stream.
+pub(crate) fn adbb_rows_i8(
+    a_row_ptr: &[usize],
+    a_entries: &[(u32, i32)],
+    col_ptr: &[usize],
+    entries: &[(u32, i32)],
+    out: &mut [i32],
+    row0: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &a_entries[a_row_ptr[row]..a_row_ptr[row + 1]];
+        if arow.is_empty() {
+            crow.fill(0);
+            continue;
+        }
+        for (col, cv) in crow.iter_mut().enumerate() {
+            let wcol = &entries[col_ptr[col]..col_ptr[col + 1]];
+            let mut acc = 0i32;
+            let (mut ai, mut wi) = (0usize, 0usize);
+            while ai < arow.len() && wi < wcol.len() {
+                let (ak, av) = arow[ai];
+                let (wk, wv) = wcol[wi];
+                match ak.cmp(&wk) {
+                    std::cmp::Ordering::Less => ai += 1,
+                    std::cmp::Ordering::Greater => wi += 1,
+                    std::cmp::Ordering::Equal => {
+                        acc += av * wv;
+                        ai += 1;
+                        wi += 1;
+                    }
+                }
+            }
+            *cv = acc;
+        }
+    }
+}
+
+/// Joint kernel for dense-fallback weights: encoded-A rows × a dense
+/// `[K, N]` weight. Each stored activation entry streams one axpy over the
+/// weight row its `k`-index selects — the exact non-zero terms
+/// [`crate::gemm::dense_rows_i8`] accumulates (it skips zero activations
+/// too), in the exact ascending-`k` order, so the two are bit-exact.
+pub(crate) fn adbb_dense_rows_i8(
+    a_row_ptr: &[usize],
+    a_entries: &[(u32, i32)],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        for &(kk, av) in &a_entries[a_row_ptr[row]..a_row_ptr[row + 1]] {
+            let wrow = &wd[kk as usize * n..kk as usize * n + n];
+            for (cv, &wv) in crow.iter_mut().zip(wrow) {
+                *cv += av * wv as i32;
+            }
+        }
+    }
+}
+
+/// Joint-sparse GEMM on a pre-encoded A and a pre-packed W: zero per-call
+/// encode/decode work on *either* operand. Bit-exact with
+/// [`crate::gemm::dbb_i8_packed`] on the dense form of `a`.
+pub fn adbb_i8_packed(a: &ActDbb, w: &DbbPacked) -> TensorI32 {
+    assert_eq!(a.k, w.k, "GEMM inner dims: Adbb[{}x{}] Wdbb[{}x{}]", a.m, a.k, w.k, w.n);
+    let mut c = TensorI32::zeros(&[a.m, w.n]);
+    adbb_rows_i8(a.row_ptr(), a.entries(), w.col_ptr(), w.entries(), c.data_mut(), 0, w.n);
+    c
+}
+
+/// Joint GEMM for dense-fallback weights: encoded A × dense `[K, N]` W.
+/// Bit-exact with [`crate::gemm::dense_i8`] on the dense form of `a`.
+pub fn adbb_dense_i8(a: &ActDbb, w: &TensorI8) -> TensorI32 {
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(a.k, k2, "GEMM inner dims: Adbb[{}x{}] W[{k2}x{n}]", a.m, a.k);
+    let mut c = TensorI32::zeros(&[a.m, n]);
+    adbb_dense_rows_i8(a.row_ptr(), a.entries(), w.data(), c.data_mut(), 0, n);
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::DbbMatrix;
+    use crate::gemm;
+    use crate::util::prop::{check, Config};
+
+    #[test]
+    fn encode_roundtrips_every_nonzero() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(16) + 1;
+            let k = rng.below(48) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let p = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p, rng);
+            let enc = ActDbb::encode(&a, bz);
+            let mut back = TensorI8::zeros(&[m, k]);
+            for row in 0..m {
+                for &(kk, v) in &enc.entries()[enc.row_ptr()[row]..enc.row_ptr()[row + 1]] {
+                    back.set(&[row, kk as usize], v as i8);
+                }
+            }
+            assert_eq!(back.data(), a.data(), "m={m} k={k} bz={bz} p={p}");
+            assert_eq!(
+                enc.total_nnz(),
+                a.data().iter().filter(|&&v| v != 0).count()
+            );
+            assert!(enc.bound >= 1 && enc.bound <= bz, "bound={}", enc.bound);
+            assert!((enc.sparsity() - a.sparsity()).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn stream_bytes_follow_fixed_rate_formula() {
+        // 8 rows × 2 blocks of bz=8, max 3/block → 8·2·(3+1) bytes
+        let mut a = TensorI8::zeros(&[8, 16]);
+        for row in 0..8 {
+            for j in 0..3 {
+                a.set(&[row, j], 1 + j as i8);
+            }
+        }
+        let enc = ActDbb::encode(&a, 8);
+        assert_eq!(enc.bound, 3);
+        assert_eq!(enc.stream_bytes(), 8 * 2 * (3 + 1));
+        assert!(enc.stream_bytes() < enc.dense_bytes());
+        // an all-zero operand still streams one slot per block
+        let z = ActDbb::encode(&TensorI8::zeros(&[4, 8]), 8);
+        assert_eq!(z.bound, 1);
+        assert_eq!(z.total_nnz(), 0);
+    }
+
+    #[test]
+    fn encode_reuse_matches_fresh_encode() {
+        // one reused stream across wildly varying shapes/blocks must be
+        // indistinguishable from a fresh encode, field for field
+        let scratch = std::cell::RefCell::new(ActDbb::empty());
+        check(Config::default().cases(48), |rng| {
+            let m = rng.below(16) + 1;
+            let k = rng.below(48) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let p = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p, rng);
+            let mut reused = scratch.borrow_mut();
+            reused.encode_reuse(&a, bz);
+            assert_eq!(*reused, ActDbb::encode(&a, bz), "m={m} k={k} bz={bz} p={p}");
+        });
+    }
+
+    #[test]
+    fn joint_kernels_match_oracles_prop() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(12) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(16) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let p = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p, rng);
+            let wd = TensorI8::rand(&[k, n], rng);
+            let enc = ActDbb::encode(&a, bz);
+            assert_eq!(
+                adbb_dense_i8(&enc, &wd).data(),
+                gemm::dense_i8(&a, &wd).data(),
+                "dense m={m} k={k} n={n} bz={bz} p={p}"
+            );
+            let w = DbbMatrix::compress_topk(&wd, bz, nnz).unwrap();
+            let packed = DbbPacked::pack(&w);
+            assert_eq!(
+                adbb_i8_packed(&enc, &packed).data(),
+                gemm::dbb_i8_packed(&a, &packed).data(),
+                "dbb m={m} k={k} n={n} bz={bz} nnz={nnz} p={p}"
+            );
+        });
+    }
+}

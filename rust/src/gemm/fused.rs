@@ -33,6 +33,15 @@
 //! activations — including the IM2COL padding zeros the row generator
 //! writes — skip their multiplies entirely, still bit-exact
 //! (`rust/tests/zero_gate.rs`).
+//!
+//! The `*_encoded` entry points go one step further down the
+//! [`crate::gemm::ActPolicy`] ladder: each worker DBB-encodes its generated
+//! patch-row chunk **right after streaming IM2COL** — the point where the
+//! ~`kh·kw/stride²` bandwidth expansion happens, so the padding zeros and
+//! the duplicated zero pixels are compressed away the moment they are
+//! produced — and streams the per-chunk `(row_ptr, entries)` CSR through
+//! the joint A-DBB kernels (`crate::gemm::act`). Still bit-exact: the
+//! encoding is lossless (`rust/tests/act_dbb.rs`).
 
 pub use crate::util::par::Parallelism;
 
@@ -56,6 +65,16 @@ pub const PATCH_ROWS: usize = 8;
 #[derive(Debug, Default)]
 pub struct PatchScratch {
     bufs: Vec<Vec<i8>>,
+    /// Per-worker chunk-encode buffers for the `*_encoded` paths: the CSR
+    /// `row_ptr` / `(k, value)` entry stream of one `PATCH_ROWS` chunk.
+    /// Cleared and fully rewritten before every read, like `bufs`.
+    enc_ptr: Vec<Vec<usize>>,
+    enc_ent: Vec<Vec<(u32, i32)>>,
+    /// Reusable whole-operand A-DBB stream for FC-layer `Encode` passes —
+    /// the non-chunked counterpart of `enc_ptr`/`enc_ent` (the engine
+    /// encodes one FC operand at a time, between conv layers, so a single
+    /// slot suffices). Fully rewritten by every [`Self::act_encode`].
+    act_enc: Option<crate::gemm::ActDbb>,
 }
 
 impl PatchScratch {
@@ -87,6 +106,39 @@ impl PatchScratch {
     fn take(&mut self, workers: usize, k: usize) -> &mut [Vec<i8>] {
         self.reserve(workers, k);
         &mut self.bufs[..workers]
+    }
+
+    /// Like [`Self::take`], plus the per-worker chunk-encode buffers the
+    /// `*_encoded` conv paths rewrite per chunk (entry capacity grows on
+    /// demand and is retained across calls, so the steady state allocates
+    /// nothing).
+    fn take_encoded(
+        &mut self,
+        workers: usize,
+        k: usize,
+    ) -> (&mut [Vec<i8>], &mut [Vec<usize>], &mut [Vec<(u32, i32)>]) {
+        self.reserve(workers, k);
+        if self.enc_ptr.len() < workers {
+            self.enc_ptr.resize_with(workers, Vec::new);
+        }
+        if self.enc_ent.len() < workers {
+            self.enc_ent.resize_with(workers, Vec::new);
+        }
+        (
+            &mut self.bufs[..workers],
+            &mut self.enc_ptr[..workers],
+            &mut self.enc_ent[..workers],
+        )
+    }
+
+    /// DBB-encode a whole `[M, K]` activation operand into the
+    /// scratch-owned reusable stream ([`crate::gemm::ActDbb::encode_reuse`])
+    /// and return it — zero steady-state allocation, the FC analogue of the
+    /// per-worker chunk encoding the `*_encoded` conv paths do.
+    pub fn act_encode(&mut self, a: &TensorI8, bz: usize) -> &crate::gemm::ActDbb {
+        let enc = self.act_enc.get_or_insert_with(crate::gemm::ActDbb::empty);
+        enc.encode_reuse(a, bz);
+        enc
     }
 }
 
@@ -170,6 +222,14 @@ fn check_weights<T: Copy + Default>(w: &Tensor<T>, s: &ConvShape) {
 /// IM2COL rows in `PATCH_ROWS` chunks and handing each chunk (patch slice +
 /// matching output window) to the inner row `kernel` — the dense or
 /// decoded-CSC GEMM row kernel.
+///
+/// NOTE: [`conv_rows_encoded`] mirrors this chunk loop (same
+/// `gr → (batch, pixel)` mapping, same `PATCH_ROWS` chunking) with a
+/// per-chunk encode step; the two cannot share one scaffold because the
+/// encoded path needs per-*worker* mutable CSR buffers the shared `Fn`
+/// kernel cannot own. Keep any change to the row mapping or chunking in
+/// lockstep — the encoded-vs-plain bit-exactness property tests
+/// (`encoded_conv_bit_exact_prop`, `rust/tests/act_dbb.rs`) catch drift.
 fn conv_rows<K: Fn(&[i8], &mut [i32])>(
     xd: &[i8],
     s: &ConvShape,
@@ -232,6 +292,108 @@ fn conv_tiled<K: Fn(&[i8], &mut [i32]) + Sync>(
         {
             let row0 = ti * rows_per_tile;
             sc.spawn(move || conv_rows(xd, s, tile, row0, k, n, buf, kref));
+        }
+    });
+}
+
+/// Generate-encode-accumulate worker for the `*_encoded` paths: like
+/// [`conv_rows`], but every `PATCH_ROWS` chunk of generated IM2COL rows is
+/// DBB-encoded in place — one pass over the chunk recording its non-zeros
+/// as a `(row_ptr, entries)` CSR — before the joint A-DBB row `kernel`
+/// consumes it. The encode happens at the exact point of the IM2COL
+/// bandwidth expansion, so padding zeros and duplicated zero pixels never
+/// reach the multiplier *or* the weight-stream walk.
+///
+/// NOTE: keep the chunk loop and `gr → (batch, pixel)` mapping in lockstep
+/// with [`conv_rows`] (see the note there for why the scaffold is
+/// duplicated).
+fn conv_rows_encoded<K: Fn(&[usize], &[(u32, i32)], &mut [i32])>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    patch: &mut [i8],
+    arp: &mut Vec<usize>,
+    aen: &mut Vec<(u32, i32)>,
+    kernel: &K,
+) {
+    debug_assert!(patch.len() >= PATCH_ROWS * k);
+    let (oh, ow) = (s.oh(), s.ow());
+    let img = s.h * s.w * s.c;
+    let rows = out.len() / n;
+    let mut done = 0usize;
+    while done < rows {
+        let take = PATCH_ROWS.min(rows - done);
+        arp.clear();
+        aen.clear();
+        arp.push(0);
+        for r in 0..take {
+            let gr = row0 + done + r;
+            let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+            patch_row_into(
+                &xd[bi * img..(bi + 1) * img],
+                s,
+                pix / ow,
+                pix % ow,
+                &mut patch[r * k..(r + 1) * k],
+            );
+            for (kk, &v) in patch[r * k..(r + 1) * k].iter().enumerate() {
+                if v != 0 {
+                    aen.push((kk as u32, v as i32));
+                }
+            }
+            arp.push(aen.len());
+        }
+        kernel(arp, aen, &mut out[done * n..(done + take) * n]);
+        done += take;
+    }
+}
+
+/// Row-tile `out` across the worker pool and run [`conv_rows_encoded`] on
+/// each tile, each worker on its own patch + encode buffers. Same partition
+/// as [`conv_tiled`]; serial parallelism runs inline.
+fn conv_tiled_encoded<K: Fn(&[usize], &[(u32, i32)], &mut [i32]) + Sync>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i32],
+    m: usize,
+    k: usize,
+    n: usize,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+    kernel: K,
+) {
+    let threads = par.get().min(m);
+    let (patches, ptrs, ents) = scratch.take_encoded(threads.max(1), k);
+    if threads <= 1 {
+        conv_rows_encoded(
+            xd,
+            s,
+            out,
+            0,
+            k,
+            n,
+            &mut patches[0],
+            &mut ptrs[0],
+            &mut ents[0],
+            &kernel,
+        );
+        return;
+    }
+    let rows_per_tile = m.div_ceil(threads);
+    let kref = &kernel;
+    std::thread::scope(|sc| {
+        for ((((ti, tile), buf), arp), aen) in out
+            .chunks_mut(rows_per_tile * n)
+            .enumerate()
+            .zip(patches.iter_mut())
+            .zip(ptrs.iter_mut())
+            .zip(ents.iter_mut())
+        {
+            let row0 = ti * rows_per_tile;
+            sc.spawn(move || conv_rows_encoded(xd, s, tile, row0, k, n, buf, arp, aen, kref));
         }
     });
 }
@@ -311,6 +473,39 @@ pub fn conv2d_i8_gated_with(
             crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
         });
     }
+    c
+}
+
+/// [`conv2d_i8`] with the activation stream DBB-encoded ([`crate::gemm::ActPolicy::Encode`];
+/// transient scratch): each worker encodes its generated patch-row chunks
+/// right after streaming IM2COL and runs the joint A-DBB kernel against the
+/// dense weight. Bit-exact with [`conv2d_i8`] — the chunk encoding is
+/// lossless, padding zeros included.
+pub fn conv2d_i8_encoded(x: &TensorI8, w: &TensorI8, s: &ConvShape, par: Parallelism) -> TensorI32 {
+    conv2d_i8_encoded_with(x, w, s, par, &mut PatchScratch::new())
+}
+
+/// [`conv2d_i8_encoded`] drawing its per-worker patch and encode buffers
+/// from a caller-owned [`PatchScratch`].
+pub fn conv2d_i8_encoded_with(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
+    let batch = batch_of(x, s);
+    check_weights(w, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output(x.shape().len() == 4, batch, s);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let (xd, wd) = (x.data(), w.data());
+    conv_tiled_encoded(xd, s, c.data_mut(), m, k, n, par, scratch, |arp, aen, out| {
+        crate::gemm::act::adbb_dense_rows_i8(arp, aen, wd, out, 0, n)
+    });
     c
 }
 
@@ -398,6 +593,48 @@ pub fn conv2d_dbb_i8_packed_gated_with(
             crate::gemm::dbb_rows_i8(patch, cp, en, out, 0, k, n)
         });
     }
+    c
+}
+
+/// [`conv2d_dbb_i8_packed`] with the activation stream DBB-encoded as well
+/// (transient scratch) — the **joint-sparse** fused conv: compressed
+/// operands on both sides of the MAC, the S2TA formulation in software.
+pub fn conv2d_dbb_i8_packed_encoded(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+) -> TensorI32 {
+    conv2d_dbb_i8_packed_encoded_with(x, w, s, par, &mut PatchScratch::new())
+}
+
+/// [`conv2d_dbb_i8_packed_encoded`] on a caller-owned [`PatchScratch`] —
+/// the fully prepared joint-sparse hot path ([`crate::engine`] runs every
+/// `Encode`-policy conv layer through this entry point): weights packed
+/// once at prepare, activations encoded chunk-by-chunk at the IM2COL
+/// expansion point, zeros on *either* side never reach the multiplier.
+/// Bit-exact with [`conv2d_dbb_i8_packed_with`].
+pub fn conv2d_dbb_i8_packed_encoded_with(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output(x.shape().len() == 4, batch, s);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let (cp, en) = (w.col_ptr(), w.entries());
+    let xd = x.data();
+    conv_tiled_encoded(xd, s, c.data_mut(), m, k, n, par, scratch, |arp, aen, out| {
+        crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, out, 0, n)
+    });
     c
 }
 
@@ -604,6 +841,51 @@ mod tests {
                 "dbb shape={s:?} threads={threads} p={p_zero} gate={gate:?}"
             );
         });
+    }
+
+    #[test]
+    fn encoded_conv_bit_exact_prop() {
+        // chunk-encoded A (incl. the IM2COL padding zeros) vs the plain
+        // fused path, dense and DBB weights, one shared scratch throughout
+        let scratch = std::cell::RefCell::new(PatchScratch::new());
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let threads = rng.below(8) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let par = Parallelism::threads(threads);
+            let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], p_zero, rng);
+            let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+            assert_eq!(
+                conv2d_i8_encoded_with(&x, &w, &s, par, &mut scratch.borrow_mut()).data(),
+                conv2d_i8(&x, &w, &s, par).data(),
+                "dense shape={s:?} threads={threads} p={p_zero}"
+            );
+            let wc = crate::dbb::DbbMatrix::compress_topk(
+                &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+                8,
+                rng.below(8) + 1,
+            )
+            .unwrap();
+            let packed = DbbPacked::pack(&wc);
+            assert_eq!(
+                conv2d_dbb_i8_packed_encoded_with(&x, &packed, &s, par, &mut scratch.borrow_mut())
+                    .data(),
+                conv2d_dbb_i8_packed(&x, &packed, &s, par).data(),
+                "dbb shape={s:?} threads={threads} p={p_zero}"
+            );
+        });
+    }
+
+    #[test]
+    fn encoded_conv_batch_folds_into_m() {
+        let mut rng = Rng::new(13);
+        let s = ConvShape { h: 6, w: 5, c: 3, kh: 3, kw: 3, oc: 4, stride: 1, pad: 1 };
+        let x = TensorI8::rand_sparse(&[3, s.h, s.w, s.c], 0.6, &mut rng);
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], &mut rng);
+        assert_eq!(
+            conv2d_i8_encoded(&x, &w, &s, Parallelism::threads(4)).data(),
+            conv2d_i8(&x, &w, &s, Parallelism::threads(4)).data()
+        );
     }
 
     #[test]

@@ -50,10 +50,32 @@
 //! fraction clears [`ZeroGate::AUTO_THRESHOLD`]; the end-to-end consumer is
 //! [`crate::engine::PreparedModel::execute`], which resolves `Auto` per
 //! layer from the activation sparsities its own profile pass measured.
+//!
+//! ## Activation-side DBB encoding
+//!
+//! Gating skips the *multiply* but still fetches the operand. The paper's
+//! datapath goes further: it consumes a fixed-rate **compressed** stream on
+//! both sides of the MAC, and S2TA (Liu et al., 2021) shows the joint
+//! weight×activation DBB formulation is where the big energy wins live.
+//! The [`act`] submodule is that A-side: [`ActDbb`] encodes the left
+//! operand at runtime into the same time-unrolled VDBB block format
+//! [`DbbPacked`] uses (bitmask + packed non-zeros per `bz`-block), but
+//! row-major and **lossless** (the bound is measured, not pruned to), and
+//! the joint kernels ([`adbb_i8_packed`], [`adbb_dense_i8`], their [`tiled`]
+//! drivers and the [`fused`] `*_encoded` conv entry points, which encode
+//! each generated patch-row chunk right after streaming IM2COL) multiply
+//! only `(non-zero activation, stored weight)` pairs — bit-exact with the
+//! dense-A oracles. [`ActPolicy`] is the three-way per-operand decision
+//! (off / gate / encode); [`crate::engine::PreparedModel::execute`]
+//! resolves it per layer from the same recorded profile that drives
+//! `ZeroGate::Auto` and that the hardware twin prices.
 
+pub mod act;
 pub mod conv;
 pub mod fused;
 pub mod tiled;
+
+pub use act::{adbb_dense_i8, adbb_i8_packed, ActDbb};
 
 use crate::dbb::DbbMatrix;
 use crate::tensor::{TensorI32, TensorI8};
@@ -124,6 +146,91 @@ impl ZeroGate {
         } else {
             ZeroGate::Off
         }
+    }
+}
+
+/// Three-way activation-operand policy — the full A-side decision the
+/// engine makes per layer, superseding the two-way [`ZeroGate`]:
+///
+/// * [`ActPolicy::Off`] — stream the operand raw through the ungated
+///   kernels. Right for dense activations, where both the occupancy scan
+///   and the encode pass cost more than they save.
+/// * [`ActPolicy::Gate`] — the [`ZeroGate`] zero-skip kernels: the operand
+///   is still fetched in full, but zero activations skip their multiplies
+///   ("skipped the multiply").
+/// * [`ActPolicy::Encode`] — DBB-encode the operand ([`ActDbb`]) and run
+///   the joint kernels: zeros are never stored, streamed, or multiplied
+///   ("never fetched the operand"). Costs one `O(M·K)` encode pass plus
+///   1 bit/element of index metadata, so it only pays above a higher
+///   sparsity than gating.
+/// * [`ActPolicy::Auto`] (default) — resolve per operand from the measured
+///   A-side zero fraction: `Encode` at ≥ [`ActPolicy::ENCODE_THRESHOLD`],
+///   else `Gate` at ≥ [`ActPolicy::GATE_THRESHOLD`], else `Off`.
+///
+/// Every policy is **bit-exact** with every other (gating skips exact
+/// zeros; encoding is lossless), so — like [`ZeroGate`] — this is purely a
+/// performance/traffic knob. `Auto`'s thresholds are the **modeled
+/// datapath's** break-evens, and the hardware twin prices the identical
+/// decision (an encoded layer's A-side SRAM traffic is the compressed
+/// stream — values + index bytes — instead of the raw fetch,
+/// `crate::sim::analytic::gemm_timing_stats_enc`): one policy source for
+/// the executor and the twin, which is the point. On the *software* side
+/// the `Encode` tier trades an `O(M·K)` encode pass and a merge-join walk
+/// for the skipped fetches, so its wall-clock win over `Gate` is workload-
+/// and host-dependent — measure with the `gemm/adbb_*` /
+/// `engine/convnet5_execute_encoded` bench entries, and pin
+/// [`ActPolicy::Gate`] via the model-level setter where raw execute
+/// latency is all that matters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ActPolicy {
+    /// Raw operand, ungated kernels.
+    Off,
+    /// Zero-gated kernels (fetch everything, skip zero multiplies).
+    Gate,
+    /// DBB-encode the operand and run the joint A-DBB kernels.
+    Encode,
+    /// Resolve per operand from the measured A-side zero fraction.
+    #[default]
+    Auto,
+}
+
+impl ActPolicy {
+    /// A-side zero fraction at which `Auto` starts gating (the
+    /// [`ZeroGate::AUTO_THRESHOLD`] — one threshold, two policies).
+    pub const GATE_THRESHOLD: f64 = ZeroGate::AUTO_THRESHOLD;
+
+    /// A-side zero fraction at which `Auto` upgrades gating to encoding —
+    /// the **modeled datapath's** traffic break-even: the compressed
+    /// stream (surviving values + 1 bit/element of bitmask) undercuts the
+    /// raw fetch once more than half the operand is zeros, with margin for
+    /// the runtime encode pass. This is an operand-*traffic* threshold,
+    /// shared with the twin's pricing — not a measured software-latency
+    /// optimum (see the type-level docs).
+    pub const ENCODE_THRESHOLD: f64 = 0.5;
+
+    /// Resolve the policy against a measured A-side zero fraction. Fixed
+    /// policies return themselves; `Auto` picks the tier the sparsity pays
+    /// for. Never returns `Auto`.
+    pub fn resolved(self, act_sparsity: f64) -> ActPolicy {
+        match self {
+            ActPolicy::Auto => {
+                if act_sparsity >= Self::ENCODE_THRESHOLD {
+                    ActPolicy::Encode
+                } else if act_sparsity >= Self::GATE_THRESHOLD {
+                    ActPolicy::Gate
+                } else {
+                    ActPolicy::Off
+                }
+            }
+            p => p,
+        }
+    }
+
+    /// The [`ZeroGate`] this (resolved) policy hands the gated kernel
+    /// drivers when it does not encode: `Gate` arms them, `Off` (and
+    /// `Encode`, which never reaches them) leaves them branch-free.
+    pub(crate) fn gate(self) -> ZeroGate {
+        ZeroGate::resolved(matches!(self, ActPolicy::Gate))
     }
 }
 
@@ -586,6 +693,30 @@ mod tests {
         assert!(ZeroGate::Auto.engaged(0.8));
         assert_eq!(ZeroGate::resolved(true), ZeroGate::On);
         assert_eq!(ZeroGate::resolved(false), ZeroGate::Off);
+    }
+
+    #[test]
+    fn act_policy_auto_resolves_three_tiers() {
+        assert_eq!(ActPolicy::Auto.resolved(0.0), ActPolicy::Off);
+        assert_eq!(
+            ActPolicy::Auto.resolved(ActPolicy::GATE_THRESHOLD - 0.01),
+            ActPolicy::Off
+        );
+        assert_eq!(ActPolicy::Auto.resolved(ActPolicy::GATE_THRESHOLD), ActPolicy::Gate);
+        assert_eq!(
+            ActPolicy::Auto.resolved(ActPolicy::ENCODE_THRESHOLD - 0.01),
+            ActPolicy::Gate
+        );
+        assert_eq!(ActPolicy::Auto.resolved(ActPolicy::ENCODE_THRESHOLD), ActPolicy::Encode);
+        assert_eq!(ActPolicy::Auto.resolved(1.0), ActPolicy::Encode);
+        // fixed policies ignore the measurement
+        for s in [0.0, 0.5, 1.0] {
+            assert_eq!(ActPolicy::Off.resolved(s), ActPolicy::Off);
+            assert_eq!(ActPolicy::Gate.resolved(s), ActPolicy::Gate);
+            assert_eq!(ActPolicy::Encode.resolved(s), ActPolicy::Encode);
+        }
+        assert_eq!(ActPolicy::Gate.gate(), ZeroGate::On);
+        assert_eq!(ActPolicy::Off.gate(), ZeroGate::Off);
     }
 
     #[test]

@@ -17,7 +17,7 @@
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
-use crate::gemm::{DbbPacked, ZeroGate};
+use crate::gemm::{ActDbb, DbbPacked, ZeroGate};
 use crate::tensor::{TensorI32, TensorI8};
 
 /// Shared row-tiling scaffold of every GEMM driver in this module:
@@ -128,6 +128,38 @@ pub fn dbb_i8_packed_gated(
             crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
         })
     }
+}
+
+/// Parallel joint-sparse GEMM: pre-encoded A ([`ActDbb`]) × pre-packed W,
+/// row-tiled across the pool. Zero per-call encode/decode work on either
+/// operand; bit-exact with [`crate::gemm::adbb_i8_packed`] (and so with the
+/// dense-A oracles) for every thread count.
+pub fn adbb_i8_packed(a: &ActDbb, w: &DbbPacked, par: Parallelism) -> TensorI32 {
+    assert_eq!(a.k, w.k, "GEMM inner dims: Adbb[{}x{}] Wdbb[{}x{}]", a.m, a.k, w.k, w.n);
+    if par.get() <= 1 || a.m <= 1 || w.n == 0 {
+        return crate::gemm::adbb_i8_packed(a, w);
+    }
+    let (arp, aen) = (a.row_ptr(), a.entries());
+    let (cp, en) = (w.col_ptr(), w.entries());
+    row_tiled(a.m, w.n, par, |tile, row0| {
+        crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, tile, row0, w.n)
+    })
+}
+
+/// Parallel joint GEMM for dense-fallback weights: pre-encoded A × dense
+/// `[K, N]` W. Bit-exact with [`crate::gemm::adbb_dense_i8`] (and so with
+/// [`dense_i8`]) for every thread count.
+pub fn adbb_dense_i8(a: &ActDbb, w: &TensorI8, par: Parallelism) -> TensorI32 {
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(a.k, k2, "GEMM inner dims: Adbb[{}x{}] W[{k2}x{n}]", a.m, a.k);
+    if par.get() <= 1 || a.m <= 1 || n == 0 {
+        return crate::gemm::adbb_dense_i8(a, w);
+    }
+    let (arp, aen) = (a.row_ptr(), a.entries());
+    let wd = w.data();
+    row_tiled(a.m, n, par, |tile, row0| {
+        crate::gemm::act::adbb_dense_rows_i8(arp, aen, wd, tile, row0, n)
+    })
 }
 
 #[cfg(test)]
@@ -255,6 +287,36 @@ mod tests {
                 dbb_i8_packed_gated(&a, &packed, Parallelism::threads(threads), gate).data(),
                 gemm::dbb_i8(&a, &enc).data(),
                 "dbb m={m} k={k} n={n} threads={threads} p={p_zero} gate={gate:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn adbb_tiled_bit_exact_prop() {
+        // encoded-A joint kernels vs the dense-A oracles, every thread count
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(24) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(16) + 1;
+            let bz = [4usize, 8, 16][rng.below(3)];
+            let nnz = rng.below(bz) + 1;
+            let threads = rng.below(8) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+            let w = TensorI8::rand(&[k, n], rng);
+            let enc = ActDbb::encode(&a, bz);
+            let par = Parallelism::threads(threads);
+            assert_eq!(
+                adbb_dense_i8(&enc, &w, par).data(),
+                gemm::dense_i8(&a, &w).data(),
+                "dense m={m} k={k} n={n} bz={bz} threads={threads} p={p_zero}"
+            );
+            let wc = DbbMatrix::compress_topk(&w, bz, nnz).unwrap();
+            let packed = DbbPacked::pack(&wc);
+            assert_eq!(
+                adbb_i8_packed(&enc, &packed, par).data(),
+                gemm::dbb_i8_packed(&a, &packed).data(),
+                "dbb m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads} p={p_zero}"
             );
         });
     }

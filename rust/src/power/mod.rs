@@ -168,8 +168,11 @@ pub fn power(design: &Design, events: &EventCounts) -> PowerBreakdown {
 
     // ---- SRAM energy ----
     let wsram_pj = events.weight_sram_bytes as f64 * lib.e_wsram_byte_pj;
-    let asram_pj =
-        (events.act_sram_bytes + events.out_sram_bytes) as f64 * lib.e_asram_byte_pj;
+    // act_index_bytes is the A-side DBB bitmask metadata of encoded layers:
+    // it streams from the same activation SRAM as the values it selects
+    let asram_pj = (events.act_sram_bytes + events.act_index_bytes + events.out_sram_bytes)
+        as f64
+        * lib.e_asram_byte_pj;
 
     // ---- IM2COL unit ----
     let im2col_pj = if design.im2col {

@@ -23,11 +23,19 @@
 //! The measured [`LayerProfile::act_sparsity`] is the **one sparsity
 //! source** for both uses of activation sparsity in this codebase: the
 //! analytic model prices the datapath's A-side MAC gating with it
-//! (`macs_gated` in [`gemm_timing_stats`]'s event counts), and the software
-//! kernels' [`crate::gemm::ZeroGate::Auto`] consults the same per-layer
-//! value to decide where the zero-skip pass pays.
+//! (`macs_gated` in [`crate::sim::analytic::gemm_timing_stats`]'s event
+//! counts), and the software
+//! kernels' [`crate::gemm::ActPolicy::Auto`] (and its two-way predecessor
+//! [`crate::gemm::ZeroGate::Auto`]) consults the same per-layer value to
+//! decide where the zero-skip / A-DBB-encode passes pay. Layers the engine
+//! resolves to *encode* carry [`LayerProfile::act_encoded`], and the
+//! timing model then prices their activation SRAM traffic as the
+//! compressed DBB stream — surviving values plus index bytes
+//! ([`crate::sim::analytic::gemm_timing_stats_enc`]) — so the twin's
+//! energy/latency estimates distinguish "skipped the multiply" (gated
+//! MACs) from "never fetched the operand" (compressed A traffic).
 
-use super::analytic::{gemm_timing_stats, WeightStats};
+use super::analytic::{gemm_timing_stats_enc, WeightStats};
 use super::im2col::Im2colUnit;
 use super::mcu::McuComplex;
 use super::EventCounts;
@@ -58,6 +66,13 @@ pub struct LayerProfile {
     /// consults the same measured value, so the priced datapath gate and
     /// the software gate share one sparsity source.
     pub act_sparsity: f64,
+    /// Whether this layer's activation operand streams **DBB-encoded**
+    /// (the engine's resolved [`crate::gemm::ActPolicy::Encode`] decision
+    /// for the layer — set by `PreparedModel::profiles`, `false` for the
+    /// assumed-sparsity profiles). The timing model then prices the
+    /// compressed A stream (value bytes shrunk by `act_sparsity`, plus
+    /// 1 bit/element of index metadata) instead of the raw fetch.
+    pub act_encoded: bool,
     /// IM2COL duplication this layer offers (1.0 for FC/1×1).
     pub im2col_magnification: f64,
     /// Raw input bytes (the feature map / FC input vector) — the AB
@@ -173,6 +188,7 @@ pub fn profile_model_fixed_act(
                 m,
                 weights: WeightStats::synthetic(k, n, bz, bound),
                 act_sparsity,
+                act_encoded: false,
                 im2col_magnification: im2c,
                 raw_act_bytes: raw,
                 out_elems: (m * n) as u64,
@@ -244,7 +260,8 @@ pub struct BufferFeasibility {
     pub stripe_bytes: usize,
     /// DMA phases needed to stream all weights through the WB.
     pub wb_phases: usize,
-    /// Raw activation bytes (input feature map / FC vector).
+    /// Input activation working set (feature map / FC vector): raw bytes,
+    /// or the compressed value+index stream for an A-DBB-encoded layer.
     pub act_bytes: usize,
     /// One weight stripe fits the (double-buffered) weight buffer.
     pub stripe_fits: bool,
@@ -261,12 +278,27 @@ pub fn buffer_feasibility(profiles: &[LayerProfile], stripe_cols: usize) -> Vec<
         .iter()
         .map(|p| {
             let kb = p.weights.kblocks();
-            // compressed stream: bound bytes + BZ/8 index bytes per block
-            let per_col = kb * (p.weights.bound + p.weights.bz.div_ceil(8));
+            // compressed stream: bound bytes + BZ/8 index bytes per block.
+            // Dense-fallback layers (bound == bz) stream the raw weights —
+            // there is nothing for a bitmask to select, so they carry no
+            // index bytes (historically they were overcounted ~12.5%).
+            let per_col = if p.weights.bound >= p.weights.bz {
+                kb * p.weights.bz
+            } else {
+                kb * (p.weights.bound + p.weights.bz.div_ceil(8))
+            };
             let weight_bytes = per_col * p.weights.n;
             let stripe_bytes = per_col * stripe_cols.min(p.weights.n);
-            // raw input map (the IM2COL unit regenerates the expansion)
-            let act_bytes = p.raw_act_bytes as usize;
+            // input map working set: raw (the IM2COL unit regenerates the
+            // expansion), or the compressed value+index stream when the
+            // layer's activations are DBB-encoded
+            let raw = p.raw_act_bytes as usize;
+            let act_bytes = if p.act_encoded {
+                (raw as f64 * (1.0 - p.act_sparsity.clamp(0.0, 1.0))).ceil() as usize
+                    + raw.div_ceil(8)
+            } else {
+                raw
+            };
             BufferFeasibility {
                 name: p.name.clone(),
                 weight_bytes,
@@ -287,7 +319,7 @@ pub fn layer_timing(design: &Design, p: &LayerProfile, mcu: &McuComplex) -> Laye
     } else {
         1.0
     };
-    let t = gemm_timing_stats(design, p.m, &p.weights, p.act_sparsity, mag);
+    let t = gemm_timing_stats_enc(design, p.m, &p.weights, p.act_sparsity, mag, p.act_encoded);
     let mut events = t.events;
     events.mcu_cycles = mcu.conv_post_cycles(p.out_elems, p.relu);
     LayerTiming {
@@ -442,6 +474,72 @@ mod tests {
         // the late 3x3 layers genuinely need several phases
         let blk4 = feas.iter().find(|f| f.name == "blk4/unit2/conv2").unwrap();
         assert!(blk4.wb_phases > 1, "phases={}", blk4.wb_phases);
+    }
+
+    #[test]
+    fn buffer_feasibility_dense_layer_excludes_index_bytes() {
+        // regression for the ~12.5% WB overcount: a dense-fallback layer
+        // (bound == bz) streams raw weights with no bitmask, so its bytes
+        // are exactly kblocks·bz·n — pinned here
+        let mk = |bound: usize| LayerProfile {
+            name: format!("l_{bound}"),
+            m: 64,
+            weights: WeightStats::synthetic(64, 32, 8, bound),
+            act_sparsity: 0.5,
+            act_encoded: false,
+            im2col_magnification: 1.0,
+            raw_act_bytes: 4096,
+            out_elems: 64 * 32,
+            relu: true,
+        };
+        let feas = buffer_feasibility(&[mk(8), mk(3)], 16);
+        // dense: 8 kblocks × 8 B × 32 cols, no index overhead
+        assert_eq!(feas[0].weight_bytes, 8 * 8 * 32);
+        assert_eq!(feas[0].stripe_bytes, 8 * 8 * 16);
+        // DBB 3/8 still pays 1 index byte per block: 8 × (3 + 1) × 32
+        assert_eq!(feas[1].weight_bytes, 8 * (3 + 1) * 32);
+        assert_eq!(feas[1].stripe_bytes, 8 * (3 + 1) * 16);
+        for f in &feas {
+            assert_eq!(
+                f.wb_phases,
+                f.weight_bytes.div_ceil(crate::sim::sram::Sram::weight_buffer().usable())
+            );
+        }
+    }
+
+    #[test]
+    fn encoded_act_layer_prices_compressed_stream() {
+        // the acceptance check: the twin's reported A-side operand bytes
+        // drop when a layer's activations are encoded, with the index
+        // metadata priced separately — and nothing else moves
+        let mk = |enc: bool| LayerProfile {
+            name: "l".into(),
+            m: 256,
+            weights: WeightStats::synthetic(512, 64, 8, 3),
+            act_sparsity: 0.6,
+            act_encoded: enc,
+            im2col_magnification: 1.0,
+            raw_act_bytes: 256 * 512,
+            out_elems: 256 * 64,
+            relu: true,
+        };
+        let d = crate::arch::Design::paper_optimal();
+        let mcu = McuComplex::for_tops(d.peak_effective_tops());
+        let raw = layer_timing(&d, &mk(false), &mcu);
+        let enc = layer_timing(&d, &mk(true), &mcu);
+        assert_eq!(raw.events.act_index_bytes, 0);
+        assert!(enc.events.act_index_bytes > 0);
+        assert!(enc.events.act_sram_bytes < raw.events.act_sram_bytes);
+        assert!(
+            enc.events.act_sram_bytes + enc.events.act_index_bytes < raw.events.act_sram_bytes,
+            "compressed stream must undercut the raw fetch at 60% zeros"
+        );
+        assert_eq!(enc.events.cycles, raw.events.cycles);
+        assert_eq!(enc.events.macs_gated, raw.events.macs_gated);
+        // and the AB working-set model shrinks the same way
+        let feas = buffer_feasibility(&[mk(false), mk(true)], 16);
+        assert!(feas[1].act_bytes < feas[0].act_bytes);
+        assert_eq!(feas[0].act_bytes, 256 * 512);
     }
 
     #[test]

@@ -156,13 +156,44 @@ pub fn gemm_cycles(design: &Design, stats: &WeightStats, passes: u64) -> u64 {
 ///
 /// `im2col_magnification ≥ 1` divides activation SRAM traffic (the hardware
 /// IM2COL unit, paper §IV-C); pass 1.0 for FC/pointwise layers or designs
-/// without the unit.
+/// without the unit. Activations stream *raw*; see
+/// [`gemm_timing_stats_enc`] for the A-side-DBB-encoded variant.
 pub fn gemm_timing_stats(
     design: &Design,
     mg: usize,
     stats: &WeightStats,
     act_sparsity: f64,
     im2col_magnification: f64,
+) -> GemmTiming {
+    gemm_timing_stats_enc(design, mg, stats, act_sparsity, im2col_magnification, false)
+}
+
+/// [`gemm_timing_stats`] with an explicit A-side stream encoding flag —
+/// how the twin prices "never fetched the operand" separately from
+/// "skipped the multiply". With `act_encoded` the activation SRAM traffic
+/// is the DBB-compressed stream: only the `(1 − act_sparsity)` surviving
+/// values are fetched (`act_sram_bytes`) plus 1 bit per logical element of
+/// positional bitmask (`act_index_bytes` — `bz` bits per `bz`-block).
+/// Everything else — cycles, MAC gating, weight traffic, the pre-magnifier
+/// edge demand `act_edge_bytes` — is identical: compression changes what
+/// the SRAM serves, not what the schedule executes (the datapath still
+/// gates the same zero-activation MACs; those stay priced in
+/// `macs_gated`). Note the break-even: a dense operand (`act_sparsity ≈
+/// 0`) costs *more* encoded than raw (the index overhead buys nothing),
+/// which is exactly why [`crate::gemm::ActPolicy::Auto`] only encodes
+/// above [`crate::gemm::ActPolicy::ENCODE_THRESHOLD`].
+///
+/// A [`Datapath::Dense`] array has no DBB decoder on either operand edge,
+/// so `act_encoded` is ignored there and the raw stream is priced — which
+/// keeps baseline-normalized comparisons (Fig. 11) honest when one profile
+/// set is shared across design points.
+pub fn gemm_timing_stats_enc(
+    design: &Design,
+    mg: usize,
+    stats: &WeightStats,
+    act_sparsity: f64,
+    im2col_magnification: f64,
+    act_encoded: bool,
 ) -> GemmTiming {
     let d = design.dims;
     assert!(
@@ -233,9 +264,19 @@ pub fn gemm_timing_stats(
     };
     let weight_sram = (wbytes_per_col_pass * stats.n as f64 * row_tiles as f64) as u64;
 
-    // activations re-stream once per column-tile pass
+    // activations re-stream once per column-tile pass; an encoded layer
+    // fetches only the surviving values plus the per-block bitmask
     let act_edge = (mg as u64 * kb * design.dims.b as u64) * col_tiles;
-    let act_sram = (act_edge as f64 / im2col_magnification.max(1.0)) as u64;
+    let act_raw = act_edge as f64 / im2col_magnification.max(1.0);
+    let act_encoded = act_encoded && !matches!(design.datapath, Datapath::Dense);
+    let (act_sram, act_index) = if act_encoded {
+        (
+            (act_raw * (1.0 - act_sparsity.clamp(0.0, 1.0))) as u64,
+            (act_raw / 8.0) as u64,
+        )
+    } else {
+        (act_raw as u64, 0)
+    };
 
     // outputs: requantized INT8 written back once (the INT32 accumulator
     // drain feeds the MCU requant path, which stores INT8 — §IV-D)
@@ -254,6 +295,7 @@ pub fn gemm_timing_stats(
             macs_idle: idle,
             weight_sram_bytes: weight_sram,
             act_sram_bytes: act_sram,
+            act_index_bytes: act_index,
             act_edge_bytes: act_edge,
             out_sram_bytes: out_bytes,
             mux_selects: mux,
@@ -363,6 +405,41 @@ mod tests {
             (t3.events.act_sram_bytes as f64 * 3.0 - t1.events.act_sram_bytes as f64).abs()
                 < 4.0
         );
+    }
+
+    #[test]
+    fn encoded_act_traffic_splits_values_and_index() {
+        let d = vdbb();
+        let stats = WeightStats::synthetic(512, 128, 8, 3);
+        let raw = gemm_timing_stats(&d, 256, &stats, 0.5, 1.0);
+        let enc = gemm_timing_stats_enc(&d, 256, &stats, 0.5, 1.0, true);
+        // compression changes traffic, not the schedule or the gating
+        assert_eq!(enc.events.cycles, raw.events.cycles);
+        assert_eq!(enc.events.macs_active, raw.events.macs_active);
+        assert_eq!(enc.events.macs_gated, raw.events.macs_gated);
+        assert_eq!(enc.events.act_edge_bytes, raw.events.act_edge_bytes);
+        assert_eq!(enc.events.weight_sram_bytes, raw.events.weight_sram_bytes);
+        // value traffic shrinks by the zero fraction; the index stream is
+        // 1 bit per logical element; raw layers carry no index bytes
+        let r = raw.events.act_sram_bytes as f64;
+        assert!((enc.events.act_sram_bytes as f64 - 0.5 * r).abs() <= 1.0);
+        assert!((enc.events.act_index_bytes as f64 - r / 8.0).abs() <= 1.0);
+        assert_eq!(raw.events.act_index_bytes, 0);
+        // at 50% zeros the compressed total undercuts the raw fetch
+        assert!(enc.events.act_sram_bytes + enc.events.act_index_bytes < raw.events.act_sram_bytes);
+        // and on a dense operand encoding costs MORE (the Auto break-even)
+        let dense = gemm_timing_stats_enc(&d, 256, &stats, 0.0, 1.0, true);
+        let dense_raw = gemm_timing_stats(&d, 256, &stats, 0.0, 1.0);
+        assert!(
+            dense.events.act_sram_bytes + dense.events.act_index_bytes
+                > dense_raw.events.act_sram_bytes
+        );
+        // a dense SA datapath has no DBB decoder: the flag is ignored there
+        let sa = Design::baseline_sa();
+        let sa_stats = WeightStats::synthetic(512, 128, 8, 8);
+        let sa_enc = gemm_timing_stats_enc(&sa, 256, &sa_stats, 0.5, 1.0, true);
+        let sa_raw = gemm_timing_stats(&sa, 256, &sa_stats, 0.5, 1.0);
+        assert_eq!(sa_enc.events, sa_raw.events);
     }
 
     #[test]

@@ -39,7 +39,15 @@ pub struct EventCounts {
     pub weight_sram_bytes: u64,
     /// Activation bytes read from the activation SRAM (after IM2COL
     /// magnification when the unit is present — i.e. actual SRAM traffic).
+    /// For a layer whose activations stream DBB-encoded this is the
+    /// compressed *value* traffic (zeros are never fetched); the bitmask
+    /// metadata is counted separately in [`Self::act_index_bytes`].
     pub act_sram_bytes: u64,
+    /// A-side DBB index (bitmask) bytes read alongside a compressed
+    /// activation stream — the metadata overhead of activation-side DBB
+    /// encoding (1 bit per logical element). 0 for layers whose
+    /// activations stream raw.
+    pub act_index_bytes: u64,
     /// Activation bytes consumed at the array edge (pre-magnifier demand).
     pub act_edge_bytes: u64,
     /// Output bytes written back to SRAM (INT32 accumulators, requantized
@@ -60,6 +68,7 @@ impl EventCounts {
         self.macs_idle += o.macs_idle;
         self.weight_sram_bytes += o.weight_sram_bytes;
         self.act_sram_bytes += o.act_sram_bytes;
+        self.act_index_bytes += o.act_index_bytes;
         self.act_edge_bytes += o.act_edge_bytes;
         self.out_sram_bytes += o.out_sram_bytes;
         self.mux_selects += o.mux_selects;

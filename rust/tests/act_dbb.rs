@@ -1,0 +1,236 @@
+//! Property suite for the activation-side DBB pipeline
+//! (`ssta::gemm::ActDbb` + the joint A-DBB kernels + the engine's
+//! three-way `ActPolicy`): encoded-A must be **bit-exact** with dense-A
+//! under every weight encoding (`nnz 1..=bz`, `bz ∈ {4, 8, 16}`, dense
+//! fallback), every operand sparsity (0.0 / 0.5 / 1.0, including all-zero
+//! rows), every worker-pool width (including `M < threads`), and through
+//! the fused conv engine (whose chunk encoder must compress the IM2COL
+//! padding zeros losslessly); `PreparedModel::execute` must resolve the
+//! three-way policy per layer from its recorded profile and stay bit-exact
+//! under every policy.
+
+use ssta::dbb::DbbMatrix;
+use ssta::engine::PreparedModel;
+use ssta::gemm;
+use ssta::gemm::conv::ConvShape;
+use ssta::gemm::{fused, tiled, ActDbb, ActPolicy, DbbPacked};
+use ssta::models;
+use ssta::tensor::TensorI8;
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+const SPARSITIES: [f32; 3] = [0.0, 0.5, 1.0];
+
+#[test]
+fn encode_is_lossless() {
+    check(Config::default().cases(96), |rng| {
+        let m = rng.below(24) + 1;
+        let k = rng.below(64) + 1;
+        let bz = [4usize, 8, 16][rng.below(3)];
+        let p_zero = SPARSITIES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let enc = ActDbb::encode(&a, bz);
+        let mut back = TensorI8::zeros(&[m, k]);
+        for row in 0..m {
+            for &(kk, v) in &enc.entries()[enc.row_ptr()[row]..enc.row_ptr()[row + 1]] {
+                back.set(&[row, kk as usize], v as i8);
+            }
+        }
+        assert_eq!(back.data(), a.data(), "m={m} k={k} bz={bz} p={p_zero}");
+        assert_eq!(enc.total_nnz(), a.data().iter().filter(|&&v| v != 0).count());
+        assert!((enc.sparsity() - a.sparsity()).abs() < 1e-12);
+        assert!(enc.bound >= 1 && enc.bound <= bz);
+        // the fixed-rate stream never exceeds values + full index overhead
+        assert!(enc.stream_bytes() <= m * enc.kblocks() * (bz + bz.div_ceil(8)));
+    });
+}
+
+#[test]
+fn encoded_a_bit_exact_across_nnz_bz_sparsity_threads() {
+    // the headline property: encoded-A vs dense-A across the full grid —
+    // weight bounds 1..=bz, bz ∈ {4,8,16}, A sparsity 0/0.5/1, thread
+    // counts 1..8 including M < threads
+    check(Config::default().cases(96), |rng| {
+        let m = rng.below(32) + 1;
+        let k = rng.below(64) + 1;
+        let n = rng.below(20) + 1;
+        let bz = [4usize, 8, 16][rng.below(3)];
+        let nnz = rng.below(bz) + 1;
+        let threads = rng.below(8) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let wd = TensorI8::rand(&[k, n], rng);
+        let enc = ActDbb::encode(&a, bz);
+        let par = Parallelism::threads(threads);
+
+        // dense-fallback weights: joint kernel vs the dense oracle
+        let want_dense = gemm::dense_i8(&a, &wd);
+        assert_eq!(
+            gemm::adbb_dense_i8(&enc, &wd).data(),
+            want_dense.data(),
+            "serial dense m={m} k={k} n={n} bz={bz} p={p_zero}"
+        );
+        assert_eq!(
+            tiled::adbb_dense_i8(&enc, &wd, par).data(),
+            want_dense.data(),
+            "tiled dense m={m} k={k} n={n} bz={bz} threads={threads} p={p_zero}"
+        );
+
+        // DBB weights: joint kernel vs the per-call-decode oracle
+        let w = DbbMatrix::compress_topk(&wd, bz, nnz).unwrap();
+        let packed = DbbPacked::pack(&w);
+        let want_dbb = gemm::dbb_i8(&a, &w);
+        assert_eq!(
+            gemm::adbb_i8_packed(&enc, &packed).data(),
+            want_dbb.data(),
+            "serial dbb m={m} k={k} n={n} bz={bz} nnz={nnz} p={p_zero}"
+        );
+        assert_eq!(
+            tiled::adbb_i8_packed(&enc, &packed, par).data(),
+            want_dbb.data(),
+            "tiled dbb m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads} p={p_zero}"
+        );
+    });
+}
+
+#[test]
+fn all_zero_and_single_row_operands() {
+    // the degenerate corners: an all-zero A encodes to an empty stream and
+    // must still produce exact zeros; M = 1 with many threads must not split
+    let mut rng = Rng::new(3);
+    let wd = TensorI8::rand(&[24, 7], &mut rng);
+    let enc0 = ActDbb::encode(&TensorI8::zeros(&[5, 24]), 8);
+    assert_eq!(enc0.total_nnz(), 0);
+    assert!(gemm::adbb_dense_i8(&enc0, &wd).data().iter().all(|&v| v == 0));
+    let w = DbbMatrix::compress_topk(&wd, 8, 3).unwrap();
+    let packed = DbbPacked::pack(&w);
+    assert!(tiled::adbb_i8_packed(&enc0, &packed, Parallelism::threads(8))
+        .data()
+        .iter()
+        .all(|&v| v == 0));
+
+    let a1 = TensorI8::rand(&[1, 24], &mut rng);
+    let e1 = ActDbb::encode(&a1, 8);
+    assert_eq!(
+        tiled::adbb_i8_packed(&e1, &packed, Parallelism::threads(8)).data(),
+        gemm::dbb_i8(&a1, &w).data()
+    );
+}
+
+#[test]
+fn fused_encoded_conv_compresses_padding_zeros_bit_exactly() {
+    // padded convs generate IM2COL rows whose padding zeros the chunk
+    // encoder must drop without changing a bit of the result
+    check(Config::default().cases(64), |rng| {
+        let kh = [1usize, 3, 5][rng.below(3)];
+        let stride = rng.below(2) + 1;
+        let s = ConvShape {
+            h: kh + rng.below(6) + stride,
+            w: kh + rng.below(6) + stride,
+            c: rng.below(8) + 1,
+            kh,
+            kw: kh,
+            oc: rng.below(8) + 1,
+            stride,
+            // bias toward real padding so the padded-row case is exercised
+            pad: kh / 2,
+        };
+        let threads = rng.below(8) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let par = Parallelism::threads(threads);
+        let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], p_zero, rng);
+        let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+        assert_eq!(
+            fused::conv2d_i8_encoded(&x, &w, &s, par).data(),
+            fused::conv2d_i8(&x, &w, &s, par).data(),
+            "dense conv shape={s:?} threads={threads} p={p_zero}"
+        );
+        let enc = DbbMatrix::compress_topk(
+            &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+            8,
+            rng.below(8) + 1,
+        )
+        .unwrap();
+        let packed = DbbPacked::pack(&enc);
+        assert_eq!(
+            fused::conv2d_dbb_i8_packed_encoded(&x, &packed, &s, par).data(),
+            fused::conv2d_dbb_i8_packed(&x, &packed, &s, par).data(),
+            "dbb conv shape={s:?} threads={threads} p={p_zero}"
+        );
+    });
+}
+
+#[test]
+fn execute_resolves_three_way_policy_from_recorded_profile() {
+    let m = models::convnet5();
+    let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::threads(3));
+    let par = Parallelism::threads(3);
+    pm.profile(par);
+    let measured = pm.measured_act_sparsity().expect("profile ran").to_vec();
+
+    let off = pm.execute_policy(pm.seed_input(), par, ActPolicy::Off);
+    let gate = pm.execute_policy(pm.seed_input(), par, ActPolicy::Gate);
+    let enc = pm.execute_policy(pm.seed_input(), par, ActPolicy::Encode);
+    let auto = pm.execute_policy(pm.seed_input(), par, ActPolicy::Auto);
+    assert_eq!(off.output, gate.output, "gating must be bit-exact");
+    assert_eq!(off.output, enc.output, "A-DBB encoding must be bit-exact");
+    assert_eq!(off.output, auto.output);
+    assert_eq!(off.act_sparsity, enc.act_sparsity);
+
+    // fixed policies apply everywhere and report as such
+    assert!(off.act_policy.iter().all(|&p| p == ActPolicy::Off));
+    assert!(off.gate_engaged.iter().all(|&g| !g));
+    assert!(gate.act_policy.iter().all(|&p| p == ActPolicy::Gate));
+    assert!(enc.act_policy.iter().all(|&p| p == ActPolicy::Encode));
+    assert!(enc.gate_engaged.iter().all(|&g| g));
+
+    // Auto resolves per layer from the recorded profile, through the
+    // documented thresholds — the same values the hardware twin prices
+    for (li, (&s, &p)) in measured.iter().zip(&auto.act_policy).enumerate() {
+        assert_eq!(p, ActPolicy::Auto.resolved(s), "layer {li}: s={s}");
+    }
+    // the near-dense seed input (2% zeros) must keep layer 0 on Off
+    assert_eq!(auto.act_policy[0], ActPolicy::Off);
+
+    // and the twin-facing profiles carry exactly the executor's decision
+    let profiles = pm.profiles().unwrap();
+    for (p, &pol) in profiles.iter().zip(&auto.act_policy) {
+        assert_eq!(p.act_encoded, pol == ActPolicy::Encode, "{}", p.name);
+    }
+}
+
+#[test]
+fn encoded_execute_is_pure() {
+    // repeated Encode executes are bit-identical: the chunk encoders hold
+    // no state across calls (scratch rewritten before every read)
+    let m = models::lenet5();
+    let pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::threads(4));
+    let par = Parallelism::threads(4);
+    let first = pm.execute_policy(pm.seed_input(), par, ActPolicy::Encode);
+    let mut rng = Rng::new(11);
+    let other = TensorI8::rand_sparse(&[28, 28, 1], 0.7, &mut rng);
+    let _ = pm.execute_policy(&other, par, ActPolicy::Encode);
+    let again = pm.execute_policy(pm.seed_input(), par, ActPolicy::Encode);
+    assert_eq!(first.output, again.output);
+    assert_eq!(first.act_sparsity, again.act_sparsity);
+    assert_eq!(first.act_policy, again.act_policy);
+}
+
+#[test]
+fn profile_is_policy_invariant() {
+    // the recorded sparsities cannot depend on the model's default policy —
+    // the twin's priced profile is the same whatever the executor does
+    let m = models::convnet5();
+    let mut base = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+    base.set_act_policy(ActPolicy::Off);
+    let p_off = base.profile(Parallelism::serial());
+    let mut enc = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::serial());
+    enc.set_act_policy(ActPolicy::Encode);
+    let p_enc = enc.profile(Parallelism::serial());
+    for (a, b) in p_off.iter().zip(&p_enc) {
+        assert_eq!(a.act_sparsity.to_bits(), b.act_sparsity.to_bits(), "{}", a.name);
+    }
+    // act_encoded, by contrast, reflects each model's own policy
+    assert!(p_off.iter().all(|p| !p.act_encoded));
+    assert!(p_enc.iter().all(|p| p.act_encoded));
+}
