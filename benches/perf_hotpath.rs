@@ -82,6 +82,18 @@ fn main() {
             bb(ssta::sim::accel::profile_model(&m3, 3, 8, 42));
         });
 
+        // steady-state execute on a pinned pool: each conv worker pins to a
+        // core so its PatchScratch arena stays cache-hot across calls, and
+        // every inner loop runs the SIMD microkernels (default dispatch) —
+        // the fully-optimized serving configuration the gate must hold
+        let m6 = models::convnet5();
+        let pinned = Parallelism::auto().with_pin(true);
+        let simd_prepared = ssta::engine::PreparedModel::prepare(&m6, 3, 8, 42, pinned);
+        let sinput = simd_prepared.seed_input().clone();
+        set.bench("engine/convnet5_execute_simd", move || {
+            bb(simd_prepared.execute(&sinput, pinned));
+        });
+
         // steady-state execute with the activation zero-gate on Auto: the
         // profile ran once, so Auto consults the measured per-layer act
         // sparsities (the same values the hardware twin prices) and gates
@@ -280,6 +292,70 @@ fn main() {
         });
         set.bench("gemm/adbb_i8_512_87pct", move || {
             bb(ssta::gemm::tiled::adbb_i8_packed(&e87, &packed, Parallelism::auto()));
+        });
+    }
+
+    // ---- SIMD microkernel dispatch (gemm::micro) ----
+    // The *_simd entries run the default dispatch (the best ISA the host
+    // supports) through the *serial* drivers, so the bench gate holds the
+    // microkernel speedups themselves, undiluted by the thread pool. The
+    // report then forces each available ISA in turn and prints the measured
+    // speedup over the scalar oracle — bit-exact by construction, so only
+    // the time moves.
+    {
+        let mut rng = Rng::new(13);
+        let a = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let a87 = TensorI8::rand_sparse(&[512, 512], 0.875, &mut rng);
+        let w = TensorI8::rand(&[512, 512], &mut rng);
+        let wd = prune_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 3);
+        let packed = DbbMatrix::compress_with_bound(&wd, 8, 3).unwrap().pack();
+
+        let (ab, wb) = (a.clone(), w.clone());
+        set.bench("gemm/dense_i8_512_simd", move || {
+            bb(ssta::gemm::dense_i8(&ab, &wb));
+        });
+        let (ap, pp) = (a.clone(), packed.clone());
+        set.bench("gemm/dbb_i8_512_simd_50pct", move || {
+            bb(ssta::gemm::dbb_i8_packed(&ap, &pp));
+        });
+        let pp87 = packed.clone();
+        set.bench("gemm/dbb_i8_512_simd_87pct", move || {
+            bb(ssta::gemm::dbb_i8_packed(&a87, &pp87));
+        });
+
+        set.report("gemm/simd_speedup", move || {
+            use ssta::gemm::micro;
+            let time = |f: &dyn Fn()| {
+                f(); // warmup
+                let mut best = f64::INFINITY;
+                for _ in 0..3 {
+                    let t0 = std::time::Instant::now();
+                    f();
+                    best = best.min(t0.elapsed().as_secs_f64());
+                }
+                best
+            };
+            let mut lines = Vec::new();
+            let mut scalar: Option<(f64, f64)> = None;
+            for isa in micro::available_isas() {
+                micro::force_isa(Some(isa));
+                let td = time(&|| {
+                    bb(ssta::gemm::dense_i8(&a, &w));
+                });
+                let tb = time(&|| {
+                    bb(ssta::gemm::dbb_i8_packed(&a, &packed));
+                });
+                let (sd, sb) = *scalar.get_or_insert((td, tb));
+                lines.push(format!(
+                    "{isa}: dense 512³ {:.2} ms ({:.2}x), dbb 3/8 50pct {:.2} ms ({:.2}x)",
+                    td * 1e3,
+                    sd / td,
+                    tb * 1e3,
+                    sb / tb
+                ));
+            }
+            micro::force_isa(None);
+            println!("scalar-vs-SIMD (serial drivers, best of 3): {}", lines.join("; "));
         });
     }
 

@@ -23,7 +23,13 @@
 //! existing [`crate::gemm::fused`] / [`crate::gemm::tiled`] kernels with
 //! **zero encode/decode work and zero per-call weight-operand allocation**,
 //! bit-exact with the per-call-encoding path it replaced (the shared
-//! `dbb_rows_i8`-family inner kernels guarantee it).
+//! `dbb_rows_i8`-family inner kernels guarantee it). Those inner kernels in
+//! turn dispatch through the [`crate::gemm::micro`] SIMD microkernels —
+//! still bit-exact (INT32 accumulation is order-independent), so a prepared
+//! model executes identically on every ISA path. Pass
+//! `Parallelism::auto().with_pin(true)` to `execute` to additionally pin
+//! each conv worker to a core so its `PatchScratch` arena stays cache-hot
+//! across steady-state executes.
 //! [`PreparedModel::profile`] replays the seeded sampled inference of
 //! `sim::accel::profile_model` — same seed, same RNG draw order, same
 //! per-layer activation sparsities to the last bit — and records the

@@ -44,6 +44,13 @@
 //! contributes exactly 0 to the INT32 accumulator, and the surviving terms
 //! accumulate in the identical ascending-`k` order (property-tested in
 //! `rust/tests/act_dbb.rs`).
+//!
+//! Dispatch note: the dense-W joint kernel runs through the
+//! [`crate::gemm::micro`] SIMD dispatch (each stored activation entry
+//! streams a register-blocked axpy); the merge-join kernel
+//! (`adbb_rows_i8`) stays scalar on every ISA — its control flow is
+//! data-dependent on two compressed index streams, and the encoding has
+//! already removed the multiplies SIMD would amortize.
 
 use crate::gemm::DbbPacked;
 use crate::tensor::{TensorI32, TensorI8};
@@ -284,7 +291,7 @@ pub fn adbb_dense_i8(a: &ActDbb, w: &TensorI8) -> TensorI32 {
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(a.k, k2, "GEMM inner dims: Adbb[{}x{}] W[{k2}x{n}]", a.m, a.k);
     let mut c = TensorI32::zeros(&[a.m, n]);
-    adbb_dense_rows_i8(a.row_ptr(), a.entries(), w.data(), c.data_mut(), 0, n);
+    crate::gemm::micro::adbb_dense_rows_i8(a.row_ptr(), a.entries(), w.data(), c.data_mut(), 0, n);
     c
 }
 

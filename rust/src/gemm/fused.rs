@@ -42,6 +42,14 @@
 //! produced — and streams the per-chunk `(row_ptr, entries)` CSR through
 //! the joint A-DBB kernels (`crate::gemm::act`). Still bit-exact: the
 //! encoding is lossless (`rust/tests/act_dbb.rs`).
+//!
+//! Every dense-weight and packed-DBB inner call dispatches through the
+//! [`crate::gemm::micro`] SIMD microkernels (bit-exact with the scalar
+//! oracles; see that module for the dispatch rules). Only the merge-join
+//! `adbb_rows_i8` path stays scalar by design. With
+//! [`Parallelism::with_pin`]`(true)`, each conv worker pins itself to core
+//! `ti % cores` before touching its tile, keeping its [`PatchScratch`]
+//! arena hot in the same core's cache across steady-state `*_with` calls.
 
 pub use crate::util::par::Parallelism;
 
@@ -291,7 +299,10 @@ fn conv_tiled<K: Fn(&[i8], &mut [i32]) + Sync>(
             out.chunks_mut(rows_per_tile * n).enumerate().zip(patches.iter_mut())
         {
             let row0 = ti * rows_per_tile;
-            sc.spawn(move || conv_rows(xd, s, tile, row0, k, n, buf, kref));
+            sc.spawn(move || {
+                par.pin_worker(ti);
+                conv_rows(xd, s, tile, row0, k, n, buf, kref)
+            });
         }
     });
 }
@@ -393,7 +404,10 @@ fn conv_tiled_encoded<K: Fn(&[usize], &[(u32, i32)], &mut [i32]) + Sync>(
             .zip(ents.iter_mut())
         {
             let row0 = ti * rows_per_tile;
-            sc.spawn(move || conv_rows_encoded(xd, s, tile, row0, k, n, buf, arp, aen, kref));
+            sc.spawn(move || {
+                par.pin_worker(ti);
+                conv_rows_encoded(xd, s, tile, row0, k, n, buf, arp, aen, kref)
+            });
         }
     });
 }
@@ -466,11 +480,11 @@ pub fn conv2d_i8_gated_with(
     let (xd, wd) = (x.data(), w.data());
     if gate.resolve_with(|| x.sparsity()) {
         conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-            crate::gemm::dense_rows_i8_gated(patch, wd, out, 0, k, n)
+            crate::gemm::micro::dense_rows_i8_gated(patch, wd, out, 0, k, n)
         });
     } else {
         conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-            crate::gemm::dense_rows_i8(patch, wd, out, 0, k, n)
+            crate::gemm::micro::dense_rows_i8(patch, wd, out, 0, k, n)
         });
     }
     c
@@ -504,7 +518,7 @@ pub fn conv2d_i8_encoded_with(
     }
     let (xd, wd) = (x.data(), w.data());
     conv_tiled_encoded(xd, s, c.data_mut(), m, k, n, par, scratch, |arp, aen, out| {
-        crate::gemm::act::adbb_dense_rows_i8(arp, aen, wd, out, 0, n)
+        crate::gemm::micro::adbb_dense_rows_i8(arp, aen, wd, out, 0, n)
     });
     c
 }
@@ -586,11 +600,11 @@ pub fn conv2d_dbb_i8_packed_gated_with(
     let xd = x.data();
     if gate.resolve_with(|| x.sparsity()) {
         conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-            crate::gemm::dbb_rows_i8_gated(patch, cp, en, out, 0, k, n)
+            crate::gemm::micro::dbb_rows_i8_gated(patch, cp, en, out, 0, k, n)
         });
     } else {
         conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
-            crate::gemm::dbb_rows_i8(patch, cp, en, out, 0, k, n)
+            crate::gemm::micro::dbb_rows_i8(patch, cp, en, out, 0, k, n)
         });
     }
     c

@@ -1,0 +1,1023 @@
+//! Register-blocked, cache-tiled SIMD microkernels for the shared i8 inner
+//! loops — the software twin of the paper's §IV MAC-dense PE.
+//!
+//! Every datapath in the crate (serial, [`crate::gemm::tiled`], fused
+//! IM2COL, gated, joint A×W DBB) funnels into the row kernels of
+//! [`crate::gemm`]. This module re-implements those kernels as
+//! register-blocked microkernels and puts a one-decision dispatch layer in
+//! front: AVX2 and SSE2 on x86_64 (picked once per process via
+//! `is_x86_feature_detected!`), NEON on aarch64, and the untouched scalar
+//! kernels everywhere else — the scalar kernels remain the bit-exactness
+//! oracle and the universal fallback.
+//!
+//! ## Why this is the paper's multi-MAC PE
+//!
+//! S2TA's core argument (PAPERS.md) is that a PE amortizes its operand
+//! fetches by keeping one operand *resident* while many MACs consume it.
+//! The dense microkernel is exactly that in registers: one broadcast
+//! activation (`set1`) is reused across an [`NR`]-wide column block held in
+//! accumulator registers — [`NR`] MACs per A-operand fetch, the in-register
+//! form of Snippet 2's cyclic cached-weight dataflow (one cached operand,
+//! cycled against a stream). The K×N cache tiling ([`KC`]×[`NR`]) keeps the
+//! streamed W panel L1/L2-resident across all M rows, which is the SPOTS
+//! blocked-systolic-GEMM observation applied to a host CPU.
+//!
+//! ## Exact-accumulation contract
+//!
+//! Every kernel here is **bit-exact** with its scalar oracle, for every
+//! shape, sparsity and ISA:
+//!
+//! * Products are exact: `|i8 × i8| ≤ 127² = 16129 < 2^15`, so the widened
+//!   i16 product lanes (`mullo_epi16` / `vmull_s8`) never wrap, and each
+//!   product is widened to a full i32 lane before any addition.
+//! * Accumulation is i32 two's-complement addition, which is associative
+//!   *and* commutative — unlike float, **any** reassociation (K-tiling,
+//!   lane-parallel partial sums) produces the identical bit pattern. The
+//!   SIMD kernels therefore do not need to replay the scalar term order;
+//!   the property suite (`rust/tests/micro_kernels.rs`) pins value-equality
+//!   against the scalar oracle for every shape × sparsity × ISA path.
+//! * The contract assumes the accumulation itself stays inside i32, same as
+//!   the scalar kernels (which panic on overflow in debug builds): with i8
+//!   operands that holds for any `K ≤ 2^31 / 127² ≈ 133k`, far above every
+//!   shape in the repo.
+//!
+//! ## Dispatch rules
+//!
+//! * The default ISA is resolved **once per process** ([`active_isa`]):
+//!   best detected ISA, unless the `SSTA_FORCE_ISA` env var
+//!   (`scalar|sse2|avx2|neon`, case-insensitive) overrides it. An unknown
+//!   name panics (a misconfigured CI matrix must be loud); a *known but
+//!   unsupported* name clamps down to the best supported ISA of no higher
+//!   rank and warns on stderr.
+//! * [`force_isa`] installs a process-global programmatic override (tests
+//!   and the bench speedup report use it); `force_isa(None)` restores the
+//!   default. Forcing an unsupported ISA panics.
+//! * Gated variants: under a SIMD ISA the *ungated* microkernels already
+//!   skip zero activations (the dense kernel tests each broadcast operand,
+//!   the DBB kernel skips all-zero 8-row lane groups and all-zero row
+//!   blocks), so `dense_rows_i8_gated` / `dbb_rows_i8_gated` route to the
+//!   same microkernels; only the scalar ISA keeps the dedicated scalar
+//!   gated kernels. Bit-exactness makes the two routes indistinguishable.
+//! * The DBB microkernel packs an [`MR`]-row activation block into a
+//!   column-major stack transpose buffer; `K > `[`DBB_PACK_MAX_K`] falls
+//!   back to the scalar kernel (no shape in the repo comes close).
+//! * The merge-join joint kernel (`adbb_rows_i8`, encoded A × packed W)
+//!   stays scalar on every ISA: its control flow is data-dependent on two
+//!   compressed index streams and the encoding has already removed the
+//!   multiplies SIMD would amortize. Its dense-W sibling
+//!   (`adbb_dense_rows_i8`) does vectorize (dense W row axpy per stored
+//!   activation entry).
+//!
+//! Safety: the `unsafe` here is raw-pointer loads/stores inside the
+//! per-ISA kernels, each dispatched only when its target feature is
+//! detected (or is a baseline feature of the target). The scheduled
+//! `cargo miri` CI job interprets the property suite over this module per
+//! forced ISA, so the pointer arithmetic is checked, not just reviewed.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Instruction-set paths the dispatch layer can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isa {
+    /// The scalar oracle kernels of [`crate::gemm`] — always available.
+    Scalar = 0,
+    /// 128-bit SSE2 (baseline on every x86_64).
+    Sse2 = 1,
+    /// 256-bit AVX2 (runtime-detected on x86_64).
+    Avx2 = 2,
+    /// 128-bit NEON (baseline on every aarch64).
+    Neon = 3,
+}
+
+impl Isa {
+    /// The `SSTA_FORCE_ISA` vocabulary name of this path.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    /// Parse an `SSTA_FORCE_ISA` value (case-insensitive).
+    pub fn from_name(s: &str) -> Option<Isa> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Isa::Scalar),
+            "sse2" => Some(Isa::Sse2),
+            "avx2" => Some(Isa::Avx2),
+            "neon" => Some(Isa::Neon),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Columns per register block of the dense/adbb-dense microkernels: one
+/// broadcast activation is reused across this many resident accumulator
+/// lanes (the in-register multi-MAC PE).
+pub const NR: usize = 16;
+
+/// K-tile of the dense microkernel: the `KC × NR` W panel streamed per
+/// (column-block, k-tile) stays cache-resident across all M rows.
+pub const KC: usize = 256;
+
+/// Activation rows per packed block of the DBB microkernel — one stored
+/// weight entry is broadcast against this many rows at once (and `MR == 8`
+/// makes the all-zero lane-group test a single u64 compare).
+pub const MR: usize = 8;
+
+/// Largest reduction dim the DBB microkernel packs on the stack
+/// (`MR × DBB_PACK_MAX_K` = 64 KiB transpose buffer); larger `K` falls back
+/// to the scalar kernel.
+pub const DBB_PACK_MAX_K: usize = 8192;
+
+/// `true` when `isa` can be dispatched on this host.
+pub fn supported(isa: Isa) -> bool {
+    match isa {
+        Isa::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => true,
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => true,
+        _ => false,
+    }
+}
+
+/// Every ISA [`supported`] on this host, scalar first — the sweep axis of
+/// the property suite and the bench speedup report.
+pub fn available_isas() -> Vec<Isa> {
+    [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon]
+        .into_iter()
+        .filter(|&i| supported(i))
+        .collect()
+}
+
+/// Width rank for the env-override clamp: scalar < {sse2, neon} < avx2.
+fn rank(isa: Isa) -> u8 {
+    match isa {
+        Isa::Scalar => 0,
+        Isa::Sse2 | Isa::Neon => 1,
+        Isa::Avx2 => 2,
+    }
+}
+
+/// Best supported ISA of rank no higher than the requested one (scalar at
+/// worst) — how a known-but-unsupported `SSTA_FORCE_ISA` degrades.
+fn clamp_to_supported(req: Isa) -> Isa {
+    let mut best = Isa::Scalar;
+    for isa in [Isa::Sse2, Isa::Neon, Isa::Avx2] {
+        if rank(isa) <= rank(req) && rank(isa) >= rank(best) && supported(isa) {
+            best = isa;
+        }
+    }
+    best
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detected_best() -> Isa {
+    if std::arch::is_x86_feature_detected!("avx2") {
+        Isa::Avx2
+    } else {
+        Isa::Sse2
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detected_best() -> Isa {
+    Isa::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detected_best() -> Isa {
+    Isa::Scalar
+}
+
+/// Process default: `SSTA_FORCE_ISA` if set (unknown name = panic, known
+/// but unsupported = clamp + stderr warning), else the best detected ISA.
+fn default_isa() -> Isa {
+    match std::env::var("SSTA_FORCE_ISA") {
+        Ok(s) if !s.trim().is_empty() => {
+            let req = Isa::from_name(&s).unwrap_or_else(|| {
+                panic!("SSTA_FORCE_ISA={s:?}: unknown ISA (expected scalar|sse2|avx2|neon)")
+            });
+            if supported(req) {
+                req
+            } else {
+                let got = clamp_to_supported(req);
+                eprintln!(
+                    "ssta: SSTA_FORCE_ISA={} not supported on this host; dispatching {}",
+                    req.name(),
+                    got.name()
+                );
+                got
+            }
+        }
+        _ => detected_best(),
+    }
+}
+
+static DEFAULT: OnceLock<Isa> = OnceLock::new();
+// 0 = no override; otherwise discriminant + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+fn from_u8(v: u8) -> Isa {
+    match v {
+        0 => Isa::Scalar,
+        1 => Isa::Sse2,
+        2 => Isa::Avx2,
+        _ => Isa::Neon,
+    }
+}
+
+/// Install (`Some`) or clear (`None`) the process-global ISA override.
+/// Panics if the requested ISA is not [`supported`] on this host — the
+/// dispatch layer must never be able to select an undetected feature.
+pub fn force_isa(isa: Option<Isa>) {
+    if let Some(i) = isa {
+        assert!(
+            supported(i),
+            "ISA {} is not supported on this host (available: {:?})",
+            i.name(),
+            available_isas()
+        );
+    }
+    let v = match isa {
+        None => 0,
+        Some(i) => i as u8 + 1,
+    };
+    OVERRIDE.store(v, Ordering::Relaxed);
+}
+
+/// The ISA every micro dispatch call resolves to right now: the
+/// [`force_isa`] override if installed, else the once-per-process default
+/// (`SSTA_FORCE_ISA` env var or best detected). Always [`supported`].
+pub fn active_isa() -> Isa {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => *DEFAULT.get_or_init(default_isa),
+        v => from_u8(v - 1),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatch wrappers — signature-compatible with the scalar row kernels.
+// ---------------------------------------------------------------------------
+
+/// [`crate::gemm::dense_rows_i8`] behind the ISA dispatch. `out.len()` must
+/// be a multiple of `n` (every caller tiles in whole rows).
+pub(crate) fn dense_rows_i8(
+    ad: &[i8],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % n, 0, "row kernels take whole output rows");
+    match active_isa() {
+        // SAFETY (all arms): `active_isa` only returns a `supported()` ISA
+        // — detection, the env clamp, and the `force_isa` assert all
+        // guarantee it — so the required target features are present.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dense_rows_i8_avx2(ad, wd, out, row0, k, n) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::dense_rows_i8_sse2(ad, wd, out, row0, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dense_rows_i8_neon(ad, wd, out, row0, k, n) },
+        _ => crate::gemm::dense_rows_i8(ad, wd, out, row0, k, n),
+    }
+}
+
+/// Gated dense rows: the SIMD microkernels already skip zero activations
+/// (one test per broadcast operand, amortized over the `NR` lanes), so
+/// every SIMD ISA routes to [`dense_rows_i8`]; scalar keeps the dedicated
+/// run-length kernel. Bit-exact either way.
+pub(crate) fn dense_rows_i8_gated(
+    ad: &[i8],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if active_isa() == Isa::Scalar {
+        crate::gemm::dense_rows_i8_gated(ad, wd, out, row0, k, n)
+    } else {
+        dense_rows_i8(ad, wd, out, row0, k, n)
+    }
+}
+
+/// [`crate::gemm::dbb_rows_i8`] behind the ISA dispatch. Falls back to the
+/// scalar kernel when `k` exceeds [`DBB_PACK_MAX_K`] (or is 0). Every
+/// entry's k-index must be `< k` — upheld by [`crate::gemm::DbbPacked`]
+/// construction.
+pub(crate) fn dbb_rows_i8(
+    ad: &[i8],
+    col_ptr: &[usize],
+    entries: &[(u32, i32)],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % n, 0, "row kernels take whole output rows");
+    if k == 0 || k > DBB_PACK_MAX_K {
+        return crate::gemm::dbb_rows_i8(ad, col_ptr, entries, out, row0, k, n);
+    }
+    match active_isa() {
+        // SAFETY: see `dense_rows_i8` — the active ISA is always supported.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::dbb_rows_i8_avx2(ad, col_ptr, entries, out, row0, k, n) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::dbb_rows_i8_sse2(ad, col_ptr, entries, out, row0, k, n) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::dbb_rows_i8_neon(ad, col_ptr, entries, out, row0, k, n) },
+        _ => crate::gemm::dbb_rows_i8(ad, col_ptr, entries, out, row0, k, n),
+    }
+}
+
+/// Gated DBB rows: the SIMD microkernel already skips all-zero activation
+/// row blocks (pack-time occupancy) and all-zero 8-row lane groups (one
+/// u64 compare per stored entry), so every SIMD ISA routes to
+/// [`dbb_rows_i8`]; scalar keeps the dedicated occupancy-scan kernel.
+pub(crate) fn dbb_rows_i8_gated(
+    ad: &[i8],
+    col_ptr: &[usize],
+    entries: &[(u32, i32)],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if active_isa() == Isa::Scalar {
+        crate::gemm::dbb_rows_i8_gated(ad, col_ptr, entries, out, row0, k, n)
+    } else {
+        dbb_rows_i8(ad, col_ptr, entries, out, row0, k, n)
+    }
+}
+
+/// [`crate::gemm::act::adbb_dense_rows_i8`] behind the ISA dispatch: each
+/// stored activation entry streams one `NR`-blocked axpy over the dense W
+/// row its k-index selects. Every entry's k-index must be `< wd.len() / n`
+/// — upheld by [`crate::gemm::ActDbb`] construction.
+pub(crate) fn adbb_dense_rows_i8(
+    a_row_ptr: &[usize],
+    a_entries: &[(u32, i32)],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    debug_assert_eq!(out.len() % n, 0, "row kernels take whole output rows");
+    match active_isa() {
+        // SAFETY: see `dense_rows_i8` — the active ISA is always supported.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe {
+            x86::adbb_dense_rows_i8_avx2(a_row_ptr, a_entries, wd, out, row0, n)
+        },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe {
+            x86::adbb_dense_rows_i8_sse2(a_row_ptr, a_entries, wd, out, row0, n)
+        },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe {
+            neon::adbb_dense_rows_i8_neon(a_row_ptr, a_entries, wd, out, row0, n)
+        },
+        _ => crate::gemm::act::adbb_dense_rows_i8(a_row_ptr, a_entries, wd, out, row0, n),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared (intrinsic-free) pieces of the per-ISA kernels.
+// ---------------------------------------------------------------------------
+
+/// Scalar remainder for the dense microkernels: columns `j0..n` (the
+/// `n % NR` tail the register blocks cannot cover), accumulate semantics.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn dense_tail_cols(
+    ad: &[i8],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+    j0: usize,
+) {
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..row * k + k];
+        for (kk, &a) in arow.iter().enumerate() {
+            let av = a as i32;
+            if av == 0 {
+                continue;
+            }
+            let wrow = &wd[kk * n + j0..kk * n + n];
+            for (cv, &wv) in crow[j0..].iter_mut().zip(wrow) {
+                *cv += av * wv as i32;
+            }
+        }
+    }
+}
+
+/// Scalar remainder for the adbb-dense microkernels: columns `j0..n`.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+fn adbb_tail_cols(
+    a_row_ptr: &[usize],
+    a_entries: &[(u32, i32)],
+    wd: &[i8],
+    out: &mut [i32],
+    row0: usize,
+    n: usize,
+    j0: usize,
+) {
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        for &(kk, av) in &a_entries[a_row_ptr[row]..a_row_ptr[row + 1]] {
+            let wrow = &wd[kk as usize * n + j0..kk as usize * n + n];
+            for (cv, &wv) in crow[j0..].iter_mut().zip(wrow) {
+                *cv += av * wv as i32;
+            }
+        }
+    }
+}
+
+/// Pack one [`MR`]-row activation block into the column-major transpose
+/// buffer (`tb[kk*MR + r] = A[base_row + r, kk]`; lanes `r >= mr` zeroed so
+/// partial blocks and the u64 lane-group test stay exact). Returns whether
+/// any packed value is non-zero — `false` lets the caller write the
+/// all-zero block's outputs directly (the block-granular activation gate).
+///
+/// # Safety
+/// `tb` must be valid for writes of `MR * k` bytes.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+unsafe fn pack_block(ad: &[i8], tb: *mut i8, base_row: usize, mr: usize, k: usize) -> bool {
+    let mut any = false;
+    for r in 0..MR {
+        if r < mr {
+            let arow = &ad[(base_row + r) * k..(base_row + r) * k + k];
+            for (kk, &v) in arow.iter().enumerate() {
+                tb.add(kk * MR + r).write(v);
+                any |= v != 0;
+            }
+        } else {
+            for kk in 0..k {
+                tb.add(kk * MR + r).write(0);
+            }
+        }
+    }
+    any
+}
+
+// ---------------------------------------------------------------------------
+// x86_64: AVX2 + SSE2
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+    use core::mem::MaybeUninit;
+
+    use super::{adbb_tail_cols, dense_tail_cols, pack_block, DBB_PACK_MAX_K, KC, MR, NR};
+
+    /// Sign-extend 16 i8 lanes to two i16 octets (SSE2 has no `cvtepi8`).
+    #[inline(always)]
+    unsafe fn widen16_sse2(v: __m128i) -> (__m128i, __m128i) {
+        let sign = _mm_cmpgt_epi8(_mm_setzero_si128(), v);
+        (_mm_unpacklo_epi8(v, sign), _mm_unpackhi_epi8(v, sign))
+    }
+
+    /// Exact i32 products of 8 i16 lanes × a broadcast i16 via the
+    /// lo/hi-half multiply pair (`a*b = lo | hi << 16`), split into the two
+    /// i32 quads in lane order.
+    #[inline(always)]
+    unsafe fn mul_i16_to_i32_sse2(a: __m128i, b: __m128i) -> (__m128i, __m128i) {
+        let lo = _mm_mullo_epi16(a, b);
+        let hi = _mm_mulhi_epi16(a, b);
+        (_mm_unpacklo_epi16(lo, hi), _mm_unpackhi_epi16(lo, hi))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dense_rows_i8_avx2(
+        ad: &[i8],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for j0 in (0..nb).step_by(NR) {
+            let mut kt = 0usize;
+            while kt < k {
+                let kend = (kt + KC).min(k);
+                for i in 0..rows {
+                    let arow = &ad[(row0 + i) * k..(row0 + i) * k + k];
+                    let cp = op.add(i * n + j0);
+                    let mut acc0 = _mm256_loadu_si256(cp as *const __m256i);
+                    let mut acc1 = _mm256_loadu_si256(cp.add(8) as *const __m256i);
+                    for (off, &a) in arow[kt..kend].iter().enumerate() {
+                        if a == 0 {
+                            continue;
+                        }
+                        let kk = kt + off;
+                        let a16 = _mm256_set1_epi16(a as i16);
+                        let w8 = _mm_loadu_si128(wp.add(kk * n + j0) as *const __m128i);
+                        let w16 = _mm256_cvtepi8_epi16(w8);
+                        // exact: |i8·i8| ≤ 2^14 < i16::MAX
+                        let p = _mm256_mullo_epi16(w16, a16);
+                        let p_lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p));
+                        let p_hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p));
+                        acc0 = _mm256_add_epi32(acc0, p_lo);
+                        acc1 = _mm256_add_epi32(acc1, p_hi);
+                    }
+                    _mm256_storeu_si256(cp as *mut __m256i, acc0);
+                    _mm256_storeu_si256(cp.add(8) as *mut __m256i, acc1);
+                }
+                kt = kend;
+            }
+        }
+        if nb < n {
+            dense_tail_cols(ad, wd, out, row0, k, n, nb);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dense_rows_i8_sse2(
+        ad: &[i8],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for j0 in (0..nb).step_by(NR) {
+            let mut kt = 0usize;
+            while kt < k {
+                let kend = (kt + KC).min(k);
+                for i in 0..rows {
+                    let arow = &ad[(row0 + i) * k..(row0 + i) * k + k];
+                    let cp = op.add(i * n + j0);
+                    let mut acc0 = _mm_loadu_si128(cp as *const __m128i);
+                    let mut acc1 = _mm_loadu_si128(cp.add(4) as *const __m128i);
+                    let mut acc2 = _mm_loadu_si128(cp.add(8) as *const __m128i);
+                    let mut acc3 = _mm_loadu_si128(cp.add(12) as *const __m128i);
+                    for (off, &a) in arow[kt..kend].iter().enumerate() {
+                        if a == 0 {
+                            continue;
+                        }
+                        let kk = kt + off;
+                        let a16 = _mm_set1_epi16(a as i16);
+                        let w8 = _mm_loadu_si128(wp.add(kk * n + j0) as *const __m128i);
+                        let (wlo, whi) = widen16_sse2(w8);
+                        let (p0, p1) = mul_i16_to_i32_sse2(wlo, a16);
+                        let (p2, p3) = mul_i16_to_i32_sse2(whi, a16);
+                        acc0 = _mm_add_epi32(acc0, p0);
+                        acc1 = _mm_add_epi32(acc1, p1);
+                        acc2 = _mm_add_epi32(acc2, p2);
+                        acc3 = _mm_add_epi32(acc3, p3);
+                    }
+                    _mm_storeu_si128(cp as *mut __m128i, acc0);
+                    _mm_storeu_si128(cp.add(4) as *mut __m128i, acc1);
+                    _mm_storeu_si128(cp.add(8) as *mut __m128i, acc2);
+                    _mm_storeu_si128(cp.add(12) as *mut __m128i, acc3);
+                }
+                kt = kend;
+            }
+        }
+        if nb < n {
+            dense_tail_cols(ad, wd, out, row0, k, n, nb);
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn dbb_rows_i8_avx2(
+        ad: &[i8],
+        col_ptr: &[usize],
+        entries: &[(u32, i32)],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let mut tbuf = MaybeUninit::<[i8; MR * DBB_PACK_MAX_K]>::uninit();
+        let tb = tbuf.as_mut_ptr() as *mut i8;
+        let mut rb = 0usize;
+        while rb < rows {
+            let mr = MR.min(rows - rb);
+            // SAFETY: tb holds MR * DBB_PACK_MAX_K bytes and k <= DBB_PACK_MAX_K.
+            if !pack_block(ad, tb, row0 + rb, mr, k) {
+                // all-zero activation block: every output is an exact 0
+                // (the kernel assigns, not accumulates)
+                for r in 0..mr {
+                    out[(rb + r) * n..(rb + r) * n + n].fill(0);
+                }
+                rb += MR;
+                continue;
+            }
+            let mut tmp = [0i32; MR];
+            for col in 0..n {
+                let mut acc = _mm256_setzero_si256();
+                for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
+                    debug_assert!((kk as usize) < k, "DBB entry k-index out of range");
+                    let lane = (tb.add(kk as usize * MR) as *const u64).read_unaligned();
+                    if lane == 0 {
+                        continue; // all 8 muxed activations are zero
+                    }
+                    let a32 = _mm256_cvtepi8_epi32(_mm_cvtsi64_si128(lane as i64));
+                    acc = _mm256_add_epi32(acc, _mm256_mullo_epi32(a32, _mm256_set1_epi32(wv)));
+                }
+                _mm256_storeu_si256(tmp.as_mut_ptr() as *mut __m256i, acc);
+                for r in 0..mr {
+                    out[(rb + r) * n + col] = tmp[r];
+                }
+            }
+            rb += MR;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn dbb_rows_i8_sse2(
+        ad: &[i8],
+        col_ptr: &[usize],
+        entries: &[(u32, i32)],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let mut tbuf = MaybeUninit::<[i8; MR * DBB_PACK_MAX_K]>::uninit();
+        let tb = tbuf.as_mut_ptr() as *mut i8;
+        let mut rb = 0usize;
+        while rb < rows {
+            let mr = MR.min(rows - rb);
+            // SAFETY: tb holds MR * DBB_PACK_MAX_K bytes and k <= DBB_PACK_MAX_K.
+            if !pack_block(ad, tb, row0 + rb, mr, k) {
+                for r in 0..mr {
+                    out[(rb + r) * n..(rb + r) * n + n].fill(0);
+                }
+                rb += MR;
+                continue;
+            }
+            let mut tmp = [0i32; MR];
+            for col in 0..n {
+                let mut acc_lo = _mm_setzero_si128();
+                let mut acc_hi = _mm_setzero_si128();
+                for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
+                    debug_assert!((kk as usize) < k, "DBB entry k-index out of range");
+                    let lane = (tb.add(kk as usize * MR) as *const u64).read_unaligned();
+                    if lane == 0 {
+                        continue;
+                    }
+                    let v = _mm_cvtsi64_si128(lane as i64);
+                    let sign = _mm_cmpgt_epi8(_mm_setzero_si128(), v);
+                    let a16 = _mm_unpacklo_epi8(v, sign);
+                    // |wv| <= 127 (DBB values are i8-sourced), so i16 holds it
+                    let (p0, p1) = mul_i16_to_i32_sse2(a16, _mm_set1_epi16(wv as i16));
+                    acc_lo = _mm_add_epi32(acc_lo, p0);
+                    acc_hi = _mm_add_epi32(acc_hi, p1);
+                }
+                _mm_storeu_si128(tmp.as_mut_ptr() as *mut __m128i, acc_lo);
+                _mm_storeu_si128(tmp.as_mut_ptr().add(4) as *mut __m128i, acc_hi);
+                for r in 0..mr {
+                    out[(rb + r) * n + col] = tmp[r];
+                }
+            }
+            rb += MR;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn adbb_dense_rows_i8_avx2(
+        a_row_ptr: &[usize],
+        a_entries: &[(u32, i32)],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for i in 0..rows {
+            let ents = &a_entries[a_row_ptr[row0 + i]..a_row_ptr[row0 + i + 1]];
+            for j0 in (0..nb).step_by(NR) {
+                let cp = op.add(i * n + j0);
+                let mut acc0 = _mm256_loadu_si256(cp as *const __m256i);
+                let mut acc1 = _mm256_loadu_si256(cp.add(8) as *const __m256i);
+                for &(kk, av) in ents {
+                    // |av| <= 127 (encoded from i8), so i16 holds it
+                    let a16 = _mm256_set1_epi16(av as i16);
+                    let w8 = _mm_loadu_si128(wp.add(kk as usize * n + j0) as *const __m128i);
+                    let w16 = _mm256_cvtepi8_epi16(w8);
+                    let p = _mm256_mullo_epi16(w16, a16);
+                    let p_lo = _mm256_cvtepi16_epi32(_mm256_castsi256_si128(p));
+                    let p_hi = _mm256_cvtepi16_epi32(_mm256_extracti128_si256::<1>(p));
+                    acc0 = _mm256_add_epi32(acc0, p_lo);
+                    acc1 = _mm256_add_epi32(acc1, p_hi);
+                }
+                _mm256_storeu_si256(cp as *mut __m256i, acc0);
+                _mm256_storeu_si256(cp.add(8) as *mut __m256i, acc1);
+            }
+        }
+        if nb < n {
+            adbb_tail_cols(a_row_ptr, a_entries, wd, out, row0, n, nb);
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn adbb_dense_rows_i8_sse2(
+        a_row_ptr: &[usize],
+        a_entries: &[(u32, i32)],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for i in 0..rows {
+            let ents = &a_entries[a_row_ptr[row0 + i]..a_row_ptr[row0 + i + 1]];
+            for j0 in (0..nb).step_by(NR) {
+                let cp = op.add(i * n + j0);
+                let mut acc0 = _mm_loadu_si128(cp as *const __m128i);
+                let mut acc1 = _mm_loadu_si128(cp.add(4) as *const __m128i);
+                let mut acc2 = _mm_loadu_si128(cp.add(8) as *const __m128i);
+                let mut acc3 = _mm_loadu_si128(cp.add(12) as *const __m128i);
+                for &(kk, av) in ents {
+                    let a16 = _mm_set1_epi16(av as i16);
+                    let w8 = _mm_loadu_si128(wp.add(kk as usize * n + j0) as *const __m128i);
+                    let (wlo, whi) = widen16_sse2(w8);
+                    let (p0, p1) = mul_i16_to_i32_sse2(wlo, a16);
+                    let (p2, p3) = mul_i16_to_i32_sse2(whi, a16);
+                    acc0 = _mm_add_epi32(acc0, p0);
+                    acc1 = _mm_add_epi32(acc1, p1);
+                    acc2 = _mm_add_epi32(acc2, p2);
+                    acc3 = _mm_add_epi32(acc3, p3);
+                }
+                _mm_storeu_si128(cp as *mut __m128i, acc0);
+                _mm_storeu_si128(cp.add(4) as *mut __m128i, acc1);
+                _mm_storeu_si128(cp.add(8) as *mut __m128i, acc2);
+                _mm_storeu_si128(cp.add(12) as *mut __m128i, acc3);
+            }
+        }
+        if nb < n {
+            adbb_tail_cols(a_row_ptr, a_entries, wd, out, row0, n, nb);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// aarch64: NEON
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+    use core::mem::MaybeUninit;
+
+    use super::{adbb_tail_cols, dense_tail_cols, pack_block, DBB_PACK_MAX_K, KC, MR, NR};
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dense_rows_i8_neon(
+        ad: &[i8],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for j0 in (0..nb).step_by(NR) {
+            let mut kt = 0usize;
+            while kt < k {
+                let kend = (kt + KC).min(k);
+                for i in 0..rows {
+                    let arow = &ad[(row0 + i) * k..(row0 + i) * k + k];
+                    let cp = op.add(i * n + j0);
+                    let mut acc0 = vld1q_s32(cp);
+                    let mut acc1 = vld1q_s32(cp.add(4));
+                    let mut acc2 = vld1q_s32(cp.add(8));
+                    let mut acc3 = vld1q_s32(cp.add(12));
+                    for (off, &a) in arow[kt..kend].iter().enumerate() {
+                        if a == 0 {
+                            continue;
+                        }
+                        let kk = kt + off;
+                        let a8 = vdup_n_s8(a);
+                        let w = vld1q_s8(wp.add(kk * n + j0));
+                        // exact i16 products: |i8·i8| ≤ 2^14
+                        let p_lo = vmull_s8(vget_low_s8(w), a8);
+                        let p_hi = vmull_s8(vget_high_s8(w), a8);
+                        acc0 = vaddw_s16(acc0, vget_low_s16(p_lo));
+                        acc1 = vaddw_s16(acc1, vget_high_s16(p_lo));
+                        acc2 = vaddw_s16(acc2, vget_low_s16(p_hi));
+                        acc3 = vaddw_s16(acc3, vget_high_s16(p_hi));
+                    }
+                    vst1q_s32(cp, acc0);
+                    vst1q_s32(cp.add(4), acc1);
+                    vst1q_s32(cp.add(8), acc2);
+                    vst1q_s32(cp.add(12), acc3);
+                }
+                kt = kend;
+            }
+        }
+        if nb < n {
+            dense_tail_cols(ad, wd, out, row0, k, n, nb);
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn dbb_rows_i8_neon(
+        ad: &[i8],
+        col_ptr: &[usize],
+        entries: &[(u32, i32)],
+        out: &mut [i32],
+        row0: usize,
+        k: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let mut tbuf = MaybeUninit::<[i8; MR * DBB_PACK_MAX_K]>::uninit();
+        let tb = tbuf.as_mut_ptr() as *mut i8;
+        let mut rb = 0usize;
+        while rb < rows {
+            let mr = MR.min(rows - rb);
+            // SAFETY: tb holds MR * DBB_PACK_MAX_K bytes and k <= DBB_PACK_MAX_K.
+            if !pack_block(ad, tb, row0 + rb, mr, k) {
+                for r in 0..mr {
+                    out[(rb + r) * n..(rb + r) * n + n].fill(0);
+                }
+                rb += MR;
+                continue;
+            }
+            let mut tmp = [0i32; MR];
+            for col in 0..n {
+                let mut acc_lo = vdupq_n_s32(0);
+                let mut acc_hi = vdupq_n_s32(0);
+                for &(kk, wv) in &entries[col_ptr[col]..col_ptr[col + 1]] {
+                    debug_assert!((kk as usize) < k, "DBB entry k-index out of range");
+                    let lane = (tb.add(kk as usize * MR) as *const u64).read_unaligned();
+                    if lane == 0 {
+                        continue; // all 8 muxed activations are zero
+                    }
+                    let v = vcreate_s8(lane);
+                    // |wv| <= 127 (DBB values are i8-sourced)
+                    let p = vmull_s8(v, vdup_n_s8(wv as i8));
+                    acc_lo = vaddw_s16(acc_lo, vget_low_s16(p));
+                    acc_hi = vaddw_s16(acc_hi, vget_high_s16(p));
+                }
+                vst1q_s32(tmp.as_mut_ptr(), acc_lo);
+                vst1q_s32(tmp.as_mut_ptr().add(4), acc_hi);
+                for r in 0..mr {
+                    out[(rb + r) * n + col] = tmp[r];
+                }
+            }
+            rb += MR;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn adbb_dense_rows_i8_neon(
+        a_row_ptr: &[usize],
+        a_entries: &[(u32, i32)],
+        wd: &[i8],
+        out: &mut [i32],
+        row0: usize,
+        n: usize,
+    ) {
+        let rows = out.len() / n;
+        let nb = n - n % NR;
+        let op = out.as_mut_ptr();
+        let wp = wd.as_ptr();
+        for i in 0..rows {
+            let ents = &a_entries[a_row_ptr[row0 + i]..a_row_ptr[row0 + i + 1]];
+            for j0 in (0..nb).step_by(NR) {
+                let cp = op.add(i * n + j0);
+                let mut acc0 = vld1q_s32(cp);
+                let mut acc1 = vld1q_s32(cp.add(4));
+                let mut acc2 = vld1q_s32(cp.add(8));
+                let mut acc3 = vld1q_s32(cp.add(12));
+                for &(kk, av) in ents {
+                    // |av| <= 127 (encoded from i8)
+                    let a8 = vdup_n_s8(av as i8);
+                    let w = vld1q_s8(wp.add(kk as usize * n + j0));
+                    let p_lo = vmull_s8(vget_low_s8(w), a8);
+                    let p_hi = vmull_s8(vget_high_s8(w), a8);
+                    acc0 = vaddw_s16(acc0, vget_low_s16(p_lo));
+                    acc1 = vaddw_s16(acc1, vget_high_s16(p_lo));
+                    acc2 = vaddw_s16(acc2, vget_low_s16(p_hi));
+                    acc3 = vaddw_s16(acc3, vget_high_s16(p_hi));
+                }
+                vst1q_s32(cp, acc0);
+                vst1q_s32(cp.add(4), acc1);
+                vst1q_s32(cp.add(8), acc2);
+                vst1q_s32(cp.add(12), acc3);
+            }
+        }
+        if nb < n {
+            adbb_tail_cols(a_row_ptr, a_entries, wd, out, row0, n, nb);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TensorI8;
+    use crate::util::Rng;
+    use std::sync::Mutex;
+
+    // The override is process-global; every lib test that forces an ISA
+    // serializes on this lock and restores the default on drop. (Other lib
+    // tests running concurrently only ever compare dispatch-vs-dispatch or
+    // dispatch-vs-scalar values, and every ISA is bit-exact, so a transient
+    // override cannot change any of their outcomes.)
+    static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+    struct RestoreIsa;
+    impl Drop for RestoreIsa {
+        fn drop(&mut self) {
+            force_isa(None);
+        }
+    }
+
+    #[test]
+    fn isa_names_roundtrip() {
+        for isa in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+            assert_eq!(Isa::from_name(&isa.name().to_uppercase()), Some(isa));
+            assert_eq!(format!("{isa}"), isa.name());
+        }
+        assert_eq!(Isa::from_name("avx512"), None);
+        assert_eq!(Isa::from_name(""), None);
+    }
+
+    #[test]
+    fn scalar_always_available_and_active_supported() {
+        let isas = available_isas();
+        assert_eq!(isas.first(), Some(&Isa::Scalar));
+        assert!(supported(active_isa()));
+        #[cfg(target_arch = "x86_64")]
+        assert!(isas.contains(&Isa::Sse2), "SSE2 is x86_64 baseline");
+        #[cfg(target_arch = "aarch64")]
+        assert!(isas.contains(&Isa::Neon), "NEON is aarch64 baseline");
+    }
+
+    #[test]
+    fn clamp_respects_rank_and_support() {
+        for req in [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Neon] {
+            let got = clamp_to_supported(req);
+            assert!(supported(got), "clamp({req:?}) -> {got:?}");
+            assert!(rank(got) <= rank(req), "clamp({req:?}) -> {got:?}");
+        }
+        assert_eq!(clamp_to_supported(Isa::Scalar), Isa::Scalar);
+    }
+
+    #[test]
+    fn forced_isa_is_active_and_kernels_stay_exact() {
+        let _g = ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _restore = RestoreIsa;
+        let mut rng = Rng::new(0x51);
+        let a = TensorI8::rand_sparse(&[5, 70], 0.4, &mut rng);
+        let w = TensorI8::rand(&[70, 19], &mut rng);
+        force_isa(Some(Isa::Scalar));
+        let want = crate::gemm::dense_i8(&a, &w);
+        for isa in available_isas() {
+            force_isa(Some(isa));
+            assert_eq!(active_isa(), isa);
+            assert_eq!(crate::gemm::dense_i8(&a, &w).data(), want.data(), "isa={isa}");
+        }
+    }
+}

@@ -6,6 +6,18 @@
 //! (INT8 × INT8 → INT32 accumulate) and serves as the functional oracle for
 //! the datapath simulators and for the XLA/Pallas artifacts.
 //!
+//! ## SIMD microkernels
+//!
+//! The scalar row kernels in this file (`dense_rows_i8` /
+//! `dbb_rows_i8` and friends) are the **bit-exactness oracles**; the hot
+//! paths dispatch through [`micro`], which re-implements them as
+//! register-blocked, cache-tiled SIMD microkernels (AVX2/SSE2 on x86_64,
+//! NEON on aarch64, runtime-detected once per process, `SSTA_FORCE_ISA`
+//! overridable) and falls back to the scalar kernels everywhere else.
+//! Integer i32 accumulation is exactly associative, so every ISA path is
+//! bit-exact with the oracles — property-pinned per shape × sparsity × ISA
+//! in `rust/tests/micro_kernels.rs`.
+//!
 //! ## Parallelism
 //!
 //! [`dense_i8`] and [`dbb_i8`] are the single-threaded oracles. The
@@ -73,6 +85,7 @@
 pub mod act;
 pub mod conv;
 pub mod fused;
+pub mod micro;
 pub mod tiled;
 
 pub use act::{adbb_dense_i8, adbb_i8_packed, ActDbb};
@@ -314,7 +327,7 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8) -> TensorI32 {
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
     let mut c = TensorI32::zeros(&[m, n]);
-    dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
+    micro::dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
     c
 }
 
@@ -327,9 +340,9 @@ pub fn dense_i8_gated(a: &TensorI8, w: &TensorI8, gate: ZeroGate) -> TensorI32 {
     assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
     let mut c = TensorI32::zeros(&[m, n]);
     if gate.resolve_with(|| a.sparsity()) {
-        dense_rows_i8_gated(a.data(), w.data(), c.data_mut(), 0, k, n);
+        micro::dense_rows_i8_gated(a.data(), w.data(), c.data_mut(), 0, k, n);
     } else {
-        dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
+        micro::dense_rows_i8(a.data(), w.data(), c.data_mut(), 0, k, n);
     }
     c
 }
@@ -353,7 +366,7 @@ pub fn dbb_i8_packed(a: &TensorI8, w: &DbbPacked) -> TensorI32 {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
     let mut c = TensorI32::zeros(&[m, w.n]);
-    dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
+    micro::dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
     c
 }
 
@@ -535,9 +548,9 @@ pub fn dbb_i8_packed_gated(a: &TensorI8, w: &DbbPacked, gate: ZeroGate) -> Tenso
     assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
     let mut c = TensorI32::zeros(&[m, w.n]);
     if gate.resolve_with(|| a.sparsity()) {
-        dbb_rows_i8_gated(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
+        micro::dbb_rows_i8_gated(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
     } else {
-        dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
+        micro::dbb_rows_i8(a.data(), w.col_ptr(), w.entries(), c.data_mut(), 0, k, w.n);
     }
     c
 }

@@ -12,7 +12,13 @@
 //! The thread-count knob is [`Parallelism`] (re-exported from
 //! [`crate::util::par`]): `auto()` = `available_parallelism()` (the
 //! default), `serial()` = the exact single-threaded fallback with no thread
-//! spawned.
+//! spawned, `with_pin(true)` = opt-in worker→core affinity pinning (worker
+//! `i` → core `i % cores`, best-effort, scheduling-only).
+//!
+//! Each worker's inner loop dispatches through the
+//! [`crate::gemm::micro`] SIMD microkernels — same kernels as the serial
+//! drivers, so tiled results stay bit-exact with the oracles on every ISA
+//! path.
 
 pub use crate::util::par::Parallelism;
 
@@ -37,7 +43,10 @@ fn row_tiled<K: Fn(&mut [i32], usize) + Sync>(
     std::thread::scope(|s| {
         for (ti, tile) in c.data_mut().chunks_mut(rows_per_tile * n).enumerate() {
             let row0 = ti * rows_per_tile;
-            s.spawn(move || kref(tile, row0));
+            s.spawn(move || {
+                par.pin_worker(ti);
+                kref(tile, row0)
+            });
         }
     });
     c
@@ -53,7 +62,9 @@ pub fn dense_i8(a: &TensorI8, w: &TensorI8, par: Parallelism) -> TensorI32 {
         return crate::gemm::dense_i8(a, w);
     }
     let (ad, wd) = (a.data(), w.data());
-    row_tiled(m, n, par, |tile, row0| crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n))
+    row_tiled(m, n, par, |tile, row0| {
+        crate::gemm::micro::dense_rows_i8(ad, wd, tile, row0, k, n)
+    })
 }
 
 /// [`dense_i8`] under a [`ZeroGate`] policy: each worker runs the
@@ -71,10 +82,12 @@ pub fn dense_i8_gated(a: &TensorI8, w: &TensorI8, par: Parallelism, gate: ZeroGa
     let (ad, wd) = (a.data(), w.data());
     if engaged {
         row_tiled(m, n, par, |tile, row0| {
-            crate::gemm::dense_rows_i8_gated(ad, wd, tile, row0, k, n)
+            crate::gemm::micro::dense_rows_i8_gated(ad, wd, tile, row0, k, n)
         })
     } else {
-        row_tiled(m, n, par, |tile, row0| crate::gemm::dense_rows_i8(ad, wd, tile, row0, k, n))
+        row_tiled(m, n, par, |tile, row0| {
+            crate::gemm::micro::dense_rows_i8(ad, wd, tile, row0, k, n)
+        })
     }
 }
 
@@ -98,7 +111,9 @@ pub fn dbb_i8_packed(a: &TensorI8, w: &DbbPacked, par: Parallelism) -> TensorI32
     }
     let ad = a.data();
     let (cp, en) = (w.col_ptr(), w.entries());
-    row_tiled(m, w.n, par, |tile, row0| crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n))
+    row_tiled(m, w.n, par, |tile, row0| {
+        crate::gemm::micro::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
+    })
 }
 
 /// [`dbb_i8_packed`] under a [`ZeroGate`] policy: each worker runs the
@@ -121,11 +136,11 @@ pub fn dbb_i8_packed_gated(
     let (cp, en) = (w.col_ptr(), w.entries());
     if engaged {
         row_tiled(m, w.n, par, |tile, row0| {
-            crate::gemm::dbb_rows_i8_gated(ad, cp, en, tile, row0, k, w.n)
+            crate::gemm::micro::dbb_rows_i8_gated(ad, cp, en, tile, row0, k, w.n)
         })
     } else {
         row_tiled(m, w.n, par, |tile, row0| {
-            crate::gemm::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
+            crate::gemm::micro::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
         })
     }
 }
@@ -158,7 +173,7 @@ pub fn adbb_dense_i8(a: &ActDbb, w: &TensorI8, par: Parallelism) -> TensorI32 {
     let (arp, aen) = (a.row_ptr(), a.entries());
     let wd = w.data();
     row_tiled(a.m, n, par, |tile, row0| {
-        crate::gemm::act::adbb_dense_rows_i8(arp, aen, wd, tile, row0, n)
+        crate::gemm::micro::adbb_dense_rows_i8(arp, aen, wd, tile, row0, n)
     })
 }
 

@@ -7,6 +7,11 @@
 //!   `std::thread::available_parallelism()`; `Parallelism::serial()` (1
 //!   thread) is the exact-fallback that bypasses thread spawning entirely,
 //!   so serial results stay byte-for-byte reproducible and debuggable.
+//!   [`Parallelism::with_pin`] adds opt-in worker→core affinity pinning
+//!   (Linux `sched_setaffinity`, best-effort, scheduling-only — never
+//!   affects results): worker `i` of every pool pins to core `i % cores`,
+//!   so per-worker scratch arenas (the fused conv engine's `PatchScratch`)
+//!   stay hot in the same core's cache across steady-state calls.
 //! * [`map_indexed`] — evaluate `f(0..n)` across a scoped worker pool with a
 //!   shared atomic work queue (one index per task — good load balance when
 //!   task costs vary, e.g. design points with different occupancies), and
@@ -17,10 +22,11 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-/// Worker-pool size configuration.
+/// Worker-pool size configuration, plus the core-affinity knob.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Parallelism {
     threads: usize,
+    pin: bool,
 }
 
 impl Parallelism {
@@ -29,22 +35,77 @@ impl Parallelism {
         let threads = std::thread::available_parallelism()
             .map(std::num::NonZeroUsize::get)
             .unwrap_or(1);
-        Parallelism { threads }
+        Parallelism { threads, pin: false }
     }
 
     /// Serial execution: no worker threads are spawned at all.
     pub fn serial() -> Parallelism {
-        Parallelism { threads: 1 }
+        Parallelism { threads: 1, pin: false }
     }
 
     /// Exactly `n` worker threads (clamped to ≥ 1).
     pub fn threads(n: usize) -> Parallelism {
-        Parallelism { threads: n.max(1) }
+        Parallelism { threads: n.max(1), pin: false }
     }
 
     /// Configured thread count.
     pub fn get(&self) -> usize {
         self.threads
+    }
+
+    /// Enable/disable worker→core affinity pinning (default off). When on,
+    /// worker `i` of every pool built from this knob pins itself to core
+    /// `i % cores` before touching its tile — so a steady-state executor's
+    /// per-worker scratch (the fused conv's `PatchScratch` row buffers)
+    /// keeps meeting the same L1/L2 across calls. Pinning never affects
+    /// results (it is scheduling only) and is best-effort: hosts where
+    /// affinity syscalls are unavailable or denied run unpinned.
+    pub fn with_pin(mut self, pin: bool) -> Parallelism {
+        self.pin = pin;
+        self
+    }
+
+    /// Whether worker→core pinning is enabled.
+    pub fn pin(&self) -> bool {
+        self.pin
+    }
+
+    /// Pin the calling worker thread (index `idx` of its pool) to a core,
+    /// if pinning is enabled. Called by every pool scaffold right after
+    /// spawn; a no-op when disabled, best-effort when enabled.
+    pub(crate) fn pin_worker(&self, idx: usize) {
+        if self.pin {
+            pin_current_to(idx);
+        }
+    }
+}
+
+/// Best-effort: pin the calling thread to core `worker % cores` (Linux
+/// `sched_setaffinity`; other platforms — and miri, which cannot shim the
+/// raw syscall — are a no-op). Returns whether the pin took effect.
+/// Failure is fine — e.g. a cgroup/sandbox that restricts the affinity
+/// mask — the thread just stays under the default scheduler.
+pub fn pin_current_to(worker: usize) -> bool {
+    #[cfg(all(target_os = "linux", not(miri)))]
+    {
+        let cores = std::thread::available_parallelism()
+            .map(std::num::NonZeroUsize::get)
+            .unwrap_or(1);
+        let cpu = worker % cores;
+        // glibc cpu_set_t: a 1024-bit (128-byte) mask; pid 0 = this thread.
+        let mut mask = [0u8; 128];
+        mask[cpu / 8] |= 1 << (cpu % 8);
+        extern "C" {
+            fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u8) -> i32;
+        }
+        // SAFETY: the mask pointer is valid for `cpusetsize` bytes for the
+        // duration of the call; the syscall only reads it.
+        unsafe { sched_setaffinity(0, mask.len(), mask.as_ptr()) == 0 }
+    }
+    #[cfg(not(all(target_os = "linux", not(miri))))]
+    {
+        let _ = worker;
+        false
     }
 }
 
@@ -77,8 +138,9 @@ where
     let nextref = &next;
     let parts: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
         let handles: Vec<_> = (0..threads)
-            .map(|_| {
+            .map(|wi| {
                 s.spawn(move || {
+                    par.pin_worker(wi);
                     let mut local = Vec::new();
                     loop {
                         let i = nextref.fetch_add(1, Ordering::Relaxed);
@@ -121,6 +183,35 @@ mod tests {
         assert_eq!(Parallelism::serial().get(), 1);
         assert_eq!(Parallelism::threads(0).get(), 1);
         assert_eq!(Parallelism::threads(6).get(), 6);
+    }
+
+    #[test]
+    fn pin_knob_defaults_off_and_round_trips() {
+        assert!(!Parallelism::auto().pin());
+        assert!(!Parallelism::serial().pin());
+        assert!(Parallelism::threads(4).with_pin(true).pin());
+        assert!(!Parallelism::threads(4).with_pin(true).with_pin(false).pin());
+        // thread count survives the pin toggle
+        assert_eq!(Parallelism::threads(4).with_pin(true).get(), 4);
+    }
+
+    #[test]
+    fn pinned_pool_results_are_identical() {
+        // pinning is scheduling-only: same values, same order, and a
+        // best-effort no-op on hosts that deny the affinity syscall
+        let want: Vec<usize> = (0..53).map(|i| i * 3 + 1).collect();
+        for t in [1usize, 2, 4] {
+            let got = map_indexed(53, Parallelism::threads(t).with_pin(true), |i| i * 3 + 1);
+            assert_eq!(got, want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn pin_current_is_best_effort() {
+        // must never panic, whatever the host allows; on non-Linux it is
+        // always false
+        let _ = pin_current_to(0);
+        let _ = pin_current_to(usize::MAX - 3);
     }
 
     #[test]

@@ -1,0 +1,290 @@
+//! Property suite for the SIMD microkernel dispatch layer
+//! (`ssta::gemm::micro`): every driver that routes through the
+//! microkernels — `gemm::{dense_i8, dense_i8_gated, dbb_i8_packed,
+//! dbb_i8_packed_gated, adbb_dense_i8}`, their `tiled::*` pools and the
+//! `fused::conv2d_*` engine — must be **bit-exact** with the forced-Scalar
+//! oracle on every ISA the host supports, across remainder shapes (N and K
+//! off the 16-lane / 256-deep block boundaries), DBB bounds `nnz 1..=bz`
+//! for `bz ∈ {4, 8, 16}`, operand sparsity 0 / 0.5 / 1, partial MR row
+//! blocks, the `K > DBB_PACK_MAX_K` scalar fallback, gated and encoded
+//! variants, worker-pool widths, and pinned pools.
+//!
+//! The ISA override (`micro::force_isa`) is process-global, so every test
+//! that flips it serializes on one mutex and restores the override through
+//! a drop guard. Tests that do *not* take the lock are still safe to run
+//! concurrently: every ISA is bit-exact, so a transient switch cannot
+//! change any value-equality assertion.
+
+use std::sync::Mutex;
+
+use ssta::dbb::DbbMatrix;
+use ssta::gemm;
+use ssta::gemm::conv::{conv2d_direct, weights_to_gemm, ConvShape};
+use ssta::gemm::micro::{self, Isa};
+use ssta::gemm::{fused, tiled, ActDbb, DbbPacked, ZeroGate};
+use ssta::tensor::TensorI8;
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the process-global ISA lock and restores the default dispatch
+/// (no override) on drop — even when the assertion inside panics, so a
+/// failing case never leaks a forced ISA into the next test.
+struct IsaGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl IsaGuard {
+    fn acquire() -> IsaGuard {
+        IsaGuard(ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for IsaGuard {
+    fn drop(&mut self) {
+        micro::force_isa(None);
+    }
+}
+
+/// Evaluate `eval` under forced-Scalar (the oracle) and then under every
+/// ISA the host supports, asserting each result list is bit-identical.
+fn exact_on_every_isa<F: Fn() -> Vec<Vec<i32>>>(tag: &str, eval: F) {
+    let _guard = IsaGuard::acquire();
+    micro::force_isa(Some(Isa::Scalar));
+    let want = eval();
+    for isa in micro::available_isas() {
+        micro::force_isa(Some(isa));
+        let got = eval();
+        assert_eq!(got.len(), want.len(), "{tag}: variant count under {isa}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{tag}: variant #{i} diverges from scalar under {isa}");
+        }
+    }
+}
+
+/// Case-count that stays overridable by `SSTA_PROP_CASES` (the miri job
+/// shrinks the grid through it; an explicit `.cases(n)` would mask it).
+fn cfg(n: u32) -> Config {
+    if std::env::var("SSTA_PROP_CASES").is_ok() {
+        Config::default()
+    } else {
+        Config::default().cases(n)
+    }
+}
+
+const SPARSITIES: [f32; 3] = [0.0, 0.5, 1.0];
+
+// Deterministic remainder grids: N crossing the 16-lane NR boundary, K
+// crossing the 256-deep KC tile boundary. Shrunk under miri (the
+// interpreter pays per executed op, not per wall-clock).
+#[cfg(not(miri))]
+const NS: &[usize] = &[1, 2, 3, 15, 16, 17, 31, 32, 33];
+#[cfg(miri)]
+const NS: &[usize] = &[1, 15, 17];
+#[cfg(not(miri))]
+const KS: &[usize] = &[1, 255, 256, 257, 300];
+#[cfg(miri)]
+const KS: &[usize] = &[1, 17, 40];
+
+#[test]
+fn dense_exact_across_remainder_shapes() {
+    let mut rng = Rng::new(0x51D0_0001);
+    for &k in KS {
+        for &n in NS {
+            for m in [1usize, 5] {
+                let a = TensorI8::rand_sparse(&[m, k], 0.4, &mut rng);
+                let w = TensorI8::rand(&[k, n], &mut rng);
+                exact_on_every_isa(&format!("dense m={m} k={k} n={n}"), || {
+                    vec![
+                        gemm::dense_i8(&a, &w).into_vec(),
+                        gemm::dense_i8_gated(&a, &w, ZeroGate::On).into_vec(),
+                        gemm::dense_i8_gated(&a, &w, ZeroGate::Off).into_vec(),
+                    ]
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn dense_prop_exact_through_tiled_pools() {
+    check(cfg(24), |rng| {
+        let m = rng.below(24) + 1;
+        let k = rng.below(300) + 1;
+        let n = rng.below(40) + 1;
+        let threads = rng.below(6) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let w = TensorI8::rand(&[k, n], rng);
+        let par = Parallelism::threads(threads);
+        exact_on_every_isa(&format!("tiled dense m={m} k={k} n={n} t={threads}"), || {
+            vec![
+                tiled::dense_i8(&a, &w, par).into_vec(),
+                tiled::dense_i8_gated(&a, &w, par, ZeroGate::On).into_vec(),
+            ]
+        });
+    });
+}
+
+#[test]
+fn dbb_exact_across_nnz_bz_sparsity_partial_blocks() {
+    let mut rng = Rng::new(0x51D0_0002);
+    let k = 48usize;
+    let n = 17usize;
+    for bz in [4usize, 8, 16] {
+        for nnz in 1..=bz {
+            for p_zero in SPARSITIES {
+                // m ∈ {1, 7, 9}: below, just-below, and just-past one MR=8
+                // row block — the pack-transpose padding lanes and the
+                // partial-block scatter both get exercised.
+                for m in [1usize, 7, 9] {
+                    let a = TensorI8::rand_sparse(&[m, k], p_zero, &mut rng);
+                    let wd = TensorI8::rand(&[k, n], &mut rng);
+                    let w = DbbPacked::pack(&DbbMatrix::compress_topk(&wd, bz, nnz).unwrap());
+                    let tag = format!("dbb m={m} bz={bz} nnz={nnz} p={p_zero}");
+                    exact_on_every_isa(&tag, || {
+                        vec![
+                            gemm::dbb_i8_packed(&a, &w).into_vec(),
+                            gemm::dbb_i8_packed_gated(&a, &w, ZeroGate::On).into_vec(),
+                            tiled::dbb_i8_packed(&a, &w, Parallelism::threads(3)).into_vec(),
+                        ]
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "K beyond the pack cap is a plain-size stress case")]
+fn dbb_k_beyond_pack_limit_falls_back_exact() {
+    // K past DBB_PACK_MAX_K routes every ISA to the scalar CSC walk —
+    // results must still match the forced-Scalar oracle bit for bit.
+    let mut rng = Rng::new(0x51D0_0003);
+    let k = micro::DBB_PACK_MAX_K + 8;
+    let (m, n) = (3usize, 4usize);
+    let a = TensorI8::rand_sparse(&[m, k], 0.5, &mut rng);
+    let wd = TensorI8::rand_sparse(&[k, n], 0.6, &mut rng);
+    let w = DbbPacked::pack(&DbbMatrix::compress(&wd, 8).unwrap());
+    exact_on_every_isa("dbb k>DBB_PACK_MAX_K", || {
+        vec![
+            gemm::dbb_i8_packed(&a, &w).into_vec(),
+            gemm::dbb_i8_packed_gated(&a, &w, ZeroGate::On).into_vec(),
+        ]
+    });
+}
+
+#[test]
+fn encoded_activation_paths_exact() {
+    check(cfg(24), |rng| {
+        let m = rng.below(20) + 1;
+        let k = rng.below(96) + 1;
+        let n = rng.below(24) + 1;
+        let bz = [4usize, 8, 16][rng.below(3)];
+        let p_zero = SPARSITIES[rng.below(3)];
+        let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+        let wd = TensorI8::rand(&[k, n], rng);
+        let w = DbbPacked::pack(&DbbMatrix::compress_topk(&wd, bz, bz.min(3)).unwrap());
+        let enc = ActDbb::encode(&a, bz);
+        let par = Parallelism::threads(rng.below(4) + 1);
+        exact_on_every_isa(&format!("adbb m={m} k={k} n={n} bz={bz}"), || {
+            vec![
+                // dense-W joint kernel: micro-dispatched
+                gemm::adbb_dense_i8(&enc, &wd).into_vec(),
+                tiled::adbb_dense_i8(&enc, &wd, par).into_vec(),
+                // merge-join kernel: scalar on every ISA, still covered so
+                // a future vectorization inherits the same oracle
+                gemm::adbb_i8_packed(&enc, &w).into_vec(),
+            ]
+        });
+    });
+}
+
+fn rand_conv_shape(rng: &mut Rng) -> ConvShape {
+    let kh = [1usize, 3, 5][rng.below(3)];
+    let stride = rng.below(2) + 1;
+    ConvShape {
+        h: kh + rng.below(6) + stride,
+        w: kh + rng.below(6) + stride,
+        c: rng.below(6) + 1,
+        kh,
+        kw: kh,
+        oc: rng.below(20) + 1,
+        stride,
+        pad: rng.below(kh.div_ceil(2)),
+    }
+}
+
+#[test]
+fn fused_conv_exact_across_isas() {
+    check(cfg(16), |rng| {
+        let s = rand_conv_shape(rng);
+        let threads = rng.below(4) + 1;
+        let p_zero = SPARSITIES[rng.below(3)];
+        let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], p_zero, rng);
+        let w4 = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+        let wg = weights_to_gemm(&w4, &s);
+        let bz = [4usize, 8][rng.below(2)];
+        let wp = DbbPacked::pack(&DbbMatrix::compress_topk(&wg, bz, bz / 2 + 1).unwrap());
+        let par = Parallelism::threads(threads);
+        let want = conv2d_direct(&x, &w4, &s);
+        exact_on_every_isa(&format!("conv {s:?} t={threads} p={p_zero}"), || {
+            let got = vec![
+                fused::conv2d_i8(&x, &w4, &s, par).into_vec(),
+                fused::conv2d_i8_gated(&x, &w4, &s, par, ZeroGate::On).into_vec(),
+                fused::conv2d_i8_encoded(&x, &w4, &s, par).into_vec(),
+                fused::conv2d_dbb_i8_packed(&x, &wp, &s, par).into_vec(),
+                fused::conv2d_dbb_i8_packed_gated(&x, &wp, &s, par, ZeroGate::On).into_vec(),
+                fused::conv2d_dbb_i8_packed_encoded(&x, &wp, &s, par).into_vec(),
+            ];
+            // the dense variants must also equal the direct-conv oracle on
+            // every ISA, not just agree with their own scalar runs
+            assert_eq!(got[0], want.data(), "conv2d_i8 vs direct {s:?}");
+            got
+        });
+    });
+}
+
+#[test]
+fn pinned_pools_stay_exact() {
+    // pinning is scheduling-only: with_pin(true) must reproduce the
+    // unpinned result bit for bit on every ISA
+    let mut rng = Rng::new(0x51D0_0004);
+    let a = TensorI8::rand_sparse(&[19, 120], 0.5, &mut rng);
+    let w = TensorI8::rand(&[120, 33], &mut rng);
+    let s = ConvShape { h: 8, w: 8, c: 3, kh: 3, kw: 3, oc: 9, stride: 1, pad: 1 };
+    let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.5, &mut rng);
+    let w4 = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], &mut rng);
+    let plain = Parallelism::threads(4);
+    let pinned = plain.with_pin(true);
+    exact_on_every_isa("pinned pools", || {
+        let g = tiled::dense_i8(&a, &w, pinned);
+        assert_eq!(g.data(), tiled::dense_i8(&a, &w, plain).data(), "gemm pin");
+        let c = fused::conv2d_i8(&x, &w4, &s, pinned);
+        assert_eq!(c.data(), fused::conv2d_i8(&x, &w4, &s, plain).data(), "conv pin");
+        vec![g.into_vec(), c.into_vec()]
+    });
+}
+
+#[test]
+fn env_forced_isa_is_honored() {
+    // Pins the CI kernel-matrix contract: with no runtime override, the
+    // default dispatch honors SSTA_FORCE_ISA when it names a supported ISA
+    // (unsupported names clamp down by rank and still dispatch).
+    let _guard = IsaGuard::acquire();
+    micro::force_isa(None);
+    let active = micro::active_isa();
+    assert!(micro::supported(active), "active ISA must be supported");
+    if let Ok(name) = std::env::var("SSTA_FORCE_ISA") {
+        if !name.trim().is_empty() {
+            let asked = Isa::from_name(&name).expect("SSTA_FORCE_ISA names a known ISA");
+            if micro::supported(asked) {
+                assert_eq!(active, asked, "env-forced ISA must win the dispatch");
+            }
+        }
+    }
+    // and the runtime override outranks the environment
+    for isa in micro::available_isas() {
+        micro::force_isa(Some(isa));
+        assert_eq!(micro::active_isa(), isa);
+    }
+}

@@ -20,6 +20,13 @@ if [[ "$FAST" -eq 0 ]]; then
   step cargo build --release
 fi
 step cargo test -q
+# kernel matrix: the SIMD microkernels must stay bit-exact with the scalar
+# oracle on every forced dispatch path (mirrors the CI kernel-matrix job;
+# unsupported ISAs clamp down by rank, so all three legs run everywhere)
+for isa in scalar sse2 avx2; do
+  step env SSTA_FORCE_ISA="$isa" cargo test -q --test micro_kernels \
+    --test tiled_gemm --test fused_conv --test zero_gate --test act_dbb
+done
 step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
 step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
