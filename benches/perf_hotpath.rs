@@ -8,7 +8,7 @@
 use ssta::arch::{space, Design, Tech};
 use ssta::dbb::{prune::prune_i8, DbbMatrix};
 use ssta::gemm::conv::{im2col, ConvShape};
-use ssta::gemm::{ActDbb, ActPolicy, ZeroGate};
+use ssta::gemm::{ActDbb, ActPolicy, Epilogue, Requant, ZeroGate};
 use ssta::models;
 use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
 use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
@@ -132,6 +132,42 @@ fn main() {
         set.bench("engine/convnet5_execute_encoded", move || {
             bb(encm.execute_policy(&einput, Parallelism::auto(), ActPolicy::Encode));
         });
+
+        // steady-state execute with the layer epilogue (requant + ReLU)
+        // fused into each GEMM's output walk: layers chain i8→i8 through
+        // the scratch arena's ping-pong pool and no whole-layer i32
+        // accumulator tensor is ever allocated — compare against
+        // execute_prepared_steady, the staged i32 → requant chain
+        let m7 = models::convnet5();
+        let mut fusedm = ssta::engine::PreparedModel::prepare(&m7, 3, 8, 42, Parallelism::auto());
+        fusedm.calibrate(Parallelism::auto());
+        let finput = fusedm.seed_input().clone();
+        let i32_bytes: u64 = fusedm
+            .layers()
+            .iter()
+            .map(|l| {
+                let rows = match l.sample {
+                    ssta::engine::SampleShape::Conv(ss) => ss.oh() * ss.ow(),
+                    ssta::engine::SampleShape::Fc { m, .. } => m,
+                };
+                let cols = match &l.operand {
+                    ssta::engine::PackedOperand::Dbb(p) => p.n,
+                    ssta::engine::PackedOperand::Dense(w) => w.shape()[1],
+                };
+                (rows * cols * 4) as u64
+            })
+            .sum();
+        set.report("engine/convnet5_i32_traffic_eliminated", move || {
+            println!(
+                "convnet5 fused epilogue: {i32_bytes} B of whole-layer i32 \
+                 accumulator tensors per execute (written then re-read by the \
+                 staged requant pass) never materialize — every worker \
+                 requantizes its freshly computed rows to i8 while cache-hot"
+            );
+        });
+        set.bench("engine/convnet5_execute_fused_epilogue", move || {
+            bb(fusedm.execute_fused(&finput, Parallelism::auto()));
+        });
     }
 
     // ---- detailed engine (ground truth; used at small scale) ----
@@ -190,6 +226,18 @@ fn main() {
         });
         set.bench("gemm/dbb_i8_512x512x512_tiled_auto", move || {
             bb(ssta::gemm::tiled::dbb_i8(&a2, &w2, Parallelism::auto()));
+        });
+
+        // fused output epilogue: same 512³ dense GEMM, but each worker
+        // requantizes (+ ReLU) its accumulator rows to i8 while cache-hot —
+        // the 1 MiB i32 C matrix is never allocated. Compare against
+        // dense_i8_512x512x512_tiled_auto (materialize-then-requant)
+        let mut rng = Rng::new(6);
+        let ae = TensorI8::rand(&[512, 512], &mut rng);
+        let we = TensorI8::rand(&[512, 512], &mut rng);
+        let ep = Epilogue::new(Requant::Global(7), true);
+        set.bench("gemm/dense_i8_512_epilogue", move || {
+            bb(ssta::gemm::tiled::dense_i8_ep(&ae, &we, Parallelism::auto(), ZeroGate::Off, &ep));
         });
 
         // packed operand: the per-call CSC decode amortized away

@@ -94,6 +94,7 @@ impl SmtSa {
                 out_sram_bytes: 4 * (mg * stats.n) as u64,
                 mux_selects: 0,
                 mcu_cycles: 0,
+                epilogue_cycles: 0,
             },
             dense_macs,
         }

@@ -72,14 +72,34 @@
 //! [`Execution::gate_engaged`]. The legacy two-way [`ZeroGate`] surface
 //! ([`PreparedModel::set_zero_gate`] / [`PreparedModel::execute_gated`])
 //! is preserved and never encodes.
+//!
+//! ## Fused epilogues: the i8→i8 layer chain
+//!
+//! The historical execute loop materializes each layer's whole i32
+//! accumulator tensor, then requantizes it ([`crate::gemm::requant_relu`])
+//! in a second pass. [`PreparedModel::execute_fused`] fuses that epilogue —
+//! requantize, ReLU, and (under [`PreparedModel::set_fused_pool`]) the
+//! model's 2×2/stride-2 max-pool — *into the GEMM output walk* via
+//! [`crate::gemm::Epilogue`]: each tiled worker converts its freshly
+//! accumulated rows to i8 while they are cache-hot, layers chain i8→i8
+//! through recycled output backings (the scratch arena's ping-pong pool),
+//! and no whole-layer i32 tensor is ever allocated. The shift the epilogue
+//! needs up front is frozen offline by [`PreparedModel::calibrate`] (one
+//! staged pass over the seed input recording each layer's data-dependent
+//! shift — the same offline/online split the DBB weights go through), and
+//! [`PreparedModel::execute_staged`] replays the historical staged chain
+//! under those frozen shifts as the bit-exactness oracle
+//! (`rust/tests/epilogue.rs`). On the seed input, `execute_fused`,
+//! `execute_staged`, and plain `execute` all agree bit for bit.
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
 use crate::gemm::fused::{self, PatchScratch};
 use crate::gemm::tiled;
-use crate::gemm::{ActPolicy, DbbPacked, ZeroGate};
+use crate::gemm::epilogue::{max_pool_2x2, requant_shift, requant_with_shift};
+use crate::gemm::{requant_relu, ActPolicy, DbbPacked, Epilogue, PoolGeom, Requant, ZeroGate};
 use crate::models::{LayerKind, Model};
-use crate::sim::accel::{requant_relu, LayerProfile};
+use crate::sim::accel::LayerProfile;
 use crate::sim::analytic::WeightStats;
 use crate::sim::im2col::Im2colUnit;
 use crate::tensor::TensorI8;
@@ -279,6 +299,19 @@ pub struct Execution {
     pub gate_engaged: Vec<bool>,
 }
 
+/// Where a staged execute pass takes each layer's requantize shift from.
+enum ShiftSource<'a> {
+    /// Data-dependent per-input shift — the historical `requant_relu`
+    /// behavior, derived from the layer's own i32 accumulator.
+    Dynamic,
+    /// Data-dependent, and additionally recorded per layer (the
+    /// [`PreparedModel::calibrate`] pass).
+    Record(&'a mut Vec<u32>),
+    /// Frozen calibrated shifts — the staged oracle the fused-epilogue
+    /// executor is checked against, bit for bit.
+    Frozen(&'a [u32]),
+}
+
 /// A model lowered once, executable many times: the software twin of the
 /// paper's offline-encode / runtime-stream split (§II-A).
 #[derive(Debug)]
@@ -294,6 +327,20 @@ pub struct PreparedModel {
     /// Model-level default activation policy [`Self::execute`] applies
     /// (default [`ActPolicy::Auto`]).
     act_policy: ActPolicy,
+    /// Per-layer requantize shifts frozen by [`Self::calibrate`]; empty
+    /// until a calibration pass ran. The fused-epilogue executor needs the
+    /// shift *before* the GEMM (the historical path derived it from the
+    /// materialized i32 tensor, which the fused path never allocates).
+    shifts: Vec<u32>,
+    /// Fold a 2×2/stride-2 max-pool after every conv layer (applied
+    /// uniformly by every execute path, staged and fused, so they stay
+    /// comparable). Default `false` — the historical layer chain.
+    fused_pool: bool,
+    /// Serve-time declaration for the hardware twin: this model executes
+    /// through the fused-epilogue path, so [`Self::profiles`] marks every
+    /// layer's [`LayerProfile::fused_epilogue`] and the twin prices the
+    /// epilogue as array-overlapped work instead of MCU post-processing.
+    fused_epilogue: bool,
     /// Per-worker streaming-IM2COL row buffers, preallocated at prepare and
     /// reused by every [`Self::execute`] (concurrent executes fall back to
     /// a transient arena rather than blocking).
@@ -416,6 +463,9 @@ impl PreparedModel {
             seed_input: seed_input.unwrap_or_else(|| TensorI8::zeros(&[1, 1, 1])),
             measured_act: Vec::new(),
             act_policy: ActPolicy::default(),
+            shifts: Vec::new(),
+            fused_pool: false,
+            fused_epilogue: false,
             scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
         }
     }
@@ -539,6 +589,7 @@ impl PreparedModel {
             par,
             |li, in_s| policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s)),
             scratch,
+            ShiftSource::Dynamic,
         )
     }
 
@@ -561,6 +612,7 @@ impl PreparedModel {
                 }
             },
             scratch,
+            ShiftSource::Dynamic,
         )
     }
 
@@ -577,6 +629,7 @@ impl PreparedModel {
         par: Parallelism,
         resolve: impl Fn(usize, f64) -> ActPolicy,
         scratch: &mut PatchScratch,
+        mut shifts: ShiftSource<'_>,
     ) -> Execution {
         assert!(!input.is_empty(), "execute input must be non-empty");
         let mut act_sparsity = Vec::with_capacity(self.layers.len());
@@ -637,7 +690,27 @@ impl PreparedModel {
             act_sparsity.push(in_s);
             act_policy.push(pol);
             gate_engaged.push(pol != ActPolicy::Off);
-            let out = requant_relu(&acc, l.relu);
+            // `requant_relu(acc, relu)` is exactly
+            // `requant_with_shift(acc, requant_shift(acc.data()), relu)`,
+            // so Dynamic and Record are bit-identical.
+            let mut out = match &mut shifts {
+                ShiftSource::Dynamic => requant_relu(&acc, l.relu),
+                ShiftSource::Record(rec) => {
+                    let sh = requant_shift(acc.data());
+                    rec.push(sh);
+                    requant_with_shift(&acc, sh, l.relu)
+                }
+                ShiftSource::Frozen(sh) => requant_with_shift(&acc, sh[li], l.relu),
+            };
+            if self.fused_pool {
+                if let SampleShape::Conv(ss) = l.sample {
+                    let (oh, ow) = (ss.oh(), ss.ow());
+                    if oh >= 2 && ow >= 2 {
+                        out = max_pool_2x2(&out, oh, ow, ss.oc)
+                            .reshape(&[oh / 2, ow / 2, ss.oc]);
+                    }
+                }
+            }
             // propagate: conv outputs keep spatial form, FC outputs become
             // a 1×m×n map
             fmap = Some(if out.shape().len() == 3 {
@@ -646,6 +719,238 @@ impl PreparedModel {
                 let (om, on) = (out.shape()[0], out.shape()[1]);
                 out.reshape(&[1, om, on])
             });
+        }
+        Execution {
+            output: fmap.unwrap_or_else(|| input.clone()),
+            act_sparsity,
+            act_policy,
+            gate_engaged,
+        }
+    }
+
+    /// Freeze the per-layer requantize shifts by running one staged pass
+    /// over the stored seed input and recording each layer's
+    /// data-dependent shift ([`crate::gemm::epilogue::requant_shift`]).
+    /// The fused-epilogue executor ([`Self::execute_fused`]) requantizes
+    /// rows *while the GEMM walks them*, so it needs the shift up front;
+    /// calibration is the offline step that provides it — the same
+    /// offline/online split the weights already go through. The shifts are
+    /// policy-independent (every activation policy is bit-exact, so the
+    /// i32 accumulators — and their shifts — are identical under all of
+    /// them). Returns the recorded shifts.
+    pub fn calibrate(&mut self, par: Parallelism) -> &[u32] {
+        let mut rec = Vec::with_capacity(self.layers.len());
+        self.with_scratch(|scratch| {
+            self.execute_resolved_with(
+                &self.seed_input,
+                par,
+                |li, in_s| {
+                    self.act_policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s))
+                },
+                scratch,
+                ShiftSource::Record(&mut rec),
+            );
+        });
+        self.shifts = rec;
+        &self.shifts
+    }
+
+    /// The per-layer requantize shifts frozen by [`Self::calibrate`] —
+    /// `Some` once a calibration pass ran.
+    pub fn calibrated_shifts(&self) -> Option<&[u32]> {
+        if self.shifts.len() != self.layers.len() {
+            return None;
+        }
+        Some(&self.shifts)
+    }
+
+    /// Whether every execute path folds a 2×2/stride-2 max-pool after each
+    /// conv layer.
+    pub fn fused_pool(&self) -> bool {
+        self.fused_pool
+    }
+
+    /// Fold a 2×2/stride-2 max-pool after every conv layer (skipped on
+    /// conv outputs narrower than 2×2), **uniformly across every execute
+    /// path** — [`Self::execute`], [`Self::execute_staged`], and
+    /// [`Self::execute_fused`] all apply it, so staged-vs-fused
+    /// bit-exactness is preserved. The fused path folds the pool into the
+    /// GEMM output walk; the staged paths run it as a separate pass over
+    /// the requantized i8 map. Default `false` (the historical chain).
+    pub fn set_fused_pool(&mut self, on: bool) {
+        self.fused_pool = on;
+    }
+
+    /// Whether [`Self::profiles`] declares the fused-epilogue execution
+    /// style to the hardware twin.
+    pub fn fused_epilogue(&self) -> bool {
+        self.fused_epilogue
+    }
+
+    /// Declare (for twin pricing) that this model serves through
+    /// [`Self::execute_fused`]: [`Self::profiles`] then sets
+    /// [`LayerProfile::fused_epilogue`] on every layer, moving the
+    /// requant/ReLU/pool cycles out of the MCU post-processing column and
+    /// into the array-overlapped epilogue counter. Functional results are
+    /// unaffected.
+    pub fn set_fused_epilogue(&mut self, on: bool) {
+        self.fused_epilogue = on;
+    }
+
+    /// The staged oracle for the fused path: the historical
+    /// materialize-i32 → `requant_with_shift` → pool chain, but with the
+    /// *frozen calibrated* shifts instead of per-input dynamic ones — the
+    /// exact computation [`Self::execute_fused`] performs in one streaming
+    /// pass. Panics unless [`Self::calibrate`] ran. On the seed input this
+    /// is additionally bit-identical to [`Self::execute`] (the recorded
+    /// shifts *are* the seed input's dynamic shifts, layer by layer).
+    pub fn execute_staged(&self, input: &TensorI8, par: Parallelism) -> Execution {
+        let shifts = self.calibrated_shifts().expect("calibrate() before execute_staged");
+        self.with_scratch(|scratch| {
+            self.execute_resolved_with(
+                input,
+                par,
+                |li, in_s| {
+                    self.act_policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s))
+                },
+                scratch,
+                ShiftSource::Frozen(shifts),
+            )
+        })
+    }
+
+    /// Run the whole network with the layer epilogue **fused into the GEMM
+    /// output walk**: each layer's workers requantize (+ ReLU, + pool under
+    /// [`Self::set_fused_pool`]) their freshly accumulated rows to i8 while
+    /// cache-hot, layers chain i8→i8 through recycled output backings (the
+    /// scratch arena's ping-pong pool), and **no whole-layer i32 tensor is
+    /// ever allocated**. Bit-exact with [`Self::execute_staged`] on every
+    /// input, under every activation policy and ISA
+    /// (`rust/tests/epilogue.rs`). Panics unless [`Self::calibrate`] ran.
+    pub fn execute_fused(&self, input: &TensorI8, par: Parallelism) -> Execution {
+        self.execute_fused_policy(input, par, self.act_policy)
+    }
+
+    /// [`Self::execute_fused`] under an explicit [`ActPolicy`].
+    pub fn execute_fused_policy(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        policy: ActPolicy,
+    ) -> Execution {
+        self.with_scratch(|scratch| self.execute_fused_policy_with(input, par, policy, scratch))
+    }
+
+    /// [`Self::execute_fused_policy`] on a caller-owned scratch arena.
+    pub fn execute_fused_policy_with(
+        &self,
+        input: &TensorI8,
+        par: Parallelism,
+        policy: ActPolicy,
+        scratch: &mut PatchScratch,
+    ) -> Execution {
+        assert!(!input.is_empty(), "execute input must be non-empty");
+        let shifts = self.calibrated_shifts().expect("calibrate() before execute_fused");
+        let mut act_sparsity = Vec::with_capacity(self.layers.len());
+        let mut act_policy = Vec::with_capacity(self.layers.len());
+        let mut gate_engaged = Vec::with_capacity(self.layers.len());
+        let mut fmap: Option<TensorI8> = None;
+        for (li, l) in self.layers.iter().enumerate() {
+            let out = {
+                let prev = fmap.as_ref().unwrap_or(input);
+                let (out, in_s, pol) = match l.sample {
+                    SampleShape::Conv(ss) => {
+                        let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
+                        let in_s = x.sparsity();
+                        let pol =
+                            policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
+                        let mut ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        if self.fused_pool && ss.oh() >= 2 && ss.ow() >= 2 {
+                            ep = ep.with_pool(PoolGeom { oh: ss.oh(), ow: ss.ow() });
+                        }
+                        let buf = scratch.take_out_buf();
+                        let out = match (&l.operand, pol) {
+                            (PackedOperand::Dbb(p), ActPolicy::Encode) => {
+                                fused::conv2d_dbb_i8_packed_encoded_ep_with(
+                                    &x, p, &ss, par, &ep, scratch, buf,
+                                )
+                            }
+                            (PackedOperand::Dbb(p), _) => fused::conv2d_dbb_i8_packed_ep_with(
+                                &x,
+                                p,
+                                &ss,
+                                par,
+                                pol.gate(),
+                                &ep,
+                                scratch,
+                                buf,
+                            ),
+                            (PackedOperand::Dense(w), ActPolicy::Encode) => {
+                                fused::conv2d_i8_encoded_ep_with(&x, w, &ss, par, &ep, scratch, buf)
+                            }
+                            (PackedOperand::Dense(w), _) => fused::conv2d_i8_ep_with(
+                                &x,
+                                w,
+                                &ss,
+                                par,
+                                pol.gate(),
+                                &ep,
+                                scratch,
+                                buf,
+                            ),
+                        };
+                        (out, in_s, pol)
+                    }
+                    SampleShape::Fc { m, k } => {
+                        let a = fit_matrix_from(prev, m, k);
+                        let in_s = a.sparsity();
+                        let pol =
+                            policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
+                        let ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        let buf = scratch.take_out_buf();
+                        let out = match (&l.operand, pol) {
+                            (PackedOperand::Dbb(p), ActPolicy::Encode) => {
+                                tiled::adbb_i8_packed_ep_into(
+                                    scratch.act_encode(&a, self.bz),
+                                    p,
+                                    par,
+                                    &ep,
+                                    buf,
+                                )
+                            }
+                            (PackedOperand::Dbb(p), _) => {
+                                tiled::dbb_i8_packed_ep_into(&a, p, par, pol.gate(), &ep, buf)
+                            }
+                            (PackedOperand::Dense(w), ActPolicy::Encode) => {
+                                tiled::adbb_dense_i8_ep_into(
+                                    scratch.act_encode(&a, self.bz),
+                                    w,
+                                    par,
+                                    &ep,
+                                    buf,
+                                )
+                            }
+                            (PackedOperand::Dense(w), _) => {
+                                tiled::dense_i8_ep_into(&a, w, par, pol.gate(), &ep, buf)
+                            }
+                        };
+                        let (om, on) = (out.shape()[0], out.shape()[1]);
+                        (out.reshape(&[1, om, on]), in_s, pol)
+                    }
+                };
+                act_sparsity.push(in_s);
+                act_policy.push(pol);
+                gate_engaged.push(pol != ActPolicy::Off);
+                out
+            };
+            // ping-pong: the layer that just ran has consumed the previous
+            // feature map — recycle its backing for a later layer's output
+            if li > 0 {
+                if let Some(prev) = fmap.take() {
+                    scratch.put_out_buf(prev.into_vec());
+                }
+            }
+            fmap = Some(out);
         }
         Execution {
             output: fmap.unwrap_or_else(|| input.clone()),
@@ -695,6 +1000,7 @@ impl PreparedModel {
                     raw_act_bytes: l.raw_act_bytes,
                     out_elems: l.out_elems,
                     relu: l.relu,
+                    fused_epilogue: self.fused_epilogue,
                 })
                 .collect(),
         )
@@ -761,6 +1067,45 @@ mod tests {
         let b = pm.execute(pm.seed_input(), Parallelism::threads(3));
         assert_eq!(a.output, b.output);
         assert_eq!(a.act_sparsity, b.act_sparsity);
+    }
+
+    #[test]
+    fn fused_epilogue_chain_matches_staged_and_execute() {
+        let m = models::convnet5();
+        let mut pm = PreparedModel::prepare(&m, 3, 8, 42, Parallelism::threads(3));
+        pm.profile(Parallelism::threads(3));
+        assert!(pm.calibrated_shifts().is_none(), "no calibration ran yet");
+        pm.calibrate(Parallelism::threads(3));
+        assert_eq!(pm.calibrated_shifts().unwrap().len(), m.layers.len());
+        let par = Parallelism::threads(3);
+        let seed = pm.seed_input().clone();
+        let plain = pm.execute(&seed, par);
+        let staged = pm.execute_staged(&seed, par);
+        let fused = pm.execute_fused(&seed, par);
+        // on the seed input the frozen shifts ARE the dynamic shifts
+        assert_eq!(staged.output, plain.output);
+        assert_eq!(fused.output, staged.output, "fused epilogue must be bit-exact");
+        assert_eq!(fused.act_policy, staged.act_policy);
+        assert_eq!(fused.act_sparsity, staged.act_sparsity);
+        // repeated fused executes reuse the ping-pong pool and stay pure
+        let fused2 = pm.execute_fused(&seed, par);
+        assert_eq!(fused.output, fused2.output);
+        // pool folds uniformly across the staged and fused paths
+        pm.set_fused_pool(true);
+        let pstaged = pm.execute_staged(&seed, par);
+        let pfused = pm.execute_fused(&seed, par);
+        assert_eq!(pfused.output, pstaged.output, "pooled fused epilogue must be bit-exact");
+    }
+
+    #[test]
+    fn profiles_carry_the_fused_epilogue_declaration() {
+        let m = models::lenet5();
+        let mut pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::serial());
+        pm.profile(Parallelism::serial());
+        assert!(pm.profiles().unwrap().iter().all(|p| !p.fused_epilogue));
+        pm.set_fused_epilogue(true);
+        assert!(pm.fused_epilogue());
+        assert!(pm.profiles().unwrap().iter().all(|p| p.fused_epilogue));
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! Pluggable GEMM output epilogues: requantize + ReLU + 2×2 max-pool
+//! applied inside the output row walk — SNIPPETS Snippet 1 (INT32→INT8
+//! requantization with per-channel scaling right at the accumulator) and
+//! Snippet 2 (MAC→ReLU→Max-pool fused on chip so intermediates never touch
+//! SRAM) in software.
+//!
+//! Every i8 GEMM driver in the crate drains its freshly computed INT32
+//! accumulator rows through an [`Epilogue`] while they are still cache-hot:
+//! the tiled drivers ([`crate::gemm::tiled::dense_i8_ep`] and friends) and
+//! the fused-conv workers ([`crate::gemm::fused::conv2d_i8_ep`] family)
+//! requantize each `PATCH_ROWS`-sized chunk to INT8 — and optionally
+//! max-fold it into a 2×2/stride-2 pooled output — immediately after the
+//! inner kernel produces it, so a conv+ReLU+pool block is one streaming
+//! pass and **no whole-layer i32 tensor is ever allocated**.
+//!
+//! ## Exactness contract
+//!
+//! The requantize rounding is pinned, bit-identical to the historical
+//! [`requant_relu`] (which lived in `sim::accel` and survives here as the
+//! staged oracle): arithmetic right shift by a power-of-two scale, clamp to
+//! `[-127, 127]` (never −128 — the symmetric range the paper's STE-trained
+//! quantizer produces), then ReLU. ReLU folds into the clamp lower bound
+//! (`max(0, clamp(x, -127, 127)) == clamp(x, 0, 127)`), which is what the
+//! SIMD epilogue kernels in [`crate::gemm::micro`] exploit; the scalar
+//! row kernels in [`crate::gemm`] remain the bit-exactness oracle.
+//!
+//! ## Why the pool can stream
+//!
+//! `x ↦ clamp(x >> s, lo, 127)` is monotonic non-decreasing, so requantize
+//! and max-pool **commute**: `max(requant(x)) == requant(max(x))` bit-for-
+//! bit. The epilogue therefore requantizes each output row the moment it
+//! exists and max-folds the INT8 values into the pooled cell (`i8::MIN`
+//! initialized), which needs no 2-row window buffering — each pooled cell
+//! simply receives its 4 (or fewer, at dropped odd edges) contributions as
+//! the row walk passes them. The only structural requirement is that a
+//! pooled row pair never straddles two workers' tiles, which
+//! [`Epilogue::row_quantum`] encodes for the drivers' tile partition.
+//!
+//! The staged references — [`requant_relu`], [`requant_with_shift`],
+//! [`max_pool_2x2`] — are kept as the property-test oracles
+//! (`rust/tests/epilogue.rs` pins fused == staged across ISAs × activation
+//! policies × operand encodings).
+
+use crate::tensor::{TensorI32, TensorI8};
+
+/// The requantization scale of an [`Epilogue`]: a power-of-two right shift,
+/// either one global shift for the whole output (the historical
+/// [`requant_relu`] behavior) or one shift per output channel (GEMM
+/// column) — Snippet 1's per-channel scaling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Requant {
+    /// One arithmetic right shift applied to every output element.
+    Global(u32),
+    /// One shift per output column (`shifts.len() == n`).
+    PerChannel(Vec<u32>),
+}
+
+/// Geometry of the 2×2/stride-2 max-pool an [`Epilogue`] optionally folds
+/// into the output row walk: the *pre-pool* output grid (`oh × ow` pixels
+/// per image). Odd trailing rows/columns are dropped (floor semantics).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    /// Pre-pool output rows per image.
+    pub oh: usize,
+    /// Pre-pool output columns per image.
+    pub ow: usize,
+}
+
+impl PoolGeom {
+    /// Pooled output rows per image (`oh / 2`, floor).
+    pub fn ph(&self) -> usize {
+        self.oh / 2
+    }
+
+    /// Pooled output columns per image (`ow / 2`, floor).
+    pub fn pw(&self) -> usize {
+        self.ow / 2
+    }
+}
+
+/// A pluggable output epilogue: requantize (global or per-channel shift),
+/// optional ReLU, optional 2×2/stride-2 max-pool folded into the row walk.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Epilogue {
+    requant: Requant,
+    relu: bool,
+    pool: Option<PoolGeom>,
+}
+
+impl Epilogue {
+    /// Requantize-only epilogue (plus ReLU when `relu`).
+    pub fn new(requant: Requant, relu: bool) -> Self {
+        Epilogue {
+            requant,
+            relu,
+            pool: None,
+        }
+    }
+
+    /// Fold a 2×2/stride-2 max-pool over `pool`'s output grid into the
+    /// epilogue. The GEMM's `M` must then be a whole number of
+    /// `oh·ow`-pixel images.
+    pub fn with_pool(mut self, pool: PoolGeom) -> Self {
+        self.pool = Some(pool);
+        self
+    }
+
+    /// The requantization scale.
+    pub fn requant(&self) -> &Requant {
+        &self.requant
+    }
+
+    /// Whether ReLU is applied after requantization.
+    pub fn relu(&self) -> bool {
+        self.relu
+    }
+
+    /// The folded pool geometry, if any.
+    pub fn pool(&self) -> Option<PoolGeom> {
+        self.pool
+    }
+
+    /// Tile-partition alignment quantum: worker tiles must cover whole
+    /// multiples of this many *input* (pre-pool) rows so a pooled row pair
+    /// never straddles two workers. `1` without a pool; `2·ow` (one pooled
+    /// output row's worth of input pixels) with a pool; a whole image
+    /// (`oh·ow`) when `oh` is odd, so the dropped last row cannot
+    /// misalign the image that follows it.
+    pub fn row_quantum(&self) -> usize {
+        match self.pool {
+            None => 1,
+            Some(pg) => {
+                if pg.oh % 2 == 0 {
+                    2 * pg.ow
+                } else {
+                    (pg.oh * pg.ow).max(1)
+                }
+            }
+        }
+    }
+
+    /// Output rows produced for `rows` input rows. `rows` must be a
+    /// multiple of [`Self::row_quantum`]; under that alignment the mapping
+    /// is additive (`out_rows(a + b) == out_rows(a) + out_rows(b)`), which
+    /// is what lets the drivers hand each worker a disjoint output tile.
+    pub fn out_rows(&self, rows: usize) -> usize {
+        match self.pool {
+            None => rows,
+            Some(pg) => {
+                debug_assert_eq!(rows % self.row_quantum(), 0, "unaligned tile rows");
+                let img = pg.oh * pg.ow;
+                let full = rows / img.max(1);
+                let rem = rows % img.max(1);
+                full * pg.ph() * pg.pw() + (rem / (2 * pg.ow.max(1))) * pg.pw()
+            }
+        }
+    }
+
+    /// Assert `m` is compatible with this epilogue (pooled epilogues need a
+    /// whole number of images).
+    pub fn check_rows(&self, m: usize) {
+        if let Some(pg) = self.pool {
+            assert_eq!(
+                m % (pg.oh * pg.ow).max(1),
+                0,
+                "pooled epilogue needs M to be whole {}x{} images, got M={m}",
+                pg.oh,
+                pg.ow
+            );
+        }
+    }
+
+    /// Requantize `acc` (whole rows of width `n`) into `out` through this
+    /// epilogue's scale + ReLU, dispatching to the SIMD epilogue kernels.
+    fn requant_rows_into(&self, acc: &[i32], n: usize, out: &mut [i8]) {
+        requant_rows(acc, n, &self.requant, self.relu, out);
+    }
+
+    /// Drain one freshly computed accumulator chunk into the worker's
+    /// output tile: `acc` holds `acc.len()/n` whole output rows starting at
+    /// absolute (global) row `grow0`; `tile` is the worker's i8 output tile
+    /// whose first row corresponds to absolute input row `tile_grow0`
+    /// (a [`Self::row_quantum`] multiple). `q8` is per-worker i8 staging of
+    /// at least `acc.len()` bytes, used only when pooling. Pooled tiles
+    /// must be pre-filled with `i8::MIN` before the first chunk.
+    pub(crate) fn apply_chunk(
+        &self,
+        acc: &[i32],
+        grow0: usize,
+        n: usize,
+        q8: &mut [i8],
+        tile: &mut [i8],
+        tile_grow0: usize,
+    ) {
+        let rows = acc.len() / n.max(1);
+        match self.pool {
+            None => {
+                let dst = (grow0 - tile_grow0) * n;
+                self.requant_rows_into(acc, n, &mut tile[dst..dst + rows * n]);
+            }
+            Some(pg) => {
+                let (ph, pw) = (pg.ph(), pg.pw());
+                let (oh, ow) = (pg.oh, pg.ow);
+                self.requant_rows_into(acc, n, &mut q8[..rows * n]);
+                let tile_prow0 = self.out_rows(tile_grow0);
+                for r in 0..rows {
+                    let gr = grow0 + r;
+                    let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+                    let (oy, ox) = (pix / ow, pix % ow);
+                    if oy >= 2 * ph || ox >= 2 * pw {
+                        continue; // dropped odd edge
+                    }
+                    let prow = bi * ph * pw + (oy / 2) * pw + ox / 2;
+                    let dst = (prow - tile_prow0) * n;
+                    for (d, &s8) in tile[dst..dst + n].iter_mut().zip(&q8[r * n..(r + 1) * n]) {
+                        if s8 > *d {
+                            *d = s8;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Requantize whole rows of width `n` from `acc` into `out` (same length)
+/// under the given scale + ReLU, through the ISA-dispatched epilogue
+/// kernels of [`crate::gemm::micro`]. Public so the property suite can
+/// exercise the SIMD requant kernels directly.
+pub fn requant_rows(acc: &[i32], n: usize, rq: &Requant, relu: bool, out: &mut [i8]) {
+    assert_eq!(acc.len(), out.len(), "requant in/out length");
+    match rq {
+        Requant::Global(shift) => crate::gemm::micro::requant_i8(acc, out, *shift, relu),
+        Requant::PerChannel(shifts) => {
+            assert_eq!(shifts.len(), n, "per-channel shifts are one per output column");
+            assert_eq!(acc.len() % n.max(1), 0, "requant takes whole rows");
+            crate::gemm::micro::requant_i8_perch(acc, out, shifts, relu)
+        }
+    }
+}
+
+/// The data-dependent global shift the historical [`requant_relu`]
+/// derives: the smallest power-of-two right shift that brings the largest
+/// accumulator magnitude into `[0, 127]`.
+pub fn requant_shift(acc: &[i32]) -> u32 {
+    let max_abs = acc.iter().map(|v| v.unsigned_abs()).max().unwrap_or(1).max(1);
+    let mut shift = 0u32;
+    while (max_abs >> shift) > 127 {
+        shift += 1;
+    }
+    shift
+}
+
+/// INT32 accumulators → INT8 under a *given* global shift, then ReLU —
+/// the frozen-scale form of [`requant_relu`] (the engine's calibrated
+/// fused path and its staged oracle both use this, with the shift recorded
+/// once at calibration).
+pub fn requant_with_shift(acc: &TensorI32, shift: u32, relu: bool) -> TensorI8 {
+    acc.map(|v| {
+        let q = (v >> shift).clamp(-127, 127) as i8;
+        if relu && q < 0 {
+            0
+        } else {
+            q
+        }
+    })
+}
+
+/// INT32 accumulators → INT8 with a per-tensor power-of-two scale, then
+/// ReLU. The zero point is exactly 0 (paper §V-A trains with STE so FP 0 →
+/// INT 0), which is what makes post-ReLU zeros exact zeros the hardware can
+/// gate on. Relocated from `sim::accel` (a re-export remains there): this
+/// is the engine's functional op and the epilogue's staged oracle, so it
+/// lives next to the kernels that pin it.
+pub fn requant_relu(acc: &TensorI32, relu: bool) -> TensorI8 {
+    requant_with_shift(acc, requant_shift(acc.data()), relu)
+}
+
+/// Staged 2×2/stride-2 max-pool oracle: `x` is `[b·oh·ow, n]` row-major
+/// (any actual tensor shape with that element layout), pooled to
+/// `[b·(oh/2)·(ow/2), n]`; odd trailing rows/columns are dropped. The fused
+/// epilogue's pool fold is property-tested bit-exact against
+/// `requant → this`.
+pub fn max_pool_2x2(x: &TensorI8, oh: usize, ow: usize, n: usize) -> TensorI8 {
+    let img = (oh * ow).max(1);
+    let m = if n == 0 { 0 } else { x.len() / n };
+    assert_eq!(m % img, 0, "pool input must be whole {oh}x{ow} images");
+    let b = m / img;
+    let (ph, pw) = (oh / 2, ow / 2);
+    let mut out = vec![i8::MIN; b * ph * pw * n];
+    let xd = x.data();
+    for bi in 0..b {
+        for oy in 0..2 * ph {
+            for ox in 0..2 * pw {
+                let src = (bi * oh * ow + oy * ow + ox) * n;
+                let dst = (bi * ph * pw + (oy / 2) * pw + ox / 2) * n;
+                for ci in 0..n {
+                    let v = xd[src + ci];
+                    if v > out[dst + ci] {
+                        out[dst + ci] = v;
+                    }
+                }
+            }
+        }
+    }
+    TensorI8::from_vec(&[b * ph * pw, n], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn requant_relu_matches_historical_contract() {
+        // shift derivation + rounding pinned: clamp at ±127, arithmetic
+        // shift, ReLU zeroes negatives
+        let acc = TensorI32::from_vec(&[4], vec![0, 100_000, -100_000, 127]);
+        let out = requant_relu(&acc, false);
+        assert_eq!(out.data()[0], 0);
+        assert!(out.data()[1] > 0);
+        assert!(out.data()[2] < 0);
+        let relu = requant_relu(&acc, true);
+        assert_eq!(relu.data()[2], 0);
+        // frozen-shift decomposition is the identical function
+        let s = requant_shift(acc.data());
+        assert_eq!(requant_with_shift(&acc, s, true).data(), relu.data());
+        // small accumulators need no shift and clamp symmetric
+        let small = TensorI32::from_vec(&[3], vec![127, -127, -128]);
+        assert_eq!(requant_shift(small.data()), 1);
+        assert_eq!(requant_with_shift(&small, 0, false).data(), &[127, -127, -127]);
+    }
+
+    #[test]
+    fn relu_folds_into_clamp_lower_bound() {
+        // the SIMD kernels' identity: max(0, clamp(x, -127, 127)) ==
+        // clamp(x, 0, 127) for every i32 after any shift
+        let mut rng = Rng::new(11);
+        for _ in 0..2000 {
+            let v = rng.next_u64() as i32;
+            for s in [0u32, 1, 7, 24] {
+                let q = (v >> s).clamp(-127, 127);
+                let a = if q < 0 { 0 } else { q };
+                let b = (v >> s).clamp(0, 127);
+                assert_eq!(a, b, "v={v} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_commutes_with_max() {
+        // monotonicity: requant(max(xs)) == max(requant(xs)) — the property
+        // that lets the pool fold stream on i8 values
+        let mut rng = Rng::new(12);
+        for _ in 0..500 {
+            let xs: Vec<i32> = (0..4).map(|_| rng.next_u64() as i32).collect();
+            for s in [0u32, 3, 17] {
+                for relu in [false, true] {
+                    let q = |v: i32| {
+                        let lo = if relu { 0 } else { -127 };
+                        (v >> s).clamp(lo, 127) as i8
+                    };
+                    let qmax = q(*xs.iter().max().unwrap());
+                    let maxq = xs.iter().map(|&v| q(v)).max().unwrap();
+                    assert_eq!(qmax, maxq, "xs={xs:?} s={s} relu={relu}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_rows_is_additive_over_quanta() {
+        for (oh, ow) in [(4usize, 3usize), (3, 3), (6, 5), (2, 2), (5, 1), (1, 4)] {
+            let ep = Epilogue::new(Requant::Global(0), false).with_pool(PoolGeom { oh, ow });
+            let q = ep.row_quantum();
+            assert_eq!((oh * ow) % q, 0, "quantum must divide an image");
+            let total = 3 * oh * ow; // 3 images
+            let mut sum = 0;
+            let mut at = 0;
+            while at < total {
+                let take = q.min(total - at);
+                sum += ep.out_rows(take);
+                at += take;
+            }
+            assert_eq!(sum, ep.out_rows(total), "oh={oh} ow={ow}");
+            assert_eq!(ep.out_rows(total), 3 * (oh / 2) * (ow / 2), "oh={oh} ow={ow}");
+        }
+        // no pool: identity
+        let ep = Epilogue::new(Requant::Global(2), true);
+        assert_eq!(ep.out_rows(17), 17);
+        assert_eq!(ep.row_quantum(), 1);
+    }
+
+    #[test]
+    fn pool_oracle_drops_odd_edges() {
+        // 3x3 grid, n=1, values = row*3+col: pooled single cell is
+        // max of the 2x2 top-left block = 4; row 2 / col 2 dropped
+        let x = TensorI8::from_vec(&[9, 1], (0..9).map(|v| v as i8).collect());
+        let p = max_pool_2x2(&x, 3, 3, 1);
+        assert_eq!(p.shape(), &[1, 1]);
+        assert_eq!(p.data(), &[4]);
+    }
+}

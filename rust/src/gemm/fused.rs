@@ -50,12 +50,26 @@
 //! [`Parallelism::with_pin`]`(true)`, each conv worker pins itself to core
 //! `ti % cores` before touching its tile, keeping its [`PatchScratch`]
 //! arena hot in the same core's cache across steady-state `*_with` calls.
+//! Worker scratch (patch rows, epilogue arenas) is *sized inside* the
+//! pinned workers, so on a first-touch NUMA policy the pages land on each
+//! worker's own node.
+//!
+//! The `*_ep` entry points fuse the layer **epilogue**
+//! ([`crate::gemm::Epilogue`]: requantize + optional ReLU + optional
+//! 2×2/stride-2 max-pool) into the same output walk: each worker converts
+//! its freshly accumulated `PATCH_ROWS × N` i32 chunk to i8 — and
+//! max-folds it into the pooled output tile — while the chunk is still
+//! cache-hot, so conv + ReLU + pool becomes one streaming pass and no
+//! whole-layer i32 tensor is ever allocated. Bit-exact with the staged
+//! `conv → requant_relu → max_pool_2x2` pipeline (`rust/tests/epilogue.rs`);
+//! when pooling, worker tiles are partitioned on the epilogue's row quantum
+//! so each pool window is owned by exactly one worker.
 
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
-use crate::gemm::{DbbPacked, ZeroGate};
+use crate::gemm::{DbbPacked, Epilogue, ZeroGate};
 use crate::tensor::{Tensor, TensorF32, TensorI32, TensorI8};
 
 /// Patch rows generated per inner-kernel call — the software row buffer.
@@ -78,6 +92,15 @@ pub struct PatchScratch {
     /// Cleared and fully rewritten before every read, like `bufs`.
     enc_ptr: Vec<Vec<usize>>,
     enc_ent: Vec<Vec<(u32, i32)>>,
+    /// Per-worker fused-epilogue arenas: the `PATCH_ROWS × N` i32
+    /// accumulator chunk and its i8 requantize staging. Sized inside the
+    /// pinned workers, like `bufs`.
+    acc: Vec<Vec<i32>>,
+    q8: Vec<Vec<i8>>,
+    /// Recycled whole-layer INT8 output backings for the engine's
+    /// fused-epilogue layer chain (the ping-pong: a layer's output buffer
+    /// is reclaimed once the next layer has consumed it).
+    out_bufs: Vec<Vec<i8>>,
     /// Reusable whole-operand A-DBB stream for FC-layer `Encode` passes —
     /// the non-chunked counterpart of `enc_ptr`/`enc_ent` (the engine
     /// encodes one FC operand at a time, between conv layers, so a single
@@ -91,23 +114,26 @@ impl PatchScratch {
         PatchScratch::default()
     }
 
-    /// Scratch with `workers` buffers of `PATCH_ROWS · k` bytes ready.
+    /// Scratch with `workers` buffer slots ready. The buffers themselves
+    /// grow lazily **inside the pinned workers** (see [`Self::reserve`]),
+    /// so this only sets up the outer slots; `k` documents the expected
+    /// chunk width and keeps the signature stable.
     pub fn preallocate(workers: usize, k: usize) -> Self {
         let mut s = PatchScratch::new();
         s.reserve(workers, k);
         s
     }
 
-    /// Ensure at least `workers` buffers of `PATCH_ROWS · k` bytes each.
-    pub fn reserve(&mut self, workers: usize, k: usize) {
+    /// Ensure at least `workers` per-worker buffer *slots*. The inner
+    /// buffers are deliberately **not** sized here: each worker grows its
+    /// own buffer to `PATCH_ROWS · k` on first use, *after*
+    /// `Parallelism::pin_worker`, so the pages are first-touched — and on a
+    /// first-touch NUMA policy, physically placed — on the worker's own
+    /// node instead of the prepare thread's (the capacity is retained
+    /// across calls, so the steady state still allocates nothing).
+    pub fn reserve(&mut self, workers: usize, _k: usize) {
         if self.bufs.len() < workers {
             self.bufs.resize_with(workers, Vec::new);
-        }
-        let need = PATCH_ROWS * k;
-        for b in &mut self.bufs[..workers] {
-            if b.len() < need {
-                b.resize(need, 0);
-            }
         }
     }
 
@@ -137,6 +163,79 @@ impl PatchScratch {
             &mut self.enc_ptr[..workers],
             &mut self.enc_ent[..workers],
         )
+    }
+
+    /// [`Self::take`] plus the per-worker fused-epilogue arenas (i32
+    /// accumulator chunk + i8 requantize staging), slots only — each worker
+    /// sizes its own arena after pinning (first-touch).
+    fn take_ep(
+        &mut self,
+        workers: usize,
+        k: usize,
+    ) -> (&mut [Vec<i8>], &mut [Vec<i32>], &mut [Vec<i8>]) {
+        self.reserve(workers, k);
+        if self.acc.len() < workers {
+            self.acc.resize_with(workers, Vec::new);
+        }
+        if self.q8.len() < workers {
+            self.q8.resize_with(workers, Vec::new);
+        }
+        (
+            &mut self.bufs[..workers],
+            &mut self.acc[..workers],
+            &mut self.q8[..workers],
+        )
+    }
+
+    /// [`Self::take_encoded`] plus the fused-epilogue arenas — the
+    /// joint-sparse fused-epilogue conv path needs all five per-worker
+    /// buffer families.
+    #[allow(clippy::type_complexity)]
+    fn take_encoded_ep(
+        &mut self,
+        workers: usize,
+        k: usize,
+    ) -> (
+        &mut [Vec<i8>],
+        &mut [Vec<usize>],
+        &mut [Vec<(u32, i32)>],
+        &mut [Vec<i32>],
+        &mut [Vec<i8>],
+    ) {
+        self.reserve(workers, k);
+        if self.enc_ptr.len() < workers {
+            self.enc_ptr.resize_with(workers, Vec::new);
+        }
+        if self.enc_ent.len() < workers {
+            self.enc_ent.resize_with(workers, Vec::new);
+        }
+        if self.acc.len() < workers {
+            self.acc.resize_with(workers, Vec::new);
+        }
+        if self.q8.len() < workers {
+            self.q8.resize_with(workers, Vec::new);
+        }
+        (
+            &mut self.bufs[..workers],
+            &mut self.enc_ptr[..workers],
+            &mut self.enc_ent[..workers],
+            &mut self.acc[..workers],
+            &mut self.q8[..workers],
+        )
+    }
+
+    /// Pop a recycled whole-layer output backing (empty `Vec` when none) —
+    /// the take side of the engine's fused-epilogue ping-pong.
+    pub fn take_out_buf(&mut self) -> Vec<i8> {
+        self.out_bufs.pop().unwrap_or_default()
+    }
+
+    /// Return a consumed layer output's backing for reuse (bounded pool, so
+    /// an over-returning caller cannot hoard memory).
+    pub fn put_out_buf(&mut self, buf: Vec<i8>) {
+        if self.out_bufs.len() < 4 {
+            self.out_bufs.push(buf);
+        }
     }
 
     /// DBB-encode a whole `[M, K]` activation operand into the
@@ -245,10 +344,14 @@ fn conv_rows<K: Fn(&[i8], &mut [i32])>(
     row0: usize,
     k: usize,
     n: usize,
-    patch: &mut [i8],
+    patch: &mut Vec<i8>,
     kernel: &K,
 ) {
-    debug_assert!(patch.len() >= PATCH_ROWS * k);
+    // Sized here, on the worker, so the pages are first-touched on the
+    // worker's own NUMA node (no-op once warm).
+    if patch.len() < PATCH_ROWS * k {
+        patch.resize(PATCH_ROWS * k, 0);
+    }
     let (oh, ow) = (s.oh(), s.ow());
     let img = s.h * s.w * s.c;
     let rows = out.len() / n;
@@ -325,12 +428,15 @@ fn conv_rows_encoded<K: Fn(&[usize], &[(u32, i32)], &mut [i32])>(
     row0: usize,
     k: usize,
     n: usize,
-    patch: &mut [i8],
+    patch: &mut Vec<i8>,
     arp: &mut Vec<usize>,
     aen: &mut Vec<(u32, i32)>,
     kernel: &K,
 ) {
-    debug_assert!(patch.len() >= PATCH_ROWS * k);
+    // Worker-side sizing for first-touch placement (see `conv_rows`).
+    if patch.len() < PATCH_ROWS * k {
+        patch.resize(PATCH_ROWS * k, 0);
+    }
     let (oh, ow) = (s.oh(), s.ow());
     let img = s.h * s.w * s.c;
     let rows = out.len() / n;
@@ -419,6 +525,309 @@ fn conv_output(batched: bool, batch: usize, s: &ConvShape) -> TensorI32 {
     } else {
         TensorI32::zeros(&[s.oh(), s.ow(), s.oc])
     }
+}
+
+/// INT8 output tensor for a fused-epilogue conv, recycling `buf` as the
+/// backing store when it already has the right length (the engine's
+/// ping-pong). Pooling halves the spatial grid (floor: odd edge rows/cols
+/// are dropped, matching [`crate::gemm::epilogue::max_pool_2x2`]).
+fn conv_output_ep(
+    batched: bool,
+    batch: usize,
+    s: &ConvShape,
+    ep: &Epilogue,
+    mut buf: Vec<i8>,
+) -> TensorI8 {
+    let (oh, ow) = if ep.pool().is_some() {
+        (s.oh() / 2, s.ow() / 2)
+    } else {
+        (s.oh(), s.ow())
+    };
+    let len = batch * oh * ow * s.oc;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0);
+    }
+    if batched {
+        TensorI8::from_vec(&[batch, oh, ow, s.oc], buf)
+    } else {
+        TensorI8::from_vec(&[oh, ow, s.oc], buf)
+    }
+}
+
+/// A pooled epilogue handed to a conv entry must describe that conv's own
+/// output grid — the pool fold reads its `(oh, ow)` to map accumulator rows
+/// to pool windows.
+fn check_pool(ep: &Epilogue, s: &ConvShape) {
+    if let Some(pg) = ep.pool() {
+        assert_eq!(
+            (pg.oh, pg.ow),
+            (s.oh(), s.ow()),
+            "epilogue pool geometry must match the conv output grid"
+        );
+    }
+}
+
+/// Fused-epilogue counterpart of [`conv_rows`]: generate IM2COL rows in
+/// `PATCH_ROWS` chunks, accumulate each chunk into the worker's i32 arena,
+/// then immediately requantize (+ ReLU) it to i8 — max-folding into the
+/// pooled tile when the epilogue pools — while the chunk is cache-hot.
+/// `tile` is the worker's i8 *output* tile covering epilogue output rows
+/// `ep.out_rows(row0)..`; `rows` is the count of virtual GEMM rows this
+/// worker owns (a multiple of the epilogue row quantum except possibly the
+/// last tile, which `Epilogue::out_rows` additivity still covers).
+///
+/// NOTE: keep the chunk loop and `gr → (batch, pixel)` mapping in lockstep
+/// with [`conv_rows`] (see the note there).
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_ep<K: Fn(&[i8], &mut [i32])>(
+    xd: &[i8],
+    s: &ConvShape,
+    tile: &mut [i8],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    ep: &Epilogue,
+    patch: &mut Vec<i8>,
+    acc: &mut Vec<i32>,
+    q8: &mut Vec<i8>,
+    kernel: &K,
+) {
+    // Worker-side sizing for first-touch placement (see `conv_rows`).
+    if patch.len() < PATCH_ROWS * k {
+        patch.resize(PATCH_ROWS * k, 0);
+    }
+    if acc.len() < PATCH_ROWS * n {
+        acc.resize(PATCH_ROWS * n, 0);
+    }
+    if q8.len() < PATCH_ROWS * n {
+        q8.resize(PATCH_ROWS * n, 0);
+    }
+    if ep.pool().is_some() {
+        tile.fill(i8::MIN);
+    }
+    let (oh, ow) = (s.oh(), s.ow());
+    let img = s.h * s.w * s.c;
+    let tile_row0 = row0;
+    let mut done = 0usize;
+    while done < rows {
+        let take = PATCH_ROWS.min(rows - done);
+        for r in 0..take {
+            let gr = row0 + done + r;
+            let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+            patch_row_into(
+                &xd[bi * img..(bi + 1) * img],
+                s,
+                pix / ow,
+                pix % ow,
+                &mut patch[r * k..(r + 1) * k],
+            );
+        }
+        let acc_c = &mut acc[..take * n];
+        acc_c.fill(0);
+        kernel(&patch[..take * k], acc_c);
+        ep.apply_chunk(acc_c, row0 + done, n, q8, tile, tile_row0);
+        done += take;
+    }
+}
+
+/// Row-tile the fused-epilogue conv across the worker pool: same partition
+/// idea as [`conv_tiled`], but tiles are aligned to the epilogue's row
+/// quantum so every pool window is owned by exactly one worker, and each
+/// worker writes a disjoint i8 output tile. `out` is the whole
+/// `[ep.out_rows(m) × n]` i8 output slice.
+#[allow(clippy::too_many_arguments)]
+fn conv_tiled_ep<K: Fn(&[i8], &mut [i32]) + Sync>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    par: Parallelism,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    kernel: K,
+) {
+    let threads = par.get().min(m);
+    let (patches, accs, q8s) = scratch.take_ep(threads.max(1), k);
+    if threads <= 1 {
+        conv_rows_ep(
+            xd,
+            s,
+            out,
+            0,
+            m,
+            k,
+            n,
+            ep,
+            &mut patches[0],
+            &mut accs[0],
+            &mut q8s[0],
+            &kernel,
+        );
+        return;
+    }
+    let q = ep.row_quantum();
+    let rows_per_tile = m.div_ceil(threads).div_ceil(q) * q;
+    let out_per_tile = ep.out_rows(rows_per_tile);
+    if out_per_tile == 0 {
+        return;
+    }
+    let kref = &kernel;
+    std::thread::scope(|sc| {
+        for ((((ti, tile), buf), acc), q8) in out
+            .chunks_mut(out_per_tile * n)
+            .enumerate()
+            .zip(patches.iter_mut())
+            .zip(accs.iter_mut())
+            .zip(q8s.iter_mut())
+        {
+            let row0 = ti * rows_per_tile;
+            let rows = rows_per_tile.min(m - row0);
+            sc.spawn(move || {
+                par.pin_worker(ti);
+                conv_rows_ep(xd, s, tile, row0, rows, k, n, ep, buf, acc, q8, kref)
+            });
+        }
+    });
+}
+
+/// Fused-epilogue counterpart of [`conv_rows_encoded`]: generate + DBB-encode
+/// each `PATCH_ROWS` chunk, accumulate through the joint A-DBB kernel into
+/// the worker's i32 arena, then requantize/pool it to i8 in place.
+///
+/// NOTE: keep the chunk loop, encode step, and `gr → (batch, pixel)` mapping
+/// in lockstep with [`conv_rows_encoded`].
+#[allow(clippy::too_many_arguments)]
+fn conv_rows_encoded_ep<K: Fn(&[usize], &[(u32, i32)], &mut [i32])>(
+    xd: &[i8],
+    s: &ConvShape,
+    tile: &mut [i8],
+    row0: usize,
+    rows: usize,
+    k: usize,
+    n: usize,
+    ep: &Epilogue,
+    patch: &mut Vec<i8>,
+    arp: &mut Vec<usize>,
+    aen: &mut Vec<(u32, i32)>,
+    acc: &mut Vec<i32>,
+    q8: &mut Vec<i8>,
+    kernel: &K,
+) {
+    // Worker-side sizing for first-touch placement (see `conv_rows`).
+    if patch.len() < PATCH_ROWS * k {
+        patch.resize(PATCH_ROWS * k, 0);
+    }
+    if acc.len() < PATCH_ROWS * n {
+        acc.resize(PATCH_ROWS * n, 0);
+    }
+    if q8.len() < PATCH_ROWS * n {
+        q8.resize(PATCH_ROWS * n, 0);
+    }
+    if ep.pool().is_some() {
+        tile.fill(i8::MIN);
+    }
+    let (oh, ow) = (s.oh(), s.ow());
+    let img = s.h * s.w * s.c;
+    let tile_row0 = row0;
+    let mut done = 0usize;
+    while done < rows {
+        let take = PATCH_ROWS.min(rows - done);
+        arp.clear();
+        aen.clear();
+        arp.push(0);
+        for r in 0..take {
+            let gr = row0 + done + r;
+            let (bi, pix) = (gr / (oh * ow), gr % (oh * ow));
+            patch_row_into(
+                &xd[bi * img..(bi + 1) * img],
+                s,
+                pix / ow,
+                pix % ow,
+                &mut patch[r * k..(r + 1) * k],
+            );
+            for (kk, &v) in patch[r * k..(r + 1) * k].iter().enumerate() {
+                if v != 0 {
+                    aen.push((kk as u32, v as i32));
+                }
+            }
+            arp.push(aen.len());
+        }
+        let acc_c = &mut acc[..take * n];
+        acc_c.fill(0);
+        kernel(arp, aen, acc_c);
+        ep.apply_chunk(acc_c, row0 + done, n, q8, tile, tile_row0);
+        done += take;
+    }
+}
+
+/// Row-tile the fused-epilogue encoded conv across the worker pool — the
+/// [`conv_tiled_encoded`] partition with the quantum-aligned i8 output
+/// tiling of [`conv_tiled_ep`].
+#[allow(clippy::too_many_arguments)]
+fn conv_tiled_encoded_ep<K: Fn(&[usize], &[(u32, i32)], &mut [i32]) + Sync>(
+    xd: &[i8],
+    s: &ConvShape,
+    out: &mut [i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    par: Parallelism,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    kernel: K,
+) {
+    let threads = par.get().min(m);
+    let (patches, ptrs, ents, accs, q8s) = scratch.take_encoded_ep(threads.max(1), k);
+    if threads <= 1 {
+        conv_rows_encoded_ep(
+            xd,
+            s,
+            out,
+            0,
+            m,
+            k,
+            n,
+            ep,
+            &mut patches[0],
+            &mut ptrs[0],
+            &mut ents[0],
+            &mut accs[0],
+            &mut q8s[0],
+            &kernel,
+        );
+        return;
+    }
+    let q = ep.row_quantum();
+    let rows_per_tile = m.div_ceil(threads).div_ceil(q) * q;
+    let out_per_tile = ep.out_rows(rows_per_tile);
+    if out_per_tile == 0 {
+        return;
+    }
+    let kref = &kernel;
+    std::thread::scope(|sc| {
+        for ((((((ti, tile), buf), arp), aen), acc), q8) in out
+            .chunks_mut(out_per_tile * n)
+            .enumerate()
+            .zip(patches.iter_mut())
+            .zip(ptrs.iter_mut())
+            .zip(ents.iter_mut())
+            .zip(accs.iter_mut())
+            .zip(q8s.iter_mut())
+        {
+            let row0 = ti * rows_per_tile;
+            let rows = rows_per_tile.min(m - row0);
+            sc.spawn(move || {
+                par.pin_worker(ti);
+                conv_rows_encoded_ep(
+                    xd, s, tile, row0, rows, k, n, ep, buf, arp, aen, acc, q8, kref,
+                )
+            });
+        }
+    });
 }
 
 /// Fused streaming convolution, dense INT8 weights: output
@@ -647,6 +1056,193 @@ pub fn conv2d_dbb_i8_packed_encoded_with(
     let (cp, en) = (w.col_ptr(), w.entries());
     let xd = x.data();
     conv_tiled_encoded(xd, s, c.data_mut(), m, k, n, par, scratch, |arp, aen, out| {
+        crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, out, 0, n)
+    });
+    c
+}
+
+/// [`conv2d_i8_gated`] with the layer epilogue fused into the output walk
+/// (transient scratch, fresh output allocation): each worker requantizes
+/// (+ ReLU, + 2×2/stride-2 max-pool when the epilogue pools) its freshly
+/// accumulated chunk to i8 while cache-hot, so no whole-layer i32 tensor is
+/// ever allocated. Output is `[([b,] oh, ow, oc)]` i8 — halved spatial grid
+/// when pooling. Bit-exact with
+/// `requant_relu`/`max_pool_2x2` staged on [`conv2d_i8`]'s i32 result when
+/// the epilogue's shift matches (`rust/tests/epilogue.rs`).
+pub fn conv2d_i8_ep(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    conv2d_i8_ep_with(x, w, s, par, gate, ep, &mut PatchScratch::new(), Vec::new())
+}
+
+/// [`conv2d_i8_ep`] on caller-owned [`PatchScratch`] and a recyclable
+/// output backing `buf` (reused as the result's storage when its length
+/// already matches — the engine's layer ping-pong).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_ep_with(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let batch = batch_of(x, s);
+    check_weights(w, s);
+    check_pool(ep, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output_ep(x.shape().len() == 4, batch, s, ep, buf);
+    if m == 0 || n == 0 || ep.out_rows(m) == 0 {
+        return c;
+    }
+    let (xd, wd) = (x.data(), w.data());
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::micro::dense_rows_i8_gated(patch, wd, out, 0, k, n)
+        });
+    } else {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::micro::dense_rows_i8(patch, wd, out, 0, k, n)
+        });
+    }
+    c
+}
+
+/// [`conv2d_i8_encoded`] with the layer epilogue fused into the output walk
+/// (transient scratch).
+pub fn conv2d_i8_encoded_ep(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    ep: &Epilogue,
+) -> TensorI8 {
+    conv2d_i8_encoded_ep_with(x, w, s, par, ep, &mut PatchScratch::new(), Vec::new())
+}
+
+/// [`conv2d_i8_encoded_ep`] on caller-owned scratch + recyclable output
+/// backing.
+pub fn conv2d_i8_encoded_ep_with(
+    x: &TensorI8,
+    w: &TensorI8,
+    s: &ConvShape,
+    par: Parallelism,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let batch = batch_of(x, s);
+    check_weights(w, s);
+    check_pool(ep, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output_ep(x.shape().len() == 4, batch, s, ep, buf);
+    if m == 0 || n == 0 || ep.out_rows(m) == 0 {
+        return c;
+    }
+    let (xd, wd) = (x.data(), w.data());
+    conv_tiled_encoded_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |arp, aen, out| {
+        crate::gemm::micro::adbb_dense_rows_i8(arp, aen, wd, out, 0, n)
+    });
+    c
+}
+
+/// [`conv2d_dbb_i8_packed_gated`] with the layer epilogue fused into the
+/// output walk (transient scratch).
+pub fn conv2d_dbb_i8_packed_ep(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    conv2d_dbb_i8_packed_ep_with(x, w, s, par, gate, ep, &mut PatchScratch::new(), Vec::new())
+}
+
+/// [`conv2d_dbb_i8_packed_ep`] on caller-owned scratch + recyclable output
+/// backing — the engine's fused-epilogue hot path for DBB conv layers.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_dbb_i8_packed_ep_with(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
+    check_pool(ep, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output_ep(x.shape().len() == 4, batch, s, ep, buf);
+    if m == 0 || n == 0 || ep.out_rows(m) == 0 {
+        return c;
+    }
+    let (cp, en) = (w.col_ptr(), w.entries());
+    let xd = x.data();
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::micro::dbb_rows_i8_gated(patch, cp, en, out, 0, k, n)
+        });
+    } else {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::micro::dbb_rows_i8(patch, cp, en, out, 0, k, n)
+        });
+    }
+    c
+}
+
+/// [`conv2d_dbb_i8_packed_encoded`] with the layer epilogue fused into the
+/// output walk (transient scratch) — joint-sparse conv + requantize + ReLU
+/// + pool in one streaming pass.
+pub fn conv2d_dbb_i8_packed_encoded_ep(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    ep: &Epilogue,
+) -> TensorI8 {
+    conv2d_dbb_i8_packed_encoded_ep_with(x, w, s, par, ep, &mut PatchScratch::new(), Vec::new())
+}
+
+/// [`conv2d_dbb_i8_packed_encoded_ep`] on caller-owned scratch + recyclable
+/// output backing — the engine's fused-epilogue hot path for
+/// `Encode`-policy conv layers.
+pub fn conv2d_dbb_i8_packed_encoded_ep_with(
+    x: &TensorI8,
+    w: &DbbPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "DBB weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "DBB weight N vs conv oc");
+    check_pool(ep, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output_ep(x.shape().len() == 4, batch, s, ep, buf);
+    if m == 0 || n == 0 || ep.out_rows(m) == 0 {
+        return c;
+    }
+    let (cp, en) = (w.col_ptr(), w.entries());
+    let xd = x.data();
+    conv_tiled_encoded_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |arp, aen, out| {
         crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, out, 0, n)
     });
     c
@@ -886,6 +1482,87 @@ mod tests {
                     .data(),
                 conv2d_dbb_i8_packed(&x, &packed, &s, par).data(),
                 "dbb shape={s:?} threads={threads} p={p_zero}"
+            );
+        });
+    }
+
+    #[test]
+    fn fused_epilogue_conv_equals_staged_oracle_prop() {
+        use crate::gemm::epilogue::{max_pool_2x2, requant_shift, requant_with_shift};
+        use crate::gemm::{PoolGeom, Requant};
+        let scratch = std::cell::RefCell::new(PatchScratch::new());
+        check(Config::default().cases(48), |rng| {
+            let s = rand_shape(rng);
+            let b = rng.below(3) + 1;
+            let threads = rng.below(8) + 1;
+            let par = Parallelism::threads(threads);
+            let relu = rng.below(2) == 1;
+            let x = TensorI8::rand_sparse(&[b, s.h, s.w, s.c], 0.5, rng);
+            let w = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+            let acc = conv2d_i8(&x, &w, &s, par);
+            let shift = requant_shift(acc.data());
+            let staged = requant_with_shift(&acc, shift, relu);
+            let ep = Epilogue::new(Requant::Global(shift), relu);
+            assert_eq!(
+                conv2d_i8_ep(&x, &w, &s, par, ZeroGate::Auto, &ep).data(),
+                staged.data(),
+                "dense shape={s:?} b={b} threads={threads} relu={relu}"
+            );
+            assert_eq!(
+                conv2d_i8_encoded_ep_with(
+                    &x,
+                    &w,
+                    &s,
+                    par,
+                    &ep,
+                    &mut scratch.borrow_mut(),
+                    Vec::new()
+                )
+                .data(),
+                staged.data(),
+                "encoded shape={s:?} b={b} threads={threads} relu={relu}"
+            );
+            if s.oh() >= 2 && s.ow() >= 2 {
+                let epp = Epilogue::new(Requant::Global(shift), relu)
+                    .with_pool(PoolGeom { oh: s.oh(), ow: s.ow() });
+                let pooled = max_pool_2x2(&staged, s.oh(), s.ow(), s.oc);
+                let got = conv2d_i8_ep(&x, &w, &s, par, ZeroGate::Off, &epp);
+                assert_eq!(got.shape(), [b, s.oh() / 2, s.ow() / 2, s.oc]);
+                assert_eq!(
+                    got.data(),
+                    pooled.data(),
+                    "pooled shape={s:?} b={b} threads={threads} relu={relu}"
+                );
+            }
+            let wc = crate::dbb::DbbMatrix::compress_topk(
+                &TensorI8::rand(&[s.gemm_k(), s.oc], rng),
+                8,
+                rng.below(8) + 1,
+            )
+            .unwrap();
+            let packed = DbbPacked::pack(&wc);
+            let dacc = conv2d_dbb_i8_packed(&x, &packed, &s, par);
+            let dshift = requant_shift(dacc.data());
+            let dstaged = requant_with_shift(&dacc, dshift, relu);
+            let dep = Epilogue::new(Requant::Global(dshift), relu);
+            assert_eq!(
+                conv2d_dbb_i8_packed_ep(&x, &packed, &s, par, ZeroGate::Auto, &dep).data(),
+                dstaged.data(),
+                "dbb shape={s:?} b={b} threads={threads} relu={relu}"
+            );
+            assert_eq!(
+                conv2d_dbb_i8_packed_encoded_ep_with(
+                    &x,
+                    &packed,
+                    &s,
+                    par,
+                    &dep,
+                    &mut scratch.borrow_mut(),
+                    Vec::new()
+                )
+                .data(),
+                dstaged.data(),
+                "dbb-encoded shape={s:?} b={b} threads={threads} relu={relu}"
             );
         });
     }

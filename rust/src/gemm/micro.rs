@@ -67,6 +67,13 @@
 //!   multiplies SIMD would amortize. Its dense-W sibling
 //!   (`adbb_dense_rows_i8`) does vectorize (dense W row axpy per stored
 //!   activation entry).
+//! * Epilogue requantize (`requant_i8` / `requant_i8_perch`): the fused
+//!   output epilogues ([`crate::gemm::epilogue`]) drain i32 accumulator
+//!   chunks through a vectorized shift→clamp→narrow (ReLU folded into the
+//!   clamp lower bound; lanes clamped to ±127 *before* the saturating
+//!   packs so narrowing is exact). Per-channel shifts vectorize on AVX2
+//!   (`srav`) and NEON (per-lane `vshlq`); SSE2 has no per-lane variable
+//!   shift, so its per-channel path stays on the scalar oracle.
 //!
 //! Safety: the `unsafe` here is raw-pointer loads/stores inside the
 //! per-ISA kernels, each dispatched only when its target feature is
@@ -401,6 +408,47 @@ pub(crate) fn adbb_dense_rows_i8(
             neon::adbb_dense_rows_i8_neon(a_row_ptr, a_entries, wd, out, row0, n)
         },
         _ => crate::gemm::act::adbb_dense_rows_i8(a_row_ptr, a_entries, wd, out, row0, n),
+    }
+}
+
+/// Vectorized epilogue requantize (`crate::gemm::requant_rows_i8` behind
+/// the ISA dispatch): `out[i] = clamp(acc[i] >> shift, lo, 127)` with
+/// `lo = 0` when `relu` — ReLU folded into the clamp lower bound, which is
+/// bit-identical to clamp-then-zero. The lanes are clamped to `[-127, 127]`
+/// **before** the saturating narrowing packs, so the packs can never round
+/// differently from the scalar oracle (saturation is the identity on
+/// already-clamped lanes).
+pub(crate) fn requant_i8(acc: &[i32], out: &mut [i8], shift: u32, relu: bool) {
+    debug_assert_eq!(acc.len(), out.len(), "requant in/out length");
+    match active_isa() {
+        // SAFETY: see `dense_rows_i8` — the active ISA is always supported.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::requant_i8_avx2(acc, out, shift, relu) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::requant_i8_sse2(acc, out, shift, relu) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::requant_i8_neon(acc, out, shift, relu) },
+        _ => crate::gemm::requant_rows_i8(acc, out, shift, relu),
+    }
+}
+
+/// Per-channel epilogue requantize (`crate::gemm::requant_rows_i8_perch`
+/// behind the ISA dispatch): `shifts` is one shift per output column,
+/// cycling per row. AVX2 uses the per-lane variable shift (`srav`); NEON
+/// shifts per lane natively (`vshlq` with negated counts); **SSE2 has no
+/// per-lane variable shift**, so it stays on the scalar oracle — per-row
+/// global requant ([`requant_i8`]) is the vectorized path on SSE2 hosts.
+pub(crate) fn requant_i8_perch(acc: &[i32], out: &mut [i8], shifts: &[u32], relu: bool) {
+    debug_assert_eq!(acc.len(), out.len(), "requant in/out length");
+    debug_assert!(!shifts.is_empty(), "per-channel requant needs >= 1 column");
+    debug_assert_eq!(acc.len() % shifts.len(), 0, "requant takes whole rows");
+    match active_isa() {
+        // SAFETY: see `dense_rows_i8` — the active ISA is always supported.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::requant_i8_perch_avx2(acc, out, shifts, relu) },
+        #[cfg(target_arch = "aarch64")]
+        Isa::Neon => unsafe { neon::requant_i8_perch_neon(acc, out, shifts, relu) },
+        _ => crate::gemm::requant_rows_i8_perch(acc, out, shifts, relu),
     }
 }
 
@@ -793,11 +841,107 @@ mod x86 {
             adbb_tail_cols(a_row_ptr, a_entries, wd, out, row0, n, nb);
         }
     }
-}
 
-// ---------------------------------------------------------------------------
-// aarch64: NEON
-// ---------------------------------------------------------------------------
+    /// SSE2 lacks `min/max_epi32` (SSE4.1); build them from `cmpgt` blends.
+    #[inline(always)]
+    unsafe fn min_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
+        let gt = _mm_cmpgt_epi32(a, b);
+        _mm_or_si128(_mm_and_si128(gt, b), _mm_andnot_si128(gt, a))
+    }
+
+    #[inline(always)]
+    unsafe fn max_epi32_sse2(a: __m128i, b: __m128i) -> __m128i {
+        let gt = _mm_cmpgt_epi32(a, b);
+        _mm_or_si128(_mm_and_si128(gt, a), _mm_andnot_si128(gt, b))
+    }
+
+    /// Narrow 8 already-clamped i32 lanes (two AVX2 128-bit halves of one
+    /// 256-bit vector) to 8 i8 bytes. Exact because every lane is in
+    /// `[-127, 127]` before the saturating packs.
+    #[inline(always)]
+    unsafe fn narrow8_avx2(c: __m256i) -> __m128i {
+        let p16 = _mm256_packs_epi32(c, c); // [c0..3,c0..3 | c4..7,c4..7] i16
+        let lo = _mm256_castsi256_si128(p16);
+        let hi = _mm256_extracti128_si256::<1>(p16);
+        let merged = _mm_unpacklo_epi64(lo, hi); // c0..c7 i16
+        _mm_packs_epi16(merged, merged)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn requant_i8_avx2(acc: &[i32], out: &mut [i8], shift: u32, relu: bool) {
+        let n = acc.len();
+        let nb = n - n % 8;
+        let lo = if relu { 0 } else { -127 };
+        let lov = _mm256_set1_epi32(lo);
+        let hiv = _mm256_set1_epi32(127);
+        let cnt = _mm_cvtsi32_si128(shift as i32);
+        let ap = acc.as_ptr();
+        let op = out.as_mut_ptr();
+        for i in (0..nb).step_by(8) {
+            let v = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let s = _mm256_sra_epi32(v, cnt);
+            let c = _mm256_min_epi32(_mm256_max_epi32(s, lov), hiv);
+            _mm_storel_epi64(op.add(i) as *mut __m128i, narrow8_avx2(c));
+        }
+        for i in nb..n {
+            out[i] = (acc[i] >> shift).clamp(lo, 127) as i8;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn requant_i8_perch_avx2(
+        acc: &[i32],
+        out: &mut [i8],
+        shifts: &[u32],
+        relu: bool,
+    ) {
+        let n = shifts.len();
+        let nb = n - n % 8;
+        let lo = if relu { 0 } else { -127 };
+        let lov = _mm256_set1_epi32(lo);
+        let hiv = _mm256_set1_epi32(127);
+        let rows = acc.len() / n;
+        let ap = acc.as_ptr();
+        let op = out.as_mut_ptr();
+        let sp = shifts.as_ptr();
+        for r in 0..rows {
+            for j in (0..nb).step_by(8) {
+                let v = _mm256_loadu_si256(ap.add(r * n + j) as *const __m256i);
+                // shifts are < 32, so the u32 bits are valid srav counts
+                let cnt = _mm256_loadu_si256(sp.add(j) as *const __m256i);
+                let s = _mm256_srav_epi32(v, cnt);
+                let c = _mm256_min_epi32(_mm256_max_epi32(s, lov), hiv);
+                _mm_storel_epi64(op.add(r * n + j) as *mut __m128i, narrow8_avx2(c));
+            }
+            for j in nb..n {
+                out[r * n + j] = (acc[r * n + j] >> shifts[j]).clamp(lo, 127) as i8;
+            }
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub(super) unsafe fn requant_i8_sse2(acc: &[i32], out: &mut [i8], shift: u32, relu: bool) {
+        let n = acc.len();
+        let nb = n - n % 4;
+        let lo = if relu { 0 } else { -127 };
+        let lov = _mm_set1_epi32(lo);
+        let hiv = _mm_set1_epi32(127);
+        let cnt = _mm_cvtsi32_si128(shift as i32);
+        let ap = acc.as_ptr();
+        let op = out.as_mut_ptr();
+        for i in (0..nb).step_by(4) {
+            let v = _mm_loadu_si128(ap.add(i) as *const __m128i);
+            let s = _mm_sra_epi32(v, cnt);
+            let c = min_epi32_sse2(max_epi32_sse2(s, lov), hiv);
+            // exact: lanes already in [-127, 127] before the packs
+            let p8 = _mm_packs_epi16(_mm_packs_epi32(c, c), _mm_setzero_si128());
+            (op.add(i) as *mut i32).write_unaligned(_mm_cvtsi128_si32(p8));
+        }
+        for i in nb..n {
+            out[i] = (acc[i] >> shift).clamp(lo, 127) as i8;
+        }
+    }
+}
 
 #[cfg(target_arch = "aarch64")]
 mod neon {
@@ -950,6 +1094,70 @@ mod neon {
             adbb_tail_cols(a_row_ptr, a_entries, wd, out, row0, n, nb);
         }
     }
+
+    /// Narrow 8 already-clamped i32 lanes to 8 i8 bytes and store. Exact
+    /// because every lane is in `[-127, 127]` before the narrowing.
+    #[inline(always)]
+    unsafe fn narrow_store8_neon(dst: *mut i8, c0: int32x4_t, c1: int32x4_t) {
+        let m16 = vcombine_s16(vmovn_s32(c0), vmovn_s32(c1));
+        vst1_s8(dst, vmovn_s16(m16));
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn requant_i8_neon(acc: &[i32], out: &mut [i8], shift: u32, relu: bool) {
+        let n = acc.len();
+        let nb = n - n % 8;
+        let lo = if relu { 0 } else { -127 };
+        let lov = vdupq_n_s32(lo);
+        let hiv = vdupq_n_s32(127);
+        // vshlq with a negative count is an arithmetic right shift —
+        // identical semantics to Rust's `>>` on i32
+        let sh = vdupq_n_s32(-(shift as i32));
+        let ap = acc.as_ptr();
+        let op = out.as_mut_ptr();
+        for i in (0..nb).step_by(8) {
+            let s0 = vshlq_s32(vld1q_s32(ap.add(i)), sh);
+            let s1 = vshlq_s32(vld1q_s32(ap.add(i + 4)), sh);
+            let c0 = vminq_s32(vmaxq_s32(s0, lov), hiv);
+            let c1 = vminq_s32(vmaxq_s32(s1, lov), hiv);
+            narrow_store8_neon(op.add(i), c0, c1);
+        }
+        for i in nb..n {
+            out[i] = (acc[i] >> shift).clamp(lo, 127) as i8;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn requant_i8_perch_neon(
+        acc: &[i32],
+        out: &mut [i8],
+        shifts: &[u32],
+        relu: bool,
+    ) {
+        let n = shifts.len();
+        let nb = n - n % 8;
+        let lo = if relu { 0 } else { -127 };
+        let lov = vdupq_n_s32(lo);
+        let hiv = vdupq_n_s32(127);
+        let rows = acc.len() / n;
+        let ap = acc.as_ptr();
+        let op = out.as_mut_ptr();
+        let sp = shifts.as_ptr();
+        for r in 0..rows {
+            for j in (0..nb).step_by(8) {
+                let sh0 = vnegq_s32(vreinterpretq_s32_u32(vld1q_u32(sp.add(j))));
+                let sh1 = vnegq_s32(vreinterpretq_s32_u32(vld1q_u32(sp.add(j + 4))));
+                let s0 = vshlq_s32(vld1q_s32(ap.add(r * n + j)), sh0);
+                let s1 = vshlq_s32(vld1q_s32(ap.add(r * n + j + 4)), sh1);
+                let c0 = vminq_s32(vmaxq_s32(s0, lov), hiv);
+                let c1 = vminq_s32(vmaxq_s32(s1, lov), hiv);
+                narrow_store8_neon(op.add(r * n + j), c0, c1);
+            }
+            for j in nb..n {
+                out[r * n + j] = (acc[r * n + j] >> shifts[j]).clamp(lo, 127) as i8;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1003,6 +1211,48 @@ mod tests {
             assert!(rank(got) <= rank(req), "clamp({req:?}) -> {got:?}");
         }
         assert_eq!(clamp_to_supported(Isa::Scalar), Isa::Scalar);
+    }
+
+    #[test]
+    fn requant_kernels_bit_exact_per_isa() {
+        let _g = ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        let _restore = RestoreIsa;
+        let mut rng = Rng::new(0x77);
+        for &(rows, n) in &[(1usize, 1usize), (3, 7), (5, 16), (2, 33), (4, 8)] {
+            // accumulators spanning tiny to huge magnitudes, plus exact
+            // clamp-edge values
+            let mut acc: Vec<i32> = (0..rows * n).map(|_| rng.next_u64() as i32).collect();
+            for (i, v) in [0i32, 127, -127, -128, 128, i32::MAX, i32::MIN]
+                .into_iter()
+                .enumerate()
+            {
+                if i < acc.len() {
+                    acc[i] = v;
+                }
+            }
+            let shifts: Vec<u32> = (0..n).map(|_| rng.below(25) as u32).collect();
+            for relu in [false, true] {
+                for shift in [0u32, 5, 24] {
+                    let mut want = vec![0i8; acc.len()];
+                    crate::gemm::requant_rows_i8(&acc, &mut want, shift, relu);
+                    for isa in available_isas() {
+                        force_isa(Some(isa));
+                        let mut got = vec![0i8; acc.len()];
+                        requant_i8(&acc, &mut got, shift, relu);
+                        assert_eq!(got, want, "global isa={isa} shift={shift} relu={relu}");
+                    }
+                }
+                let mut want = vec![0i8; acc.len()];
+                crate::gemm::requant_rows_i8_perch(&acc, &mut want, &shifts, relu);
+                for isa in available_isas() {
+                    force_isa(Some(isa));
+                    let mut got = vec![0i8; acc.len()];
+                    requant_i8_perch(&acc, &mut got, &shifts, relu);
+                    assert_eq!(got, want, "perch isa={isa} relu={relu} rows={rows} n={n}");
+                }
+            }
+        }
+        force_isa(None);
     }
 
     #[test]

@@ -81,14 +81,30 @@
 //! (off / gate / encode); [`crate::engine::PreparedModel::execute`]
 //! resolves it per layer from the same recorded profile that drives
 //! `ZeroGate::Auto` and that the hardware twin prices.
+//!
+//! ## Fused output epilogues
+//!
+//! The output side mirrors the paper's on-chip post-processing (SNIPPETS
+//! Snippet 1/2: requantize + ReLU + max-pool right at the accumulator so
+//! INT32 intermediates never hit SRAM): the [`epilogue`] submodule defines
+//! a pluggable [`Epilogue`] (global or per-channel power-of-two requantize,
+//! optional ReLU, optional 2×2/stride-2 max-pool folded into the output row
+//! walk). The `*_ep` drivers in [`tiled`] and [`fused`] drain each freshly
+//! computed accumulator chunk through it while cache-hot, producing the
+//! next layer's INT8 operand directly — no whole-layer i32 tensor is ever
+//! allocated. The scalar row kernels `requant_rows_i8` /
+//! `requant_rows_i8_perch` below are the rounding oracles (bit-identical
+//! to the historical [`requant_relu`]); [`micro`] vectorizes them per ISA.
 
 pub mod act;
 pub mod conv;
+pub mod epilogue;
 pub mod fused;
 pub mod micro;
 pub mod tiled;
 
 pub use act::{adbb_dense_i8, adbb_i8_packed, ActDbb};
+pub use epilogue::{requant_relu, Epilogue, PoolGeom, Requant};
 
 use crate::dbb::DbbMatrix;
 use crate::tensor::{TensorI32, TensorI8};
@@ -317,6 +333,36 @@ pub(crate) fn dense_rows_i8_gated(
                     *cv += av * wv as i32;
                 }
             }
+        }
+    }
+}
+
+/// Scalar epilogue requantize row kernel — the rounding **oracle** the SIMD
+/// variants in [`micro`] are property-pinned against:
+/// `out[i] = clamp(acc[i] >> shift, lo, 127)` with `lo = 0` when `relu`.
+/// Folding ReLU into the clamp lower bound is bit-identical to the
+/// historical clamp-then-zero (`max(0, clamp(x, -127, 127)) ==
+/// clamp(x, 0, 127)` — both operands of the outer `max` are monotonic in
+/// `x`), and the clamp is symmetric at ±127, never −128.
+pub(crate) fn requant_rows_i8(acc: &[i32], out: &mut [i8], shift: u32, relu: bool) {
+    let lo = if relu { 0 } else { -127 };
+    for (o, &v) in out.iter_mut().zip(acc) {
+        *o = (v >> shift).clamp(lo, 127) as i8;
+    }
+}
+
+/// Per-channel variant of [`requant_rows_i8`] (Snippet 1's per-channel
+/// scale): `shifts` holds one power-of-two shift per output column and
+/// cycles per row (`acc` is whole rows of width `shifts.len()`).
+pub(crate) fn requant_rows_i8_perch(acc: &[i32], out: &mut [i8], shifts: &[u32], relu: bool) {
+    let n = shifts.len();
+    if n == 0 {
+        return;
+    }
+    let lo = if relu { 0 } else { -127 };
+    for (orow, arow) in out.chunks_mut(n).zip(acc.chunks(n)) {
+        for ((o, &v), &s) in orow.iter_mut().zip(arow).zip(shifts) {
+            *o = (v >> s).clamp(lo, 127) as i8;
         }
     }
 }

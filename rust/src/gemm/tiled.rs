@@ -23,8 +23,14 @@
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
-use crate::gemm::{ActDbb, DbbPacked, ZeroGate};
+use crate::gemm::{ActDbb, DbbPacked, Epilogue, ZeroGate};
 use crate::tensor::{TensorI32, TensorI8};
+
+/// Accumulator rows a fused-epilogue worker computes per inner-kernel call
+/// before draining them through the epilogue — small enough that the i32
+/// chunk stays L1-resident while it is requantized (mirrors
+/// `fused::PATCH_ROWS`).
+const EP_CHUNK: usize = 8;
 
 /// Shared row-tiling scaffold of every GEMM driver in this module:
 /// partition the `m × n` output into row-contiguous per-worker tiles (the
@@ -174,6 +180,202 @@ pub fn adbb_dense_i8(a: &ActDbb, w: &TensorI8, par: Parallelism) -> TensorI32 {
     let wd = w.data();
     row_tiled(a.m, n, par, |tile, row0| {
         crate::gemm::micro::adbb_dense_rows_i8(arp, aen, wd, tile, row0, n)
+    })
+}
+
+/// Fused-epilogue row-tiling scaffold: like [`row_tiled`], but the kernel
+/// computes one [`EP_CHUNK`]-row *chunk* of i32 accumulator rows at a time
+/// into a small per-worker scratch (zeroed before every call, so assign-
+/// and accumulate-semantics kernels both work), and the [`Epilogue`]
+/// immediately requantizes — and optionally max-pools — the chunk into the
+/// worker's INT8 output tile while it is L1-hot. The tile partition is
+/// aligned to [`Epilogue::row_quantum`] so a pooled row pair never
+/// straddles two workers, and [`Epilogue::out_rows`]' additivity over
+/// quantum multiples keeps the per-worker output tiles disjoint and exact.
+/// The per-worker acc/q8 arenas are allocated inside the spawned worker
+/// *after* `pin_worker`, so their pages are first-touched on the worker's
+/// own NUMA node; `buf` recycles the output backing across calls (the
+/// engine's ping-pong).
+fn row_tiled_ep<K: Fn(&mut [i32], usize) + Sync>(
+    m: usize,
+    n: usize,
+    par: Parallelism,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+    kernel: K,
+) -> TensorI8 {
+    ep.check_rows(m);
+    let out_rows = ep.out_rows(m);
+    let len = out_rows * n;
+    let mut buf = buf;
+    if buf.len() != len {
+        buf.clear();
+        buf.resize(len, 0);
+    }
+    let mut c = TensorI8::from_vec(&[out_rows, n], buf);
+    if m == 0 || n == 0 || len == 0 {
+        return c;
+    }
+    let threads = par.get().min(m).max(1);
+    let run_tile = |tile: &mut [i8], row0: usize, rows: usize| {
+        // per-worker arena: first write happens on the worker itself
+        let mut acc = vec![0i32; EP_CHUNK * n];
+        let mut q8 = vec![0i8; EP_CHUNK * n];
+        if ep.pool().is_some() {
+            tile.fill(i8::MIN);
+        }
+        let mut done = 0usize;
+        while done < rows {
+            let take = EP_CHUNK.min(rows - done);
+            let acc_c = &mut acc[..take * n];
+            acc_c.fill(0);
+            kernel(acc_c, row0 + done);
+            ep.apply_chunk(acc_c, row0 + done, n, &mut q8, tile, row0);
+            done += take;
+        }
+    };
+    if threads <= 1 {
+        run_tile(c.data_mut(), 0, m);
+        return c;
+    }
+    let q = ep.row_quantum();
+    let rows_per_tile = m.div_ceil(threads).div_ceil(q) * q;
+    let out_per_tile = ep.out_rows(rows_per_tile);
+    if out_per_tile == 0 {
+        return c; // unreachable when len > 0; guards chunks_mut(0)
+    }
+    let rt = &run_tile;
+    std::thread::scope(|s| {
+        for (ti, tile) in c.data_mut().chunks_mut(out_per_tile * n).enumerate() {
+            let row0 = ti * rows_per_tile;
+            let rows = rows_per_tile.min(m - row0);
+            s.spawn(move || {
+                par.pin_worker(ti);
+                rt(tile, row0, rows)
+            });
+        }
+    });
+    c
+}
+
+/// [`dense_i8_gated`] with a fused output [`Epilogue`]: each worker
+/// requantizes (and optionally pools) its accumulator chunks to INT8 while
+/// cache-hot — the whole-matrix i32 C is never allocated. Bit-exact with
+/// `epilogue-oracle(dense_i8(a, w))` for every gate policy, ISA, and
+/// thread count (pinned in `rust/tests/epilogue.rs`).
+pub fn dense_i8_ep(
+    a: &TensorI8,
+    w: &TensorI8,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    dense_i8_ep_into(a, w, par, gate, ep, Vec::new())
+}
+
+/// [`dense_i8_ep`] recycling `buf` as the output backing (the engine's
+/// layer-chain ping-pong; pass `Vec::new()` when there is nothing to
+/// recycle).
+pub fn dense_i8_ep_into(
+    a: &TensorI8,
+    w: &TensorI8,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "GEMM inner dims: A[{m}x{k}] W[{k2}x{n}]");
+    let engaged = gate.resolve_with(|| a.sparsity());
+    let (ad, wd) = (a.data(), w.data());
+    if engaged {
+        row_tiled_ep(m, n, par, ep, buf, |acc, row0| {
+            crate::gemm::micro::dense_rows_i8_gated(ad, wd, acc, row0, k, n)
+        })
+    } else {
+        row_tiled_ep(m, n, par, ep, buf, |acc, row0| {
+            crate::gemm::micro::dense_rows_i8(ad, wd, acc, row0, k, n)
+        })
+    }
+}
+
+/// [`dbb_i8_packed_gated`] with a fused output [`Epilogue`].
+pub fn dbb_i8_packed_ep(
+    a: &TensorI8,
+    w: &DbbPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    dbb_i8_packed_ep_into(a, w, par, gate, ep, Vec::new())
+}
+
+/// [`dbb_i8_packed_ep`] recycling `buf` as the output backing.
+pub fn dbb_i8_packed_ep_into(
+    a: &TensorI8,
+    w: &DbbPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wdbb[{}x{}]", w.k, w.n);
+    let engaged = gate.resolve_with(|| a.sparsity());
+    let ad = a.data();
+    let (cp, en) = (w.col_ptr(), w.entries());
+    if engaged {
+        row_tiled_ep(m, w.n, par, ep, buf, |acc, row0| {
+            crate::gemm::micro::dbb_rows_i8_gated(ad, cp, en, acc, row0, k, w.n)
+        })
+    } else {
+        row_tiled_ep(m, w.n, par, ep, buf, |acc, row0| {
+            crate::gemm::micro::dbb_rows_i8(ad, cp, en, acc, row0, k, w.n)
+        })
+    }
+}
+
+/// [`adbb_i8_packed`] with a fused output [`Epilogue`].
+pub fn adbb_i8_packed_ep(a: &ActDbb, w: &DbbPacked, par: Parallelism, ep: &Epilogue) -> TensorI8 {
+    adbb_i8_packed_ep_into(a, w, par, ep, Vec::new())
+}
+
+/// [`adbb_i8_packed_ep`] recycling `buf` as the output backing.
+pub fn adbb_i8_packed_ep_into(
+    a: &ActDbb,
+    w: &DbbPacked,
+    par: Parallelism,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    assert_eq!(a.k, w.k, "GEMM inner dims: Adbb[{}x{}] Wdbb[{}x{}]", a.m, a.k, w.k, w.n);
+    let (arp, aen) = (a.row_ptr(), a.entries());
+    let (cp, en) = (w.col_ptr(), w.entries());
+    row_tiled_ep(a.m, w.n, par, ep, buf, |acc, row0| {
+        crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, acc, row0, w.n)
+    })
+}
+
+/// [`adbb_dense_i8`] with a fused output [`Epilogue`].
+pub fn adbb_dense_i8_ep(a: &ActDbb, w: &TensorI8, par: Parallelism, ep: &Epilogue) -> TensorI8 {
+    adbb_dense_i8_ep_into(a, w, par, ep, Vec::new())
+}
+
+/// [`adbb_dense_i8_ep`] recycling `buf` as the output backing.
+pub fn adbb_dense_i8_ep_into(
+    a: &ActDbb,
+    w: &TensorI8,
+    par: Parallelism,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(a.k, k2, "GEMM inner dims: Adbb[{}x{}] W[{k2}x{n}]", a.m, a.k);
+    let (arp, aen) = (a.row_ptr(), a.entries());
+    let wd = w.data();
+    row_tiled_ep(a.m, n, par, ep, buf, |acc, row0| {
+        crate::gemm::micro::adbb_dense_rows_i8(arp, aen, wd, acc, row0, n)
     })
 }
 
@@ -332,6 +534,43 @@ mod tests {
                 adbb_i8_packed(&enc, &packed, par).data(),
                 gemm::dbb_i8_packed(&a, &packed).data(),
                 "dbb m={m} k={k} n={n} bz={bz} nnz={nnz} threads={threads} p={p_zero}"
+            );
+        });
+    }
+
+    #[test]
+    fn epilogue_tiled_equals_staged_oracle_prop() {
+        use crate::gemm::epilogue::{self, PoolGeom, Requant};
+        check(Config::default().cases(48), |rng| {
+            let oh = rng.below(6) + 1;
+            let ow = rng.below(6) + 1;
+            let b = rng.below(3) + 1;
+            let m = b * oh * ow;
+            let k = rng.below(32) + 1;
+            let n = rng.below(20) + 1;
+            let threads = rng.below(8) + 1;
+            let relu = rng.below(2) == 0;
+            let a = TensorI8::rand_sparse(&[m, k], 0.4, rng);
+            let w = TensorI8::rand(&[k, n], rng);
+            let par = Parallelism::threads(threads);
+            let acc = gemm::dense_i8(&a, &w);
+            let shift = epilogue::requant_shift(acc.data());
+            let staged = epilogue::requant_with_shift(&acc, shift, relu);
+            let ep = Epilogue::new(Requant::Global(shift), relu);
+            let fused = dense_i8_ep(&a, &w, par, ZeroGate::Auto, &ep);
+            assert_eq!(
+                fused.data(),
+                staged.data(),
+                "requant m={m} k={k} n={n} threads={threads} relu={relu}"
+            );
+            let epp = ep.with_pool(PoolGeom { oh, ow });
+            let pooled = epilogue::max_pool_2x2(&staged, oh, ow, n);
+            let fusedp = dense_i8_ep(&a, &w, par, ZeroGate::Auto, &epp);
+            assert_eq!(fusedp.shape(), pooled.shape());
+            assert_eq!(
+                fusedp.data(),
+                pooled.data(),
+                "pool b={b} oh={oh} ow={ow} k={k} n={n} threads={threads} relu={relu}"
             );
         });
     }

@@ -41,7 +41,6 @@ use super::mcu::McuComplex;
 use super::EventCounts;
 use crate::arch::Design;
 use crate::models::{LayerKind, Model};
-use crate::tensor::TensorI8;
 use crate::util::par::map_indexed;
 use crate::util::Parallelism;
 
@@ -82,6 +81,15 @@ pub struct LayerProfile {
     pub out_elems: u64,
     /// Followed by ReLU?
     pub relu: bool,
+    /// This layer's requant/ReLU/pool epilogue runs **fused inside the
+    /// array's output walk** (the engine's `execute_fused` style) instead
+    /// of as MCU post-processing. [`layer_timing`] then prices the
+    /// post-processing work as [`EventCounts::epilogue_cycles`] —
+    /// overlapped with the array like the MCU column, but accounted
+    /// separately so Fig-11's MCU normalization stays honest. Set by
+    /// `PreparedModel::profiles` ([`crate::engine::PreparedModel::set_fused_epilogue`]);
+    /// `false` for the assumed-sparsity profiles.
+    pub fused_epilogue: bool,
 }
 
 /// Per-layer timing result.
@@ -109,13 +117,14 @@ pub struct NetworkTiming {
 }
 
 impl NetworkTiming {
-    /// Wall-clock seconds at the design's frequency (array and MCU overlap;
-    /// the slower of the two gates each layer).
+    /// Wall-clock seconds at the design's frequency (array, MCU, and the
+    /// fused epilogue all overlap; the slowest of the three gates each
+    /// layer).
     pub fn seconds(&self, design: &Design) -> f64 {
         let cycles: u64 = self
             .layers
             .iter()
-            .map(|l| l.events.cycles.max(l.events.mcu_cycles))
+            .map(|l| l.events.cycles.max(l.events.mcu_cycles).max(l.events.epilogue_cycles))
             .sum();
         cycles as f64 / design.tech.freq_hz()
     }
@@ -193,6 +202,7 @@ pub fn profile_model_fixed_act(
                 raw_act_bytes: raw,
                 out_elems: (m * n) as u64,
                 relu: li + 1 < nlayers,
+                fused_epilogue: false,
             }
         })
         .collect()
@@ -219,29 +229,11 @@ pub fn profile_model_repr(
 }
 
 /// INT32 accumulators → INT8 with a per-layer power-of-two scale, then ReLU.
-/// The zero point is exactly 0 (paper §V-A trains with STE so FP 0 → INT 0),
-/// which is what makes post-ReLU zeros exact zeros the hardware can gate on.
-pub fn requant_relu(acc: &crate::tensor::TensorI32, relu: bool) -> TensorI8 {
-    let max_abs = acc
-        .data()
-        .iter()
-        .map(|v| v.unsigned_abs())
-        .max()
-        .unwrap_or(1)
-        .max(1);
-    let mut shift = 0u32;
-    while (max_abs >> shift) > 127 {
-        shift += 1;
-    }
-    acc.map(|v| {
-        let q = (v >> shift).clamp(-127, 127) as i8;
-        if relu && q < 0 {
-            0
-        } else {
-            q
-        }
-    })
-}
+/// Relocated to [`crate::gemm::epilogue`] — its kernel-side home now that
+/// the GEMM stack fuses the requantize into the output walk — and
+/// re-exported here to preserve the historical import path (same function,
+/// same bits).
+pub use crate::gemm::epilogue::requant_relu;
 
 /// Per-layer buffer feasibility (paper §IV-B: the 512 KB WB / 2 MB AB are
 /// double-buffered and software managed). The schedule streams weights one
@@ -321,7 +313,15 @@ pub fn layer_timing(design: &Design, p: &LayerProfile, mcu: &McuComplex) -> Laye
     };
     let t = gemm_timing_stats_enc(design, p.m, &p.weights, p.act_sparsity, mag, p.act_encoded);
     let mut events = t.events;
-    events.mcu_cycles = mcu.conv_post_cycles(p.out_elems, p.relu);
+    // the requant/ReLU(/pool) post-processing: MCU column for the staged
+    // chain, the array-overlapped epilogue counter when the layer executes
+    // with the epilogue fused into the GEMM output walk
+    let post = mcu.conv_post_cycles(p.out_elems, p.relu);
+    if p.fused_epilogue {
+        events.epilogue_cycles = post;
+    } else {
+        events.mcu_cycles = post;
+    }
     LayerTiming {
         name: p.name.clone(),
         events,
@@ -491,6 +491,7 @@ mod tests {
             raw_act_bytes: 4096,
             out_elems: 64 * 32,
             relu: true,
+            fused_epilogue: false,
         };
         let feas = buffer_feasibility(&[mk(8), mk(3)], 16);
         // dense: 8 kblocks × 8 B × 32 cols, no index overhead
@@ -522,6 +523,7 @@ mod tests {
             raw_act_bytes: 256 * 512,
             out_elems: 256 * 64,
             relu: true,
+            fused_epilogue: false,
         };
         let d = crate::arch::Design::paper_optimal();
         let mcu = McuComplex::for_tops(d.peak_effective_tops());
@@ -581,6 +583,43 @@ mod tests {
         // and it is an *input*-side quantity: the near-dense seed input
         // (2% zeros) must not be confused with layer 0's post-ReLU output
         assert!(profiles[0].act_sparsity < 0.1);
+    }
+
+    #[test]
+    fn fused_epilogue_moves_post_processing_off_the_mcu() {
+        // same layer, staged vs fused: the post-processing cycles move from
+        // the MCU column to the epilogue counter — nothing else changes,
+        // and a layer whose MCU column used to gate it stops being gated
+        // by it only if the epilogue is also faster than the array (here
+        // the counters are equal, so seconds() is unchanged too)
+        let mk = |fused: bool| LayerProfile {
+            name: "l".into(),
+            m: 256,
+            weights: WeightStats::synthetic(512, 64, 8, 3),
+            act_sparsity: 0.5,
+            act_encoded: false,
+            im2col_magnification: 1.0,
+            raw_act_bytes: 256 * 512,
+            out_elems: 256 * 64,
+            relu: true,
+            fused_epilogue: fused,
+        };
+        let d = crate::arch::Design::paper_optimal();
+        let mcu = McuComplex::for_tops(d.peak_effective_tops());
+        let staged = layer_timing(&d, &mk(false), &mcu);
+        let fused = layer_timing(&d, &mk(true), &mcu);
+        assert!(staged.events.mcu_cycles > 0);
+        assert_eq!(staged.events.epilogue_cycles, 0);
+        assert_eq!(fused.events.mcu_cycles, 0);
+        assert_eq!(fused.events.epilogue_cycles, staged.events.mcu_cycles);
+        assert_eq!(fused.events.cycles, staged.events.cycles);
+        assert_eq!(fused.events.act_sram_bytes, staged.events.act_sram_bytes);
+        // totals aggregate the new counter
+        let ts = network_timing(&d, &[mk(false)]);
+        let tf = network_timing(&d, &[mk(true)]);
+        assert_eq!(tf.total.epilogue_cycles, ts.total.mcu_cycles);
+        assert_eq!(tf.total.mcu_cycles, 0);
+        assert_eq!(ts.seconds(&d).to_bits(), tf.seconds(&d).to_bits());
     }
 
     #[test]

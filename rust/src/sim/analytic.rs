@@ -300,6 +300,7 @@ pub fn gemm_timing_stats_enc(
             out_sram_bytes: out_bytes,
             mux_selects: mux,
             mcu_cycles: 0,
+            epilogue_cycles: 0,
         },
         dense_macs: mg as u64 * stats.k as u64 * stats.n as u64,
     }

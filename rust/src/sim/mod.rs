@@ -57,6 +57,13 @@ pub struct EventCounts {
     pub mux_selects: u64,
     /// MCU cycles spent on ancillary ops (ReLU/pool/requant), overlappable.
     pub mcu_cycles: u64,
+    /// Ancillary-op cycles for layers whose requant/ReLU/pool epilogue runs
+    /// **fused in the array's output walk** instead of on the MCU (the
+    /// engine's `execute_fused` style). Overlappable like
+    /// [`Self::mcu_cycles`], but counted separately so the Fig-11 MCU
+    /// normalization never mixes the two execution styles. Exactly one of
+    /// `mcu_cycles` / `epilogue_cycles` is non-zero for a given layer.
+    pub epilogue_cycles: u64,
 }
 
 impl EventCounts {
@@ -73,6 +80,7 @@ impl EventCounts {
         self.out_sram_bytes += o.out_sram_bytes;
         self.mux_selects += o.mux_selects;
         self.mcu_cycles += o.mcu_cycles;
+        self.epilogue_cycles += o.epilogue_cycles;
     }
 
     /// Total MAC issue slots (active + gated + idle) — equals

@@ -11,7 +11,12 @@
 //!   (Linux `sched_setaffinity`, best-effort, scheduling-only — never
 //!   affects results): worker `i` of every pool pins to core `i % cores`,
 //!   so per-worker scratch arenas (the fused conv engine's `PatchScratch`)
-//!   stay hot in the same core's cache across steady-state calls.
+//!   stay hot in the same core's cache across steady-state calls. Pinning
+//!   pairs with *first-touch* arena allocation: the conv/tiled workers
+//!   size their scratch (`resize`/`vec!`) **inside** the spawned closure,
+//!   after `pin_worker`, so the first write — and hence the backing pages
+//!   on first-touch NUMA policies — lands on the worker's own node rather
+//!   than the node of the thread that built the scratch.
 //! * [`map_indexed`] — evaluate `f(0..n)` across a scoped worker pool with a
 //!   shared atomic work queue (one index per task — good load balance when
 //!   task costs vary, e.g. design points with different occupancies), and

@@ -1,0 +1,399 @@
+//! Property suite for the fused output epilogues (`ssta::gemm::epilogue`):
+//! every `*_ep` driver — the `tiled::*_ep` GEMM pools, the
+//! `fused::conv2d_*_ep` conv stack, and the engine's
+//! `PreparedModel::execute_fused` layer chain — must be **bit-exact** with
+//! the staged oracle (materialize i32 → `requant_rows` → `max_pool_2x2`)
+//! on every ISA the host supports, across activation policies
+//! (Off / Gate / Encode / Auto), dense and DBB operands, remainder and
+//! degenerate shapes (M < threads, odd pre-pool H/W, 1×1 conv, sub-2×2
+//! pooled grids), per-channel requant scales, and repeated executes
+//! through the engine's ping-pong scratch.
+//!
+//! The ISA override (`micro::force_isa`) is process-global, so tests that
+//! flip it serialize on one mutex and restore the default through a drop
+//! guard (same discipline as `rust/tests/micro_kernels.rs`).
+
+use std::sync::Mutex;
+
+use ssta::dbb::DbbMatrix;
+use ssta::engine::PreparedModel;
+use ssta::gemm::conv::{weights_to_gemm, ConvShape};
+use ssta::gemm::epilogue::{max_pool_2x2, requant_rows};
+use ssta::gemm::micro::{self, Isa};
+use ssta::gemm::{
+    fused, tiled, ActDbb, ActPolicy, DbbPacked, Epilogue, PoolGeom, Requant, ZeroGate,
+};
+use ssta::models;
+use ssta::tensor::{TensorI32, TensorI8};
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+static ISA_LOCK: Mutex<()> = Mutex::new(());
+
+/// Holds the process-global ISA lock and restores the default dispatch on
+/// drop, so a failing case never leaks a forced ISA into the next test.
+struct IsaGuard(#[allow(dead_code)] std::sync::MutexGuard<'static, ()>);
+
+impl IsaGuard {
+    fn acquire() -> IsaGuard {
+        IsaGuard(ISA_LOCK.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl Drop for IsaGuard {
+    fn drop(&mut self) {
+        micro::force_isa(None);
+    }
+}
+
+/// Evaluate `eval` under forced-Scalar (the oracle) and then under every
+/// ISA the host supports, asserting each i8 result list is bit-identical.
+fn exact_on_every_isa<F: Fn() -> Vec<Vec<i8>>>(tag: &str, eval: F) {
+    let _guard = IsaGuard::acquire();
+    micro::force_isa(Some(Isa::Scalar));
+    let want = eval();
+    for isa in micro::available_isas() {
+        micro::force_isa(Some(isa));
+        let got = eval();
+        assert_eq!(got.len(), want.len(), "{tag}: variant count under {isa}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g, w, "{tag}: variant #{i} diverges from scalar under {isa}");
+        }
+    }
+}
+
+/// Case-count that stays overridable by `SSTA_PROP_CASES` (the miri job
+/// shrinks the grid through it; an explicit `.cases(n)` would mask it).
+fn cfg(n: u32) -> Config {
+    if std::env::var("SSTA_PROP_CASES").is_ok() {
+        Config::default()
+    } else {
+        Config::default().cases(n)
+    }
+}
+
+/// The staged oracle: requantize the whole materialized i32 result, then
+/// (when the epilogue pools) run the separate `max_pool_2x2` pass — the
+/// historical layer chain the fused walk replaces.
+fn staged(acc: &TensorI32, ep: &Epilogue) -> Vec<i8> {
+    let n = *acc.shape().last().unwrap();
+    let m = acc.data().len() / n.max(1);
+    let mut q = vec![0i8; m * n];
+    requant_rows(acc.data(), n, ep.requant(), ep.relu(), &mut q);
+    match ep.pool() {
+        None => q,
+        Some(pg) => max_pool_2x2(&TensorI8::from_vec(&[m, n], q), pg.oh, pg.ow, n).into_vec(),
+    }
+}
+
+/// Random requant scale: global or per-channel, shifts 0..=3.
+fn rand_requant(rng: &mut Rng, n: usize) -> Requant {
+    if rng.below(2) == 0 {
+        Requant::Global(rng.below(4) as u32)
+    } else {
+        Requant::PerChannel((0..n).map(|_| rng.below(4) as u32).collect())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// requant kernels vs an independent in-test reference
+// ---------------------------------------------------------------------------
+
+/// Independent re-statement of the requant contract (NOT the crate's code):
+/// arithmetic right shift, clamp to `[-127, 127]` — never −128 — with the
+/// ReLU folded in as a zero lower clamp bound.
+fn ref_requant(acc: &[i32], n: usize, rq: &Requant, relu: bool) -> Vec<i8> {
+    let lo = if relu { 0i32 } else { -127 };
+    acc.iter()
+        .enumerate()
+        .map(|(i, &v)| {
+            let sh = match rq {
+                Requant::Global(s) => *s,
+                Requant::PerChannel(ss) => ss[i % n],
+            };
+            (v >> sh).clamp(lo, 127) as i8
+        })
+        .collect()
+}
+
+#[test]
+fn requant_kernels_match_reference_on_every_isa() {
+    // Row widths crossing the 4/8/16-lane kernel boundaries, extreme
+    // values (i32::MIN/MAX and exact ±127 ≪ shift fenceposts), shifts up
+    // to 31, global and per-channel scales, ReLU on and off.
+    let mut rng = Rng::new(0xE91_0001);
+    for &n in &[1usize, 3, 7, 8, 9, 15, 16, 17, 33] {
+        for rows in [1usize, 2, 5] {
+            let mut acc: Vec<i32> = (0..rows * n)
+                .map(|_| (rng.below(1 << 17) as i32) - (1 << 16))
+                .collect();
+            acc[0] = i32::MIN;
+            if acc.len() > 1 {
+                acc[1] = i32::MAX;
+            }
+            for (i, v) in [127 << 1, -(127 << 1), (127 << 1) + 1, -128].iter().enumerate() {
+                if 2 + i < acc.len() {
+                    acc[2 + i] = *v;
+                }
+            }
+            for relu in [false, true] {
+                for rq in [
+                    Requant::Global(0),
+                    Requant::Global(1),
+                    Requant::Global(5),
+                    Requant::Global(31),
+                    Requant::PerChannel((0..n).map(|c| (c % 4) as u32).collect()),
+                    Requant::PerChannel((0..n).map(|_| rng.below(32) as u32).collect()),
+                ] {
+                    let want = ref_requant(&acc, n, &rq, relu);
+                    exact_on_every_isa(&format!("requant n={n} rows={rows} relu={relu}"), || {
+                        let mut out = vec![0i8; acc.len()];
+                        requant_rows(&acc, n, &rq, relu, &mut out);
+                        assert_eq!(out, want, "vs in-test reference");
+                        vec![out]
+                    });
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// tiled GEMM drivers vs the staged oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tiled_gemm_epilogues_match_staged_oracle_prop() {
+    check(cfg(24), |rng| {
+        let m = rng.below(40) + 1;
+        let k = rng.below(120) + 1;
+        let n = rng.below(24) + 1;
+        let threads = rng.below(8) + 1; // includes M < threads
+        let relu = rng.below(2) == 0;
+        let ep = Epilogue::new(rand_requant(rng, n), relu);
+        let bz = [4usize, 8][rng.below(2)];
+        let a = TensorI8::rand_sparse(&[m, k], [0.0f32, 0.5, 1.0][rng.below(3)], rng);
+        let w = TensorI8::rand(&[k, n], rng);
+        let wp = DbbPacked::pack(&DbbMatrix::compress_topk(&w, bz, bz / 2 + 1).unwrap());
+        let enc = ActDbb::encode(&a, bz);
+        let par = Parallelism::threads(threads);
+        let dense_want = staged(&tiled::dense_i8(&a, &w, par), &ep);
+        let dbb_want = staged(&tiled::dbb_i8_packed(&a, &wp, par), &ep);
+        exact_on_every_isa(&format!("tiled ep m={m} k={k} n={n} t={threads}"), || {
+            let got = vec![
+                tiled::dense_i8_ep(&a, &w, par, ZeroGate::Off, &ep).into_vec(),
+                tiled::dense_i8_ep(&a, &w, par, ZeroGate::On, &ep).into_vec(),
+                tiled::adbb_dense_i8_ep(&enc, &w, par, &ep).into_vec(),
+                tiled::dbb_i8_packed_ep(&a, &wp, par, ZeroGate::On, &ep).into_vec(),
+                tiled::adbb_i8_packed_ep(&enc, &wp, par, &ep).into_vec(),
+            ];
+            assert_eq!(got[0], dense_want, "dense fused vs staged");
+            assert_eq!(got[2], dense_want, "encoded fused vs staged");
+            assert_eq!(got[3], dbb_want, "dbb fused vs staged");
+            assert_eq!(got[4], dbb_want, "dbb encoded fused vs staged");
+            got
+        });
+    });
+}
+
+#[test]
+fn pooled_gemm_epilogues_match_staged_oracle_prop() {
+    // Pooled tiles must never straddle a worker boundary: odd and even
+    // pre-pool grids (odd drops the trailing row/column), multi-image
+    // batches, degenerate sub-2×2 grids (empty pooled output), and worker
+    // pools wider than the image count.
+    check(cfg(24), |rng| {
+        let oh = rng.below(7) + 1;
+        let ow = rng.below(7) + 1;
+        let b = rng.below(3) + 1;
+        let m = b * oh * ow;
+        let k = rng.below(48) + 1;
+        let n = rng.below(12) + 1;
+        let threads = rng.below(8) + 1;
+        let ep = Epilogue::new(rand_requant(rng, n), rng.below(2) == 0)
+            .with_pool(PoolGeom { oh, ow });
+        let a = TensorI8::rand_sparse(&[m, k], 0.4, rng);
+        let w = TensorI8::rand(&[k, n], rng);
+        let wp = DbbPacked::pack(&DbbMatrix::compress_topk(&w, 8, 3).unwrap());
+        let par = Parallelism::threads(threads);
+        let dense_want = staged(&tiled::dense_i8(&a, &w, par), &ep);
+        let dbb_want = staged(&tiled::dbb_i8_packed(&a, &wp, par), &ep);
+        assert_eq!(dense_want.len(), ep.out_rows(m) * n, "oracle length");
+        exact_on_every_isa(&format!("pooled ep b={b} oh={oh} ow={ow} t={threads}"), || {
+            let got = vec![
+                tiled::dense_i8_ep(&a, &w, par, ZeroGate::On, &ep).into_vec(),
+                tiled::dbb_i8_packed_ep(&a, &wp, par, ZeroGate::Off, &ep).into_vec(),
+            ];
+            assert_eq!(got[0], dense_want, "pooled dense fused vs staged");
+            assert_eq!(got[1], dbb_want, "pooled dbb fused vs staged");
+            got
+        });
+    });
+}
+
+// ---------------------------------------------------------------------------
+// fused conv drivers vs the staged oracle
+// ---------------------------------------------------------------------------
+
+fn rand_conv_shape(rng: &mut Rng) -> ConvShape {
+    let kh = [1usize, 3, 5][rng.below(3)]; // includes 1×1 convs
+    let stride = rng.below(2) + 1;
+    ConvShape {
+        h: kh + rng.below(6) + stride,
+        w: kh + rng.below(6) + stride,
+        c: rng.below(5) + 1,
+        kh,
+        kw: kh,
+        oc: rng.below(16) + 1,
+        stride,
+        pad: rng.below(kh.div_ceil(2)),
+    }
+}
+
+#[test]
+fn fused_conv_epilogues_match_staged_oracle_prop() {
+    check(cfg(16), |rng| {
+        let s = rand_conv_shape(rng);
+        let batched = rng.below(2) == 0;
+        let b = if batched { rng.below(2) + 2 } else { 1 };
+        let shape: Vec<usize> = if batched {
+            vec![b, s.h, s.w, s.c]
+        } else {
+            vec![s.h, s.w, s.c]
+        };
+        let x = TensorI8::rand_sparse(&shape, [0.0f32, 0.5, 1.0][rng.below(3)], rng);
+        let w4 = TensorI8::rand(&[s.kh, s.kw, s.c, s.oc], rng);
+        let wg = weights_to_gemm(&w4, &s);
+        let wp = DbbPacked::pack(&DbbMatrix::compress_topk(&wg, 8, 3).unwrap());
+        let par = Parallelism::threads(rng.below(6) + 1);
+        // pool whenever the epilogue geometry is representable — including
+        // odd oh/ow (dropped trailing row/col) and sub-2×2 grids
+        let mut ep = Epilogue::new(rand_requant(rng, s.oc), rng.below(2) == 0);
+        let pooled = rng.below(2) == 0;
+        if pooled {
+            ep = ep.with_pool(PoolGeom { oh: s.oh(), ow: s.ow() });
+        }
+        let dense_want = staged(&fused::conv2d_i8(&x, &w4, &s, par), &ep);
+        let dbb_want = staged(&fused::conv2d_dbb_i8_packed(&x, &wp, &s, par), &ep);
+        exact_on_every_isa(&format!("conv ep {s:?} b={b} pooled={pooled}"), || {
+            let got = vec![
+                fused::conv2d_i8_ep(&x, &w4, &s, par, ZeroGate::On, &ep).into_vec(),
+                fused::conv2d_i8_ep(&x, &w4, &s, par, ZeroGate::Off, &ep).into_vec(),
+                fused::conv2d_i8_encoded_ep(&x, &w4, &s, par, &ep).into_vec(),
+                fused::conv2d_dbb_i8_packed_ep(&x, &wp, &s, par, ZeroGate::On, &ep).into_vec(),
+                fused::conv2d_dbb_i8_packed_encoded_ep(&x, &wp, &s, par, &ep).into_vec(),
+            ];
+            assert_eq!(got[0], dense_want, "dense conv fused vs staged");
+            assert_eq!(got[2], dense_want, "encoded conv fused vs staged");
+            assert_eq!(got[3], dbb_want, "dbb conv fused vs staged");
+            assert_eq!(got[4], dbb_want, "dbb encoded conv fused vs staged");
+            got
+        });
+        // and the pooled output tensor carries the halved spatial grid
+        if pooled {
+            let out = fused::conv2d_i8_ep(&x, &w4, &s, par, ZeroGate::Off, &ep);
+            let (ph, pw) = (s.oh() / 2, s.ow() / 2);
+            let want_shape: Vec<usize> = if batched {
+                vec![b, ph, pw, s.oc]
+            } else {
+                vec![ph, pw, s.oc]
+            };
+            assert_eq!(out.shape(), &want_shape[..], "pooled conv shape {s:?}");
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// the engine's fused i8→i8 layer chain
+// ---------------------------------------------------------------------------
+
+#[test]
+#[cfg_attr(miri, ignore = "whole-network chains are a plain-size stress case")]
+fn engine_fused_chain_matches_staged_across_policies_and_pool() {
+    let model = models::convnet5();
+    let par = Parallelism::threads(3);
+    let mut pm = PreparedModel::prepare(&model, 3, 8, 0xE91_0002, par);
+    let seed = pm.seed_input().clone();
+    let mut rng = Rng::new(0xE91_0003);
+    let probe = TensorI8::rand_sparse(seed.shape(), 0.3, &mut rng);
+    for pool in [false, true] {
+        pm.set_fused_pool(pool);
+        pm.calibrate(par); // shifts depend on the pool toggle, not policy
+        for policy in [ActPolicy::Off, ActPolicy::Gate, ActPolicy::Encode, ActPolicy::Auto] {
+            pm.set_act_policy(policy);
+            // on the seed input, the frozen shifts ARE the dynamic ones:
+            // plain execute, the staged oracle, and the fused chain agree
+            let plain = pm.execute(&seed, par);
+            let st = pm.execute_staged(&seed, par);
+            let fu = pm.execute_fused(&seed, par);
+            assert_eq!(
+                st.output.data(),
+                fu.output.data(),
+                "staged vs fused on seed, policy={policy:?} pool={pool}"
+            );
+            assert_eq!(
+                plain.output.data(),
+                fu.output.data(),
+                "execute vs fused on seed, policy={policy:?} pool={pool}"
+            );
+            assert_eq!(st.output.shape(), fu.output.shape());
+            // on any other input the frozen-shift paths still agree with
+            // each other, at every worker-pool width
+            let sp = pm.execute_staged(&probe, par);
+            for t in [1usize, 2, 5] {
+                let fp = pm.execute_fused(&probe, Parallelism::threads(t));
+                assert_eq!(
+                    sp.output.data(),
+                    fp.output.data(),
+                    "staged vs fused on probe, policy={policy:?} pool={pool} t={t}"
+                );
+            }
+            // the fused path reports the same per-layer bookkeeping
+            assert_eq!(sp.act_sparsity, pm.execute_fused(&probe, par).act_sparsity);
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "whole-network chains are a plain-size stress case")]
+fn engine_fused_chain_exact_on_every_isa() {
+    let model = models::lenet5();
+    let par = Parallelism::threads(4);
+    let mut pm = PreparedModel::prepare(&model, 3, 8, 0xE91_0004, par);
+    pm.set_act_policy(ActPolicy::Encode);
+    pm.set_fused_pool(true);
+    pm.calibrate(par);
+    let seed = pm.seed_input().clone();
+    exact_on_every_isa("engine fused chain", || {
+        let st = pm.execute_staged(&seed, par);
+        let fu = pm.execute_fused(&seed, par);
+        assert_eq!(st.output.data(), fu.output.data(), "staged vs fused");
+        vec![st.output.into_vec(), fu.output.into_vec()]
+    });
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "whole-network chains are a plain-size stress case")]
+fn repeated_fused_executes_are_pure() {
+    // The ping-pong scratch pool recycles output backings across layers
+    // and calls: repeated and interleaved executes must reproduce their
+    // first results bit for bit (a stale or aliased buffer would not).
+    let model = models::convnet5();
+    let par = Parallelism::threads(4);
+    let mut pm = PreparedModel::prepare(&model, 2, 8, 0xE91_0005, par);
+    pm.set_fused_pool(true);
+    pm.calibrate(par);
+    let mut rng = Rng::new(0xE91_0006);
+    let shape = pm.seed_input().shape().to_vec();
+    let xa = TensorI8::rand_sparse(&shape, 0.2, &mut rng);
+    let xb = TensorI8::rand_sparse(&shape, 0.8, &mut rng);
+    let first_a = pm.execute_fused(&xa, par);
+    let first_b = pm.execute_fused(&xb, par);
+    for round in 0..3 {
+        let again_b = pm.execute_fused(&xb, par);
+        let again_a = pm.execute_fused(&xa, par);
+        assert_eq!(first_a.output.data(), again_a.output.data(), "round {round} input A");
+        assert_eq!(first_b.output.data(), again_b.output.data(), "round {round} input B");
+        assert_eq!(first_a.act_sparsity, again_a.act_sparsity, "round {round} sparsities");
+    }
+}

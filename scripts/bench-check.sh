@@ -72,12 +72,15 @@ fresh_path, base_path, thr = sys.argv[1], sys.argv[2], float(sys.argv[3])
 TRACKED = ("gemm/", "conv/", "engine/")
 # Entries that must exist in every fresh run (enforced under the same
 # provenance/machine guards as the regression check): the SIMD microkernel
-# benches this gate was hardened to hold.
+# benches this gate was hardened to hold, plus the fused-epilogue entries
+# (the i8-chained execute path must stay on the gate).
 REQUIRED = (
     "gemm/dense_i8_512_simd",
     "gemm/dbb_i8_512_simd_50pct",
     "gemm/dbb_i8_512_simd_87pct",
     "engine/convnet5_execute_simd",
+    "gemm/dense_i8_512_epilogue",
+    "engine/convnet5_execute_fused_epilogue",
 )
 on_baseline_machine = (
     bool(os.environ.get("CI")) or os.environ.get("BENCH_CHECK_ENFORCE") == "1"

@@ -25,7 +25,8 @@ step cargo test -q
 # unsupported ISAs clamp down by rank, so all three legs run everywhere)
 for isa in scalar sse2 avx2; do
   step env SSTA_FORCE_ISA="$isa" cargo test -q --test micro_kernels \
-    --test tiled_gemm --test fused_conv --test zero_gate --test act_dbb
+    --test epilogue --test tiled_gemm --test fused_conv --test zero_gate \
+    --test act_dbb
 done
 step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
