@@ -170,6 +170,45 @@ fn main() {
         });
     }
 
+    // ---- serving substrate: flat-binary load + coordinator round trip ----
+    // `load_persisted` is the restart fast path: parse + revalidate the
+    // persisted flat binary, *no* synthesize/encode/calibrate — compare
+    // against engine/convnet5_prepare_first_call for what a restart skips.
+    // `engine_serve_steady_p99` is one steady-state request round trip
+    // through the engine-native coordinator (submit → batch-1 flush → fused
+    // execute → twin → reply), the latency an SLO p99 is built from.
+    {
+        let m8 = models::convnet5();
+        let mut persisted =
+            ssta::engine::PreparedModel::prepare(&m8, 3, 8, 42, Parallelism::auto());
+        persisted.profile(Parallelism::auto());
+        persisted.calibrate(Parallelism::auto());
+        let path = std::env::temp_dir()
+            .join(format!("ssta-bench-persist-{}.ssta", std::process::id()));
+        persisted.save(&path).expect("persisting prepared model");
+        set.bench("engine/convnet5_load_persisted", move || {
+            bb(ssta::engine::PreparedModel::load(&path, Parallelism::auto()).expect("load"));
+        });
+
+        use ssta::coordinator::{Config, Coordinator};
+        let coord = Coordinator::start(Config {
+            batch_sizes: vec![1],
+            max_wait: std::time::Duration::from_micros(100),
+            ..Config::default()
+        })
+        .expect("engine-native coordinator");
+        let h = coord.handle();
+        let mut rng = Rng::new(21);
+        let img: Vec<f32> = (0..32 * 32 * 3).map(|_| rng.f32()).collect();
+        for i in 0..32 {
+            h.infer(i, img.clone()).expect("warmup request");
+        }
+        set.bench("coordinator/engine_serve_steady_p99", move || {
+            let _keepalive = &coord;
+            bb(h.infer(0, img.clone()).expect("serve"));
+        });
+    }
+
     // ---- detailed engine (ground truth; used at small scale) ----
     {
         let mut rng = Rng::new(1);

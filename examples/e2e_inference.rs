@@ -150,6 +150,9 @@ fn main() -> Result<()> {
         design,
         act_sparsity: 0.5,
         max_wait: Duration::from_millis(1),
+        // this driver is the golden-replay comparison, so it pins the
+        // legacy XLA functional path explicitly
+        use_xla: true,
         ..Config::default()
     })?;
     let h = coord.handle();

@@ -1,0 +1,240 @@
+//! Closed-loop SLO load harness for the engine-native serving path.
+//!
+//! Drives the coordinator's registry-served fused engine (no artifacts, no
+//! XLA) with multi-threaded traffic against **two concurrently registered
+//! models** and reports, per model, the serving percentiles an SLO review
+//! would ask for — p50/p95/p99 latency, throughput — plus the hardware
+//! twin's effective TOPS and TOPS/W on exactly the traffic served.
+//!
+//! Two traffic shapes:
+//! * **closed loop** (default, `--rate 0`): `--concurrency` workers each
+//!   keep one request in flight — the classic SLO load pattern where
+//!   offered load adapts to the server.
+//! * **open loop** (`--rate R` > 0): requests are submitted at a fixed
+//!   arrival rate regardless of completions, so queueing delay shows up in
+//!   the tail percentiles.
+//!
+//! The run also exercises the two serving features this harness exists to
+//! gate:
+//! * **persistence** — models are prepared once into `--persist-dir` (a
+//!   scratch directory by default) and the coordinator is started twice;
+//!   the second start loads the flat binaries and its startup time is
+//!   reported next to the cold prepare.
+//! * **eviction** — an interleaved phase alternates models per request, so
+//!   under a tight `--budget-bytes` the registry thrashes and the eviction
+//!   counter moves (the miss path re-loads from the persisted binary).
+//!
+//! `--smoke` runs a seconds-scale version of all of the above and exits
+//! non-zero unless both models served, the percentiles are sane, and
+//! eviction actually happened — the CI entry point.
+//!
+//! ```sh
+//! cargo run --release --example serve_load -- --requests 512 --concurrency 8
+//! cargo run --release --example serve_load -- --smoke
+//! ```
+
+use std::time::{Duration, Instant};
+
+use ssta::arch::Design;
+use ssta::cli::Args;
+use ssta::coordinator::registry::ModelSpec;
+use ssta::coordinator::{Config, Coordinator, Handle};
+use ssta::util::error::{Error, Result};
+use ssta::util::Rng;
+
+const IMG: usize = 32 * 32 * 3;
+
+/// Closed loop: `concurrency` workers, each keeping one request in flight
+/// until `requests` total have completed for `model`. Returns the wall time.
+fn run_closed_loop(
+    h: &Handle,
+    model: &str,
+    images: &[Vec<f32>],
+    requests: usize,
+    concurrency: usize,
+) -> Duration {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for w in 0..concurrency {
+            let h = h.clone();
+            s.spawn(move || {
+                let mut i = w;
+                while i < requests {
+                    let img = images[i % images.len()].clone();
+                    h.infer_to(model, i as u64, img).expect("serving failed under load");
+                    i += concurrency;
+                }
+            });
+        }
+    });
+    t0.elapsed()
+}
+
+/// Open loop at `rate` requests/s: submissions are paced by arrival time,
+/// not by completions; all responses are drained at the end.
+fn run_open_loop(
+    h: &Handle,
+    model: &str,
+    images: &[Vec<f32>],
+    requests: usize,
+    rate: f64,
+) -> Duration {
+    let period = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let due = period * i as u32;
+        if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        let img = images[i % images.len()].clone();
+        pending.push(h.submit_to(model, i as u64, img).expect("submit failed"));
+    }
+    for rx in pending {
+        rx.recv().expect("serving failed under load");
+    }
+    t0.elapsed()
+}
+
+/// Interleave requests across all models round-robin — the registry-thrash
+/// phase that makes a tight byte budget evict on every model switch.
+fn run_interleaved(h: &Handle, models: &[String], images: &[Vec<f32>], requests: usize) -> Duration {
+    let t0 = Instant::now();
+    for i in 0..requests {
+        let model = &models[i % models.len()];
+        let img = images[i % images.len()].clone();
+        h.infer_to(model, i as u64, img).expect("serving failed under load");
+    }
+    t0.elapsed()
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let requests = args.opt_as::<usize>("requests", if smoke { 64 } else { 256 });
+    let concurrency = args.opt_as::<usize>("concurrency", 4).max(1);
+    let rate = args.opt_as::<f64>("rate", 0.0);
+    let design = Design::parse(args.opt("design").unwrap_or("4x8x8_8x8_VDBB_IM2C"))
+        .map_err(Error::msg)?;
+    // smoke forces the thrash regime: a budget of 1 byte can hold only one
+    // model, so the interleaved phase evicts on every switch
+    let budget = args.opt_as::<usize>("budget-bytes", if smoke { 1 } else { 256 * 1024 * 1024 });
+    let scratch;
+    let persist_dir = match args.opt("persist-dir") {
+        Some(d) => std::path::PathBuf::from(d),
+        None => {
+            scratch = std::env::temp_dir().join(format!("ssta-serve-load-{}", std::process::id()));
+            scratch.clone()
+        }
+    };
+    let cleanup_scratch = args.opt("persist-dir").is_none();
+
+    let cfg = Config {
+        design,
+        registry: vec![ModelSpec::new("ConvNet", 3, 8), ModelSpec::new("LeNet-5", 2, 8)],
+        registry_budget_bytes: budget,
+        persist_dir: Some(persist_dir.clone()),
+        max_wait: Duration::from_micros(500),
+        ..Config::default()
+    };
+
+    // ---- persistence: cold start (prepare + save) vs warm start (load) ----
+    let t0 = Instant::now();
+    let coord = Coordinator::start(cfg.clone())?;
+    let cold = t0.elapsed();
+    coord.shutdown()?;
+    let t1 = Instant::now();
+    let coord = Coordinator::start(cfg)?;
+    let warm = t1.elapsed();
+    println!(
+        "startup: cold prepare+persist {cold:.2?} → warm load from flat binaries {warm:.2?} \
+         ({:.1}x faster; encode/calibrate skipped)",
+        cold.as_secs_f64() / warm.as_secs_f64().max(1e-9)
+    );
+    let h = coord.handle();
+    let models: Vec<String> = h.models().to_vec();
+
+    let mut rng = Rng::new(17);
+    let images: Vec<Vec<f32>> =
+        (0..64).map(|_| (0..IMG).map(|_| rng.f32()).collect()).collect();
+
+    // ---- per-model load phases ----
+    for model in &models {
+        let wall = if rate > 0.0 {
+            run_open_loop(&h, model, &images, requests, rate)
+        } else {
+            run_closed_loop(&h, model, &images, requests, concurrency)
+        };
+        println!(
+            "{model}: {requests} requests in {wall:.2?} → {:.0} req/s \
+             ({} loop, concurrency {concurrency})",
+            requests as f64 / wall.as_secs_f64(),
+            if rate > 0.0 { "open" } else { "closed" },
+        );
+    }
+
+    // ---- registry-thrash phase: alternate models per request ----
+    let thrash = if smoke { requests.min(16) } else { requests.min(64) };
+    let wall = run_interleaved(&h, &models, &images, thrash);
+    println!("interleaved: {thrash} alternating requests in {wall:.2?} (eviction pressure)");
+
+    // ---- the SLO report ----
+    let m = coord.metrics();
+    let f = design.tech.freq_hz();
+    println!("aggregate: {}", m.summary());
+    println!("per-model SLO report ({}):", design.label());
+    for model in &models {
+        let Some(mm) = m.model(model) else {
+            println!("  {model}: served nothing");
+            continue;
+        };
+        let tops = mm.sim_effective_tops(f);
+        let watts = mm.sim_avg_power_w(f);
+        println!(
+            "  {model}: requests={} p50={}µs p95={}µs p99={}µs occupancy={:.2} \
+             twin {:.2} TOPS {:.3} W → {:.1} TOPS/W",
+            mm.requests,
+            mm.latency_pct(50.0),
+            mm.latency_pct(95.0),
+            mm.latency_pct(99.0),
+            mm.occupancy(),
+            tops,
+            watts,
+            tops / watts.max(1e-12),
+        );
+    }
+    println!("evictions: {}", m.evictions);
+    coord.shutdown()?;
+    if cleanup_scratch {
+        let _ = std::fs::remove_dir_all(&persist_dir);
+    }
+
+    // ---- smoke gate: the CI assertions ----
+    if smoke {
+        let mut failed = false;
+        for model in &models {
+            match m.model(model) {
+                Some(mm) if mm.requests > 0 && mm.latency_pct(99.0) > 0 => {}
+                _ => {
+                    eprintln!("SMOKE FAIL: model '{model}' served no measurable traffic");
+                    failed = true;
+                }
+            }
+        }
+        if m.evictions == 0 {
+            eprintln!("SMOKE FAIL: byte-budget eviction never triggered");
+            failed = true;
+        }
+        if warm >= cold {
+            // loading flat binaries must beat synthesize+encode+calibrate;
+            // warn only (CI machines can be noisy), the bit-exactness is
+            // test-pinned elsewhere
+            eprintln!("note: warm start {warm:.2?} not faster than cold {cold:.2?} on this run");
+        }
+        if failed {
+            std::process::exit(1);
+        }
+        println!("smoke OK: both models served, eviction exercised, percentiles populated");
+    }
+    Ok(())
+}

@@ -1,7 +1,11 @@
 //! Coordinator metrics: request/batch counters, latency percentiles over a
 //! fixed-size sample reservoir, and the hardware twin's aggregate (cycles,
-//! energy, effective TOPS).
+//! energy, effective TOPS). With the engine-native registry path serving
+//! several models from one process, every counter and reservoir is *also*
+//! split per model ([`Metrics::per_model`]) so each model's SLO percentiles
+//! and twin numbers are separable from the aggregate.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::util::{stats, Rng};
@@ -86,6 +90,67 @@ pub struct Metrics {
     pub sim_energy_mj: f64,
     /// Dense-equivalent MACs served (for effective-TOPS accounting).
     pub dense_macs: u64,
+    /// The same counters/reservoirs split per served model (engine-native
+    /// registry path; empty under the legacy single-model XLA path).
+    pub per_model: BTreeMap<String, ModelMetrics>,
+    /// Prepared models evicted from the registry under byte-budget pressure
+    /// (each later request for one pays a re-prepare/re-load on the miss).
+    pub evictions: u64,
+}
+
+/// Per-model slice of the serving metrics (see [`Metrics::per_model`]).
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    /// Requests completed for this model.
+    pub requests: u64,
+    /// Batches executed for this model.
+    pub batches: u64,
+    /// Rows executed including padding.
+    pub padded_rows: u64,
+    /// Per-request end-to-end latency reservoir (µs).
+    pub latency_us: Reservoir,
+    /// Per-batch engine execute time reservoir (µs).
+    pub execute_us: Reservoir,
+    /// Simulated accelerator cycles over this model's batches.
+    pub sim_cycles: u64,
+    /// Simulated accelerator energy over this model's batches (mJ).
+    pub sim_energy_mj: f64,
+    /// Dense-equivalent MACs served for this model.
+    pub dense_macs: u64,
+}
+
+impl ModelMetrics {
+    /// Mean batch occupancy (real rows per executed row).
+    pub fn occupancy(&self) -> f64 {
+        let total = self.requests + self.padded_rows;
+        if total == 0 {
+            return 0.0;
+        }
+        self.requests as f64 / total as f64
+    }
+
+    /// Latency percentile in µs (over this model's sample reservoir).
+    pub fn latency_pct(&self, p: f64) -> u64 {
+        self.latency_us.percentile(p)
+    }
+
+    /// Simulated effective TOPS of the hardware twin at `freq_hz`.
+    pub fn sim_effective_tops(&self, freq_hz: f64) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.sim_cycles as f64 / freq_hz;
+        2.0 * self.dense_macs as f64 / secs / 1e12
+    }
+
+    /// Simulated average power of the twin (W) at `freq_hz`.
+    pub fn sim_avg_power_w(&self, freq_hz: f64) -> f64 {
+        if self.sim_cycles == 0 {
+            return 0.0;
+        }
+        let secs = self.sim_cycles as f64 / freq_hz;
+        self.sim_energy_mj / 1e3 / secs
+    }
 }
 
 impl Metrics {
@@ -108,9 +173,44 @@ impl Metrics {
         self.dense_macs += dense_macs;
     }
 
+    /// Record one completed batch against the aggregate *and* `model`'s
+    /// per-model slice.
+    pub fn record_batch_for(
+        &mut self,
+        model: &str,
+        real_rows: usize,
+        compiled_rows: usize,
+        execute: Duration,
+        sim_cycles: u64,
+        sim_energy_mj: f64,
+        dense_macs: u64,
+    ) {
+        self.record_batch(real_rows, compiled_rows, execute, sim_cycles, sim_energy_mj, dense_macs);
+        let mm = self.per_model.entry(model.to_string()).or_default();
+        mm.batches += 1;
+        mm.requests += real_rows as u64;
+        mm.padded_rows += (compiled_rows - real_rows) as u64;
+        mm.execute_us.push(execute.as_micros() as u64);
+        mm.sim_cycles += sim_cycles;
+        mm.sim_energy_mj += sim_energy_mj;
+        mm.dense_macs += dense_macs;
+    }
+
     /// Record one request's end-to-end latency.
     pub fn record_latency(&mut self, l: Duration) {
         self.latency_us.push(l.as_micros() as u64);
+    }
+
+    /// Record one request's end-to-end latency against the aggregate *and*
+    /// `model`'s per-model slice.
+    pub fn record_latency_for(&mut self, model: &str, l: Duration) {
+        self.record_latency(l);
+        self.per_model.entry(model.to_string()).or_default().latency_us.push(l.as_micros() as u64);
+    }
+
+    /// `model`'s metrics slice, if it served anything.
+    pub fn model(&self, model: &str) -> Option<&ModelMetrics> {
+        self.per_model.get(model)
     }
 
     /// Mean batch occupancy (real rows per executed row).
@@ -145,9 +245,11 @@ impl Metrics {
         self.sim_energy_mj / 1e3 / secs
     }
 
-    /// One-line human summary.
+    /// One-line human summary — plus one indented line per served model
+    /// (and the eviction count) when the registry path populated the
+    /// per-model split.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} batches={} occupancy={:.2} p50={}us p95={}us p99={}us \
              sim_cycles={} sim_energy={:.2}mJ",
             self.requests,
@@ -158,7 +260,25 @@ impl Metrics {
             self.latency_pct(99.0),
             self.sim_cycles,
             self.sim_energy_mj,
-        )
+        );
+        if self.evictions > 0 {
+            s.push_str(&format!(" evictions={}", self.evictions));
+        }
+        for (name, mm) in &self.per_model {
+            s.push_str(&format!(
+                "\n  {name}: requests={} batches={} occupancy={:.2} p50={}us p95={}us \
+                 p99={}us sim_cycles={} sim_energy={:.2}mJ",
+                mm.requests,
+                mm.batches,
+                mm.occupancy(),
+                mm.latency_pct(50.0),
+                mm.latency_pct(95.0),
+                mm.latency_pct(99.0),
+                mm.sim_cycles,
+                mm.sim_energy_mj,
+            ));
+        }
+        s
     }
 }
 
@@ -229,5 +349,42 @@ mod tests {
         assert_eq!(m.occupancy(), 0.0);
         assert_eq!(m.latency_pct(50.0), 0);
         assert_eq!(m.sim_effective_tops(1e9), 0.0);
+        assert!(m.per_model.is_empty());
+        assert_eq!(m.evictions, 0);
+    }
+
+    #[test]
+    fn per_model_split_tracks_each_model() {
+        let mut m = Metrics::default();
+        m.record_batch_for("a", 3, 8, Duration::from_micros(100), 1000, 0.5, 1_000_000);
+        m.record_batch_for("b", 8, 8, Duration::from_micros(50), 2000, 1.0, 2_000_000);
+        m.record_batch_for("a", 2, 2, Duration::from_micros(80), 500, 0.25, 500_000);
+        m.record_latency_for("a", Duration::from_micros(300));
+        m.record_latency_for("b", Duration::from_micros(700));
+        // aggregate view sums across models (existing invariants intact)
+        assert_eq!(m.requests, 13);
+        assert_eq!(m.batches, 3);
+        assert_eq!(m.sim_cycles, 3500);
+        assert_eq!(m.latency_us.seen(), 2);
+        // per-model slices separate cleanly
+        let a = m.model("a").unwrap();
+        assert_eq!(a.requests, 5);
+        assert_eq!(a.batches, 2);
+        assert_eq!(a.padded_rows, 5);
+        assert_eq!(a.sim_cycles, 1500);
+        assert!((a.occupancy() - 5.0 / 10.0).abs() < 1e-12);
+        assert_eq!(a.latency_pct(50.0), 300);
+        let b = m.model("b").unwrap();
+        assert_eq!(b.requests, 8);
+        assert_eq!(b.padded_rows, 0);
+        assert_eq!(b.latency_pct(50.0), 700);
+        assert!(b.sim_effective_tops(1e9) > 0.0);
+        assert!(m.model("c").is_none());
+        // the per-model table rides on the summary line
+        m.evictions = 2;
+        let s = m.summary();
+        assert!(s.contains("evictions=2"), "{s}");
+        assert!(s.contains("\n  a: requests=5"), "{s}");
+        assert!(s.contains("\n  b: requests=8"), "{s}");
     }
 }

@@ -1,37 +1,57 @@
 //! Layer-3 inference coordinator: the serving loop in front of the
 //! accelerator.
 //!
-//! The leader thread owns the PJRT [`crate::runtime::Runtime`] (thread-
-//! affine) and runs the event loop: drain the request channel, let the
-//! [`batcher::BatchPolicy`] decide when to flush, execute the AOT model
-//! executable for each planned chunk (batch folded into GEMM `M`, exactly
-//! like the hardware folds it into array rows), split the logits back to
-//! the callers and account metrics.
+//! The leader thread runs the event loop: drain the request channel, let
+//! the [`batcher::BatchPolicy`] decide when to flush, execute each planned
+//! chunk (batch folded into GEMM `M`, exactly like the hardware folds it
+//! into array rows), split the logits back to the callers and account
+//! metrics.
+//!
+//! **The default functional path is engine-native**: requests route by
+//! model name through a [`registry::ModelRegistry`] of
+//! [`crate::engine::PreparedModel`]s — each model's one-time lowering
+//! (synthesize → DBB encode/pack → profile → calibrate) is amortized at
+//! startup (or skipped entirely by loading a persisted flat binary from
+//! [`Config::persist_dir`]), and every batch runs through
+//! [`crate::engine::PreparedModel::execute_fused_batch`]: the fused
+//! requant/ReLU/pool epilogue, zero steady-state allocation, no artifact
+//! directory and no XLA runtime required. The registry evicts
+//! least-recently-used models past a packed-operand byte budget; a request
+//! for an evicted model transparently re-loads/re-prepares it. The legacy
+//! PJRT/XLA path (the AOT `convnet5_b*` executables, thread-affine
+//! [`crate::runtime::Runtime`]) is preserved behind [`Config::use_xla`] for
+//! the artifact-replay tests and golden comparisons.
 //!
 //! Every executed batch is *also* run through the architecture simulator as
 //! a **hardware twin** — the same layer profile the power model consumes —
-//! so the serving path reports both measured XLA latency and the simulated
-//! accelerator cycles/energy the paper's tables are built from. The twin is
-//! the timing path; XLA is the functional path. Python appears in neither.
+//! so the serving path reports both measured host latency and the simulated
+//! accelerator cycles/energy the paper's tables are built from, split per
+//! model ([`metrics::Metrics::per_model`]). The twin is the timing path;
+//! the engine (or XLA) is the functional path. Python appears in neither.
 
 pub mod batcher;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 
+use std::collections::HashMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::arch::Design;
+use crate::engine::PreparedModel;
 use crate::gemm::ActPolicy;
 use crate::power;
 use crate::runtime::{HostTensor, Runtime};
 use crate::sim::accel::{network_timing_with, profile_model_fixed_act, LayerProfile};
+use crate::tensor::TensorI8;
 use crate::util::error::{anyhow, bail, Context, Result};
 use crate::util::Parallelism;
 use batcher::BatchPolicy;
 use metrics::Metrics;
+use registry::{ModelRegistry, ModelSpec};
 use request::{InferRequest, InferResponse};
 
 const IMAGE_ELEMS: usize = 32 * 32 * 3;
@@ -77,6 +97,28 @@ pub struct Config {
     /// knob never changes a served or profiled number, only the simulated
     /// traffic/energy and the engine's own execute cost.
     pub act_policy: ActPolicy,
+    /// Serve through the legacy PJRT/XLA artifact path (single compiled
+    /// `convnet5` model; requires `make artifacts`) instead of the default
+    /// engine-native registry path. Default `false`.
+    pub use_xla: bool,
+    /// The models the engine-native path registers and serves, each at its
+    /// own DBB encoding point. Ignored (and unvalidated) under
+    /// [`Self::use_xla`]. Default: ConvNet at the paper's 3/8.
+    pub registry: Vec<ModelSpec>,
+    /// Byte budget over the registry's resident packed weight operands
+    /// ([`crate::engine::PreparedModel::operand_bytes`]); exceeding it
+    /// evicts least-recently-used models. Default 256 MiB.
+    pub registry_budget_bytes: usize,
+    /// Batch sizes the engine-native batch planner chunks to (the engine
+    /// has no compiled-shape constraint, but fixed chunk sizes keep the
+    /// padding/occupancy accounting — and the twin's batch scaling —
+    /// identical to the XLA path). Default `[1, 8]`.
+    pub batch_sizes: Vec<usize>,
+    /// Directory of persisted prepared-model flat binaries. When set, the
+    /// engine-native startup loads `<model>_nnz<n>_bz<b>.ssta` instead of
+    /// re-preparing (skipping synthesize/encode/calibrate entirely), and
+    /// freshly prepared models are saved there for the next restart.
+    pub persist_dir: Option<std::path::PathBuf>,
 }
 
 impl Default for Config {
@@ -89,6 +131,11 @@ impl Default for Config {
             parallelism: Parallelism::serial(),
             measured_sparsity: true,
             act_policy: ActPolicy::default(),
+            use_xla: false,
+            registry: vec![ModelSpec::new("ConvNet", 3, 8)],
+            registry_budget_bytes: 256 * 1024 * 1024,
+            batch_sizes: vec![1, 8],
+            persist_dir: None,
         }
     }
 }
@@ -109,6 +156,44 @@ impl Config {
                  flushes every request alone and defeats batching)"
             );
         }
+        if !self.use_xla {
+            if self.registry.is_empty() {
+                bail!(
+                    "coordinator config: engine-native serving needs a non-empty model \
+                     registry (or set use_xla for the legacy artifact path)"
+                );
+            }
+            if self.registry_budget_bytes == 0 {
+                bail!("coordinator config: registry eviction budget must be non-zero bytes");
+            }
+            if self.batch_sizes.is_empty() || self.batch_sizes.contains(&0) {
+                bail!("coordinator config: batch_sizes must be non-empty and non-zero");
+            }
+            let zoo = crate::models::all_models();
+            let mut seen: Vec<&str> = Vec::new();
+            for spec in &self.registry {
+                if seen.contains(&spec.model.as_str()) {
+                    bail!("coordinator config: duplicate registry entry '{}'", spec.model);
+                }
+                seen.push(&spec.model);
+                if !zoo.iter().any(|m| m.name == spec.model) {
+                    bail!(
+                        "coordinator config: unknown model '{}' (zoo: {})",
+                        spec.model,
+                        zoo.iter().map(|m| m.name).collect::<Vec<_>>().join(", ")
+                    );
+                }
+                if spec.nnz == 0 || spec.bz == 0 || spec.bz > 16 || spec.nnz > spec.bz {
+                    bail!(
+                        "coordinator config: model '{}' needs 1 <= nnz <= bz <= 16, \
+                         got nnz={} bz={}",
+                        spec.model,
+                        spec.nnz,
+                        spec.bz
+                    );
+                }
+            }
+        }
         Ok(())
     }
 }
@@ -124,6 +209,9 @@ enum Msg {
 pub struct Handle {
     tx: mpsc::Sender<Msg>,
     metrics: Arc<Mutex<Metrics>>,
+    /// Names the coordinator serves (registry order; the first is the
+    /// default route for [`Handle::submit`]).
+    models: Arc<Vec<String>>,
 }
 
 /// A running coordinator (joined by [`Coordinator::shutdown`] or drop).
@@ -133,26 +221,38 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the leader thread; compiles the model executables and prepares
-    /// the hardware twin's model up front so the first request pays neither
-    /// compile nor weight-encode latency. Fails fast on an invalid
-    /// [`Config`].
+    /// Start the leader thread; prepares (or loads) every registered model
+    /// and its hardware twin up front — on the XLA path, compiles the model
+    /// executables — so the first request pays neither lowering nor compile
+    /// latency. Fails fast on an invalid [`Config`].
     pub fn start(cfg: Config) -> Result<Coordinator> {
         cfg.validate()?;
+        let models: Arc<Vec<String>> = Arc::new(if cfg.use_xla {
+            vec!["ConvNet".to_string()]
+        } else {
+            cfg.registry.iter().map(|s| s.model.clone()).collect()
+        });
+        let use_xla = cfg.use_xla;
         let (tx, rx) = mpsc::channel::<Msg>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let metrics2 = metrics.clone();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
         let worker = std::thread::Builder::new()
             .name("ssta-coordinator".into())
-            .spawn(move || leader_loop(cfg, rx, metrics2, ready_tx))
+            .spawn(move || {
+                if use_xla {
+                    leader_loop(cfg, rx, metrics2, ready_tx)
+                } else {
+                    leader_loop_engine(cfg, rx, metrics2, ready_tx)
+                }
+            })
             .context("spawning coordinator thread")?;
-        // wait for the runtime to come up (or fail fast)
+        // wait for the serving path to come up (or fail fast)
         ready_rx
             .recv()
             .map_err(|_| anyhow!("coordinator thread died during startup"))??;
         Ok(Coordinator {
-            handle: Handle { tx, metrics },
+            handle: Handle { tx, metrics, models },
             worker: Some(worker),
         })
     }
@@ -187,15 +287,52 @@ impl Drop for Coordinator {
 }
 
 impl Handle {
-    /// Submit one image; returns the receiver for the response.
+    /// Submit one image to the default route (the first registered model);
+    /// returns the receiver for the response.
     pub fn submit(&self, id: u64, image: Vec<f32>) -> Result<mpsc::Receiver<InferResponse>> {
         if image.len() != IMAGE_ELEMS {
             bail!("image must have {IMAGE_ELEMS} elements, got {}", image.len());
         }
+        let model = self
+            .models
+            .first()
+            .cloned()
+            .unwrap_or_else(|| "ConvNet".to_string());
+        self.submit_routed(model, id, image)
+    }
+
+    /// Submit one image routed to a registered model by name. Unknown
+    /// names fail here with a typed error — the request never reaches the
+    /// leader loop.
+    pub fn submit_to(
+        &self,
+        model: &str,
+        id: u64,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferResponse>> {
+        if image.is_empty() {
+            bail!("image must be non-empty");
+        }
+        if !self.models.iter().any(|m| m == model) {
+            bail!(
+                "unknown model '{model}': this coordinator serves [{}]",
+                self.models.join(", ")
+            );
+        }
+        self.submit_routed(model.to_string(), id, image)
+    }
+
+    fn submit_routed(
+        &self,
+        model: String,
+        id: u64,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<InferResponse>> {
         let (reply, rx) = mpsc::channel();
         self.tx
             .send(Msg::Infer(InferRequest {
                 id,
+                model,
                 image,
                 enqueued: Instant::now(),
                 reply,
@@ -204,10 +341,21 @@ impl Handle {
         Ok(rx)
     }
 
-    /// Submit and block for the response.
+    /// Submit and block for the response (default route).
     pub fn infer(&self, id: u64, image: Vec<f32>) -> Result<InferResponse> {
         let rx = self.submit(id, image)?;
         rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// Submit to a named model and block for the response.
+    pub fn infer_to(&self, model: &str, id: u64, image: Vec<f32>) -> Result<InferResponse> {
+        let rx = self.submit_to(model, id, image)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped the request"))
+    }
+
+    /// Names this coordinator serves (registry order).
+    pub fn models(&self) -> &[String] {
+        &self.models
     }
 
     /// Metrics snapshot.
@@ -252,6 +400,23 @@ impl Twin {
         }
     }
 
+    /// Twin with an *assumed* uniform activation sparsity for an arbitrary
+    /// zoo model (the engine-native `measured_sparsity: false` path).
+    fn assumed(
+        design: Design,
+        model: &crate::models::Model,
+        nnz: usize,
+        bz: usize,
+        act_sparsity: f64,
+        par: Parallelism,
+    ) -> Twin {
+        Twin {
+            design,
+            profiles_b1: profile_model_fixed_act(model, nnz, bz, act_sparsity),
+            par,
+        }
+    }
+
     /// Simulated (cycles, energy mJ, dense MACs) for one executed batch.
     fn simulate(&self, batch: usize) -> (u64, f64, u64) {
         let profiles: Vec<LayerProfile> = self
@@ -270,6 +435,274 @@ impl Twin {
         let energy_mj = pw.total_mw() * secs; // mW · s = mJ
         (t.total.cycles, energy_mj, t.dense_macs)
     }
+}
+
+/// File name of a model's persisted flat binary under
+/// [`Config::persist_dir`].
+fn persist_file(spec: &ModelSpec) -> String {
+    format!("{}_nnz{}_bz{}.ssta", spec.model, spec.nnz, spec.bz)
+}
+
+/// Produce one serving-ready [`PreparedModel`] for `spec`: load the
+/// persisted flat binary when [`Config::persist_dir`] holds a matching one
+/// (skipping synthesize/encode/profile/calibrate entirely — the restart
+/// fast path), otherwise run the full one-time lowering and persist it for
+/// the next restart. Either way the returned model is profiled, calibrated,
+/// and declared fused-epilogue for twin pricing.
+fn prepare_served(cfg: &Config, spec: &ModelSpec) -> Result<PreparedModel> {
+    let path = cfg.persist_dir.as_ref().map(|d| d.join(persist_file(spec)));
+    if let Some(p) = &path {
+        if p.exists() {
+            match PreparedModel::load(p, cfg.parallelism) {
+                Ok(mut pm)
+                    if pm.model_name() == spec.model
+                        && pm.encoding() == (spec.nnz, spec.bz, TWIN_SEED)
+                        && pm.measured_act_sparsity().is_some()
+                        && pm.calibrated_shifts().is_some() =>
+                {
+                    pm.set_act_policy(cfg.act_policy);
+                    pm.set_fused_epilogue(true);
+                    return Ok(pm);
+                }
+                // stale or corrupt artifact: fall through to a fresh
+                // prepare, which overwrites it
+                Ok(_) | Err(_) => {}
+            }
+        }
+    }
+    let model = crate::models::all_models()
+        .into_iter()
+        .find(|m| m.name == spec.model)
+        .ok_or_else(|| anyhow!("unknown model '{}' in registry config", spec.model))?;
+    let mut pm = PreparedModel::prepare(&model, spec.nnz, spec.bz, TWIN_SEED, cfg.parallelism);
+    pm.set_act_policy(cfg.act_policy);
+    pm.set_fused_epilogue(true);
+    pm.profile(cfg.parallelism);
+    pm.calibrate(cfg.parallelism);
+    if let Some(p) = &path {
+        if let Some(dir) = p.parent() {
+            let _ = std::fs::create_dir_all(dir);
+        }
+        if let Err(e) = pm.save(p) {
+            eprintln!("warning: could not persist prepared model {}: {e}", p.display());
+        }
+    }
+    Ok(pm)
+}
+
+/// The engine-native leader loop: registry-served, no PJRT runtime.
+fn leader_loop_engine(
+    cfg: Config,
+    rx: mpsc::Receiver<Msg>,
+    metrics: Arc<Mutex<Metrics>>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    // ---- startup: prepare/load every registered model and its twin ----
+    let startup = (|| -> Result<(ModelRegistry, HashMap<String, Twin>)> {
+        let mut registry = ModelRegistry::new(cfg.registry_budget_bytes);
+        let mut twins = HashMap::new();
+        for spec in &cfg.registry {
+            let pm = prepare_served(&cfg, spec)?;
+            let twin = if cfg.measured_sparsity {
+                let profiles = pm
+                    .profiles()
+                    .ok_or_else(|| anyhow!("prepared model '{}' has no profile", spec.model))?;
+                Twin::from_profiles(cfg.design, profiles, cfg.parallelism)
+            } else {
+                let model = crate::models::all_models()
+                    .into_iter()
+                    .find(|m| m.name == spec.model)
+                    .ok_or_else(|| anyhow!("unknown model '{}'", spec.model))?;
+                Twin::assumed(
+                    cfg.design,
+                    &model,
+                    spec.nnz,
+                    spec.bz,
+                    cfg.act_sparsity,
+                    cfg.parallelism,
+                )
+            };
+            twins.insert(spec.model.clone(), twin);
+            let evicted = registry.insert(spec.model.clone(), pm);
+            if !evicted.is_empty() {
+                metrics.lock().unwrap().evictions += evicted.len() as u64;
+            }
+        }
+        Ok((registry, twins))
+    })();
+    let (mut registry, twins) = match startup {
+        Ok(v) => {
+            let _ = ready.send(Ok(()));
+            v
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return Ok(());
+        }
+    };
+    let policy = BatchPolicy::new(cfg.batch_sizes.clone(), cfg.max_wait);
+    let mut queue: Vec<InferRequest> = Vec::new();
+
+    loop {
+        // ---- wait for work (same cadence as the XLA loop) ----
+        let msg = if queue.is_empty() {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => return Ok(()), // all senders gone
+            }
+        } else {
+            let oldest = queue[0].enqueued.elapsed();
+            let budget = cfg.max_wait.saturating_sub(oldest);
+            match rx.recv_timeout(budget) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    flush_native(&cfg, &policy, &mut registry, &twins, &mut queue, &metrics)?;
+                    return Ok(());
+                }
+            }
+        };
+        match msg {
+            Some(Msg::Infer(r)) => {
+                queue.push(r);
+                while queue.len() < policy.max_batch() {
+                    match rx.try_recv() {
+                        Ok(Msg::Infer(r)) => queue.push(r),
+                        Ok(Msg::Shutdown) => {
+                            flush_native(
+                                &cfg,
+                                &policy,
+                                &mut registry,
+                                &twins,
+                                &mut queue,
+                                &metrics,
+                            )?;
+                            return Ok(());
+                        }
+                        Err(_) => break,
+                    }
+                }
+            }
+            Some(Msg::Shutdown) => {
+                flush_native(&cfg, &policy, &mut registry, &twins, &mut queue, &metrics)?;
+                return Ok(());
+            }
+            None => {}
+        }
+        let oldest = queue.first().map(|r| r.enqueued.elapsed()).unwrap_or_default();
+        if policy.should_flush(queue.len(), oldest) {
+            flush_native(&cfg, &policy, &mut registry, &twins, &mut queue, &metrics)?;
+        }
+    }
+}
+
+/// Quantize a `[0,1]` f32 image to the engine's symmetric INT8 domain.
+fn quantize_image(image: &[f32]) -> TensorI8 {
+    let data: Vec<i8> = image
+        .iter()
+        .map(|&v| (v * 127.0).round().clamp(-127.0, 127.0) as i8)
+        .collect();
+    if data.len() == IMAGE_ELEMS {
+        TensorI8::from_vec(&[32, 32, 3], data)
+    } else {
+        let n = data.len();
+        TensorI8::from_vec(&[n], data)
+    }
+}
+
+/// Execute everything in the queue through the registry-served fused
+/// engine: group by model (arrival order preserved), chunk each group by
+/// the batch plan, fold each chunk into one
+/// [`PreparedModel::execute_fused_batch`] call.
+fn flush_native(
+    cfg: &Config,
+    policy: &BatchPolicy,
+    registry: &mut ModelRegistry,
+    twins: &HashMap<String, Twin>,
+    queue: &mut Vec<InferRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+) -> Result<()> {
+    if queue.is_empty() {
+        return Ok(());
+    }
+    let mut buckets: Vec<(String, Vec<InferRequest>)> = Vec::new();
+    for r in std::mem::take(queue) {
+        match buckets.iter_mut().find(|(n, _)| *n == r.model) {
+            Some((_, v)) => v.push(r),
+            None => {
+                let name = r.model.clone();
+                buckets.push((name, vec![r]));
+            }
+        }
+    }
+    for (name, reqs) in buckets {
+        // cold model (evicted under budget pressure): re-load/re-prepare on
+        // the miss, evicting whatever the budget demands in turn
+        if !registry.contains(&name) {
+            let spec = cfg
+                .registry
+                .iter()
+                .find(|s| s.model == name)
+                .ok_or_else(|| anyhow!("request for unconfigured model '{name}'"))?;
+            let pm = prepare_served(cfg, spec)?;
+            let evicted = registry.insert(name.clone(), pm);
+            if !evicted.is_empty() {
+                metrics.lock().unwrap().evictions += evicted.len() as u64;
+            }
+        }
+        let plan = policy.plan(reqs.len());
+        let mut iter = reqs.into_iter();
+        for (compiled, real) in plan {
+            let chunk: Vec<InferRequest> = iter.by_ref().take(real).collect();
+            debug_assert_eq!(chunk.len(), real);
+
+            let mut inputs: Vec<TensorI8> =
+                chunk.iter().map(|r| quantize_image(&r.image)).collect();
+            // padding rows are zero images whose outputs are dropped
+            let pad_shape = inputs[0].shape().to_vec();
+            inputs.resize_with(compiled, || TensorI8::zeros(&pad_shape));
+
+            let pm = registry.get(&name).expect("ensured resident above");
+            let t0 = Instant::now();
+            let outs = pm.execute_fused_batch(&inputs, cfg.parallelism);
+            let exec = t0.elapsed();
+
+            let (sim_cycles, sim_energy_mj, dense_macs) = twins
+                .get(&name)
+                .map(|t| t.simulate(compiled))
+                .unwrap_or((0, 0.0, 0));
+            {
+                let mut m = metrics.lock().unwrap();
+                m.record_batch_for(
+                    &name,
+                    real,
+                    compiled,
+                    exec,
+                    sim_cycles,
+                    sim_energy_mj,
+                    dense_macs,
+                );
+            }
+
+            for (i, r) in chunk.into_iter().enumerate() {
+                let logits: Vec<f32> =
+                    outs[i].data().iter().take(NUM_CLASSES).map(|&v| v as f32).collect();
+                let queue_us = (t0 - r.enqueued).as_micros() as u64;
+                let resp = InferResponse {
+                    id: r.id,
+                    logits,
+                    batch_size: compiled,
+                    queue_us,
+                    execute_us: exec.as_micros() as u64,
+                    sim_cycles,
+                    sim_energy_mj,
+                };
+                metrics.lock().unwrap().record_latency_for(&name, r.enqueued.elapsed());
+                let _ = r.reply.send(resp); // caller may have gone away — fine
+            }
+        }
+    }
+    Ok(())
 }
 
 fn leader_loop(
@@ -449,8 +882,19 @@ mod tests {
     }
 
     fn test_cfg() -> Config {
+        // the artifact-replay tests pin the legacy XLA functional path
         Config {
             artifacts_dir: std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+            use_xla: true,
+            ..Config::default()
+        }
+    }
+
+    fn engine_cfg() -> Config {
+        // engine-native serving: no artifacts, no XLA — prepared models only
+        Config {
+            artifacts_dir: "does-not-exist".into(),
+            max_wait: Duration::from_micros(200),
             ..Config::default()
         }
     }
@@ -559,6 +1003,128 @@ mod tests {
             .err()
             .expect("zero max_wait must be rejected");
         assert!(e.to_string().contains("max_wait"), "{e}");
+    }
+
+    #[test]
+    fn engine_native_serves_without_artifacts() {
+        // the default path: registry-routed execute_fused, no XLA anywhere
+        let c = Coordinator::start(engine_cfg()).unwrap();
+        let h = c.handle();
+        assert_eq!(h.models(), ["ConvNet".to_string()]);
+        let mut rng = Rng::new(11);
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.f32()).collect();
+        let resp = h.infer(7, img.clone()).unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.logits.len(), NUM_CLASSES);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+        assert!(resp.sim_cycles > 0, "twin must price engine-served batches");
+        // deterministic: the same image serves the same logits
+        let again = h.infer_to("ConvNet", 8, img).unwrap();
+        assert_eq!(again.logits, resp.logits);
+        let m = c.metrics();
+        assert_eq!(m.requests, 2);
+        let mm = m.model("ConvNet").expect("per-model split populated");
+        assert_eq!(mm.requests, 2);
+        assert!(mm.latency_pct(50.0) > 0);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn unknown_model_fails_typed_at_the_handle() {
+        let c = Coordinator::start(engine_cfg()).unwrap();
+        let h = c.handle();
+        let e = h
+            .submit_to("NoSuchNet", 1, vec![0.5; IMAGE_ELEMS])
+            .err()
+            .expect("unknown model must be rejected");
+        assert!(e.to_string().contains("unknown model 'NoSuchNet'"), "{e}");
+        assert!(h.submit_to("ConvNet", 2, Vec::new()).is_err(), "empty image");
+        // the coordinator survives the rejection
+        assert!(h.infer(3, vec![0.25; IMAGE_ELEMS]).is_ok());
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn registry_budget_evicts_and_reloads_across_models() {
+        // a 1-byte budget can hold only one model at a time: startup keeps
+        // the last registered, and each cross-model request re-prepares on
+        // the miss, evicting the other — serving still works throughout
+        let cfg = Config {
+            registry: vec![ModelSpec::new("LeNet-5", 2, 8), ModelSpec::new("ConvNet", 3, 8)],
+            registry_budget_bytes: 1,
+            ..engine_cfg()
+        };
+        let c = Coordinator::start(cfg).unwrap();
+        let h = c.handle();
+        let mut rng = Rng::new(12);
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.f32()).collect();
+        let a = h.infer_to("LeNet-5", 1, img.clone()).unwrap();
+        let b = h.infer_to("ConvNet", 2, img.clone()).unwrap();
+        let a2 = h.infer_to("LeNet-5", 3, img).unwrap();
+        assert_eq!(a.logits.len(), NUM_CLASSES);
+        assert_eq!(b.logits.len(), NUM_CLASSES);
+        assert_eq!(a.logits, a2.logits, "re-prepared model must serve identically");
+        let m = c.metrics();
+        assert!(m.evictions >= 2, "evictions={}", m.evictions);
+        assert_eq!(m.model("LeNet-5").unwrap().requests, 2);
+        assert_eq!(m.model("ConvNet").unwrap().requests, 1);
+        c.shutdown().unwrap();
+    }
+
+    #[test]
+    fn engine_config_validation_fails_fast() {
+        let e = Coordinator::start(Config { registry: Vec::new(), ..engine_cfg() })
+            .err()
+            .expect("empty registry must be rejected");
+        assert!(e.to_string().contains("registry"), "{e}");
+        let e = Coordinator::start(Config { registry_budget_bytes: 0, ..engine_cfg() })
+            .err()
+            .expect("zero budget must be rejected");
+        assert!(e.to_string().contains("budget"), "{e}");
+        let e = Coordinator::start(Config {
+            registry: vec![ModelSpec::new("NoSuchNet", 3, 8)],
+            ..engine_cfg()
+        })
+        .err()
+        .expect("unknown model must be rejected");
+        assert!(e.to_string().contains("unknown model"), "{e}");
+        assert!(Coordinator::start(Config {
+            registry: vec![ModelSpec::new("ConvNet", 9, 8)],
+            ..engine_cfg()
+        })
+        .is_err());
+        assert!(Coordinator::start(Config {
+            registry: vec![ModelSpec::new("ConvNet", 3, 8), ModelSpec::new("ConvNet", 2, 8)],
+            ..engine_cfg()
+        })
+        .is_err());
+        assert!(Coordinator::start(Config { batch_sizes: Vec::new(), ..engine_cfg() }).is_err());
+        // the XLA path skips registry validation entirely
+        assert!(Config { registry: Vec::new(), use_xla: true, ..Config::default() }
+            .validate()
+            .is_ok());
+    }
+
+    #[test]
+    fn persisted_registry_restart_serves_identically() {
+        let dir = std::env::temp_dir().join(format!("ssta-persist-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cfg = Config { persist_dir: Some(dir.clone()), ..engine_cfg() };
+        let mut rng = Rng::new(13);
+        let img: Vec<f32> = (0..IMAGE_ELEMS).map(|_| rng.f32()).collect();
+        // first start prepares and persists
+        let c = Coordinator::start(cfg.clone()).unwrap();
+        let first = c.handle().infer(1, img.clone()).unwrap();
+        c.shutdown().unwrap();
+        let artifact = dir.join(persist_file(&cfg.registry[0]));
+        assert!(artifact.exists(), "prepared model must be persisted");
+        // second start loads the flat binary (no re-prepare) and must serve
+        // bit-identically
+        let c = Coordinator::start(cfg).unwrap();
+        let second = c.handle().infer(2, img).unwrap();
+        assert_eq!(first.logits, second.logits, "load-vs-prepare must be bit-exact");
+        c.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,216 @@
+//! Prepared-model registry: the coordinator's named, byte-budgeted cache of
+//! lowered models.
+//!
+//! Serving more than one network means paying more than one one-time
+//! lowering ([`PreparedModel::prepare`] + profile + calibrate) — the
+//! registry amortizes each exactly once per model and routes requests by
+//! name. Residency is bounded by a **byte budget** over the models' packed
+//! weight operands ([`PreparedModel::operand_bytes`] — the same accounting
+//! the paper's Table-III SRAM sizing uses): inserting past the budget
+//! evicts least-recently-used models until the resident set fits again, and
+//! a later request for an evicted model transparently re-prepares (or
+//! re-loads the persisted flat binary — see [`PreparedModel::load`]) on the
+//! miss path. A single model larger than the whole budget is kept anyway:
+//! an empty registry serves nothing, which is strictly worse than an
+//! over-budget one.
+
+use crate::engine::PreparedModel;
+
+/// One served model's identity: zoo name plus the DBB encoding point it is
+/// prepared at (paper Table I's `nnz/bz`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Model-zoo name (see [`crate::models::all_models`]).
+    pub model: String,
+    /// Retained weights per DBB block.
+    pub nnz: usize,
+    /// DBB block size.
+    pub bz: usize,
+}
+
+impl ModelSpec {
+    /// Spec for `model` at `nnz`/`bz`.
+    pub fn new(model: &str, nnz: usize, bz: usize) -> ModelSpec {
+        ModelSpec { model: model.to_string(), nnz, bz }
+    }
+}
+
+struct Entry {
+    name: String,
+    bytes: usize,
+    last_used: u64,
+    model: PreparedModel,
+}
+
+/// LRU byte-budgeted cache of [`PreparedModel`]s, keyed by model name.
+pub struct ModelRegistry {
+    budget_bytes: usize,
+    entries: Vec<Entry>,
+    tick: u64,
+}
+
+impl ModelRegistry {
+    /// Empty registry with an eviction budget over packed-operand bytes.
+    pub fn new(budget_bytes: usize) -> ModelRegistry {
+        ModelRegistry { budget_bytes, entries: Vec::new(), tick: 0 }
+    }
+
+    /// Insert (or replace) `name`, then evict least-recently-used entries
+    /// until the resident operand bytes fit the budget again — never the
+    /// entry just inserted, and never the last one standing. Returns the
+    /// evicted names, oldest first.
+    pub fn insert(&mut self, name: impl Into<String>, model: PreparedModel) -> Vec<String> {
+        let name = name.into();
+        self.entries.retain(|e| e.name != name);
+        self.tick += 1;
+        self.entries.push(Entry {
+            name,
+            bytes: model.operand_bytes(),
+            last_used: self.tick,
+            model,
+        });
+        let mut evicted = Vec::new();
+        while self.resident_bytes() > self.budget_bytes && self.entries.len() > 1 {
+            let lru = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("len > 1");
+            evicted.push(self.entries.remove(lru).name);
+        }
+        evicted
+    }
+
+    /// The prepared model under `name`, bumping its recency; `None` if it
+    /// was never inserted or has been evicted (the caller re-prepares or
+    /// re-loads, then [`Self::insert`]s).
+    pub fn get(&mut self, name: &str) -> Option<&PreparedModel> {
+        self.tick += 1;
+        let tick = self.tick;
+        self.entries.iter_mut().find(|e| e.name == name).map(|e| {
+            e.last_used = tick;
+            &e.model
+        })
+    }
+
+    /// Is `name` resident right now?
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.iter().any(|e| e.name == name)
+    }
+
+    /// Remove and return `name`'s model, if resident.
+    pub fn remove(&mut self, name: &str) -> Option<PreparedModel> {
+        let i = self.entries.iter().position(|e| e.name == name)?;
+        Some(self.entries.remove(i).model)
+    }
+
+    /// Resident model names, least-recently-used first.
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&Entry> = self.entries.iter().collect();
+        v.sort_by_key(|e| e.last_used);
+        v.into_iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Total packed-operand bytes resident right now.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// The configured eviction budget (bytes).
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Resident model count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// No models resident?
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{Layer, LayerKind, Model};
+    use crate::util::Parallelism;
+
+    fn tiny(name: &'static str, k: usize) -> PreparedModel {
+        let m = Model {
+            name,
+            dataset: "synthetic",
+            layers: vec![Layer {
+                name: "fc".into(),
+                kind: LayerKind::Fc(k, 8),
+                prunable: true,
+            }],
+        };
+        PreparedModel::prepare(&m, 2, 4, 7, Parallelism::serial())
+    }
+
+    #[test]
+    fn insert_get_and_recency() {
+        let mut reg = ModelRegistry::new(usize::MAX);
+        assert!(reg.is_empty());
+        let a = tiny("reg-a", 16);
+        let bytes_a = a.operand_bytes();
+        assert!(reg.insert("reg-a", a).is_empty());
+        assert!(reg.insert("reg-b", tiny("reg-b", 32)).is_empty());
+        assert_eq!(reg.len(), 2);
+        assert!(reg.resident_bytes() >= bytes_a);
+        // touching a makes b the LRU
+        assert!(reg.get("reg-a").is_some());
+        assert_eq!(reg.names(), vec!["reg-b", "reg-a"]);
+        assert!(reg.get("reg-missing").is_none());
+    }
+
+    #[test]
+    fn over_budget_inserts_evict_lru() {
+        let a = tiny("reg-a", 16);
+        let b = tiny("reg-b", 16);
+        let c = tiny("reg-c", 16);
+        // budget holds exactly two of the (identically sized) models
+        let budget = a.operand_bytes() + b.operand_bytes();
+        let mut reg = ModelRegistry::new(budget);
+        assert!(reg.insert("reg-a", a).is_empty());
+        assert!(reg.insert("reg-b", b).is_empty());
+        // a is LRU → inserting c evicts it
+        assert_eq!(reg.insert("reg-c", c), vec!["reg-a".to_string()]);
+        assert!(!reg.contains("reg-a"));
+        assert!(reg.contains("reg-b") && reg.contains("reg-c"));
+        // touch b, insert a again → c is now the LRU and goes
+        assert!(reg.get("reg-b").is_some());
+        assert_eq!(reg.insert("reg-a", tiny("reg-a", 16)), vec!["reg-c".to_string()]);
+    }
+
+    #[test]
+    fn one_over_budget_model_is_kept() {
+        // an empty registry serves nothing: a single model larger than the
+        // whole budget stays resident
+        let mut reg = ModelRegistry::new(1);
+        assert!(reg.insert("reg-a", tiny("reg-a", 64)).is_empty());
+        assert_eq!(reg.len(), 1);
+        assert!(reg.resident_bytes() > reg.budget_bytes());
+        // a second insert evicts the first, not the new one
+        assert_eq!(reg.insert("reg-b", tiny("reg-b", 64)), vec!["reg-a".to_string()]);
+        assert_eq!(reg.names(), vec!["reg-b"]);
+    }
+
+    #[test]
+    fn replace_same_name_keeps_one_entry() {
+        let mut reg = ModelRegistry::new(usize::MAX);
+        reg.insert("reg-a", tiny("reg-a", 16));
+        let replaced = tiny("reg-a", 32);
+        let want = replaced.operand_bytes();
+        assert!(reg.insert("reg-a", replaced).is_empty());
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg.resident_bytes(), want);
+        assert_eq!(reg.remove("reg-a").map(|m| m.operand_bytes()), Some(want));
+        assert!(reg.remove("reg-a").is_none());
+    }
+}

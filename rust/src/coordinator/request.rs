@@ -3,12 +3,18 @@
 use std::sync::mpsc;
 use std::time::Instant;
 
-/// One inference request: a 32×32×3 f32 image in `[0,1]`.
+/// One inference request: a flattened f32 image in `[0,1]`, routed to a
+/// registered model by name.
 #[derive(Debug)]
 pub struct InferRequest {
     /// Caller-assigned id (echoed in the response).
     pub id: u64,
-    /// Flattened image, `32*32*3` floats.
+    /// Registry name of the model to serve this request
+    /// ([`crate::coordinator::registry::ModelSpec::model`]); the legacy
+    /// single-model XLA path ignores it.
+    pub model: String,
+    /// Flattened image (`32*32*3` floats on the default route; other
+    /// lengths are wrap-fitted by the engine path).
     pub image: Vec<f32>,
     /// Enqueue timestamp (set by the handle).
     pub enqueued: Instant,

@@ -144,6 +144,49 @@ impl ActDbb {
         self.bound = bound.max(1);
     }
 
+    /// Rebuild an encoded operand from its flattened parts — the mirror of
+    /// [`crate::gemm::DbbPacked::from_raw_parts`] for the A-side stream
+    /// (the prepared-model persistence format). Validated, not trusted:
+    /// `row_ptr` must be a monotone `m + 1`-length offset table covering
+    /// `entries` exactly, with every k-index in `0..k`, so a corrupted file
+    /// yields a clean `Err` instead of a kernel out-of-bounds.
+    pub fn from_raw_parts(
+        m: usize,
+        k: usize,
+        bz: usize,
+        bound: usize,
+        row_ptr: Vec<usize>,
+        entries: Vec<(u32, i32)>,
+    ) -> crate::util::error::Result<ActDbb> {
+        if !(1..=16).contains(&bz) || bound == 0 {
+            crate::bail!("ActDbb stream: invalid encoding bz={bz} bound={bound}");
+        }
+        if row_ptr.len() != m + 1 || row_ptr.first() != Some(&0) {
+            crate::bail!(
+                "ActDbb stream: row_ptr must hold m+1={} offsets starting at 0, got {}",
+                m + 1,
+                row_ptr.len()
+            );
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) || row_ptr[m] != entries.len() {
+            crate::bail!(
+                "ActDbb stream: row_ptr must rise monotonically to entries.len()={}",
+                entries.len()
+            );
+        }
+        if entries.iter().any(|&(kk, _)| kk as usize >= k) {
+            crate::bail!("ActDbb stream: entry k-index out of range (k={k})");
+        }
+        Ok(ActDbb {
+            m,
+            k,
+            bz,
+            bound,
+            row_ptr,
+            entries,
+        })
+    }
+
     /// Per-row offsets into [`Self::entries`] (`m + 1` values).
     pub fn row_ptr(&self) -> &[usize] {
         &self.row_ptr

@@ -239,16 +239,45 @@ pub fn requant_rows(acc: &[i32], n: usize, rq: &Requant, relu: bool, out: &mut [
     }
 }
 
-/// The data-dependent global shift the historical [`requant_relu`]
-/// derives: the smallest power-of-two right shift that brings the largest
-/// accumulator magnitude into `[0, 127]`.
-pub fn requant_shift(acc: &[i32]) -> u32 {
-    let max_abs = acc.iter().map(|v| v.unsigned_abs()).max().unwrap_or(1).max(1);
+/// The smallest power-of-two right shift that brings `max_abs` into
+/// `[0, 127]` — the one shift derivation shared by the global and
+/// per-channel calibrations (it is monotone non-decreasing in `max_abs`,
+/// which is what makes the global shift exactly the max of the per-column
+/// shifts).
+fn shift_for(max_abs: u32) -> u32 {
     let mut shift = 0u32;
     while (max_abs >> shift) > 127 {
         shift += 1;
     }
     shift
+}
+
+/// The data-dependent global shift the historical [`requant_relu`]
+/// derives: the smallest power-of-two right shift that brings the largest
+/// accumulator magnitude into `[0, 127]`.
+pub fn requant_shift(acc: &[i32]) -> u32 {
+    shift_for(acc.iter().map(|v| v.unsigned_abs()).max().unwrap_or(1).max(1))
+}
+
+/// Per-column shifts of an accumulator of whole rows of width `n`: record
+/// each output column's i32 magnitude maximum and derive its own
+/// power-of-two shift — the [`Requant::PerChannel`] scale the engine's
+/// calibration pass freezes (Snippet 1's per-channel requantization,
+/// derivable from one seed pass). Because [`requant_shift`]'s derivation
+/// is monotone in the maximum magnitude,
+/// `max(requant_col_shifts(acc, n)) == requant_shift(acc)` bit-for-bit —
+/// the global calibration is exactly the per-channel one collapsed.
+pub fn requant_col_shifts(acc: &[i32], n: usize) -> Vec<u32> {
+    assert!(n > 0, "per-channel shifts need at least one column");
+    assert_eq!(acc.len() % n, 0, "per-channel shifts take whole rows");
+    // the empty-accumulator max defaults to 1, mirroring requant_shift
+    let mut maxima = vec![1u32; n];
+    for row in acc.chunks_exact(n) {
+        for (m, &v) in maxima.iter_mut().zip(row) {
+            *m = (*m).max(v.unsigned_abs());
+        }
+    }
+    maxima.into_iter().map(shift_for).collect()
 }
 
 /// INT32 accumulators → INT8 under a *given* global shift, then ReLU —
@@ -389,6 +418,54 @@ mod tests {
         let ep = Epilogue::new(Requant::Global(2), true);
         assert_eq!(ep.out_rows(17), 17);
         assert_eq!(ep.row_quantum(), 1);
+    }
+
+    #[test]
+    fn col_shifts_max_is_the_global_shift() {
+        // monotonicity of the shift derivation: the column attaining the
+        // global magnitude maximum gets the global shift, every other
+        // column gets at most it
+        let mut rng = Rng::new(13);
+        for n in [1usize, 3, 10] {
+            for _ in 0..200 {
+                let acc: Vec<i32> = (0..4 * n).map(|_| rng.next_u64() as i32 >> 8).collect();
+                let cols = requant_col_shifts(&acc, n);
+                assert_eq!(cols.len(), n);
+                let global = requant_shift(&acc);
+                assert_eq!(*cols.iter().max().unwrap(), global, "n={n} acc={acc:?}");
+            }
+        }
+        // all-zero accumulator: per-column max defaults to 1, shift 0
+        assert_eq!(requant_col_shifts(&[0; 6], 3), vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn per_channel_at_uniform_maxima_reproduces_global() {
+        // per-channel ⊇ global: when every column attains the same
+        // magnitude maximum, the per-channel shifts are all the global
+        // shift and requant_rows produces identical bytes either way
+        let mut rng = Rng::new(14);
+        let n = 8usize;
+        let mut acc: Vec<i32> = (0..16 * n).map(|_| (rng.next_u64() as i32) >> 12).collect();
+        let cap = 1 << 20;
+        for v in acc.iter_mut() {
+            *v = (*v).clamp(-(cap - 1), cap - 1);
+        }
+        // force the shared maximum onto every column via the last row
+        let last = acc.len() - n;
+        for ci in 0..n {
+            acc[last + ci] = if ci % 2 == 0 { cap } else { -cap };
+        }
+        let cols = requant_col_shifts(&acc, n);
+        let global = requant_shift(&acc);
+        assert!(cols.iter().all(|&s| s == global), "cols={cols:?} global={global}");
+        for relu in [false, true] {
+            let mut a = vec![0i8; acc.len()];
+            let mut b = vec![0i8; acc.len()];
+            requant_rows(&acc, n, &Requant::Global(global), relu, &mut a);
+            requant_rows(&acc, n, &Requant::PerChannel(cols.clone()), relu, &mut b);
+            assert_eq!(a, b, "relu={relu}");
+        }
     }
 
     #[test]

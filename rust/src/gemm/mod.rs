@@ -452,6 +452,51 @@ impl DbbPacked {
         }
     }
 
+    /// Rebuild a packed operand from its flattened parts — the
+    /// deserialization entry of the prepared-model persistence format
+    /// (`engine::PreparedModel::load`). The parts are *validated*, not
+    /// trusted: `col_ptr` must be a monotone `n + 1`-length offset table
+    /// covering `entries` exactly, and every entry's k-index must lie in
+    /// `0..k` — so a corrupted file yields a clean `Err`, never a kernel
+    /// out-of-bounds. A stream that came from [`Self::pack`] round-trips
+    /// bit-identically (the kernels read only these fields).
+    pub fn from_raw_parts(
+        k: usize,
+        n: usize,
+        bz: usize,
+        bound: usize,
+        col_ptr: Vec<usize>,
+        entries: Vec<(u32, i32)>,
+    ) -> crate::util::error::Result<DbbPacked> {
+        if !(1..=16).contains(&bz) || bound == 0 || bound > bz {
+            crate::bail!("DbbPacked stream: invalid encoding bz={bz} bound={bound}");
+        }
+        if col_ptr.len() != n + 1 || col_ptr.first() != Some(&0) {
+            crate::bail!(
+                "DbbPacked stream: col_ptr must hold n+1={} offsets starting at 0, got {}",
+                n + 1,
+                col_ptr.len()
+            );
+        }
+        if col_ptr.windows(2).any(|w| w[0] > w[1]) || col_ptr[n] != entries.len() {
+            crate::bail!(
+                "DbbPacked stream: col_ptr must rise monotonically to entries.len()={}",
+                entries.len()
+            );
+        }
+        if entries.iter().any(|&(kk, _)| kk as usize >= k) {
+            crate::bail!("DbbPacked stream: entry k-index out of range (k={k})");
+        }
+        Ok(DbbPacked {
+            k,
+            n,
+            bz,
+            bound,
+            col_ptr,
+            entries,
+        })
+    }
+
     /// Per-column offsets into [`Self::entries`] (`n + 1` values).
     pub fn col_ptr(&self) -> &[usize] {
         &self.col_ptr

@@ -4,7 +4,7 @@
 //! ssta list                          # available experiments
 //! ssta run <name>... [--quick|--csv] # regenerate paper tables/figures
 //! ssta all [--quick]                 # every experiment in paper order
-//! ssta serve [--requests N] [--design STR] [--artifacts DIR]
+//! ssta serve [--requests N] [--design STR] [--xla [--artifacts DIR]]
 //! ssta design <STR> [--nnz N --act S]   # inspect one design point
 //! ```
 
@@ -84,9 +84,12 @@ fn serve(args: &Args) -> i32 {
             return 2;
         }
     };
+    // default is the engine-native registry path (no artifacts needed);
+    // --xla serves through the legacy PJRT artifact path instead
     let cfg = Config {
         artifacts_dir: args.opt("artifacts").unwrap_or("artifacts").into(),
         design,
+        use_xla: args.flag("xla"),
         ..Config::default()
     };
     let coord = match Coordinator::start(cfg) {

@@ -1,0 +1,307 @@
+//! Minimal little-endian flat-binary reader/writer (offline substrate for
+//! `byteorder`/`bincode`), used by the prepared-model persistence format
+//! (`engine::PreparedModel::{save, load}`).
+//!
+//! Design constraints, in order:
+//!
+//! * **Untrusted input never panics.** Every [`BinReader`] accessor is
+//!   bounds-checked and returns a [`Result`]; length prefixes are validated
+//!   against the bytes actually remaining *before* any allocation, so a
+//!   corrupted or truncated header cannot trigger an out-of-bounds slice or
+//!   a multi-gigabyte `Vec::with_capacity`.
+//! * **Byte-stable.** All integers are little-endian, `f64` is its IEEE-754
+//!   bit pattern, `usize` travels as `u64` — the on-disk form is identical
+//!   across hosts, so a prepared model saved on one machine loads on
+//!   another.
+//! * **No dependencies.** Plain `Vec<u8>` in, `&[u8]` out.
+
+use crate::util::error::{bail, Result};
+
+/// Append-only little-endian byte-stream writer.
+#[derive(Debug, Default)]
+pub struct BinWriter {
+    buf: Vec<u8>,
+}
+
+impl BinWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        BinWriter { buf: Vec::new() }
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The accumulated bytes.
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Raw bytes, unprefixed (fixed-size fields like the magic).
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// One byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Little-endian `u32`.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Little-endian `u64`.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` as little-endian `u64` (byte-stable across hosts).
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    /// IEEE-754 bit pattern of an `f64` (round-trips NaN payloads too).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed UTF-8 string (`u64` byte length + bytes).
+    pub fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.bytes(s.as_bytes());
+    }
+
+    /// Length-prefixed `i8` slice.
+    pub fn i8_slice(&mut self, v: &[i8]) {
+        self.usize(v.len());
+        // i8 → u8 is a bit-preserving cast element-wise
+        self.buf.extend(v.iter().map(|&b| b as u8));
+    }
+}
+
+/// Bounds-checked little-endian reader over a borrowed byte slice.
+#[derive(Debug)]
+pub struct BinReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BinReader<'a> {
+    /// Reader over `buf`, positioned at the start.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BinReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Current read offset.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Take `n` raw bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            bail!(
+                "truncated stream: need {n} bytes at offset {}, only {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    /// One byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    /// Little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    /// `u64` narrowed to `usize` (fails on 32-bit overflow rather than
+    /// truncating).
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| crate::anyhow!("length {v} overflows usize"))
+    }
+
+    /// IEEE-754 `f64` from its bit pattern.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix for elements of `elem_bytes` each, validated against
+    /// the remaining input so a corrupted count cannot drive a huge
+    /// allocation or a later out-of-bounds read.
+    pub fn len_prefix(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let need = n.checked_mul(elem_bytes.max(1)).unwrap_or(usize::MAX);
+        if need > self.remaining() {
+            bail!(
+                "corrupt length prefix: {n} elements x {elem_bytes} B exceed the {} bytes \
+                 remaining at offset {}",
+                self.remaining(),
+                self.pos
+            );
+        }
+        Ok(n)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| crate::anyhow!("invalid UTF-8 in string field"))
+    }
+
+    /// Length-prefixed `i8` vector.
+    pub fn i8_vec(&mut self) -> Result<Vec<i8>> {
+        let n = self.len_prefix(1)?;
+        Ok(self.bytes(n)?.iter().map(|&b| b as i8).collect())
+    }
+
+    /// Length-prefixed `u32` vector.
+    pub fn u32_vec(&mut self) -> Result<Vec<u32>> {
+        let n = self.len_prefix(4)?;
+        (0..n).map(|_| self.u32()).collect()
+    }
+
+    /// Length-prefixed `u64`-encoded `usize` vector.
+    pub fn usize_vec(&mut self) -> Result<Vec<usize>> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    /// Length-prefixed `f64` vector.
+    pub fn f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.len_prefix(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+}
+
+/// FNV-1a 64-bit hash — the persistence format's whole-file integrity
+/// checksum (corruption detection, not cryptographic).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_every_field_kind() {
+        let mut w = BinWriter::new();
+        w.bytes(b"MAGIC");
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX - 1);
+        w.usize(12345);
+        w.f64(-0.125);
+        w.str("hello ∞");
+        w.i8_slice(&[-128, -1, 0, 1, 127]);
+        let bytes = w.into_vec();
+
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.bytes(5).unwrap(), b"MAGIC");
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.usize().unwrap(), 12345);
+        assert_eq!(r.f64().unwrap(), -0.125);
+        assert_eq!(r.str().unwrap(), "hello ∞");
+        assert_eq!(r.i8_vec().unwrap(), vec![-128, -1, 0, 1, 127]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn vectors_roundtrip() {
+        let mut w = BinWriter::new();
+        let u32s = vec![0u32, 7, u32::MAX];
+        let usizes = vec![0usize, 1, 1 << 40];
+        let f64s = vec![0.0, -1.5, f64::INFINITY];
+        w.usize(u32s.len());
+        for &v in &u32s {
+            w.u32(v);
+        }
+        w.usize(usizes.len());
+        for &v in &usizes {
+            w.usize(v);
+        }
+        w.usize(f64s.len());
+        for &v in &f64s {
+            w.f64(v);
+        }
+        let bytes = w.into_vec();
+        let mut r = BinReader::new(&bytes);
+        assert_eq!(r.u32_vec().unwrap(), u32s);
+        assert_eq!(r.usize_vec().unwrap(), usizes);
+        assert_eq!(r.f64_vec().unwrap(), f64s);
+    }
+
+    #[test]
+    fn truncated_reads_error_cleanly() {
+        let mut w = BinWriter::new();
+        w.u64(42);
+        let bytes = w.into_vec();
+        // every strict prefix must fail with an Err, never panic
+        for cut in 0..bytes.len() {
+            let mut r = BinReader::new(&bytes[..cut]);
+            assert!(r.u64().is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_length_prefix_rejected_before_allocation() {
+        let mut w = BinWriter::new();
+        w.usize(usize::MAX / 2); // claims ~9e18 elements
+        w.u32(1);
+        let bytes = w.into_vec();
+        let mut r = BinReader::new(&bytes);
+        let e = r.u32_vec().err().expect("absurd length must be rejected");
+        assert!(e.to_string().contains("length"), "{e}");
+        // a huge count whose byte product overflows is also caught
+        let mut w = BinWriter::new();
+        w.u64(u64::MAX);
+        let bytes = w.into_vec();
+        let mut r = BinReader::new(&bytes);
+        assert!(r.usize_vec().is_err());
+    }
+
+    #[test]
+    fn fnv1a64_is_stable() {
+        // pinned reference values (RFC draft test vectors)
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"acb"));
+    }
+}

@@ -20,11 +20,15 @@
 //!   (standing in for `serde_json`).
 //! * [`error`] — message-carrying error + context chaining (standing in for
 //!   `anyhow`), used by the runtime and coordinator layers.
+//! * [`bin`] — bounds-checked little-endian flat-binary reader/writer
+//!   (standing in for `byteorder`/`bincode`), used by the prepared-model
+//!   persistence format.
 //! * [`par`] — scoped-thread worker pool and the [`par::Parallelism`] knob
 //!   (standing in for `rayon`), used by the tiled GEMMs, the layer profiler
 //!   and the design-space sweep.
 
 pub mod bench;
+pub mod bin;
 pub mod error;
 pub mod json;
 pub mod par;

@@ -1,0 +1,202 @@
+//! Persistence suite for the prepared-model flat-binary format
+//! (`PreparedModel::{to_bytes, from_bytes, save, load}`).
+//!
+//! The format is the paper's §II-A offline-encode artifact made durable: a
+//! restarted server loads the stream and serves immediately, skipping
+//! synthesize / top-k prune / DBB encode / calibration. Two properties are
+//! pinned here:
+//!
+//! 1. **Bit-exactness** — a round-tripped model reproduces the saved one
+//!    exactly: encoding point, operand bytes, calibrated (global and
+//!    per-channel) shifts, measured sparsities, and — the property that
+//!    actually matters — identical fused-execute outputs, across layer
+//!    kinds (conv / depthwise / FC) and a sweep of DBB encoding points.
+//! 2. **Robustness** — truncation or corruption anywhere in the stream
+//!    yields a clean `Err`, never a panic and never a silently-wrong model
+//!    (the trailing FNV-1a checksum is verified before any parsing).
+
+use ssta::engine::{PreparedModel, PERSIST_MAGIC};
+use ssta::gemm::conv::ConvShape;
+use ssta::models::{Layer, LayerKind, Model};
+use ssta::tensor::TensorI8;
+use ssta::util::{Parallelism, Rng};
+
+/// A small mixed-kind model: conv → depthwise → conv → FC exercises every
+/// `SampleShape`/`PackedOperand` arm of the format, including the dense
+/// fallback (depthwise and non-prunable layers persist as `Dense`).
+fn mixed_model() -> Model {
+    let c1 = ConvShape { h: 12, w: 12, c: 3, kh: 3, kw: 3, oc: 8, stride: 1, pad: 1 };
+    let dw = ConvShape { h: 12, w: 12, c: 8, kh: 3, kw: 3, oc: 8, stride: 1, pad: 1 };
+    let c2 = ConvShape { h: 12, w: 12, c: 8, kh: 3, kw: 3, oc: 16, stride: 2, pad: 1 };
+    Model {
+        name: "persist-mixed",
+        dataset: "synthetic",
+        layers: vec![
+            Layer { name: "conv1".into(), kind: LayerKind::Conv(c1), prunable: false },
+            Layer { name: "dw".into(), kind: LayerKind::DepthwiseConv(dw), prunable: false },
+            Layer { name: "conv2".into(), kind: LayerKind::Conv(c2), prunable: true },
+            Layer { name: "fc".into(), kind: LayerKind::Fc(6 * 6 * 16, 10), prunable: true },
+        ],
+    }
+}
+
+/// Prepare + profile + calibrate the mixed model at one encoding point —
+/// the exact lowering a serving coordinator runs once per model.
+fn served(nnz: usize, bz: usize) -> PreparedModel {
+    let par = Parallelism::serial();
+    let mut pm = PreparedModel::prepare(&mixed_model(), nnz, bz, 42, par);
+    pm.set_fused_epilogue(true);
+    pm.profile(par);
+    pm.calibrate(par);
+    pm
+}
+
+/// Round-trip `pm` through bytes and assert the reload is indistinguishable
+/// from the original, down to fused-execute outputs on fresh inputs.
+fn assert_roundtrip_bit_exact(pm: &PreparedModel, tag: &str) {
+    let par = Parallelism::serial();
+    let bytes = pm.to_bytes();
+    let rt = PreparedModel::from_bytes(&bytes, par)
+        .unwrap_or_else(|e| panic!("{tag}: roundtrip failed: {e}"));
+    assert_eq!(rt.model_name(), pm.model_name(), "{tag}: name");
+    assert_eq!(rt.encoding(), pm.encoding(), "{tag}: encoding point");
+    assert_eq!(rt.operand_bytes(), pm.operand_bytes(), "{tag}: packed operand bytes");
+    assert_eq!(rt.calibrated_shifts(), pm.calibrated_shifts(), "{tag}: global shifts");
+    assert_eq!(
+        rt.calibrated_channel_shifts(),
+        pm.calibrated_channel_shifts(),
+        "{tag}: per-channel shifts"
+    );
+    // measured sparsities must survive bit-for-bit (the twin prices them)
+    let (a, b) = (rt.measured_act_sparsity(), pm.measured_act_sparsity());
+    assert_eq!(a.is_some(), b.is_some(), "{tag}: measured presence");
+    if let (Some(a), Some(b)) = (a, b) {
+        for (x, y) in a.iter().zip(b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{tag}: measured sparsity bits");
+        }
+    }
+    // the property that matters: identical served numbers on fresh inputs
+    let mut rng = Rng::new(9);
+    for i in 0..3 {
+        let x = TensorI8::rand_sparse(&[12, 12, 3], 0.5, &mut rng);
+        let want = pm.execute_fused(&x, par);
+        let got = rt.execute_fused(&x, par);
+        assert_eq!(want.output, got.output, "{tag}: fused output, input {i}");
+    }
+    // and the stream is deterministic: re-serializing the reload is stable
+    assert_eq!(rt.to_bytes(), bytes, "{tag}: canonical re-serialization");
+}
+
+#[test]
+fn roundtrip_bit_exact_across_encoding_points() {
+    for (nnz, bz) in [(2, 4), (3, 8), (8, 8)] {
+        let pm = served(nnz, bz);
+        assert_roundtrip_bit_exact(&pm, &format!("nnz{nnz}/bz{bz}"));
+    }
+}
+
+#[test]
+fn roundtrip_without_calibration_still_works() {
+    // persistence must not require the optional passes: a bare prepare
+    // (no profile, no calibrate) round-trips too
+    let par = Parallelism::serial();
+    let pm = PreparedModel::prepare(&mixed_model(), 3, 8, 42, par);
+    let rt = PreparedModel::from_bytes(&pm.to_bytes(), par).unwrap();
+    assert!(rt.calibrated_shifts().is_none());
+    assert!(rt.measured_act_sparsity().is_none());
+    let out = pm.execute(pm.seed_input(), par);
+    let out2 = rt.execute(rt.seed_input(), par);
+    assert_eq!(out.output, out2.output);
+}
+
+#[test]
+fn zoo_model_keeps_static_name_and_skips_reprepare() {
+    // a zoo model's name resolves back to the zoo's 'static str, and the
+    // load path does none of the lowering work (it must be much cheaper
+    // than prepare — measured as wall time on the same thread)
+    let par = Parallelism::serial();
+    let t0 = std::time::Instant::now();
+    let mut pm = PreparedModel::prepare(&ssta::models::convnet5(), 3, 8, 42, par);
+    pm.profile(par);
+    pm.calibrate(par);
+    let t_prepare = t0.elapsed();
+    let bytes = pm.to_bytes();
+    let t1 = std::time::Instant::now();
+    let rt = PreparedModel::from_bytes(&bytes, par).unwrap();
+    let t_load = t1.elapsed();
+    assert_eq!(rt.model_name(), "ConvNet");
+    assert_eq!(rt.execute_fused(pm.seed_input(), par).output,
+               pm.execute_fused(pm.seed_input(), par).output);
+    // load does no synthesize/encode/calibrate; 2x headroom over a pass
+    // that takes tens of ms keeps this assertion robust on slow CI
+    assert!(
+        t_load < t_prepare,
+        "load ({t_load:.2?}) should beat prepare+profile+calibrate ({t_prepare:.2?})"
+    );
+}
+
+#[test]
+fn save_load_file_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("ssta-persistence-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mixed_nnz3_bz8.ssta");
+    let par = Parallelism::serial();
+    let pm = served(3, 8);
+    pm.save(&path).unwrap();
+    let rt = PreparedModel::load(&path, par).unwrap();
+    assert_eq!(rt.to_bytes(), pm.to_bytes(), "file roundtrip must be byte-identical");
+    assert!(PreparedModel::load(dir.join("missing.ssta"), par).is_err());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncation_anywhere_is_a_clean_error() {
+    let bytes = served(2, 4).to_bytes();
+    let par = Parallelism::serial();
+    // cut at a spread of points: inside the magic, the header, the layer
+    // table, the packed entries, and the trailing checksum itself
+    let cuts: Vec<usize> = (0..16)
+        .map(|i| i * bytes.len() / 16)
+        .chain([bytes.len() - 1, bytes.len() - 8, bytes.len() - 9])
+        .collect();
+    for cut in cuts {
+        let r = PreparedModel::from_bytes(&bytes[..cut], par);
+        assert!(r.is_err(), "truncation at {cut}/{} must fail cleanly", bytes.len());
+    }
+}
+
+#[test]
+fn corruption_anywhere_is_a_clean_error() {
+    let bytes = served(2, 4).to_bytes();
+    let par = Parallelism::serial();
+    // the checksum is verified before parsing, so *any* flipped bit in the
+    // body fails; flips in the checksum itself fail the compare
+    for &pos in &[0, 3, PERSIST_MAGIC.len() + 2, bytes.len() / 2, bytes.len() - 4] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x40;
+        assert!(
+            PreparedModel::from_bytes(&bad, par).is_err(),
+            "bit flip at {pos}/{} must fail cleanly",
+            bytes.len()
+        );
+    }
+    // wrong magic/version (a future-format file) is rejected even with a
+    // valid checksum over the altered body
+    let mut future = bytes.clone();
+    future[6] = b'9'; // SSTAPM9
+    let body_len = future.len() - 8;
+    let cs = ssta::util::bin::fnv1a64(&future[..body_len]);
+    future[body_len..].copy_from_slice(&cs.to_le_bytes());
+    let e = PreparedModel::from_bytes(&future, par).unwrap_err();
+    assert!(e.to_string().contains("magic"), "{e}");
+}
+
+#[test]
+fn garbage_and_empty_inputs_are_rejected() {
+    let par = Parallelism::serial();
+    assert!(PreparedModel::from_bytes(&[], par).is_err());
+    assert!(PreparedModel::from_bytes(b"not a model", par).is_err());
+    let mut rng = Rng::new(1);
+    let noise: Vec<u8> = (0..4096).map(|_| rng.below(256) as u8).collect();
+    assert!(PreparedModel::from_bytes(&noise, par).is_err());
+}

@@ -80,6 +80,7 @@ fn coordinator_under_concurrent_load() {
     };
     let coord = Coordinator::start(Config {
         artifacts_dir: dir,
+        use_xla: true, // this suite exists to exercise the artifact path
         ..Config::default()
     })
     .unwrap();
@@ -118,6 +119,7 @@ fn coordinator_survives_dropped_callers() {
     };
     let coord = Coordinator::start(Config {
         artifacts_dir: dir,
+        use_xla: true,
         ..Config::default()
     })
     .unwrap();

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Bench-regression gate: compare a fresh BENCH_perf_hotpath.json (written by
-# `cargo bench --bench perf_hotpath -- gemm/ conv/ engine/`, see util::bench)
-# against the committed baseline and fail on a >25% median regression in any
-# tracked `gemm/`, `conv/` or `engine/` entry. Prints a per-entry delta
+# `cargo bench --bench perf_hotpath -- gemm/ conv/ engine/ coordinator/`,
+# see util::bench) against the committed baseline and fail on a >25% median
+# regression in any tracked `gemm/`, `conv/`, `engine/` or `coordinator/`
+# entry. Prints a per-entry delta
 # table either way. A short REQUIRED list (the SIMD microkernel entries)
 # must additionally be *present* in the fresh run — so the SIMD speedups
 # cannot silently drop out of the gate by a bench rename.
@@ -69,11 +70,13 @@ fi
 import json, os, sys
 
 fresh_path, base_path, thr = sys.argv[1], sys.argv[2], float(sys.argv[3])
-TRACKED = ("gemm/", "conv/", "engine/")
+TRACKED = ("gemm/", "conv/", "engine/", "coordinator/")
 # Entries that must exist in every fresh run (enforced under the same
 # provenance/machine guards as the regression check): the SIMD microkernel
-# benches this gate was hardened to hold, plus the fused-epilogue entries
-# (the i8-chained execute path must stay on the gate).
+# benches this gate was hardened to hold, the fused-epilogue entries (the
+# i8-chained execute path must stay on the gate), and the serving-substrate
+# entries (flat-binary restart load + the engine-native coordinator round
+# trip).
 REQUIRED = (
     "gemm/dense_i8_512_simd",
     "gemm/dbb_i8_512_simd_50pct",
@@ -81,6 +84,8 @@ REQUIRED = (
     "engine/convnet5_execute_simd",
     "gemm/dense_i8_512_epilogue",
     "engine/convnet5_execute_fused_epilogue",
+    "engine/convnet5_load_persisted",
+    "coordinator/engine_serve_steady_p99",
 )
 on_baseline_machine = (
     bool(os.environ.get("CI")) or os.environ.get("BENCH_CHECK_ENFORCE") == "1"

@@ -32,9 +32,14 @@ step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
 step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step cargo bench --no-run
-step cargo bench --bench perf_hotpath -- gemm/ conv/ engine/
+step cargo bench --bench perf_hotpath -- gemm/ conv/ engine/ coordinator/
 echo "(bench results recorded in BENCH_perf_hotpath.json)"
 step scripts/bench-check.sh
+if [[ "$FAST" -eq 0 ]]; then
+  # engine-native serving smoke: two models, forced eviction, persistence
+  # across a restart — exits non-zero if any of it breaks
+  step cargo run --release --example serve_load -- --smoke
+fi
 
 echo
 echo "ci-local: all gates green"
