@@ -168,6 +168,27 @@ fn main() {
         set.bench("engine/convnet5_execute_fused_epilogue", move || {
             bb(fusedm.execute_fused(&finput, Parallelism::auto()));
         });
+
+        // zoo scenarios beyond convnet5, both on the fused serving path:
+        // MobileNetV1 runs the depthwise/pointwise ladder (dense-fallback
+        // dw sampled at K = kh·kw, stride-2 included) and the transformer
+        // block is the FC-only member (per-token M=1 GEMMs, no conv sample
+        // at all) — the two geometries examples/scenario_sweep gates
+        let mob = models::mobilenet_v1();
+        let mut mobm = ssta::engine::PreparedModel::prepare(&mob, 4, 8, 42, Parallelism::auto());
+        mobm.calibrate(Parallelism::auto());
+        let mobin = mobm.seed_input().clone();
+        set.bench("engine/mobilenet_v1_execute_fused", move || {
+            bb(mobm.execute_fused(&mobin, Parallelism::auto()));
+        });
+
+        let tfb = models::transformer_block();
+        let mut tfbm = ssta::engine::PreparedModel::prepare(&tfb, 4, 8, 42, Parallelism::auto());
+        tfbm.calibrate(Parallelism::auto());
+        let tfbin = tfbm.seed_input().clone();
+        set.bench("engine/transformer_block_execute_fused", move || {
+            bb(tfbm.execute_fused(&tfbin, Parallelism::auto()));
+        });
     }
 
     // ---- serving substrate: flat-binary load + coordinator round trip ----

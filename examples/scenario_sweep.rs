@@ -1,0 +1,328 @@
+//! Full-zoo scenario sweep: prepare every `models::zoo` member — the five
+//! Table-I CNNs plus the ViT-class transformer block — through the
+//! prepared-model engine, serve each one out of the coordinator's
+//! `ModelRegistry`, and report the whole fleet as one scenario table:
+//! per-layer `ActPolicy` resolution, measured activation sparsity, twin
+//! effective-TOPS and TOPS/W at the paper-optimal design point, and
+//! execute-latency p50/p99.
+//!
+//! Every model additionally round-trips through the flat-binary persistence
+//! path, and the table's `exact` column certifies that the *reloaded*
+//! model's fused i8→i8 chain reproduces the freshly prepared model's staged
+//! chain bit-for-bit — the property CI gates on.
+//!
+//!   cargo run --release --example scenario_sweep                 # full sweep
+//!   cargo run --release --example scenario_sweep -- --smoke      # CI gate
+//!   cargo run --release --example scenario_sweep -- --report SCENARIOS.md
+//!
+//! Flags: `--smoke` (fewer latency iters, exit 1 on any gate failure),
+//! `--iters N` (latency samples per model), `--design SPEC` (twin design
+//! point, e.g. `4x8x8_8x8_VDBB_IM2C`), `--report PATH` (also write the
+//! table + per-layer appendix as markdown — `SCENARIOS.md` is the committed
+//! copy).
+
+use ssta::arch::Design;
+use ssta::cli::Args;
+use ssta::coordinator::registry::{ModelRegistry, ModelSpec};
+use ssta::engine::PreparedModel;
+use ssta::gemm::ActPolicy;
+use ssta::models::{self, LayerKind, Model};
+use ssta::power;
+use ssta::sim::accel::network_timing_with;
+use ssta::tensor::TensorI8;
+use ssta::util::error::{Context, Error, Result};
+use ssta::util::table::Table;
+use ssta::util::{Parallelism, Rng};
+use std::time::Instant;
+
+/// Twin seed shared with `coordinator::TWIN_SEED` — one lowering per model.
+const SEED: u64 = 42;
+
+/// Per-scenario sweep result (one zoo member at one DBB encoding point).
+struct Scenario {
+    spec: ModelSpec,
+    model: Model,
+    prepare_ms: f64,
+    persist_bytes: usize,
+    bit_exact: bool,
+    policies: Vec<ActPolicy>,
+    act_sparsity: Vec<f64>,
+    eff_tops: f64,
+    tops_per_w: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = (p / 100.0 * (sorted_us.len() - 1) as f64).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+fn policy_counts(policies: &[ActPolicy]) -> (usize, usize, usize) {
+    let off = policies.iter().filter(|p| matches!(p, ActPolicy::Off)).count();
+    let gate = policies.iter().filter(|p| matches!(p, ActPolicy::Gate)).count();
+    let enc = policies.iter().filter(|p| matches!(p, ActPolicy::Encode)).count();
+    (off, gate, enc)
+}
+
+fn kind_label(kind: &LayerKind) -> String {
+    match kind {
+        LayerKind::Conv(s) => format!("conv{}x{}/s{}", s.kh, s.kw, s.stride),
+        LayerKind::DepthwiseConv(s) => format!("dw{}x{}/s{}", s.kh, s.kw, s.stride),
+        LayerKind::Fc(i, o) => format!("fc{i}x{o}"),
+    }
+}
+
+/// Prepare, profile, calibrate, persist, reload, verify, and measure one
+/// zoo member; the returned scenario carries everything the table reports.
+fn run_scenario(
+    spec: &ModelSpec,
+    design: &Design,
+    par: Parallelism,
+    iters: usize,
+    persist_dir: &std::path::Path,
+    registry: &mut ModelRegistry,
+) -> Result<Scenario> {
+    let model = models::zoo()
+        .into_iter()
+        .find(|m| m.name == spec.model)
+        .ok_or_else(|| Error::msg(format!("'{}' is not a zoo member", spec.model)))?;
+
+    // ---- one-time lowering: §II-A offline compile ----
+    let t0 = Instant::now();
+    let mut pm = PreparedModel::prepare(&model, spec.nnz, spec.bz, SEED, par);
+    pm.set_fused_epilogue(true);
+    pm.profile(par);
+    pm.calibrate(par);
+    let prepare_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+    // ---- persistence round trip: save, reload, verify bit-exactness of
+    // the reloaded fused chain against the fresh staged chain ----
+    let path = persist_dir.join(format!("{}_nnz{}_bz{}.ssta", spec.model, spec.nnz, spec.bz));
+    pm.save(&path)?;
+    let persist_bytes =
+        std::fs::metadata(&path).context("stat persisted model")?.len() as usize;
+    let reloaded = PreparedModel::load(&path, par)?;
+    let mut rng = Rng::new(17);
+    let mut bit_exact = reloaded.model_name() == pm.model_name();
+    let mut inputs: Vec<TensorI8> = vec![pm.seed_input().clone()];
+    inputs.extend((0..2).map(|_| TensorI8::rand_sparse(&[32 * 32 * 8], 0.5, &mut rng)));
+    for x in &inputs {
+        bit_exact &= pm.execute_staged(x, par).output == reloaded.execute_fused(x, par).output;
+    }
+    bit_exact &= pm.profiles().is_some() && pm.calibrated_shifts().is_some();
+
+    // ---- twin accounting: full-network timing + power at `design` ----
+    let profiles = pm
+        .profiles()
+        .ok_or_else(|| Error::msg(format!("'{}' has no profile", spec.model)))?;
+    let nt = network_timing_with(design, &profiles, par);
+    let eff_tops = nt.effective_tops(design);
+    let tops_per_w = power::effective_tops_per_w(design, &nt.total, nt.dense_macs);
+
+    // ---- serve out of the registry: policy resolution + latency ----
+    registry.insert(spec.model.clone(), reloaded);
+    let served = registry
+        .get(&spec.model)
+        .ok_or_else(|| Error::msg(format!("'{}' missing from registry", spec.model)))?;
+    let input = served.seed_input().clone();
+    let probe = served.execute_fused(&input, par);
+    bit_exact &= !probe.act_policy.iter().any(|p| matches!(p, ActPolicy::Auto));
+    let mut lat_us: Vec<f64> = (0..iters.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            let _ = served.execute_fused(&input, par);
+            t.elapsed().as_secs_f64() * 1e6
+        })
+        .collect();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    Ok(Scenario {
+        spec: spec.clone(),
+        model,
+        prepare_ms,
+        persist_bytes,
+        bit_exact,
+        policies: probe.act_policy.clone(),
+        act_sparsity: probe.act_sparsity.clone(),
+        eff_tops,
+        tops_per_w,
+        p50_us: percentile(&lat_us, 50.0),
+        p99_us: percentile(&lat_us, 99.0),
+    })
+}
+
+fn scenario_table(scenarios: &[Scenario], design: &Design) -> Table {
+    let mut t = Table::new(&format!("Scenario sweep — zoo @ {design}"));
+    t.header(&[
+        "model", "layers", "GMACs", "dbb", "policy o/g/e", "act%", "effTOPS", "TOPS/W",
+        "prep ms", "p50 us", "p99 us", "persist KiB", "exact",
+    ]);
+    for s in scenarios {
+        let (off, gate, enc) = policy_counts(&s.policies);
+        let mean_act =
+            100.0 * s.act_sparsity.iter().sum::<f64>() / s.act_sparsity.len().max(1) as f64;
+        t.row(&[
+            s.spec.model.clone(),
+            format!("{}", s.model.layers.len()),
+            format!("{:.2}", s.model.total_macs() as f64 / 1e9),
+            format!("{}/{}", s.spec.nnz, s.spec.bz),
+            format!("{off}/{gate}/{enc}"),
+            format!("{mean_act:.0}"),
+            format!("{:.2}", s.eff_tops),
+            format!("{:.2}", s.tops_per_w),
+            format!("{:.1}", s.prepare_ms),
+            format!("{:.0}", s.p50_us),
+            format!("{:.0}", s.p99_us),
+            format!("{}", s.persist_bytes / 1024),
+            if s.bit_exact { "yes" } else { "NO" }.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Render the sweep as the checked-in markdown report (`SCENARIOS.md`).
+fn markdown_report(scenarios: &[Scenario], design: &Design) -> String {
+    let mut md = String::new();
+    md.push_str("# Scenario sweep — the full serving zoo\n\n");
+    md.push_str(&format!(
+        "Generated by `cargo run --release --example scenario_sweep -- --report \
+         SCENARIOS.md` (twin design point: `{design}`, seed {SEED}). Six scenarios: \
+         the five Table-I CNNs plus the FC-only ViT-class transformer block, each \
+         prepared once (§II-A offline encode), persisted, reloaded, and served \
+         through the coordinator's model registry. `exact` certifies the reloaded \
+         fused i8→i8 chain matches the fresh staged chain bit-for-bit. Latency \
+         columns are host-dependent; twin columns are deterministic for the \
+         design point.\n\n"
+    ));
+    md.push_str(
+        "| model | layers | GMACs | dbb | policy o/g/e | act% | effTOPS | TOPS/W | \
+         p50 us | p99 us | persist KiB | exact |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|\n",
+    );
+    for s in scenarios {
+        let (off, gate, enc) = policy_counts(&s.policies);
+        let mean_act =
+            100.0 * s.act_sparsity.iter().sum::<f64>() / s.act_sparsity.len().max(1) as f64;
+        md.push_str(&format!(
+            "| {} | {} | {:.2} | {}/{} | {off}/{gate}/{enc} | {mean_act:.0} | {:.2} | \
+             {:.2} | {:.0} | {:.0} | {} | {} |\n",
+            s.spec.model,
+            s.model.layers.len(),
+            s.model.total_macs() as f64 / 1e9,
+            s.spec.nnz,
+            s.spec.bz,
+            s.eff_tops,
+            s.tops_per_w,
+            s.p50_us,
+            s.p99_us,
+            s.persist_bytes / 1024,
+            if s.bit_exact { "yes" } else { "NO" },
+        ));
+    }
+    md.push_str(
+        "\n`policy o/g/e` counts layers whose activation operand the engine's \
+         `ActPolicy::Auto` resolved to Off / Gate (run-length zero-skip) / Encode \
+         (A-side DBB) from the measured profile; `act%` is the mean measured \
+         zero fraction of each layer's input operand.\n",
+    );
+    for s in scenarios {
+        md.push_str(&format!(
+            "\n## {} ({}, dbb {}/{})\n\n\
+             | layer | kind | policy | act sparsity |\n|---|---|---|---|\n",
+            s.spec.model, s.model.dataset, s.spec.nnz, s.spec.bz
+        ));
+        for (i, l) in s.model.layers.iter().enumerate() {
+            md.push_str(&format!(
+                "| {} | {} | {:?} | {:.2} |\n",
+                l.name,
+                kind_label(&l.kind),
+                s.policies.get(i).copied().unwrap_or(ActPolicy::Off),
+                s.act_sparsity.get(i).copied().unwrap_or(0.0),
+            ));
+        }
+    }
+    md
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let iters: usize = args.opt_as("iters", if smoke { 5 } else { 50 });
+    let design = match args.opt("design") {
+        Some(spec) => Design::parse(spec)
+            .map_err(|e| Error::msg(format!("unparseable design spec '{spec}': {e:?}")))?,
+        None => Design::paper_optimal(),
+    };
+    let par = Parallelism::auto();
+
+    // the zoo at its serving encoding points: Table-I-style DBB for the
+    // CNNs (first convs / depthwise dense), 4/8 for the transformer block's
+    // GELU-sparse MLP GEMMs
+    let specs = [
+        ModelSpec::new("LeNet-5", 2, 8),
+        ModelSpec::new("ConvNet", 3, 8),
+        ModelSpec::new("ResNet-50V1", 3, 8),
+        ModelSpec::new("VGG-16", 3, 8),
+        ModelSpec::new("MobileNetV1", 4, 8),
+        ModelSpec::new("TransformerBlock", 4, 8),
+    ];
+
+    let persist_dir =
+        std::env::temp_dir().join(format!("ssta-scenario-sweep-{}", std::process::id()));
+    std::fs::create_dir_all(&persist_dir).context("creating persist dir")?;
+    let mut registry = ModelRegistry::new(1 << 30);
+
+    println!(
+        "scenario sweep: {} zoo members, twin design {design}, {iters} latency \
+         iters{}",
+        specs.len(),
+        if smoke { " (smoke)" } else { "" }
+    );
+    let mut scenarios = Vec::new();
+    for spec in &specs {
+        let t = Instant::now();
+        let s = run_scenario(spec, &design, par, iters, &persist_dir, &mut registry)?;
+        println!(
+            "  {:<16} prepared+persisted+served in {:.1}s ({})",
+            spec.model,
+            t.elapsed().as_secs_f64(),
+            if s.bit_exact { "fused == staged bit-exact" } else { "MISMATCH" },
+        );
+        scenarios.push(s);
+    }
+    let _ = std::fs::remove_dir_all(&persist_dir);
+
+    scenario_table(&scenarios, &design).print();
+    println!(
+        "registry: {} resident models, {:.1} MiB packed operands",
+        registry.len(),
+        registry.resident_bytes() as f64 / (1024.0 * 1024.0)
+    );
+
+    if let Some(path) = args.opt("report") {
+        std::fs::write(path, markdown_report(&scenarios, &design))
+            .with_context(|| format!("writing report {path}"))?;
+        println!("report written to {path}");
+    }
+
+    // ---- the gate CI runs under --smoke ----
+    let failures: Vec<&str> = scenarios
+        .iter()
+        .filter(|s| !s.bit_exact)
+        .map(|s| s.spec.model.as_str())
+        .collect();
+    if scenarios.len() != specs.len() || !failures.is_empty() {
+        eprintln!("scenario sweep FAILED: {:?}", failures);
+        std::process::exit(1);
+    }
+    println!(
+        "scenario sweep: all {} zoo members prepare, persist/reload, and execute \
+         fused == staged bit-exact",
+        scenarios.len()
+    );
+    Ok(())
+}

@@ -169,7 +169,7 @@ impl Config {
             if self.batch_sizes.is_empty() || self.batch_sizes.contains(&0) {
                 bail!("coordinator config: batch_sizes must be non-empty and non-zero");
             }
-            let zoo = crate::models::all_models();
+            let zoo = crate::models::zoo();
             let mut seen: Vec<&str> = Vec::new();
             for spec in &self.registry {
                 if seen.contains(&spec.model.as_str()) {
@@ -470,7 +470,7 @@ fn prepare_served(cfg: &Config, spec: &ModelSpec) -> Result<PreparedModel> {
             }
         }
     }
-    let model = crate::models::all_models()
+    let model = crate::models::zoo()
         .into_iter()
         .find(|m| m.name == spec.model)
         .ok_or_else(|| anyhow!("unknown model '{}' in registry config", spec.model))?;
@@ -509,7 +509,7 @@ fn leader_loop_engine(
                     .ok_or_else(|| anyhow!("prepared model '{}' has no profile", spec.model))?;
                 Twin::from_profiles(cfg.design, profiles, cfg.parallelism)
             } else {
-                let model = crate::models::all_models()
+                let model = crate::models::zoo()
                     .into_iter()
                     .find(|m| m.name == spec.model)
                     .ok_or_else(|| anyhow!("unknown model '{}'", spec.model))?;

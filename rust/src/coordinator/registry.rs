@@ -20,7 +20,7 @@ use crate::engine::PreparedModel;
 /// prepared at (paper Table I's `nnz/bz`).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSpec {
-    /// Model-zoo name (see [`crate::models::all_models`]).
+    /// Serving-zoo name (see [`crate::models::zoo`]).
     pub model: String,
     /// Retained weights per DBB block.
     pub nnz: usize,
@@ -43,6 +43,25 @@ struct Entry {
 }
 
 /// LRU byte-budgeted cache of [`PreparedModel`]s, keyed by model name.
+///
+/// # Example
+///
+/// ```
+/// use ssta::coordinator::registry::ModelRegistry;
+/// use ssta::engine::PreparedModel;
+/// use ssta::util::Parallelism;
+///
+/// let par = Parallelism::serial();
+/// let pm = PreparedModel::prepare(&ssta::models::lenet5(), 2, 8, 42, par);
+/// let mut reg = ModelRegistry::new(pm.operand_bytes()); // room for exactly one
+/// let evicted = reg.insert("LeNet-5", pm);
+/// assert!(evicted.is_empty());
+/// assert_eq!(reg.names(), ["LeNet-5"]);
+/// // `get` marks the entry used and hands out the lowered model
+/// let served = reg.get("LeNet-5").unwrap();
+/// let out = served.execute(served.seed_input(), par);
+/// assert!(!out.output.data().is_empty());
+/// ```
 pub struct ModelRegistry {
     budget_bytes: usize,
     entries: Vec<Entry>,

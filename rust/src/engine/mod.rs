@@ -410,6 +410,21 @@ impl PreparedModel {
     ///
     /// `nnz` is the model-wide DBB target (paper Table I, e.g. 3/8 for
     /// ResNet-50); non-prunable layers fall back to dense.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ssta::engine::PreparedModel;
+    /// use ssta::util::Parallelism;
+    ///
+    /// let par = Parallelism::serial();
+    /// let model = ssta::models::lenet5();
+    /// // one-time lowering at the 2/8 DBB point (paper §II-A offline encode)
+    /// let pm = PreparedModel::prepare(&model, 2, 8, 42, par);
+    /// assert_eq!(pm.model_name(), "LeNet-5");
+    /// assert_eq!(pm.encoding(), (2, 8, 42));
+    /// assert_eq!(pm.layers().len(), model.layers.len());
+    /// ```
     pub fn prepare(model: &Model, nnz: usize, bz: usize, seed: u64, par: Parallelism) -> Self {
         let mut rng = Rng::new(seed);
         let nlayers = model.layers.len();
@@ -593,6 +608,22 @@ impl PreparedModel {
     /// input return identical results — the engine holds no mutable state
     /// beyond the scratch buffers, which are fully rewritten before every
     /// read, and no activation policy changes a bit.
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ssta::engine::PreparedModel;
+    /// use ssta::util::Parallelism;
+    ///
+    /// let par = Parallelism::serial();
+    /// let pm = PreparedModel::prepare(&ssta::models::lenet5(), 2, 8, 42, par);
+    /// // execute many times with zero per-call encode; results are
+    /// // deterministic and per-layer activation sparsities come back too
+    /// let a = pm.execute(pm.seed_input(), par);
+    /// let b = pm.execute(pm.seed_input(), par);
+    /// assert_eq!(a.output, b.output);
+    /// assert_eq!(a.act_sparsity.len(), pm.layers().len());
+    /// ```
     pub fn execute(&self, input: &TensorI8, par: Parallelism) -> Execution {
         self.execute_policy(input, par, self.act_policy)
     }
@@ -1515,11 +1546,11 @@ impl PreparedModel {
                 bail!("{what} count {len} does not match {} layers", layers.len());
             }
         }
-        // resolve the name against the model zoo so a round-tripped model
+        // resolve the name against the serving zoo so a round-tripped model
         // keeps the zoo's 'static name; unknown names (custom models) leak
         // one small allocation per distinct name per process — loads are
         // rare and registry-cached, so this is bounded in practice
-        let name: &'static str = crate::models::all_models()
+        let name: &'static str = crate::models::zoo()
             .iter()
             .find(|m| m.name == name_s)
             .map(|m| m.name)

@@ -82,6 +82,27 @@ impl ActDbb {
     /// one `O(M·K)` pass recording every non-zero as a `(k-index, value)`
     /// entry and measuring the per-block density bound. `bz` must be
     /// `1..=16` (the [`crate::dbb::DbbMatrix`] block-size range).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ssta::gemm::{adbb_dense_i8, dense_i8, ActDbb};
+    /// use ssta::tensor::TensorI8;
+    /// use ssta::util::Rng;
+    ///
+    /// // ReLU-style activations: at most 2 non-zeros in any 8-wide block,
+    /// // so the measured VDBB bound is 2 and the fixed-rate stream is
+    /// // (2 value + 1 mask) bytes per block instead of 8 raw bytes
+    /// let data: Vec<i8> =
+    ///     (0..16 * 32).map(|i| if i % 8 < 2 { 1 + (i % 8) as i8 } else { 0 }).collect();
+    /// let a = TensorI8::from_vec(&[16, 32], data);
+    /// let enc = ActDbb::encode(&a, 8);
+    /// assert!(enc.stream_bytes() < enc.dense_bytes());
+    /// // ...and the joint kernels consuming it stay bit-exact
+    /// let mut rng = Rng::new(2);
+    /// let w = TensorI8::rand(&[32, 8], &mut rng);
+    /// assert_eq!(adbb_dense_i8(&enc, &w), dense_i8(&a, &w));
+    /// ```
     pub fn encode(a: &TensorI8, bz: usize) -> ActDbb {
         let mut enc = ActDbb::empty();
         enc.encode_reuse(a, bz);

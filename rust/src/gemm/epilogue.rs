@@ -89,6 +89,24 @@ pub struct Epilogue {
 
 impl Epilogue {
     /// Requantize-only epilogue (plus ReLU when `relu`).
+    ///
+    /// # Example
+    ///
+    /// ```
+    /// use ssta::gemm::{Epilogue, Requant, ZeroGate};
+    /// use ssta::tensor::TensorI8;
+    /// use ssta::util::{Parallelism, Rng};
+    ///
+    /// let mut rng = Rng::new(1);
+    /// let a = TensorI8::rand(&[8, 16], &mut rng);
+    /// let w = TensorI8::rand(&[16, 4], &mut rng);
+    /// // requantize accumulators by >>6 and ReLU, inside the output walk —
+    /// // the whole-layer i32 accumulator tensor never materializes
+    /// let ep = Epilogue::new(Requant::Global(6), true);
+    /// let y = ssta::gemm::tiled::dense_i8_ep(&a, &w, Parallelism::serial(), ZeroGate::Off, &ep);
+    /// assert_eq!(y.shape(), &[8, 4]);
+    /// assert!(y.data().iter().all(|&v| v >= 0), "ReLU clamps negatives");
+    /// ```
     pub fn new(requant: Requant, relu: bool) -> Self {
         Epilogue {
             requant,

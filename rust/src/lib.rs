@@ -9,16 +9,23 @@
 //!   arrays, the hardware IM2COL unit, local SRAMs and the M33 MCUs; a
 //!   calibrated 16 nm / 65 nm power + area model; the design-space explorer;
 //!   a pure-Rust CNN training substrate for the DBB-pruning experiments; and
-//!   an inference coordinator that serves batched requests, running the
-//!   functional path on AOT-compiled XLA executables while the timing path
-//!   runs on the simulator.
+//!   an inference coordinator that serves batched requests through the
+//!   [`engine`]'s prepared models (registry-cached, persisted as flat
+//!   binaries) while the timing path runs on the simulator twin — the
+//!   legacy AOT-compiled XLA functional path is preserved behind
+//!   `Config::use_xla`.
 //! * **Layer 2 (python/compile/model.py)** — the CNN forward pass in JAX,
 //!   lowered once to HLO text artifacts consumed by [`runtime`].
 //! * **Layer 1 (python/compile/kernels/)** — the DBB-sparse GEMM hot-spot as
 //!   a Pallas kernel (interpret mode), checked against a pure-jnp oracle.
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index
-//! mapping every table and figure of the paper to a module and bench target.
+//! See `ARCHITECTURE.md` for the paper-section → module map (one paragraph
+//! per subsystem, with entry points), and `README.md` for the workload zoo,
+//! build/CI gates and environment knobs.
+
+// a dangling intra-doc link is a broken promise to the reader: deny it
+// outright so `cargo doc` / `cargo test --doc` fail on rename drift
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod arch;
 pub mod baselines;

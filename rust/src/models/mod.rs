@@ -1,8 +1,12 @@
-//! CNN model zoo: the layer tables of the five benchmark networks the paper
+//! Model zoo: the layer tables of the five benchmark networks the paper
 //! evaluates (Table I) — LeNet-5, a 5-layer ConvNet, ResNet-50V1, VGG-16 and
 //! MobileNetV1 — expressed as sequences of conv / FC layers with exact
 //! shapes, so per-layer GEMM dimensions, MAC counts and weight counts are
-//! reproduced from the published architectures.
+//! reproduced from the published architectures. [`zoo`] extends the Table-I
+//! set with [`transformer_block`], a ViT-Base-class encoder block whose
+//! attention and MLP projections are plain [`LayerKind::Fc`] GEMMs — S2TA's
+//! joint-sparsity argument (PAPERS.md) applies verbatim to its ReLU/GELU-
+//! sparse MLP activations.
 //!
 //! The architecture experiments (Figs 9–12, Table V) run these layer tables
 //! through the simulator; the training experiments (Tables I–II) train the
@@ -332,9 +336,41 @@ pub fn mobilenet_v1() -> Model {
     }
 }
 
+/// One ViT-Base-class transformer encoder block (d=768, MLP 4×), expressed
+/// as the four GEMMs the datapath actually sees: fused QKV projection,
+/// attention output projection, and the two MLP projections. All per-token
+/// (GEMM M = 1, like batch-1 CNN accounting); serving folds the sequence
+/// dimension into GEMM M via `execute_fused_batch`, exactly as image batches
+/// fold for the CNNs. The MLP tail is left dense (the residual-stream output
+/// projection is the conventionally unpruned layer), so the FC-only model
+/// exercises both packed-DBB and dense-fallback operands.
+pub fn transformer_block() -> Model {
+    const D: usize = 768;
+    Model {
+        name: "TransformerBlock",
+        dataset: "Seq",
+        layers: vec![
+            Layer { name: "attn/qkv".into(), kind: LayerKind::Fc(D, 3 * D), prunable: true },
+            Layer { name: "attn/proj".into(), kind: LayerKind::Fc(D, D), prunable: true },
+            Layer { name: "mlp/fc1".into(), kind: LayerKind::Fc(D, 4 * D), prunable: true },
+            Layer { name: "mlp/fc2".into(), kind: LayerKind::Fc(4 * D, D), prunable: false },
+        ],
+    }
+}
+
 /// All five benchmark models (Table I rows).
 pub fn all_models() -> Vec<Model> {
     vec![lenet5(), convnet5(), resnet50(), vgg16(), mobilenet_v1()]
+}
+
+/// The full serving zoo: the five Table-I CNNs plus [`transformer_block`].
+/// This is the set the prepared-model engine, the coordinator's model
+/// registry and `examples/scenario_sweep` resolve names against; Table-I
+/// reproductions keep using [`all_models`].
+pub fn zoo() -> Vec<Model> {
+    let mut v = all_models();
+    v.push(transformer_block());
+    v
 }
 
 #[cfg(test)]
@@ -429,6 +465,35 @@ mod tests {
         let pw = m.layers.iter().find(|l| l.name.ends_with("/pw")).unwrap();
         assert_eq!(pw.dbb_bound(3, 8), 3);
         assert_eq!(pw.dbb_bound(12, 8), 8, "bound clamps at bz");
+    }
+
+    #[test]
+    fn transformer_block_gemm_totals() {
+        let m = transformer_block();
+        // ViT-Base block: qkv 768·2304 + proj 768² + mlp 768·3072·2 ≈ 7.08M
+        // weights, and at M=1 every FC layer's MACs equal its weights
+        let w: usize = m.layers.iter().map(|l| l.weights()).sum();
+        assert_eq!(w, 768 * 2304 + 768 * 768 + 2 * 768 * 3072);
+        assert_eq!(m.total_macs(), w as u64);
+        for l in &m.layers {
+            let (mm, k, n) = l.gemm_dims();
+            assert_eq!(mm, 1, "{} is a per-token FC GEMM", l.name);
+            assert_eq!(k * n, l.weights(), "{}", l.name);
+        }
+        // the unpruned residual-stream tail runs dense
+        assert!(m.layers.last().unwrap().dbb_bound(3, 8) == 8);
+        assert_eq!(m.prunable_weights(), 768 * 2304 + 768 * 768 + 768 * 3072);
+    }
+
+    #[test]
+    fn zoo_is_table_one_plus_transformer() {
+        let zoo = zoo();
+        assert_eq!(zoo.len(), all_models().len() + 1);
+        assert_eq!(zoo.last().unwrap().name, "TransformerBlock");
+        let mut names: Vec<&str> = zoo.iter().map(|m| m.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), zoo.len(), "zoo names must be unique keys");
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Zoo-scenario suite: the layer geometries the full serving zoo brings that
+//! convnet5 never exercised, each driven end-to-end through the prepared
+//! engine (prepare → profile → calibrate → staged == fused bit-exact), plus
+//! the FC-only transformer block's persistence round trip and its serving
+//! path through the coordinator registry.
+//!
+//! Shapes under test (see `models::zoo`):
+//! * stride-2 **depthwise** conv (MobileNet's downsampling dw layers),
+//! * the 7×7/stride-2/pad-3 **stem** conv (ResNet-50 conv1),
+//! * 1×1 bottleneck convs with GEMM K straddling the
+//!   [`ssta::gemm::micro::DBB_PACK_MAX_K`] pack guard (the packed microkernel
+//!   ↔ scalar-CSC fallback boundary),
+//! * an **FC-only** model (no conv sample at all, so the patch scratch is
+//!   sized from `max_k == 0`).
+
+use ssta::engine::{PreparedModel, SampleShape};
+use ssta::gemm::conv::ConvShape;
+use ssta::gemm::micro::DBB_PACK_MAX_K;
+use ssta::models::{self, Layer, LayerKind, Model};
+use ssta::tensor::TensorI8;
+use ssta::util::{Parallelism, Rng};
+
+/// Prepare + profile + calibrate at one encoding point — the exact lowering
+/// `coordinator::prepare_served` runs once per model.
+fn served(model: &Model, nnz: usize, bz: usize, par: Parallelism) -> PreparedModel {
+    let mut pm = PreparedModel::prepare(model, nnz, bz, 42, par);
+    pm.set_fused_epilogue(true);
+    pm.profile(par);
+    pm.calibrate(par);
+    pm
+}
+
+/// The property the scenario sweep gates on: the fused i8→i8 chain and the
+/// staged materialize-then-requant chain agree bit-for-bit on fresh inputs.
+fn assert_staged_eq_fused(pm: &PreparedModel, input_shape: &[usize], par: Parallelism, tag: &str) {
+    let mut rng = Rng::new(7);
+    for i in 0..2 {
+        let x = TensorI8::rand_sparse(input_shape, 0.5, &mut rng);
+        let staged = pm.execute_staged(&x, par);
+        let fused = pm.execute_fused(&x, par);
+        assert_eq!(staged.output, fused.output, "{tag}: staged != fused, input {i}");
+    }
+}
+
+fn dw(name: &str, hw: usize, c: usize, stride: usize) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::DepthwiseConv(ConvShape {
+            h: hw,
+            w: hw,
+            c,
+            kh: 3,
+            kw: 3,
+            oc: c,
+            stride,
+            pad: 1,
+        }),
+        prunable: false,
+    }
+}
+
+fn pw(name: &str, hw: usize, c: usize, oc: usize) -> Layer {
+    Layer {
+        name: name.to_string(),
+        kind: LayerKind::Conv(ConvShape { h: hw, w: hw, c, kh: 1, kw: 1, oc, stride: 1, pad: 0 }),
+        prunable: true,
+    }
+}
+
+#[test]
+fn stride2_depthwise_pair_staged_eq_fused() {
+    // a MobileNet downsampling separable pair at test scale: dw 3x3/s2
+    // halves the map, the following pw consumes the halved map
+    let m = Model {
+        name: "dw-s2-pair",
+        dataset: "synthetic",
+        layers: vec![dw("dw_s2", 24, 8, 2), pw("pw", 12, 8, 16)],
+    };
+    let par = Parallelism::serial();
+    let pm = served(&m, 3, 8, par);
+    // the depthwise sample keeps the layer's stride geometry: 24/2 = 12
+    match pm.layers()[0].sample {
+        SampleShape::Conv(ss) => {
+            assert_eq!(ss.stride, 2);
+            assert_eq!((ss.oh(), ss.ow()), (12, 12), "s2 sample halves the map");
+            assert_eq!(ss.c, 1, "depthwise samples one channel (K = kh·kw)");
+        }
+        SampleShape::Fc { .. } => panic!("depthwise layer sampled as FC"),
+    }
+    assert_staged_eq_fused(&pm, &[24, 24, 8], par, "dw-s2-pair");
+}
+
+#[test]
+fn stem_7x7_stride2_staged_eq_fused() {
+    // ResNet-50's conv1 geometry (7x7, stride 2, pad 3) at test scale,
+    // followed by a 1x1/s2 shortcut-style bottleneck conv
+    let c1 = ConvShape { h: 32, w: 32, c: 3, kh: 7, kw: 7, oc: 16, stride: 2, pad: 3 };
+    let m = Model {
+        name: "stem7x7",
+        dataset: "synthetic",
+        layers: vec![
+            Layer { name: "conv1".into(), kind: LayerKind::Conv(c1), prunable: false },
+            Layer {
+                name: "shortcut".into(),
+                kind: LayerKind::Conv(ConvShape {
+                    h: 16,
+                    w: 16,
+                    c: 16,
+                    kh: 1,
+                    kw: 1,
+                    oc: 32,
+                    stride: 2,
+                    pad: 0,
+                }),
+                prunable: true,
+            },
+        ],
+    };
+    let par = Parallelism::serial();
+    let pm = served(&m, 3, 8, par);
+    match pm.layers()[0].sample {
+        SampleShape::Conv(ss) => {
+            assert_eq!((ss.kh, ss.stride, ss.pad), (7, 2, 3));
+            assert_eq!((ss.oh(), ss.ow()), (16, 16), "stem halves 32 -> 16");
+        }
+        SampleShape::Fc { .. } => panic!("stem sampled as FC"),
+    }
+    assert_staged_eq_fused(&pm, &[32, 32, 3], par, "stem7x7");
+}
+
+#[test]
+fn bottleneck_1x1_k_across_pack_guard() {
+    // a 1x1 bottleneck conv's GEMM K equals its channel count; straddle the
+    // DBB_PACK_MAX_K pack guard so one side runs the packed microkernel and
+    // the other the scalar CSC fallback — both must stay bit-exact with the
+    // staged path
+    let par = Parallelism::serial();
+    for k in [DBB_PACK_MAX_K - 1, DBB_PACK_MAX_K, DBB_PACK_MAX_K + 1] {
+        let m = Model {
+            name: "bottleneck-k-guard",
+            dataset: "synthetic",
+            layers: vec![Layer {
+                name: "conv1x1".into(),
+                kind: LayerKind::Conv(ConvShape {
+                    h: 4,
+                    w: 4,
+                    c: k,
+                    kh: 1,
+                    kw: 1,
+                    oc: 8,
+                    stride: 1,
+                    pad: 0,
+                }),
+                prunable: true,
+            }],
+        };
+        let pm = served(&m, 3, 8, par);
+        assert_staged_eq_fused(&pm, &[4, 4, k], par, &format!("1x1 K={k}"));
+    }
+}
+
+#[test]
+fn transformer_block_fc_only_roundtrip() {
+    // the FC-only zoo member: no conv layer anywhere, so the engine's patch
+    // scratch is sized from max_k == 0 — prepare, persist, reload, and the
+    // reloaded model's fused chain must match the original's staged chain
+    let par = Parallelism::serial();
+    let m = models::transformer_block();
+    let pm = served(&m, 4, 8, par);
+    for l in pm.layers() {
+        assert!(
+            matches!(l.sample, SampleShape::Fc { m: 1, .. }),
+            "transformer layers are per-token FC GEMMs"
+        );
+    }
+    let dir = std::env::temp_dir().join(format!("ssta-zoo-scen-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("transformer_nnz4_bz8.ssta");
+    pm.save(&path).unwrap();
+    let rt = PreparedModel::load(&path, par).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    // name interns back to the zoo's 'static str
+    assert_eq!(rt.model_name(), "TransformerBlock");
+    assert_eq!(rt.encoding(), pm.encoding());
+    assert_eq!(rt.to_bytes(), pm.to_bytes(), "canonical re-serialization");
+    let mut rng = Rng::new(11);
+    for i in 0..3 {
+        let x = TensorI8::rand_sparse(&[1, 768], 0.5, &mut rng);
+        let staged = pm.execute_staged(&x, par);
+        let fused = rt.execute_fused(&x, par);
+        assert_eq!(staged.output, fused.output, "reload fused != staged, input {i}");
+    }
+    // the sequence dimension folds into GEMM M exactly like an image batch
+    let seq: Vec<TensorI8> =
+        (0..4).map(|_| TensorI8::rand_sparse(&[1, 768], 0.5, &mut rng)).collect();
+    let folded = pm.execute_fused_batch(&seq, par);
+    for (tok, out) in seq.iter().zip(&folded) {
+        assert_eq!(pm.execute_fused(tok, par).output, *out, "batch fold per-token mismatch");
+    }
+}
+
+#[test]
+fn transformer_block_serves_through_registry() {
+    // end-to-end through the engine-native coordinator: the zoo lookup, the
+    // registry, and the batch flush must all accept the FC-only member
+    use ssta::coordinator::registry::ModelSpec;
+    use ssta::coordinator::{Config, Coordinator};
+    let coord = Coordinator::start(Config {
+        registry: vec![ModelSpec::new("TransformerBlock", 4, 8)],
+        batch_sizes: vec![2, 1],
+        max_wait: std::time::Duration::from_micros(200),
+        parallelism: Parallelism::serial(),
+        ..Config::default()
+    })
+    .expect("transformer block must be a servable zoo member");
+    let h = coord.handle();
+    let mut rng = Rng::new(3);
+    let token: Vec<f32> = (0..768).map(|_| rng.f32()).collect();
+    let r = h.infer_to("TransformerBlock", 1, token).expect("serve one token");
+    assert!(!r.logits.is_empty(), "served logits must be non-empty");
+    assert!(h.infer_to("NotAModel", 2, vec![0.0; 8]).is_err(), "unknown model rejected");
+}
+
+#[test]
+fn mobilenet_and_resnet_zoo_members_flow_end_to_end() {
+    // the real Table-I members with the new geometries: MobileNetV1 (13
+    // dw/pw pairs incl. every stride-2 dw) and ResNet-50V1 (7x7 stem, 1x1
+    // bottlenecks, 1x1/s2 shortcuts) — prepared, profiled, calibrated, and
+    // staged == fused on the seed input
+    let par = Parallelism::auto();
+    for (model, nnz) in [(models::mobilenet_v1(), 4), (models::resnet50(), 3)] {
+        let pm = served(&model, nnz, 8, par);
+        let prof = pm.profiles().expect("profiled");
+        assert_eq!(prof.len(), model.layers.len());
+        assert!(
+            prof.iter().all(|p| (0.0..=1.0).contains(&p.act_sparsity)),
+            "{}: act sparsity in [0,1]",
+            model.name
+        );
+        let staged = pm.execute_staged(pm.seed_input(), par);
+        let fused = pm.execute_fused(pm.seed_input(), par);
+        assert_eq!(staged.output, fused.output, "{}: staged != fused", model.name);
+    }
+}

@@ -20,6 +20,10 @@ if [[ "$FAST" -eq 0 ]]; then
   step cargo build --release
 fi
 step cargo test -q
+# runnable rustdoc examples on the public entry points (PreparedModel,
+# ModelRegistry, Epilogue, ActDbb) — compiled and executed, so the docs
+# cannot drift from the API (mirrors the CI doc job)
+step cargo test -q --doc
 # kernel matrix: the SIMD microkernels must stay bit-exact with the scalar
 # oracle on every forced dispatch path (mirrors the CI kernel-matrix job;
 # unsupported ISAs clamp down by rank, so all three legs run everywhere)
@@ -39,6 +43,10 @@ if [[ "$FAST" -eq 0 ]]; then
   # engine-native serving smoke: two models, forced eviction, persistence
   # across a restart — exits non-zero if any of it breaks
   step cargo run --release --example serve_load -- --smoke
+  # full-zoo scenario sweep smoke: every zoo member (5 CNNs + transformer
+  # block) prepares, persists/reloads, and executes fused == staged
+  # bit-exact — exits non-zero otherwise
+  step cargo run --release --example scenario_sweep -- --smoke
 fi
 
 echo
