@@ -6,9 +6,9 @@
 //! path dominates e2e request latency, with coordinator overhead < 5%.
 
 use ssta::arch::{space, Design, Tech};
-use ssta::dbb::{prune::prune_i8, DbbMatrix};
+use ssta::dbb::{prune::prune_bsr_i8, prune::prune_i8, DbbMatrix};
 use ssta::gemm::conv::{im2col, ConvShape};
-use ssta::gemm::{ActDbb, ActPolicy, Epilogue, Requant, ZeroGate};
+use ssta::gemm::{ActDbb, ActPolicy, BsrPacked, Epilogue, Requant, WeightFormat, ZeroGate};
 use ssta::models;
 use ssta::sim::accel::{network_timing, profile_model_fixed_act, profile_model_repr};
 use ssta::sim::analytic::{gemm_timing_stats, WeightStats};
@@ -80,6 +80,24 @@ fn main() {
         let m3 = models::convnet5();
         set.bench("engine/convnet5_profile_unprepared", move || {
             bb(ssta::sim::accel::profile_model(&m3, 3, 8, 42));
+        });
+
+        // steady-state execute on the BSR weight datapath: same model,
+        // seed, and encoding point as the prepared-steady entry, but the
+        // prunable layers stream block-scheduler kernels over
+        // row_ptr/col_idx operands instead of DBB CSC
+        let mb = models::convnet5();
+        let bsr_prepared = ssta::engine::PreparedModel::prepare_format(
+            &mb,
+            3,
+            8,
+            42,
+            Parallelism::auto(),
+            WeightFormat::Bsr,
+        );
+        let binput = bsr_prepared.seed_input().clone();
+        set.bench("engine/convnet5_execute_bsr", move || {
+            bb(bsr_prepared.execute(&binput, Parallelism::auto()));
         });
 
         // steady-state execute on a pinned pool: each conv worker pins to a
@@ -360,6 +378,36 @@ fn main() {
             bb(ssta::gemm::tiled::dbb_i8_packed_gated(
                 &a87,
                 &packed,
+                Parallelism::auto(),
+                ZeroGate::On,
+            ));
+        });
+    }
+
+    // ---- BSR block-scheduler kernels (the second weight datapath) ----
+    // Same 512-cubed shape and activation sparsities as the DBB gated
+    // entries, weight blocks pruned at the matched 3/8 density (24 of the
+    // 64 blocks of every block row survive); the stream pays coarse
+    // row_ptr/col_idx indices instead of per-element bitmasks
+    {
+        let mut rng = Rng::new(9);
+        let a50 = TensorI8::rand_sparse(&[512, 512], 0.5, &mut rng);
+        let a87 = TensorI8::rand_sparse(&[512, 512], 0.875, &mut rng);
+        let wd = prune_bsr_i8(&TensorI8::rand(&[512, 512], &mut rng), 8, 8, 24);
+        let p = BsrPacked::pack(&wd, 8, 8);
+        let p2 = p.clone();
+        set.bench("gemm/bsr_i8_512_50pct", move || {
+            bb(ssta::gemm::tiled::bsr_i8_packed_gated(
+                &a50,
+                &p,
+                Parallelism::auto(),
+                ZeroGate::On,
+            ));
+        });
+        set.bench("gemm/bsr_i8_512_87pct", move || {
+            bb(ssta::gemm::tiled::bsr_i8_packed_gated(
+                &a87,
+                &p2,
                 Parallelism::auto(),
                 ZeroGate::On,
             ));

@@ -10,8 +10,31 @@ use ssta::arch::{space, Design, Tech};
 use ssta::cli::Args;
 use ssta::models;
 use ssta::power;
-use ssta::sim::accel::{network_timing, profile_model_repr};
+use ssta::sim::accel::{network_timing, profile_model_repr, LayerProfile};
 use ssta::util::Parallelism;
+
+/// Weight-index metadata as a percentage of the stored weight payload.
+/// (V)DBB streams one BZ-bit bitmask per block next to its `bound` stored
+/// values; BSR streams only the coarse `row_ptr`/`col_idx` arrays next to
+/// whole dense blocks — no per-element bitmask at all.
+fn index_overhead_pct(profiles: &[LayerProfile], bsr: bool) -> f64 {
+    let (mut idx, mut payload) = (0f64, 0f64);
+    for p in profiles {
+        let s = &p.weights;
+        let kb = s.kblocks() as f64;
+        if bsr {
+            let nbc = (s.n as f64 / s.bz as f64).ceil();
+            let keep = ((nbc * s.bound as f64) / s.bz as f64).ceil().clamp(1.0, nbc);
+            let stored = kb * keep;
+            idx += 4.0 * (kb + 1.0) + 2.0 * stored;
+            payload += stored * (s.bz * s.bz) as f64;
+        } else {
+            idx += kb * s.n as f64 * s.bz as f64 / 8.0;
+            payload += kb * s.n as f64 * s.bound as f64;
+        }
+    }
+    100.0 * idx / payload.max(1.0)
+}
 
 fn main() {
     let args = Args::from_env();
@@ -65,9 +88,11 @@ fn main() {
     }
     println!("\n{} points on the frontier of {} total", frontier, rows.len());
 
-    // ---- the paper's three groupings (Fig 10's clusters) ----
+    // ---- the paper's groupings (Fig 10's clusters) + the BSR datapath ----
     let group = |l: &str| {
-        if l.contains("VDBB") {
+        if l.contains("BSR") {
+            "BSR"
+        } else if l.contains("VDBB") {
             "VDBB"
         } else if l.contains("DBB") {
             "fixed-DBB"
@@ -75,11 +100,39 @@ fn main() {
             "dense"
         }
     };
-    for g in ["dense", "fixed-DBB", "VDBB"] {
+    for g in ["dense", "fixed-DBB", "VDBB", "BSR"] {
         let pts: Vec<&(String, f64, f64)> = rows.iter().filter(|(l, _, _)| group(l) == g).collect();
         let pmin = pts.iter().map(|(_, p, _)| *p).fold(f64::MAX, f64::min);
         let amin = pts.iter().map(|(_, _, a)| *a).fold(f64::MAX, f64::min);
         println!("group {g:<10} n={:<3} best power {pmin:.3} best area {amin:.3}", pts.len());
     }
     println!("\n(the VDBB+IM2C corner is the paper's Fig 10 pareto group)");
+
+    // ---- weight-format bake-off: DBB vs VDBB vs BSR at matched sparsity ----
+    // For each density bound, each format's best iso-throughput design (by
+    // effective TOPS/W on the same workload) represents its group; "index %"
+    // is the format's weight-index metadata relative to its stored payload.
+    println!("\nweight-format bake-off (ResNet-50 repr layers, 50% act, matched density):");
+    println!(
+        "  {:>4} {:<10} {:<28} {:>10} {:>8}",
+        "nnz", "format", "best design", "eff TOPS/W", "index %"
+    );
+    for nnz in [2usize, 4] {
+        let profiles = profile_model_repr(&m, nnz, 8, 0.5);
+        for g in ["fixed-DBB", "VDBB", "BSR"] {
+            let best = designs
+                .iter()
+                .filter(|d| group(&d.label()) == g)
+                .map(|d| {
+                    let t = network_timing(d, &profiles);
+                    (power::effective_tops_per_w(d, &t.total, t.dense_macs), d)
+                })
+                .max_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+            if let Some((tw, d)) = best {
+                let ovh = index_overhead_pct(&profiles, g == "BSR");
+                println!("  {:>4} {:<10} {:<28} {:>10.1} {:>8.2}", nnz, g, d.label(), tw, ovh);
+            }
+        }
+    }
+    println!("\n(BSR trades finer-grained skipping for a bitmask-free index stream)");
 }

@@ -13,6 +13,10 @@
 //! * **open loop** (`--rate R` > 0): requests are submitted at a fixed
 //!   arrival rate regardless of completions, so queueing delay shows up in
 //!   the tail percentiles.
+//! * **rate sweep** (`--rate-sweep lo:hi:steps`): open-loop runs at
+//!   `steps` offered rates between `lo` and `hi` req/s, printing a
+//!   latency-vs-offered-rate table (p50/p99 plus peak queue depth per
+//!   rate) — the knee of that curve is the design's serving capacity.
 //!
 //! The run also exercises the two serving features this harness exists to
 //! gate:
@@ -96,6 +100,56 @@ fn run_open_loop(
     t0.elapsed()
 }
 
+/// One point of the open-loop rate sweep: arrivals paced at `rate` req/s
+/// with one thread per in-flight request (a true open loop — completions
+/// never gate submissions), measuring per-request latency client-side.
+/// Returns the latency sample in µs and the peak number of requests that
+/// were simultaneously in flight (the queue depth the rate built up).
+fn run_sweep_point(
+    h: &Handle,
+    model: &str,
+    images: &[Vec<f32>],
+    requests: usize,
+    rate: f64,
+) -> (Vec<u64>, usize) {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let inflight = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let lat_us: Vec<u64> = std::thread::scope(|s| {
+        let period = Duration::from_secs_f64(1.0 / rate.max(1e-9));
+        let t0 = Instant::now();
+        let mut workers = Vec::with_capacity(requests);
+        for i in 0..requests {
+            let due = period * i as u32;
+            if let Some(sleep) = due.checked_sub(t0.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            let img = images[i % images.len()].clone();
+            let h = h.clone();
+            let (inflight, peak) = (&inflight, &peak);
+            workers.push(s.spawn(move || {
+                let depth = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(depth, Ordering::SeqCst);
+                let t = Instant::now();
+                h.infer_to(model, i as u64, img).expect("serving failed under load");
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                t.elapsed().as_micros() as u64
+            }));
+        }
+        workers.into_iter().map(|w| w.join().expect("sweep worker panicked")).collect()
+    });
+    (lat_us, peak.into_inner())
+}
+
+/// Nearest-rank percentile of an ascending-sorted µs sample.
+fn pct_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = ((p / 100.0 * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
 /// Interleave requests across all models round-robin — the registry-thrash
 /// phase that makes a tight byte budget evict on every model switch.
 fn run_interleaved(h: &Handle, models: &[String], images: &[Vec<f32>], requests: usize) -> Duration {
@@ -157,6 +211,49 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(17);
     let images: Vec<Vec<f32>> =
         (0..64).map(|_| (0..IMG).map(|_| rng.f32()).collect()).collect();
+
+    // ---- open-loop rate sweep: latency vs offered rate, then exit ----
+    if let Some(spec) = args.opt("rate-sweep") {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let bad = || Error::msg(format!("bad --rate-sweep '{spec}' (want lo:hi:steps)"));
+        if parts.len() != 3 {
+            return Err(bad());
+        }
+        let lo = parts[0].parse::<f64>().map_err(|_| bad())?;
+        let hi = parts[1].parse::<f64>().map_err(|_| bad())?;
+        let steps = parts[2].parse::<usize>().map_err(|_| bad())?.max(1);
+        let model = &models[0];
+        println!("open-loop rate sweep on {model} ({requests} requests per point):");
+        println!(
+            "  {:>11} {:>9} {:>9} {:>10} {:>12}",
+            "offered r/s", "p50 µs", "p99 µs", "peak queue", "achieved r/s"
+        );
+        for i in 0..steps {
+            let rate = if steps == 1 {
+                lo
+            } else {
+                lo + (hi - lo) * i as f64 / (steps - 1) as f64
+            };
+            let t0 = Instant::now();
+            let (mut lat, depth) = run_sweep_point(&h, model, &images, requests, rate);
+            let wall = t0.elapsed();
+            lat.sort_unstable();
+            println!(
+                "  {:>11.0} {:>9} {:>9} {:>10} {:>12.0}",
+                rate,
+                pct_us(&lat, 50.0),
+                pct_us(&lat, 99.0),
+                depth,
+                lat.len() as f64 / wall.as_secs_f64().max(1e-9),
+            );
+        }
+        println!("(the p99 knee marks where the offered rate outruns the engine)");
+        coord.shutdown()?;
+        if cleanup_scratch {
+            let _ = std::fs::remove_dir_all(&persist_dir);
+        }
+        return Ok(());
+    }
 
     // ---- per-model load phases ----
     for model in &models {

@@ -96,12 +96,14 @@ fn main() {
             name: name.clone(),
             m: 64, // a served batch of 64 rows
             weights: WeightStats::of(&dbb),
+            format: ssta::gemm::WeightFormat::Dbb,
             act_sparsity: 0.5,
             act_encoded: false,
             im2col_magnification: 1.0,
             raw_act_bytes: (64 * dbb.k) as u64,
             out_elems: (64 * dbb.n) as u64,
             relu: true,
+            fused_epilogue: false,
         };
         let t = layer_timing(&design, &profile, &mcu);
         let tw = power::effective_tops_per_w(&design, &t.events, t.dense_macs);

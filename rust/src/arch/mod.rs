@@ -44,6 +44,13 @@ pub enum Datapath {
     },
     /// Variable DBB: time-unrolled single-MAC units, any density 1/B..=B/B.
     Vdbb,
+    /// Block-sparse-row: a `row_ptr`/`col_idx` scheduler walk skips whole
+    /// `B×B` zero blocks; surviving blocks run **dense** on the full
+    /// `A·B·C` MAC complement (SPOTS; SNIPPETS Snippet 1's BSR DMA/FSM).
+    /// For this datapath the model `density` everywhere below is the
+    /// *block* density — the fraction of the block grid that survives
+    /// pruning — not the element density.
+    Bsr,
 }
 
 /// Technology node for the physical model.
@@ -155,7 +162,7 @@ impl Design {
                     return Err(ArchError::BadFixedNnz { b, bz: d.b });
                 }
             }
-            Datapath::Vdbb => {
+            Datapath::Vdbb | Datapath::Bsr => {
                 if d.b < 2 {
                     return Err(ArchError::SparseNeedsBlock(d.b));
                 }
@@ -170,7 +177,9 @@ impl Design {
     pub fn physical_macs(&self) -> usize {
         let d = self.dims;
         let per_tpe = match self.datapath {
-            Datapath::Dense => d.a * d.b * d.c,
+            // BSR blocks run dense, so the MAC provisioning is the dense
+            // complement — the win is scheduler cycles, not silicon.
+            Datapath::Dense | Datapath::Bsr => d.a * d.b * d.c,
             Datapath::FixedDbb { b } => d.a * b * d.c,
             Datapath::Vdbb => d.a * d.c,
         };
@@ -187,7 +196,9 @@ impl Design {
     pub fn opr_regs_per_tpe(&self) -> usize {
         let d = self.dims;
         match self.datapath {
-            Datapath::Dense => d.b * (d.a + d.c),
+            // BSR operand staging is the dense TPE's: surviving blocks
+            // are dense A×B / B×C tiles.
+            Datapath::Dense | Datapath::Bsr => d.b * (d.a + d.c),
             Datapath::FixedDbb { b } => d.a * d.b + b * d.c,
             // VDBB holds the A×B activation tile while streaming one
             // compressed weight per column (n=1 slot in flight).
@@ -204,7 +215,9 @@ impl Design {
     /// datapaths; none on dense).
     pub fn muxes(&self) -> usize {
         match self.datapath {
-            Datapath::Dense => 0,
+            // BSR has no per-element operand selection either: skipping
+            // happens in the block scheduler, the datapath stays dense.
+            Datapath::Dense | Datapath::Bsr => 0,
             _ => self.physical_macs(),
         }
     }
@@ -232,6 +245,10 @@ impl Design {
                 }
             }
             Datapath::Vdbb => phys / density.max(1e-9),
+            // BSR skips whole blocks: the array only ever sees surviving
+            // blocks, so the dense-equivalent rate scales 1/block-density
+            // (`density` is the block density here, see [`Datapath::Bsr`]).
+            Datapath::Bsr => phys / density.max(1e-9),
         }
     }
 
@@ -255,6 +272,10 @@ impl Design {
             Datapath::Dense => 1.0,
             Datapath::FixedDbb { b } => b as f64 / self.dims.b as f64,
             Datapath::Vdbb => 1.0 / self.dims.b as f64,
+            // the scheduler retires at most one block descriptor per block
+            // slot, bounding the sustained speedup at B — symmetric with
+            // VDBB's 1/B floor, just one granularity up.
+            Datapath::Bsr => 1.0 / self.dims.b as f64,
         };
         self.effective_tops(min_density)
     }
@@ -265,7 +286,9 @@ impl Design {
     pub fn weight_edge_bytes_per_cycle(&self) -> f64 {
         let d = self.dims;
         let per_tpe = match self.datapath {
-            Datapath::Dense => d.b * d.c,
+            // surviving BSR blocks stream dense values at the dense rate;
+            // the (small) index stream is priced by the SRAM model
+            Datapath::Dense | Datapath::Bsr => d.b * d.c,
             Datapath::FixedDbb { b } => b * d.c,
             Datapath::Vdbb => d.c,
         };
@@ -279,7 +302,7 @@ impl Design {
         let d = self.dims;
         let per_tpe = (d.a * d.b) as f64;
         match self.datapath {
-            Datapath::Dense | Datapath::FixedDbb { .. } => per_tpe * d.m as f64,
+            Datapath::Dense | Datapath::FixedDbb { .. } | Datapath::Bsr => per_tpe * d.m as f64,
             Datapath::Vdbb => per_tpe * d.m as f64 / (d.b as f64 * density).max(1.0),
         }
     }
@@ -292,6 +315,7 @@ impl Design {
             Datapath::Dense => {}
             Datapath::FixedDbb { b } => s.push_str(&format!("_DBB{}of{}", b, d.b)),
             Datapath::Vdbb => s.push_str("_VDBB"),
+            Datapath::Bsr => s.push_str("_BSR"),
         }
         if self.im2col {
             s.push_str("_IM2C");
@@ -333,6 +357,8 @@ impl Design {
         for p in parts {
             if p == "VDBB" {
                 datapath = Datapath::Vdbb;
+            } else if p == "BSR" {
+                datapath = Datapath::Bsr;
             } else if p == "IM2C" {
                 im2col = true;
             } else if p == "65nm" {
@@ -444,6 +470,23 @@ mod tests {
     }
 
     #[test]
+    fn bsr_datapath_semantics() {
+        // dense MAC provisioning (A·B·C per TPE), so the iso-4-TOPS grid
+        // is 2x4 TPEs — same silicon budget as the dense STA
+        let d = Design::parse("4x8x8_2x4_BSR_IM2C").unwrap();
+        assert_eq!(d.physical_macs(), 2048);
+        assert_eq!(d.muxes(), 0);
+        assert_eq!(d.opr_regs_per_tpe(), 96);
+        // effective rate scales 1/block-density, VDBB-style
+        assert!((d.effective_tops(0.5) - 2.0 * 4.096).abs() < 1e-9);
+        assert!((d.effective_tops(0.125) - 8.0 * 4.096).abs() < 1e-9);
+        // weight edge streams dense block values: B·C per TPE × N=4
+        assert_eq!(d.weight_edge_bytes_per_cycle(), 8.0 * 8.0 * 4.0);
+        // BSR needs a real block dimension
+        assert!(Design::parse("4x1x8_8x8_BSR").is_err());
+    }
+
+    #[test]
     fn label_parse_roundtrip() {
         for s in [
             "1x1x1_32x64",
@@ -451,6 +494,7 @@ mod tests {
             "4x8x4_4x8_DBB4of8_IM2C",
             "2x8x2_8x8_VDBB",
             "4x8x8_8x8_VDBB_IM2C_65nm",
+            "4x8x8_2x4_BSR_IM2C",
         ] {
             let d = Design::parse(s).unwrap();
             assert_eq!(d.label(), s, "roundtrip {s}");

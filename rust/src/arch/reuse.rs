@@ -12,8 +12,12 @@ use super::{Datapath, Design};
 pub fn inter_tpe_reuse(d: &Design) -> f64 {
     let (a, b, c, m, n) = dims(d);
     match d.datapath {
-        // AMCN / (AM + CN) with the SA special case A=B=C=1: MN/(M+N)
-        Datapath::Dense => (a * c * m * n) as f64 * b as f64 / ((a * b * m + c * b * n) as f64),
+        // AMCN / (AM + CN) with the SA special case A=B=C=1: MN/(M+N).
+        // BSR surviving blocks are dense tiles, so the reuse algebra is
+        // the dense one for the blocks that actually flow.
+        Datapath::Dense | Datapath::Bsr => {
+            (a * c * m * n) as f64 * b as f64 / ((a * b * m + c * b * n) as f64)
+        }
         Datapath::FixedDbb { b: nnz } => {
             (a * nnz * c * m * n) as f64 / ((a * b * m + c * nnz * n) as f64)
         }
@@ -26,7 +30,7 @@ pub fn inter_tpe_reuse(d: &Design) -> f64 {
 pub fn intra_tpe_reuse(d: &Design) -> f64 {
     let (a, b, c, _, _) = dims(d);
     match d.datapath {
-        Datapath::Dense => (a * b * c) as f64 / (b * (a + c)) as f64,
+        Datapath::Dense | Datapath::Bsr => (a * b * c) as f64 / (b * (a + c)) as f64,
         Datapath::FixedDbb { b: nnz } => (a * nnz * c) as f64 / (a * b + nnz * c) as f64,
         Datapath::Vdbb => (a * c) as f64 / (a * b + c) as f64,
     }
@@ -37,7 +41,7 @@ pub fn intra_tpe_reuse(d: &Design) -> f64 {
 /// single-MAC VDBB unit.
 pub fn acc_reuse(d: &Design) -> usize {
     match d.datapath {
-        Datapath::Dense => d.dims.b,
+        Datapath::Dense | Datapath::Bsr => d.dims.b,
         Datapath::FixedDbb { b } => b,
         Datapath::Vdbb => 1,
     }
@@ -48,7 +52,9 @@ pub fn acc_reuse(d: &Design) -> usize {
 /// operand; a B-way dot product would need all B activations zero.
 pub fn act_cg_effective(d: &Design) -> bool {
     match d.datapath {
-        Datapath::Dense => d.dims.b == 1,
+        // BSR keeps B-way dot products inside surviving blocks, so it
+        // inherits the dense rule (never single-MAC at B ≥ 2)
+        Datapath::Dense | Datapath::Bsr => d.dims.b == 1,
         Datapath::FixedDbb { .. } => false,
         Datapath::Vdbb => true,
     }

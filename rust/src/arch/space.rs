@@ -44,8 +44,8 @@ pub fn near_square_grid(total: usize) -> Option<(usize, usize)> {
 /// Candidate TPE geometries follow the paper: A, C ∈ {1, 2, 4, 8} with
 /// B = 8 (the DBB block size) for tensor PEs, plus the scalar 1×1×1
 /// baseline. For each geometry we emit the valid datapath variants
-/// (dense; fixed-DBB 2/8 and 4/8; VDBB) × IM2COL on/off, keeping only
-/// configurations whose per-TPE MAC count divides the budget.
+/// (dense; fixed-DBB 2/8 and 4/8; VDBB; BSR) × IM2COL on/off, keeping
+/// only configurations whose per-TPE MAC count divides the budget.
 pub fn enumerate(mac_budget: usize, tech: Tech) -> Vec<Design> {
     let mut out = Vec::new();
     let mut push = |dims: ArrayDims, dp: Datapath, im2c: bool| {
@@ -77,9 +77,10 @@ pub fn enumerate(mac_budget: usize, tech: Tech) -> Vec<Design> {
             Datapath::FixedDbb { b: 2 },
             Datapath::FixedDbb { b: 4 },
             Datapath::Vdbb,
+            Datapath::Bsr,
         ] {
             let per_tpe = match dp {
-                Datapath::Dense => a * b * c,
+                Datapath::Dense | Datapath::Bsr => a * b * c,
                 Datapath::FixedDbb { b: nnz } => a * nnz * c,
                 Datapath::Vdbb => a * c,
             };
@@ -154,6 +155,7 @@ mod tests {
         assert!(labels.iter().any(|l| l.contains("VDBB")));
         assert!(labels.iter().any(|l| l.contains("DBB4of8")));
         assert!(labels.iter().any(|l| l.contains("IM2C")));
+        assert!(labels.iter().any(|l| l.contains("BSR")), "{labels:?}");
     }
 
     #[test]

@@ -16,8 +16,8 @@ pub struct ComparisonRow {
     pub freq_ghz: f64,
     /// Peak/nominal throughput in TOPS (None where unreported).
     pub tops: Option<f64>,
-    /// Energy efficiency in effective TOPS/W.
-    pub tops_per_w: f64,
+    /// Energy efficiency in effective TOPS/W (None where unreported).
+    pub tops_per_w: Option<f64>,
     /// Area efficiency in TOPS/mm² (None where unreported).
     pub tops_per_mm2: Option<f64>,
     /// Weight-sparsity scheme.
@@ -38,7 +38,7 @@ pub fn rows_16nm() -> Vec<ComparisonRow> {
             sram: "2MB / 512KB",
             freq_ghz: 1.0,
             tops: None,
-            tops_per_w: 1.997,
+            tops_per_w: Some(1.997),
             tops_per_mm2: None,
             weight_sparsity: "Bit-wise",
             act_sparsity: "Bit-wise",
@@ -50,7 +50,7 @@ pub fn rows_16nm() -> Vec<ComparisonRow> {
             sram: "1.2MB / -",
             freq_ghz: 1.0,
             tops: Some(2.0),
-            tops_per_w: 0.79,
+            tops_per_w: Some(0.79),
             tops_per_mm2: Some(0.7),
             weight_sparsity: "Random",
             act_sparsity: "-",
@@ -68,7 +68,7 @@ pub fn rows_65nm() -> Vec<ComparisonRow> {
             sram: "58KB",
             freq_ghz: 1.0,
             tops: Some(0.5),
-            tops_per_w: 1.65,
+            tops_per_w: Some(1.65),
             tops_per_mm2: Some(1.01),
             weight_sparsity: "75% DBB (fixed)",
             act_sparsity: "-",
@@ -80,7 +80,7 @@ pub fn rows_65nm() -> Vec<ComparisonRow> {
             sram: "2MB / 512KB",
             freq_ghz: 1.0,
             tops: None,
-            tops_per_w: 0.81,
+            tops_per_w: Some(0.81),
             tops_per_mm2: None,
             weight_sparsity: "Bit-wise",
             act_sparsity: "Bit-wise",
@@ -92,13 +92,36 @@ pub fn rows_65nm() -> Vec<ComparisonRow> {
             sram: "246KB",
             freq_ghz: 0.2,
             tops: Some(0.40),
-            tops_per_w: 0.96,
+            tops_per_w: Some(0.96),
             tops_per_mm2: None, // "0.07/2.7M gates" — not mm²-comparable
             weight_sparsity: "Random",
             act_sparsity: "Random",
             published: true,
         },
     ]
+}
+
+/// Prior block-sparse (BSR-style) accelerator points — the comparison
+/// group the BSR datapath rows are measured against. SPOTS prunes whole
+/// weight tiles and schedules the surviving blocks through a systolic
+/// GEMM after im2col, the same coarse-index scheme as our
+/// [`crate::gemm::BsrPacked`] pipeline; its report quotes speedups over
+/// dense/Eyeriss baselines rather than absolute TOPS/W, so the efficiency
+/// columns stay unreported here and the measured comparison comes from our
+/// own BSR rows in Table V.
+pub fn rows_block_sparse() -> Vec<ComparisonRow> {
+    vec![ComparisonRow {
+        name: "SPOTS",
+        tech: "45nm",
+        sram: "-",
+        freq_ghz: 1.0,
+        tops: None,
+        tops_per_w: None,
+        tops_per_mm2: None,
+        weight_sparsity: "Block (BSR)",
+        act_sparsity: "im2col reuse",
+        published: true,
+    }]
 }
 
 #[cfg(test)]
@@ -109,10 +132,14 @@ mod tests {
     fn rows_match_paper_table_v() {
         let r16 = rows_16nm();
         assert_eq!(r16.len(), 2);
-        assert!((r16[0].tops_per_w - 1.997).abs() < 1e-9);
+        assert!((r16[0].tops_per_w.unwrap() - 1.997).abs() < 1e-9);
         let r65 = rows_65nm();
         assert_eq!(r65.len(), 3);
-        assert!((r65[0].tops_per_w - 1.65).abs() < 1e-9);
-        assert!(r16.iter().chain(r65.iter()).all(|r| r.published));
+        assert!((r65[0].tops_per_w.unwrap() - 1.65).abs() < 1e-9);
+        let rbsr = rows_block_sparse();
+        assert_eq!(rbsr.len(), 1);
+        assert_eq!(rbsr[0].weight_sparsity, "Block (BSR)");
+        assert!(rbsr[0].tops_per_w.is_none(), "no invented numbers");
+        assert!(r16.iter().chain(r65.iter()).chain(rbsr.iter()).all(|r| r.published));
     }
 }

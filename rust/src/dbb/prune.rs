@@ -84,6 +84,122 @@ pub fn apply_mask_f32(w: &mut TensorF32, mask: &[bool]) {
     }
 }
 
+/// Rank every `bz_r × bz_c` block of a `K×N` matrix by L1 magnitude and
+/// return, per block row, the block-column indices of the `keep` largest
+/// (SPOTS-style block-structured pruning — the BSR analogue of the
+/// per-block top-`nnz` selection above, one granularity coarser). Shared
+/// by the f32/i8 pruners and the training-time mask so all three agree
+/// on which blocks survive.
+fn bsr_survivors<T: Copy, F: Fn(T) -> f64>(
+    data: &[T],
+    k: usize,
+    n: usize,
+    bz_r: usize,
+    bz_c: usize,
+    keep: usize,
+    mag: F,
+) -> Vec<Vec<usize>> {
+    let (nbr, nbc) = (k.div_ceil(bz_r), n.div_ceil(bz_c));
+    let mut out = Vec::with_capacity(nbr);
+    for br in 0..nbr {
+        let r0 = br * bz_r;
+        let r1 = (r0 + bz_r).min(k);
+        let mut l1: Vec<(f64, usize)> = (0..nbc)
+            .map(|bc| {
+                let c0 = bc * bz_c;
+                let c1 = (c0 + bz_c).min(n);
+                let s: f64 = (r0..r1)
+                    .flat_map(|r| data[r * n + c0..r * n + c1].iter())
+                    .map(|&v| mag(v))
+                    .sum();
+                (s, bc)
+            })
+            .collect();
+        // stable preference for the leftmost block on ties → deterministic
+        l1.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+        let mut kept: Vec<usize> = l1.iter().take(keep.min(nbc)).map(|&(_, bc)| bc).collect();
+        kept.sort_unstable();
+        out.push(kept);
+    }
+    out
+}
+
+fn zero_non_survivors<T: Copy + Default>(
+    data: &mut [T],
+    k: usize,
+    n: usize,
+    bz_r: usize,
+    bz_c: usize,
+    survivors: &[Vec<usize>],
+) {
+    let nbc = n.div_ceil(bz_c);
+    for (br, kept) in survivors.iter().enumerate() {
+        let r0 = br * bz_r;
+        let r1 = (r0 + bz_r).min(k);
+        for bc in 0..nbc {
+            if kept.binary_search(&bc).is_ok() {
+                continue;
+            }
+            let c0 = bc * bz_c;
+            let c1 = (c0 + bz_c).min(n);
+            for r in r0..r1 {
+                for v in &mut data[r * n + c0..r * n + c1] {
+                    *v = T::default();
+                }
+            }
+        }
+    }
+}
+
+/// One-shot block-structured prune of an f32 `K×N` matrix: keep the
+/// `keep` largest-L1 `bz_r × bz_c` blocks of every block row, zero whole
+/// blocks otherwise. `keep = 0` zeroes the matrix; `keep ≥ block_cols`
+/// is a no-op. The result packs losslessly into
+/// [`crate::gemm::BsrPacked`] with at most `keep` blocks per block row.
+pub fn prune_bsr_f32(w: &TensorF32, bz_r: usize, bz_c: usize, keep: usize) -> TensorF32 {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    let surv = bsr_survivors(w.data(), k, n, bz_r, bz_c, keep, |v: f32| v.abs() as f64);
+    let mut out = w.clone();
+    zero_non_survivors(out.data_mut(), k, n, bz_r, bz_c, &surv);
+    out
+}
+
+/// One-shot block-structured prune of an INT8 `K×N` matrix (see
+/// [`prune_bsr_f32`]).
+pub fn prune_bsr_i8(w: &TensorI8, bz_r: usize, bz_c: usize, keep: usize) -> TensorI8 {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    let surv = bsr_survivors(w.data(), k, n, bz_r, bz_c, keep, |v: i8| (v as i32).abs() as f64);
+    let mut out = w.clone();
+    zero_non_survivors(out.data_mut(), k, n, bz_r, bz_c, &surv);
+    out
+}
+
+/// Training-time block keep-mask (true = keep): every position inside a
+/// surviving block is kept — including currently-zero positions, because
+/// a BSR block is *dense* in the stream, so gradient regrowth inside a
+/// surviving block costs the hardware nothing (unlike [`dbb_mask_f32`],
+/// which must pin zeros to hold the per-block NNZ bound). Whole
+/// non-surviving blocks are masked to zero.
+pub fn bsr_mask_f32(w: &TensorF32, bz_r: usize, bz_c: usize, keep: usize) -> Vec<bool> {
+    let (k, n) = (w.shape()[0], w.shape()[1]);
+    let surv = bsr_survivors(w.data(), k, n, bz_r, bz_c, keep, |v: f32| v.abs() as f64);
+    let mut mask = vec![false; k * n];
+    for (br, kept) in surv.iter().enumerate() {
+        let r0 = br * bz_r;
+        let r1 = (r0 + bz_r).min(k);
+        for &bc in kept {
+            let c0 = bc * bz_c;
+            let c1 = (c0 + bz_c).min(n);
+            for r in r0..r1 {
+                for m in &mut mask[r * n + c0..r * n + c1] {
+                    *m = true;
+                }
+            }
+        }
+    }
+    mask
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +256,53 @@ mod tests {
         let w = TensorF32::randn(&[64, 64], 1.0, &mut rng);
         let p = prune_f32(&w, 8, 2); // 75% sparsity
         assert!((p.sparsity() - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prune_bsr_respects_block_budget_prop() {
+        check(Config::default().cases(64), |rng| {
+            let k = rng.below(48) + 1;
+            let n = rng.below(32) + 1;
+            let bz_r = [4usize, 8, 16][rng.below(3)];
+            let bz_c = [4usize, 8, 16][rng.below(3)];
+            let keep = rng.below(4);
+            let w = TensorI8::rand(&[k, n], rng);
+            let p = prune_bsr_i8(&w, bz_r, bz_c, keep);
+            let packed = crate::gemm::BsrPacked::pack(&p, bz_r, bz_c);
+            let rp = packed.row_ptr();
+            for br in 0..packed.block_rows() {
+                assert!(rp[br + 1] - rp[br] <= keep, "block row {br} over budget");
+            }
+            // surviving values are untouched: p is w with whole blocks zeroed
+            for (i, (&pv, &wv)) in p.data().iter().zip(w.data()).enumerate() {
+                assert!(pv == wv || pv == 0, "elementwise corruption at {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prune_bsr_keeps_largest_l1_blocks() {
+        // 8x8 matrix, 4x4 blocks: block (0,1) clearly outweighs (0,0)
+        let mut w = TensorF32::zeros(&[4, 8]);
+        w.set(&[0, 0], 0.1);
+        w.set(&[1, 5], 5.0);
+        w.set(&[2, 6], -4.0);
+        let p = prune_bsr_f32(&w, 4, 4, 1);
+        assert_eq!(p.at(&[0, 0]), 0.0, "small block zeroed whole");
+        assert_eq!(p.at(&[1, 5]), 5.0);
+        assert_eq!(p.at(&[2, 6]), -4.0);
+    }
+
+    #[test]
+    fn bsr_mask_keeps_whole_surviving_blocks() {
+        let mut rng = Rng::new(6);
+        let w = TensorF32::randn(&[16, 16], 1.0, &mut rng);
+        let mask = bsr_mask_f32(&w, 8, 8, 1);
+        // exactly one 8x8 block kept per block row → half the positions
+        assert_eq!(mask.iter().filter(|&&m| m).count(), 2 * 8 * 8);
+        // mask application matches the pruner on surviving values
+        let mut w2 = w.clone();
+        apply_mask_f32(&mut w2, &mask);
+        assert_eq!(w2.data(), prune_bsr_f32(&w, 8, 8, 1).data());
     }
 }

@@ -7,10 +7,15 @@
 //! [`PreparedModel::prepare`] lowers each layer of a [`Model`] exactly once
 //! into a [`PreparedLayer`]:
 //!
-//! * a **packed weight operand** ([`PackedOperand`]) — either the flattened
+//! * a **packed weight operand** ([`PackedOperand`]) — the flattened
 //!   `(col_ptr, entries)` CSC stream ([`crate::gemm::DbbPacked`]) that the
-//!   DBB row kernels consume, decoded here and never again, or a dense
-//!   `[K, N]` INT8 matrix for layers that run unpruned;
+//!   DBB row kernels consume, decoded here and never again; or, under
+//!   [`PreparedModel::prepare_format`] with [`WeightFormat::Bsr`], the
+//!   block-sparse `row_ptr`/`col_idx` stream ([`crate::gemm::BsrPacked`])
+//!   the block-scheduler kernels walk (whole `bz×bz` blocks survive
+//!   pruning, so sparsity metadata is two coarse index arrays instead of a
+//!   per-element bitmask); or a dense `[K, N]` INT8 matrix for layers that
+//!   run unpruned;
 //! * a **fused-conv descriptor** ([`SampleShape`]) — the sampled window
 //!   geometry (same kernel/stride/pad as the full layer) the functional
 //!   pass convolves, plus the static profile facts (GEMM `M`, IM2COL
@@ -112,12 +117,16 @@
 //!   serving path ([`crate::coordinator`]) batches through this with zero
 //!   steady-state allocation.
 
+use crate::dbb::prune::prune_bsr_i8;
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
 use crate::gemm::fused::{self, PatchScratch};
 use crate::gemm::tiled;
 use crate::gemm::epilogue::{max_pool_2x2, requant_col_shifts, requant_shift, requant_with_shift};
-use crate::gemm::{requant_relu, ActPolicy, DbbPacked, Epilogue, PoolGeom, Requant, ZeroGate};
+use crate::gemm::{
+    requant_relu, ActPolicy, BsrPacked, DbbPacked, Epilogue, PoolGeom, Requant, WeightFormat,
+    ZeroGate,
+};
 use crate::models::{LayerKind, Model};
 use crate::sim::accel::LayerProfile;
 use crate::sim::analytic::WeightStats;
@@ -274,6 +283,10 @@ pub enum SampleShape {
 pub enum PackedOperand {
     /// DBB-bounded layer: the flattened CSC stream, decoded at prepare.
     Dbb(DbbPacked),
+    /// Block-sparse layer ([`WeightFormat::Bsr`]): the `row_ptr`/`col_idx`
+    /// indexed stream of dense `bz×bz` blocks the BSR block scheduler
+    /// consumes — coarse indices instead of DBB's per-element bitmask.
+    Bsr(BsrPacked),
     /// Dense-fallback layer (non-prunable / bound == bz): the `[K, N]`
     /// GEMM right operand.
     Dense(TensorI8),
@@ -284,7 +297,17 @@ impl PackedOperand {
     pub fn operand_bytes(&self) -> usize {
         match self {
             PackedOperand::Dbb(p) => p.operand_bytes(),
+            PackedOperand::Bsr(p) => p.operand_bytes(),
             PackedOperand::Dense(w) => w.len(),
+        }
+    }
+
+    /// The [`WeightFormat`] this operand was lowered under.
+    pub fn format(&self) -> WeightFormat {
+        match self {
+            PackedOperand::Dbb(_) => WeightFormat::Dbb,
+            PackedOperand::Bsr(_) => WeightFormat::Bsr,
+            PackedOperand::Dense(_) => WeightFormat::Dense,
         }
     }
 }
@@ -367,6 +390,10 @@ pub struct PreparedModel {
     nnz: usize,
     bz: usize,
     seed: u64,
+    /// Weight format every prunable layer was lowered to
+    /// ([`Self::prepare_format`]); non-prunable layers stay dense under
+    /// every format.
+    format: WeightFormat,
     layers: Vec<PreparedLayer>,
     seed_input: TensorI8,
     /// Recorded by [`Self::profile`]; empty until a functional profile ran.
@@ -395,6 +422,11 @@ pub struct PreparedModel {
     /// layer's [`LayerProfile::fused_epilogue`] and the twin prices the
     /// epilogue as array-overlapped work instead of MCU post-processing.
     fused_epilogue: bool,
+    /// Opt-in ([`Self::set_per_channel_requant`]): the fused epilogue
+    /// requantizes under the calibrated **per-output-channel** shifts
+    /// ([`Requant::PerChannel`]) instead of the layer-global maximum.
+    /// Default `false` — the global path, bit-exact with the staged oracle.
+    per_channel_requant: bool,
     /// Per-worker streaming-IM2COL row buffers, preallocated at prepare and
     /// reused by every [`Self::execute`] (concurrent executes fall back to
     /// a transient arena rather than blocking).
@@ -426,6 +458,33 @@ impl PreparedModel {
     /// assert_eq!(pm.layers().len(), model.layers.len());
     /// ```
     pub fn prepare(model: &Model, nnz: usize, bz: usize, seed: u64, par: Parallelism) -> Self {
+        Self::prepare_format(model, nnz, bz, seed, par, WeightFormat::default())
+    }
+
+    /// [`Self::prepare`] with an explicit [`WeightFormat`] for the prunable
+    /// layers — the format-polymorphic entry of the weight pipeline:
+    ///
+    /// * [`WeightFormat::Dbb`] — the historical path: fused top-k prune +
+    ///   DBB compress + CSC pack (identical to [`Self::prepare`]);
+    /// * [`WeightFormat::Bsr`] — block-structured prune at the **matched
+    ///   density** (`nnz/bz` of the `bz×bz` blocks of each block row
+    ///   survive) + BSR pack; the engine then streams the block-scheduler
+    ///   kernels, paying coarse `row_ptr`/`col_idx` indices instead of
+    ///   per-element bitmasks;
+    /// * [`WeightFormat::Dense`] — no pruning at all; every layer runs the
+    ///   dense oracle kernels.
+    ///
+    /// Pass 1 (the serial RNG weight + seed-input draw) is format-invariant,
+    /// so all three formats of the same `(model, nnz, bz, seed)` start from
+    /// byte-identical dense weights and the same seed input.
+    pub fn prepare_format(
+        model: &Model,
+        nnz: usize,
+        bz: usize,
+        seed: u64,
+        par: Parallelism,
+        format: WeightFormat,
+    ) -> Self {
         let mut rng = Rng::new(seed);
         let nlayers = model.layers.len();
 
@@ -460,29 +519,41 @@ impl PreparedModel {
             samples.push(sample);
         }
 
-        // Pass 2 (worker pool): the one-time encode — fused top-k prune +
-        // DBB compress + CSC pack per prunable layer. This is the *only*
-        // place the engine ever encodes or decodes a weight operand.
-        // Dense-fallback layers skip the pool entirely: their drawn matrix
-        // IS the operand, and it is *moved* into place below — never cloned
-        // (the unpruned layers are the largest ones; duplicating them at
-        // prepare time doubled their footprint for nothing).
-        let packed: Vec<Option<DbbPacked>> = map_indexed(nlayers, par, |li| {
+        // Pass 2 (worker pool): the one-time encode — format-routed prune +
+        // pack per prunable layer. This is the *only* place the engine ever
+        // encodes or decodes a weight operand. Dense-fallback layers (and
+        // the whole model under `WeightFormat::Dense`) skip the pool
+        // entirely: their drawn matrix IS the operand, and it is *moved*
+        // into place below — never cloned (the unpruned layers are the
+        // largest ones; duplicating them at prepare time doubled their
+        // footprint for nothing).
+        let packed: Vec<Option<PackedOperand>> = map_indexed(nlayers, par, |li| {
             let l = &model.layers[li];
             let bound = l.dbb_bound(nnz, bz);
-            (bound < bz).then(|| {
-                DbbMatrix::compress_topk(&dense[li], bz, bound)
-                    .expect("valid block size")
-                    .pack()
+            if bound >= bz || matches!(format, WeightFormat::Dense) {
+                return None;
+            }
+            Some(match format {
+                WeightFormat::Dbb => PackedOperand::Dbb(
+                    DbbMatrix::compress_topk(&dense[li], bz, bound)
+                        .expect("valid block size")
+                        .pack(),
+                ),
+                WeightFormat::Bsr => {
+                    // matched density: keep nnz/bz of the blocks per block
+                    // row, the block-granular analogue of the DBB bound
+                    let nbc = dense[li].shape()[1].div_ceil(bz);
+                    let keep = (nbc * bound).div_ceil(bz).clamp(1, nbc);
+                    let pruned = prune_bsr_i8(&dense[li], bz, bz, keep);
+                    PackedOperand::Bsr(BsrPacked::pack(&pruned, bz, bz))
+                }
+                WeightFormat::Dense => unreachable!("dense handled above"),
             })
         });
         let operands: Vec<PackedOperand> = dense
             .into_iter()
             .zip(packed)
-            .map(|(w_dense, p)| match p {
-                Some(p) => PackedOperand::Dbb(p),
-                None => PackedOperand::Dense(w_dense),
-            })
+            .map(|(w_dense, p)| p.unwrap_or(PackedOperand::Dense(w_dense)))
             .collect();
 
         let layers: Vec<PreparedLayer> = model
@@ -528,6 +599,7 @@ impl PreparedModel {
             nnz,
             bz,
             seed,
+            format,
             layers,
             seed_input: seed_input.unwrap_or_else(|| TensorI8::zeros(&[1, 1, 1])),
             measured_act: Vec::new(),
@@ -536,8 +608,42 @@ impl PreparedModel {
             perch_shifts: Vec::new(),
             fused_pool: false,
             fused_epilogue: false,
+            per_channel_requant: false,
             scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
         }
+    }
+
+    /// The [`WeightFormat`] the prunable layers were lowered to.
+    pub fn weight_format(&self) -> WeightFormat {
+        self.format
+    }
+
+    /// BSR operands have no joint A-DBB kernel — a resolved `Encode` on a
+    /// BSR layer degrades to `Gate` (still bit-exact; [`Self::profiles`]
+    /// reports no A-side encode for these layers either, so the twin never
+    /// prices a compressed A stream the executor cannot produce).
+    fn layer_policy(&self, li: usize, pol: ActPolicy) -> ActPolicy {
+        if pol == ActPolicy::Encode && matches!(self.layers[li].operand, PackedOperand::Bsr(_)) {
+            ActPolicy::Gate
+        } else {
+            pol
+        }
+    }
+
+    /// The requantizer a fused execute hands layer `li`'s epilogue: the
+    /// calibrated global shift, or — under [`Self::set_per_channel_requant`]
+    /// — that layer's per-output-channel shifts (cloned per call; the
+    /// per-channel path trades one small allocation per layer for finer
+    /// quantization).
+    fn layer_requant(&self, li: usize, shifts: &[u32]) -> Requant {
+        if self.per_channel_requant {
+            if let Some(per) = self.perch_shifts.get(li) {
+                if !per.is_empty() {
+                    return Requant::PerChannel(per.clone());
+                }
+            }
+        }
+        Requant::Global(shifts[li])
     }
 
     /// The model-level default [`ActPolicy`] that [`Self::execute`]
@@ -728,13 +834,21 @@ impl PreparedModel {
                 SampleShape::Conv(ss) => {
                     let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
                     let in_s = x.sparsity();
-                    let pol = resolve(li, in_s);
+                    let pol = self.layer_policy(li, resolve(li, in_s));
                     debug_assert_ne!(pol, ActPolicy::Auto, "resolve must not return Auto");
                     let acc = match (&l.operand, pol) {
                         (PackedOperand::Dbb(p), ActPolicy::Encode) => {
                             fused::conv2d_dbb_i8_packed_encoded_with(&x, p, &ss, par, scratch)
                         }
                         (PackedOperand::Dbb(p), _) => fused::conv2d_dbb_i8_packed_gated_with(
+                            &x,
+                            p,
+                            &ss,
+                            par,
+                            pol.gate(),
+                            scratch,
+                        ),
+                        (PackedOperand::Bsr(p), _) => fused::conv2d_bsr_i8_packed_gated_with(
                             &x,
                             p,
                             &ss,
@@ -754,7 +868,7 @@ impl PreparedModel {
                 SampleShape::Fc { m, k } => {
                     let a = fit_matrix_from(prev, m, k);
                     let in_s = a.sparsity();
-                    let pol = resolve(li, in_s);
+                    let pol = self.layer_policy(li, resolve(li, in_s));
                     debug_assert_ne!(pol, ActPolicy::Auto, "resolve must not return Auto");
                     let acc = match (&l.operand, pol) {
                         (PackedOperand::Dbb(p), ActPolicy::Encode) => {
@@ -762,6 +876,9 @@ impl PreparedModel {
                         }
                         (PackedOperand::Dbb(p), _) => {
                             tiled::dbb_i8_packed_gated(&a, p, par, pol.gate())
+                        }
+                        (PackedOperand::Bsr(p), _) => {
+                            tiled::bsr_i8_packed_gated(&a, p, par, pol.gate())
                         }
                         (PackedOperand::Dense(w), ActPolicy::Encode) => {
                             tiled::adbb_dense_i8(scratch.act_encode(&a, self.bz), w, par)
@@ -908,6 +1025,25 @@ impl PreparedModel {
         self.fused_epilogue = on;
     }
 
+    /// Whether fused executes requantize under the calibrated per-channel
+    /// shifts instead of the layer-global maximum.
+    pub fn per_channel_requant(&self) -> bool {
+        self.per_channel_requant
+    }
+
+    /// Opt the fused serving paths into **per-output-channel** requantize
+    /// shifts ([`Requant::PerChannel`], from the same [`Self::calibrate`]
+    /// pass that freezes the global ones). Channels whose calibrated shift
+    /// is smaller than the layer maximum keep more low-order bits — finer
+    /// quantization at identical kernel cost. With uniform per-channel
+    /// shifts this reproduces the global path bit for bit; otherwise the
+    /// outputs intentionally differ from the global-shift oracle, so leave
+    /// this off where staged-vs-fused bit-exactness is being checked.
+    /// Default `false`.
+    pub fn set_per_channel_requant(&mut self, on: bool) {
+        self.per_channel_requant = on;
+    }
+
     /// The staged oracle for the fused path: the historical
     /// materialize-i32 → `requant_with_shift` → pool chain, but with the
     /// *frozen calibrated* shifts instead of per-input dynamic ones — the
@@ -973,9 +1109,11 @@ impl PreparedModel {
                     SampleShape::Conv(ss) => {
                         let x = fit_fmap_from(prev, ss.h, ss.w, ss.c);
                         let in_s = x.sparsity();
-                        let pol =
-                            policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
-                        let mut ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        let pol = self
+                            .layer_policy(li, policy.resolved(
+                                self.measured_act.get(li).copied().unwrap_or(in_s),
+                            ));
+                        let mut ep = Epilogue::new(self.layer_requant(li, shifts), l.relu);
                         if self.fused_pool && ss.oh() >= 2 && ss.ow() >= 2 {
                             ep = ep.with_pool(PoolGeom { oh: ss.oh(), ow: ss.ow() });
                         }
@@ -987,6 +1125,16 @@ impl PreparedModel {
                                 )
                             }
                             (PackedOperand::Dbb(p), _) => fused::conv2d_dbb_i8_packed_ep_with(
+                                &x,
+                                p,
+                                &ss,
+                                par,
+                                pol.gate(),
+                                &ep,
+                                scratch,
+                                buf,
+                            ),
+                            (PackedOperand::Bsr(p), _) => fused::conv2d_bsr_i8_packed_ep_with(
                                 &x,
                                 p,
                                 &ss,
@@ -1015,9 +1163,11 @@ impl PreparedModel {
                     SampleShape::Fc { m, k } => {
                         let a = fit_matrix_from(prev, m, k);
                         let in_s = a.sparsity();
-                        let pol =
-                            policy.resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
-                        let ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        let pol = self
+                            .layer_policy(li, policy.resolved(
+                                self.measured_act.get(li).copied().unwrap_or(in_s),
+                            ));
+                        let ep = Epilogue::new(self.layer_requant(li, shifts), l.relu);
                         let buf = scratch.take_out_buf();
                         let out = match (&l.operand, pol) {
                             (PackedOperand::Dbb(p), ActPolicy::Encode) => {
@@ -1031,6 +1181,9 @@ impl PreparedModel {
                             }
                             (PackedOperand::Dbb(p), _) => {
                                 tiled::dbb_i8_packed_ep_into(&a, p, par, pol.gate(), &ep, buf)
+                            }
+                            (PackedOperand::Bsr(p), _) => {
+                                tiled::bsr_i8_packed_ep_into(&a, p, par, pol.gate(), &ep, buf)
                             }
                             (PackedOperand::Dense(w), ActPolicy::Encode) => {
                                 tiled::adbb_dense_i8_ep_into(
@@ -1147,10 +1300,12 @@ impl PreparedModel {
                             staged.as_ref().unwrap()
                         };
                         let in_s = x.sparsity();
-                        let pol = self
-                            .act_policy
-                            .resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
-                        let mut ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        let pol = self.layer_policy(
+                            li,
+                            self.act_policy
+                                .resolved(self.measured_act.get(li).copied().unwrap_or(in_s)),
+                        );
+                        let mut ep = Epilogue::new(self.layer_requant(li, shifts), l.relu);
                         if self.fused_pool && ss.oh() >= 2 && ss.ow() >= 2 {
                             ep = ep.with_pool(PoolGeom { oh: ss.oh(), ow: ss.ow() });
                         }
@@ -1162,6 +1317,16 @@ impl PreparedModel {
                                 )
                             }
                             (PackedOperand::Dbb(p), _) => fused::conv2d_dbb_i8_packed_ep_with(
+                                x,
+                                p,
+                                &ss,
+                                par,
+                                pol.gate(),
+                                &ep,
+                                scratch,
+                                buf,
+                            ),
+                            (PackedOperand::Bsr(p), _) => fused::conv2d_bsr_i8_packed_ep_with(
                                 x,
                                 p,
                                 &ss,
@@ -1212,10 +1377,12 @@ impl PreparedModel {
                         }
                         let a = TensorI8::from_vec(&[rows, k], ab);
                         let in_s = a.sparsity();
-                        let pol = self
-                            .act_policy
-                            .resolved(self.measured_act.get(li).copied().unwrap_or(in_s));
-                        let ep = Epilogue::new(Requant::Global(shifts[li]), l.relu);
+                        let pol = self.layer_policy(
+                            li,
+                            self.act_policy
+                                .resolved(self.measured_act.get(li).copied().unwrap_or(in_s)),
+                        );
+                        let ep = Epilogue::new(self.layer_requant(li, shifts), l.relu);
                         let buf = scratch.take_out_buf();
                         let out = match (&l.operand, pol) {
                             (PackedOperand::Dbb(p), ActPolicy::Encode) => {
@@ -1229,6 +1396,9 @@ impl PreparedModel {
                             }
                             (PackedOperand::Dbb(p), _) => {
                                 tiled::dbb_i8_packed_ep_into(&a, p, par, pol.gate(), &ep, buf)
+                            }
+                            (PackedOperand::Bsr(p), _) => {
+                                tiled::bsr_i8_packed_ep_into(&a, p, par, pol.gate(), &ep, buf)
                             }
                             (PackedOperand::Dense(w), ActPolicy::Encode) => {
                                 tiled::adbb_dense_i8_ep_into(
@@ -1301,8 +1471,10 @@ impl PreparedModel {
                     name: l.name.clone(),
                     m: l.m,
                     weights: l.weights,
+                    format: l.operand.format(),
                     act_sparsity: act,
-                    act_encoded: self.act_policy.resolved(act) == ActPolicy::Encode,
+                    act_encoded: self.act_policy.resolved(act) == ActPolicy::Encode
+                        && !matches!(l.operand, PackedOperand::Bsr(_)),
                     im2col_magnification: l.im2col_magnification,
                     raw_act_bytes: l.raw_act_bytes,
                     out_elems: l.out_elems,
@@ -1358,6 +1530,8 @@ impl PreparedModel {
         w.u8(act_policy_to_u8(self.act_policy));
         w.u8(self.fused_pool as u8);
         w.u8(self.fused_epilogue as u8);
+        w.u8(self.format.tag());
+        w.u8(self.per_channel_requant as u8);
         write_tensor(&mut w, &self.seed_input);
         w.usize(self.measured_act.len());
         for &v in &self.measured_act {
@@ -1418,6 +1592,24 @@ impl PreparedModel {
                     w.u8(1);
                     write_tensor(&mut w, t);
                 }
+                PackedOperand::Bsr(p) => {
+                    w.u8(2);
+                    w.usize(p.k);
+                    w.usize(p.n);
+                    w.usize(p.bz_r);
+                    w.usize(p.bz_c);
+                    let row_ptr = p.row_ptr();
+                    w.usize(row_ptr.len());
+                    for &v in row_ptr {
+                        w.usize(v);
+                    }
+                    let col_idx = p.col_idx();
+                    w.usize(col_idx.len());
+                    for &v in col_idx {
+                        w.u32(v);
+                    }
+                    w.i8_slice(p.blocks());
+                }
             }
             w.f64(l.im2col_magnification);
             w.u64(l.raw_act_bytes);
@@ -1433,9 +1625,12 @@ impl PreparedModel {
     /// Deserialize a prepared model from [`Self::to_bytes`]' format.
     /// Untrusted input is safe: the trailing checksum is verified **first**,
     /// every length is bounds-checked against the remaining stream before
-    /// allocation, and every packed DBB stream is revalidated through
-    /// [`DbbPacked::from_raw_parts`] — truncation or corruption yields a
-    /// clean `Err`, never a panic. `par` sizes the preallocated scratch
+    /// allocation, and every packed weight stream is revalidated through
+    /// [`DbbPacked::from_raw_parts`] / [`BsrPacked::from_raw_parts`] —
+    /// truncation or corruption yields a clean `Err`, never a panic.
+    /// Accepts both the current [`PERSIST_MAGIC`] (v2) layout and legacy
+    /// [`PERSIST_MAGIC_V1`] streams (which predate the BSR datapath and
+    /// load as DBB-format models). `par` sizes the preallocated scratch
     /// arena exactly as [`Self::prepare`] would. Bit-exact with the model
     /// that was saved: same outputs, shifts, measured sparsities, operand
     /// bytes (`rust/tests/persistence.rs`).
@@ -1449,7 +1644,9 @@ impl PreparedModel {
             bail!("prepared-model checksum mismatch (file corrupted or truncated)");
         }
         let mut r = BinReader::new(body);
-        if r.bytes(PERSIST_MAGIC.len())? != PERSIST_MAGIC {
+        let magic = r.bytes(PERSIST_MAGIC.len())?;
+        let v2 = magic == PERSIST_MAGIC;
+        if !v2 && magic != PERSIST_MAGIC_V1 {
             bail!("not a prepared-model stream (bad magic/version)");
         }
         let name_s = r.str()?.to_string();
@@ -1459,6 +1656,16 @@ impl PreparedModel {
         let act_policy = act_policy_from_u8(r.u8()?)?;
         let fused_pool = r.u8()? != 0;
         let fused_epilogue = r.u8()? != 0;
+        // v2 header additions; v1 streams predate both BSR and the
+        // per-channel epilogue flag, so Dbb/off are exact, not guesses
+        let (format, per_channel_requant) = if v2 {
+            let tag = r.u8()?;
+            let f = WeightFormat::from_tag(tag)
+                .ok_or_else(|| crate::anyhow!("unknown weight-format tag {tag}"))?;
+            (f, r.u8()? != 0)
+        } else {
+            (WeightFormat::Dbb, false)
+        };
         let seed_input = read_tensor(&mut r)?;
         let measured_act = r.f64_vec()?;
         let shifts = r.u32_vec()?;
@@ -1513,6 +1720,17 @@ impl PreparedModel {
                     )
                 }
                 1 => PackedOperand::Dense(read_tensor(&mut r)?),
+                2 if v2 => {
+                    let (ok, on) = (r.usize()?, r.usize()?);
+                    let (bzr, bzc) = (r.usize()?, r.usize()?);
+                    let row_ptr = r.usize_vec()?;
+                    let col_idx = r.u32_vec()?;
+                    let blocks = r.i8_vec()?;
+                    PackedOperand::Bsr(
+                        BsrPacked::from_raw_parts(ok, on, bzr, bzc, row_ptr, col_idx, blocks)
+                            .with_context(|| format!("BSR operand of layer '{lname}'"))?,
+                    )
+                }
                 t => bail!("unknown operand tag {t} for layer '{lname}'"),
             };
             let im2col_magnification = r.f64()?;
@@ -1568,6 +1786,7 @@ impl PreparedModel {
             nnz,
             bz,
             seed,
+            format,
             layers,
             seed_input,
             measured_act,
@@ -1576,6 +1795,7 @@ impl PreparedModel {
             perch_shifts,
             fused_pool,
             fused_epilogue,
+            per_channel_requant,
             scratch: Mutex::new(PatchScratch::preallocate(par.get(), max_k)),
         })
     }
@@ -1599,8 +1819,16 @@ impl PreparedModel {
 
 /// Magic + version prefix of the prepared-model flat-binary format. Bump
 /// the trailing digit on any layout change — old streams then fail the
-/// magic check instead of misparsing.
-pub const PERSIST_MAGIC: &[u8; 8] = b"SSTAPM1\0";
+/// magic check instead of misparsing. v2 adds the weight-format and
+/// per-channel-requant header bytes and the BSR operand tag;
+/// [`PreparedModel::from_bytes`] still accepts [`PERSIST_MAGIC_V1`]
+/// streams (all-DBB/dense payloads written before the BSR datapath).
+pub const PERSIST_MAGIC: &[u8; 8] = b"SSTAPM2\0";
+
+/// The v1 magic [`PreparedModel::from_bytes`] remains backward-compatible
+/// with: same layout as v2 minus the two header bytes, DBB/dense operand
+/// tags only.
+pub const PERSIST_MAGIC_V1: &[u8; 8] = b"SSTAPM1\0";
 
 fn act_policy_to_u8(p: ActPolicy) -> u8 {
     match p {
@@ -1982,5 +2210,210 @@ mod tests {
         assert!(profiles[0].act_sparsity < 0.1, "{}", profiles[0].act_sparsity);
         // ReLU layers downstream are measurably sparse
         assert!(profiles.iter().skip(1).any(|p| p.act_sparsity > 0.2));
+    }
+
+    /// Swap every BSR operand for its decompressed dense matrix — the
+    /// dense-kernel oracle of the same lowered model, sharing seed input,
+    /// shifts, and measured sparsities.
+    fn densify_bsr(pm: &PreparedModel, par: Parallelism) -> PreparedModel {
+        let layers: Vec<PreparedLayer> = pm
+            .layers
+            .iter()
+            .map(|l| {
+                let mut l2 = l.clone();
+                if let PackedOperand::Bsr(p) = &l.operand {
+                    l2.operand = PackedOperand::Dense(p.decompress());
+                }
+                l2
+            })
+            .collect();
+        PreparedModel {
+            name: pm.name,
+            nnz: pm.nnz,
+            bz: pm.bz,
+            seed: pm.seed,
+            format: WeightFormat::Dense,
+            layers,
+            seed_input: pm.seed_input.clone(),
+            measured_act: pm.measured_act.clone(),
+            act_policy: pm.act_policy,
+            shifts: pm.shifts.clone(),
+            perch_shifts: pm.perch_shifts.clone(),
+            fused_pool: pm.fused_pool,
+            fused_epilogue: pm.fused_epilogue,
+            per_channel_requant: pm.per_channel_requant,
+            scratch: Mutex::new(PatchScratch::preallocate(par.get(), 0)),
+        }
+    }
+
+    #[test]
+    fn bsr_prepare_routes_prunable_layers_and_matches_dense_oracle() {
+        let m = models::convnet5();
+        let par = Parallelism::threads(3);
+        let pm = PreparedModel::prepare_format(&m, 3, 8, 42, par, WeightFormat::Bsr);
+        assert_eq!(pm.weight_format(), WeightFormat::Bsr);
+        // prunable layers carry a BSR stream with dropped blocks, the rest
+        // stay dense — and the coarse index is all the sparsity metadata
+        let mut bsr_seen = 0;
+        for (pl, l) in pm.layers().iter().zip(&m.layers) {
+            match (&pl.operand, l.prunable) {
+                (PackedOperand::Bsr(p), true) => {
+                    assert!(p.stored_blocks() < p.block_rows() * p.block_cols(), "{}", pl.name);
+                    assert!(p.index_bytes() > 0);
+                    bsr_seen += 1;
+                }
+                (PackedOperand::Dense(w), false) => assert!(!w.is_empty()),
+                (op, prunable) => {
+                    panic!("{}: operand {op:?} vs prunable={prunable}", pl.name)
+                }
+            }
+        }
+        assert!(bsr_seen > 0, "convnet5 must have prunable layers");
+        // pass 1 is format-invariant: same seed input as the DBB lowering
+        let dbb = PreparedModel::prepare(&m, 3, 8, 42, par);
+        assert_eq!(pm.seed_input().data(), dbb.seed_input().data());
+        // bit-exact with the dense kernels on the decompressed weights,
+        // under every activation policy (Encode degrades to Gate on BSR)
+        let oracle = densify_bsr(&pm, par);
+        let want = oracle.execute_policy(oracle.seed_input(), par, ActPolicy::Off);
+        for pol in [ActPolicy::Off, ActPolicy::Gate, ActPolicy::Encode, ActPolicy::Auto] {
+            let got = pm.execute_policy(pm.seed_input(), par, pol);
+            assert_eq!(got.output, want.output, "policy {pol:?}");
+            // no BSR layer ever reports (or runs) Encode
+            for (pl, &p) in pm.layers().iter().zip(&got.act_policy) {
+                if matches!(pl.operand, PackedOperand::Bsr(_)) {
+                    assert_ne!(p, ActPolicy::Encode, "{}", pl.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bsr_fused_serving_is_bit_exact_and_batches() {
+        let m = models::lenet5();
+        let par = Parallelism::threads(3);
+        let mut pm = PreparedModel::prepare_format(&m, 2, 8, 9, par, WeightFormat::Bsr);
+        pm.profile(par);
+        pm.calibrate(par);
+        // twin profiles carry the BSR format and never declare A-encode on
+        // BSR layers
+        for (p, l) in pm.profiles().unwrap().iter().zip(pm.layers()) {
+            assert_eq!(p.format, l.operand.format(), "{}", p.name);
+            if matches!(l.operand, PackedOperand::Bsr(_)) {
+                assert!(!p.act_encoded, "{}", p.name);
+            }
+        }
+        let seed = pm.seed_input().clone();
+        let plain = pm.execute(&seed, par);
+        let staged = pm.execute_staged(&seed, par);
+        let fused = pm.execute_fused(&seed, par);
+        assert_eq!(staged.output, plain.output);
+        assert_eq!(fused.output, staged.output, "BSR fused epilogue must be bit-exact");
+        // batch folds into M, bit-exact per image
+        let mut rng = Rng::new(5);
+        let mut inputs = vec![seed.clone()];
+        inputs.extend((0..2).map(|_| TensorI8::rand_sparse(&[28, 28, 1], 0.3, &mut rng)));
+        let batched = pm.execute_fused_batch(&inputs, par);
+        for (i, x) in inputs.iter().enumerate() {
+            assert_eq!(batched[i], pm.execute_fused(x, par).output, "image {i}");
+        }
+    }
+
+    #[test]
+    fn bsr_model_roundtrips_v2_flat_binary() {
+        let m = models::convnet5();
+        let mut pm = PreparedModel::prepare_format(&m, 3, 8, 42, Parallelism::serial(), WeightFormat::Bsr);
+        pm.profile(Parallelism::serial());
+        pm.calibrate(Parallelism::serial());
+        pm.set_per_channel_requant(true);
+        let bytes = pm.to_bytes();
+        assert_eq!(&bytes[..8], PERSIST_MAGIC);
+        let back = PreparedModel::from_bytes(&bytes, Parallelism::serial()).unwrap();
+        assert_eq!(back.weight_format(), WeightFormat::Bsr);
+        assert!(back.per_channel_requant());
+        assert_eq!(back.operand_bytes(), pm.operand_bytes());
+        let a = pm.execute_fused(pm.seed_input(), Parallelism::serial());
+        let b = back.execute_fused(back.seed_input(), Parallelism::serial());
+        assert_eq!(a.output, b.output, "loaded BSR model must serve bit-exactly");
+        // corruption and truncation still fail cleanly
+        assert!(PreparedModel::from_bytes(&bytes[..bytes.len() - 5], Parallelism::serial())
+            .is_err());
+        let mut bad = bytes.clone();
+        bad[bytes.len() / 2] ^= 0x10;
+        assert!(PreparedModel::from_bytes(&bad, Parallelism::serial()).is_err());
+    }
+
+    #[test]
+    fn v1_streams_still_load_as_dbb_models() {
+        // synthesize a v1 payload from a v2 one: the v1 layout is exactly
+        // the v2 layout minus the two header bytes (format + per-channel
+        // flag), under the old magic — see PERSIST_MAGIC_V1
+        let m = models::lenet5();
+        let mut pm = PreparedModel::prepare(&m, 2, 8, 9, Parallelism::serial());
+        pm.profile(Parallelism::serial());
+        pm.calibrate(Parallelism::serial());
+        let v2 = pm.to_bytes();
+        let hdr = 8 + (8 + pm.model_name().len()) + 8 + 8 + 8 + 3;
+        assert_eq!(v2[hdr], WeightFormat::Dbb.tag());
+        assert_eq!(v2[hdr + 1], 0, "per-channel flag off");
+        let mut v1 = Vec::with_capacity(v2.len() - 2);
+        v1.extend_from_slice(PERSIST_MAGIC_V1);
+        v1.extend_from_slice(&v2[8..hdr]);
+        v1.extend_from_slice(&v2[hdr + 2..v2.len() - 8]);
+        let cs = fnv1a64(&v1);
+        v1.extend_from_slice(&cs.to_le_bytes());
+        let back = PreparedModel::from_bytes(&v1, Parallelism::serial()).unwrap();
+        assert_eq!(back.weight_format(), WeightFormat::Dbb);
+        assert!(!back.per_channel_requant());
+        assert_eq!(back.operand_bytes(), pm.operand_bytes());
+        let a = pm.execute(pm.seed_input(), Parallelism::serial());
+        let b = back.execute(back.seed_input(), Parallelism::serial());
+        assert_eq!(a.output, b.output, "v1 payload must serve bit-exactly");
+        // a v1 stream claiming a BSR operand tag is rejected, not misparsed
+        let mut bsr_pm =
+            PreparedModel::prepare_format(&m, 2, 8, 9, Parallelism::serial(), WeightFormat::Bsr);
+        bsr_pm.profile(Parallelism::serial());
+        let bv2 = bsr_pm.to_bytes();
+        let bhdr = 8 + (8 + bsr_pm.model_name().len()) + 8 + 8 + 8 + 3;
+        let mut bv1 = Vec::with_capacity(bv2.len() - 2);
+        bv1.extend_from_slice(PERSIST_MAGIC_V1);
+        bv1.extend_from_slice(&bv2[8..bhdr]);
+        bv1.extend_from_slice(&bv2[bhdr + 2..bv2.len() - 8]);
+        let cs = fnv1a64(&bv1);
+        bv1.extend_from_slice(&cs.to_le_bytes());
+        assert!(PreparedModel::from_bytes(&bv1, Parallelism::serial()).is_err());
+    }
+
+    #[test]
+    fn per_channel_requant_is_opt_in_and_uniform_shifts_match_global() {
+        let m = models::convnet5();
+        let par = Parallelism::threads(3);
+        let mut pm = PreparedModel::prepare(&m, 3, 8, 42, par);
+        pm.profile(par);
+        pm.calibrate(par);
+        assert!(!pm.per_channel_requant(), "global path is the default");
+        let seed = pm.seed_input().clone();
+        let global = pm.execute_fused(&seed, par);
+        pm.set_per_channel_requant(true);
+        let perch = pm.execute_fused(&seed, par);
+        assert_eq!(perch.output.shape(), global.output.shape());
+        // every per-channel shift is at most the layer maximum the global
+        // path applies (finer, never coarser, quantization)
+        for (per, &g) in pm.perch_shifts.iter().zip(&pm.shifts) {
+            assert!(per.iter().all(|&s| s <= g));
+        }
+        // batched serving agrees with per-image serving under the flag
+        let batched = pm.execute_fused_batch(std::slice::from_ref(&seed), par);
+        assert_eq!(batched[0], perch.output);
+        // uniform per-channel shifts (all pinned to the global maximum)
+        // reproduce the global path bit for bit
+        pm.perch_shifts = pm
+            .shifts
+            .iter()
+            .zip(&pm.perch_shifts)
+            .map(|(&g, per)| vec![g; per.len()])
+            .collect();
+        let uniform = pm.execute_fused(&seed, par);
+        assert_eq!(uniform.output, global.output, "uniform per-channel == global");
     }
 }

@@ -1,0 +1,518 @@
+//! BSR (block-sparse-row) weight operand + block-scheduler kernels — the
+//! second compressed weight datapath (SPOTS, and SNIPPETS Snippet 1's
+//! hardware BSR scheduler: `row_ptr` + `col_idx` metadata over dense INT8
+//! blocks, whole zero blocks never loaded).
+//!
+//! Where the DBB/VDBB format ([`crate::gemm::DbbPacked`]) compresses
+//! *within* a block (bitmask + packed non-zeros, every block present), BSR
+//! compresses *across* blocks: the `[K×N]` weight is cut into `bz_r × bz_c`
+//! tiles, tiles that are entirely zero are skipped by the scheduler walk,
+//! and surviving tiles stay **dense** — branch-free MACs inside, no
+//! per-element index metadata at all. The index overhead is per *block*
+//! (one `col_idx` entry per surviving block, one `row_ptr` entry per block
+//! row), which is why the format wins at coarse structured sparsity and
+//! loses the fine-grained b-of-B regime to DBB — the exact trade
+//! `examples/design_space` puts on one axis.
+//!
+//! Bit-exactness is by construction: a skipped block contributes exactly 0
+//! to every INT32 accumulator it would have touched, and the surviving
+//! terms accumulate in ascending-k order per output column — the same
+//! per-column term order as the dense oracle — so
+//! [`bsr_i8_packed`] == [`crate::gemm::dense_i8`] on the decompressed
+//! matrix to the bit (property-pinned in `rust/tests/bsr.rs`). Like the
+//! merge-join A-DBB kernel, the block scheduler stays scalar on every ISA.
+
+use crate::tensor::{TensorI32, TensorI8};
+use crate::util::error::Result;
+
+/// Widest supported block edge (either dimension). Generous next to the
+/// DBB `BZ ≤ 16` bound — BSR hardware uses tiles as large as the array
+/// (Snippet 1 schedules 14×14).
+pub const BSR_MAX_BZ: usize = 64;
+
+/// A `[K×N]` INT8 weight in block-sparse-row form: per block-row offsets
+/// (`row_ptr`), per-block column indices (`col_idx`), and the surviving
+/// blocks as dense `bz_r × bz_c` tiles (row-major within the tile,
+/// zero-padded at the K/N edges). Mirrors [`crate::gemm::DbbPacked`]'s
+/// prepare-once/execute-many contract: pack once, every GEMM/conv that
+/// takes a `BsrPacked` runs with zero per-call decode work.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BsrPacked {
+    /// Reduction dim of the dense matrix.
+    pub k: usize,
+    /// Output channels.
+    pub n: usize,
+    /// Block rows (tile height along K).
+    pub bz_r: usize,
+    /// Block columns (tile width along N).
+    pub bz_c: usize,
+    row_ptr: Vec<usize>,
+    col_idx: Vec<u32>,
+    blocks: Vec<i8>,
+}
+
+impl BsrPacked {
+    /// Pack a dense `[K, N]` matrix: every `bz_r × bz_c` tile with at least
+    /// one non-zero is stored dense (edge tiles zero-padded); all-zero
+    /// tiles are dropped. Within a block row, stored tiles keep ascending
+    /// column order — the canonical form [`Self::from_raw_parts`] enforces.
+    pub fn pack(w: &TensorI8, bz_r: usize, bz_c: usize) -> BsrPacked {
+        let (k, n) = (w.shape()[0], w.shape()[1]);
+        assert!(
+            (1..=BSR_MAX_BZ).contains(&bz_r) && (1..=BSR_MAX_BZ).contains(&bz_c),
+            "BSR block {bz_r}x{bz_c} out of 1..={BSR_MAX_BZ}"
+        );
+        let (nbr, nbc) = (k.div_ceil(bz_r), n.div_ceil(bz_c));
+        let wd = w.data();
+        let mut row_ptr = Vec::with_capacity(nbr + 1);
+        let mut col_idx = Vec::new();
+        let mut blocks = Vec::new();
+        row_ptr.push(0usize);
+        let mut tile = vec![0i8; bz_r * bz_c];
+        for br in 0..nbr {
+            let k0 = br * bz_r;
+            let rlen = bz_r.min(k - k0);
+            for bc in 0..nbc {
+                let n0 = bc * bz_c;
+                let clen = bz_c.min(n - n0);
+                tile.fill(0);
+                let mut any = false;
+                for r in 0..rlen {
+                    let src = &wd[(k0 + r) * n + n0..(k0 + r) * n + n0 + clen];
+                    any |= src.iter().any(|&v| v != 0);
+                    tile[r * bz_c..r * bz_c + clen].copy_from_slice(src);
+                }
+                if any {
+                    col_idx.push(bc as u32);
+                    blocks.extend_from_slice(&tile);
+                }
+            }
+            row_ptr.push(col_idx.len());
+        }
+        BsrPacked { k, n, bz_r, bz_c, row_ptr, col_idx, blocks }
+    }
+
+    /// Rebuild a packed operand from its flattened parts — the
+    /// deserialization entry of the prepared-model persistence format. The
+    /// parts are *validated*, not trusted (mirrors
+    /// [`crate::gemm::DbbPacked::from_raw_parts`]): `row_ptr` must be a
+    /// monotone `block_rows + 1` offset table covering `col_idx` exactly,
+    /// column indices must be strictly ascending within each block row and
+    /// in range, and `blocks` must hold exactly `bz_r · bz_c` bytes per
+    /// stored block — so a corrupted file yields a clean `Err`, never a
+    /// kernel out-of-bounds.
+    pub fn from_raw_parts(
+        k: usize,
+        n: usize,
+        bz_r: usize,
+        bz_c: usize,
+        row_ptr: Vec<usize>,
+        col_idx: Vec<u32>,
+        blocks: Vec<i8>,
+    ) -> Result<BsrPacked> {
+        if !(1..=BSR_MAX_BZ).contains(&bz_r) || !(1..=BSR_MAX_BZ).contains(&bz_c) {
+            crate::bail!("BsrPacked stream: invalid block {bz_r}x{bz_c}");
+        }
+        if k == 0 || n == 0 {
+            crate::bail!("BsrPacked stream: empty matrix {k}x{n}");
+        }
+        let (nbr, nbc) = (k.div_ceil(bz_r), n.div_ceil(bz_c));
+        if row_ptr.len() != nbr + 1 || row_ptr.first() != Some(&0) {
+            crate::bail!(
+                "BsrPacked stream: row_ptr must hold block_rows+1={} offsets starting at 0, got {}",
+                nbr + 1,
+                row_ptr.len()
+            );
+        }
+        if row_ptr.windows(2).any(|w| w[0] > w[1]) || row_ptr[nbr] != col_idx.len() {
+            crate::bail!(
+                "BsrPacked stream: row_ptr must rise monotonically to col_idx.len()={}",
+                col_idx.len()
+            );
+        }
+        for br in 0..nbr {
+            let row = &col_idx[row_ptr[br]..row_ptr[br + 1]];
+            if row.iter().any(|&c| c as usize >= nbc) {
+                crate::bail!("BsrPacked stream: col_idx out of range (block_cols={nbc})");
+            }
+            if row.windows(2).any(|w| w[0] >= w[1]) {
+                crate::bail!("BsrPacked stream: col_idx must ascend within a block row");
+            }
+        }
+        if blocks.len() != col_idx.len() * bz_r * bz_c {
+            crate::bail!(
+                "BsrPacked stream: blocks must hold {} x {}x{} values, got {}",
+                col_idx.len(),
+                bz_r,
+                bz_c,
+                blocks.len()
+            );
+        }
+        Ok(BsrPacked { k, n, bz_r, bz_c, row_ptr, col_idx, blocks })
+    }
+
+    /// Per-block-row offsets into [`Self::col_idx`] (`block_rows + 1`
+    /// values).
+    pub fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Block-column index of each stored block, block-row-major.
+    pub fn col_idx(&self) -> &[u32] {
+        &self.col_idx
+    }
+
+    /// The stored tiles, `bz_r · bz_c` dense INT8 values each.
+    pub fn blocks(&self) -> &[i8] {
+        &self.blocks
+    }
+
+    /// Block rows (`ceil(K / bz_r)`).
+    pub fn block_rows(&self) -> usize {
+        self.k.div_ceil(self.bz_r)
+    }
+
+    /// Block columns (`ceil(N / bz_c)`).
+    pub fn block_cols(&self) -> usize {
+        self.n.div_ceil(self.bz_c)
+    }
+
+    /// Stored (surviving) blocks.
+    pub fn stored_blocks(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// Fraction of the block grid that survives — the quantity the
+    /// analytic twin prices as the BSR datapath's occupancy.
+    pub fn block_density(&self) -> f64 {
+        let total = self.block_rows() * self.block_cols();
+        if total == 0 {
+            return 0.0;
+        }
+        self.stored_blocks() as f64 / total as f64
+    }
+
+    /// Stored non-zero values (zeros padded/embedded inside surviving
+    /// blocks do not count — this is the *model* sparsity, not the stream
+    /// length; the stream length is `stored_blocks() · bz_r · bz_c`).
+    pub fn total_nnz(&self) -> usize {
+        self.blocks.iter().filter(|&&v| v != 0).count()
+    }
+
+    /// Wire bytes of the scheduler metadata, priced at the weight-SRAM
+    /// rate by the analytic twin: one u32 offset per `row_ptr` entry plus
+    /// one u16 column index per stored block — **no per-element bitmask**,
+    /// the defining contrast with the DBB stream's `BZ` bits per block.
+    pub fn index_bytes(&self) -> usize {
+        4 * self.row_ptr.len() + 2 * self.col_idx.len()
+    }
+
+    /// Host bytes the packed operand occupies (the steady-state footprint
+    /// an executor holds per layer; mirrors
+    /// [`crate::gemm::DbbPacked::operand_bytes`]).
+    pub fn operand_bytes(&self) -> usize {
+        self.row_ptr.len() * std::mem::size_of::<usize>()
+            + self.col_idx.len() * std::mem::size_of::<u32>()
+            + self.blocks.len()
+    }
+
+    /// Decompress to the dense `[K, N]` matrix (test oracle convenience).
+    pub fn decompress(&self) -> TensorI8 {
+        let mut out = TensorI8::zeros(&[self.k, self.n]);
+        let od = out.data_mut();
+        let (bz_r, bz_c) = (self.bz_r, self.bz_c);
+        for br in 0..self.block_rows() {
+            let k0 = br * bz_r;
+            let rlen = bz_r.min(self.k - k0);
+            for bi in self.row_ptr[br]..self.row_ptr[br + 1] {
+                let n0 = self.col_idx[bi] as usize * bz_c;
+                let clen = bz_c.min(self.n - n0);
+                let blk = &self.blocks[bi * bz_r * bz_c..(bi + 1) * bz_r * bz_c];
+                for r in 0..rlen {
+                    od[(k0 + r) * self.n + n0..(k0 + r) * self.n + n0 + clen]
+                        .copy_from_slice(&blk[r * bz_c..r * bz_c + clen]);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Block-scheduler inner kernel shared by the serial, tiled and fused-conv
+/// BSR GEMMs: accumulate output rows `row0..row0 + out.len()/n` from the
+/// packed operand. Absent blocks are skipped by the `row_ptr` walk; inside
+/// a surviving block the MACs are branch-free and dense. Per output
+/// column the surviving terms accumulate in ascending-k order — the dense
+/// oracle's per-column order — so every caller is bit-exact under tiling.
+/// Scalar on every ISA (block-skip control flow, like the merge-join).
+pub(crate) fn bsr_rows_i8(
+    ad: &[i8],
+    w: &BsrPacked,
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    debug_assert_eq!(k, w.k);
+    debug_assert_eq!(n, w.n);
+    let (bz_r, bz_c) = (w.bz_r, w.bz_c);
+    let (rp, ci, bl) = (&w.row_ptr[..], &w.col_idx[..], &w.blocks[..]);
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..row * k + k];
+        for br in 0..rp.len() - 1 {
+            let k0 = br * bz_r;
+            let rlen = bz_r.min(k - k0);
+            for bi in rp[br]..rp[br + 1] {
+                let n0 = ci[bi] as usize * bz_c;
+                let clen = bz_c.min(n - n0);
+                let blk = &bl[bi * bz_r * bz_c..(bi + 1) * bz_r * bz_c];
+                let cw = &mut crow[n0..n0 + clen];
+                for r in 0..rlen {
+                    let av = arow[k0 + r] as i32;
+                    let wrow = &blk[r * bz_c..r * bz_c + clen];
+                    for (cv, &wv) in cw.iter_mut().zip(wrow) {
+                        *cv += av * wv as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Zero-gated variant of [`bsr_rows_i8`]: the per-row occupancy scan of
+/// the other gated kernels (O(K), amortized across all N columns)
+/// classifies each A row once — all-zero rows skip every surviving block
+/// outright, dense rows take the branch-free walk, mixed rows arm the
+/// per-element gate so a zero activation suppresses its MAC row across
+/// the block. Bit-exact with [`bsr_rows_i8`]: skipped terms are exactly 0
+/// and survivors keep their order.
+pub(crate) fn bsr_rows_i8_gated(
+    ad: &[i8],
+    w: &BsrPacked,
+    out: &mut [i32],
+    row0: usize,
+    k: usize,
+    n: usize,
+) {
+    if n == 0 {
+        return;
+    }
+    let (bz_r, bz_c) = (w.bz_r, w.bz_c);
+    let (rp, ci, bl) = (&w.row_ptr[..], &w.col_idx[..], &w.blocks[..]);
+    for (i, crow) in out.chunks_mut(n).enumerate() {
+        let row = row0 + i;
+        let arow = &ad[row * k..row * k + k];
+        let nnz = k - arow.iter().filter(|&&a| a == 0).count();
+        if nnz == 0 {
+            continue; // accumulate semantics: contributes exactly 0
+        }
+        let gate = nnz < k;
+        for br in 0..rp.len() - 1 {
+            let k0 = br * bz_r;
+            let rlen = bz_r.min(k - k0);
+            for bi in rp[br]..rp[br + 1] {
+                let n0 = ci[bi] as usize * bz_c;
+                let clen = bz_c.min(n - n0);
+                let blk = &bl[bi * bz_r * bz_c..(bi + 1) * bz_r * bz_c];
+                let cw = &mut crow[n0..n0 + clen];
+                for r in 0..rlen {
+                    let av = arow[k0 + r] as i32;
+                    // the gate: a zero activation suppresses the MAC row
+                    if gate && av == 0 {
+                        continue;
+                    }
+                    let wrow = &blk[r * bz_c..r * bz_c + clen];
+                    for (cv, &wv) in cw.iter_mut().zip(wrow) {
+                        *cv += av * wv as i32;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Serial BSR GEMM: `C[M×N] = A[M×K] · decompress(W)`, computed directly
+/// on the packed form. Bit-exact with [`crate::gemm::dense_i8`] on
+/// [`BsrPacked::decompress`].
+pub fn bsr_i8_packed(a: &TensorI8, w: &BsrPacked) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wbsr[{}x{}]", w.k, w.n);
+    let mut c = TensorI32::zeros(&[m, w.n]);
+    bsr_rows_i8(a.data(), w, c.data_mut(), 0, k, w.n);
+    c
+}
+
+/// [`bsr_i8_packed`] under a [`crate::gemm::ZeroGate`] policy: `Auto`
+/// measures `A`'s zero fraction once and gates when it clears the
+/// threshold. Bit-exact with [`bsr_i8_packed`] under every policy.
+pub fn bsr_i8_packed_gated(
+    a: &TensorI8,
+    w: &BsrPacked,
+    gate: crate::gemm::ZeroGate,
+) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wbsr[{}x{}]", w.k, w.n);
+    let mut c = TensorI32::zeros(&[m, w.n]);
+    if gate.resolve_with(|| a.sparsity()) {
+        bsr_rows_i8_gated(a.data(), w, c.data_mut(), 0, k, w.n);
+    } else {
+        bsr_rows_i8(a.data(), w, c.data_mut(), 0, k, w.n);
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dbb::prune::prune_bsr_i8;
+    use crate::gemm::{dense_i8, ZeroGate};
+    use crate::util::prop::{check, Config};
+    use crate::util::Rng;
+
+    #[test]
+    fn pack_equals_dense_on_decompressed_prop() {
+        check(Config::default().cases(96), |rng| {
+            let m = rng.below(12) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(24) + 1;
+            let bz_r = [4usize, 8, 14, 16][rng.below(4)];
+            let bz_c = [4usize, 8, 14, 16][rng.below(4)];
+            let a = TensorI8::rand(&[m, k], rng);
+            let keep = rng.below(4); // 0..=3 blocks per block row
+            let wd = prune_bsr_i8(&TensorI8::rand(&[k, n], rng), bz_r, bz_c, keep);
+            let w = BsrPacked::pack(&wd, bz_r, bz_c);
+            assert_eq!(w.decompress().data(), wd.data(), "decompress roundtrip");
+            assert_eq!(
+                bsr_i8_packed(&a, &w).data(),
+                dense_i8(&a, &wd).data(),
+                "m={m} k={k} n={n} bz={bz_r}x{bz_c} keep={keep}"
+            );
+        });
+    }
+
+    #[test]
+    fn gated_bit_exact_prop() {
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(12) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(20) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+            let wd = prune_bsr_i8(&TensorI8::rand(&[k, n], rng), 8, 8, rng.below(3) + 1);
+            let w = BsrPacked::pack(&wd, 8, 8);
+            let gate = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On][rng.below(3)];
+            assert_eq!(
+                bsr_i8_packed_gated(&a, &w, gate).data(),
+                bsr_i8_packed(&a, &w).data(),
+                "m={m} k={k} n={n} p={p_zero} gate={gate:?}"
+            );
+        });
+    }
+
+    #[test]
+    fn all_zero_weight_packs_empty() {
+        let w = BsrPacked::pack(&TensorI8::zeros(&[32, 16]), 8, 8);
+        assert_eq!(w.stored_blocks(), 0);
+        assert_eq!(w.block_density(), 0.0);
+        assert_eq!(w.index_bytes(), 4 * 5); // row_ptr only
+        let a = TensorI8::from_vec(&[2, 32], vec![1i8; 64]);
+        assert!(bsr_i8_packed(&a, &w).data().iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn fully_dense_weight_stores_every_block() {
+        let mut rng = Rng::new(7);
+        // no zeros at all → every block survives
+        let wd = TensorI8::from_vec(
+            &[16, 12],
+            (0..16 * 12).map(|i| (i % 251 + 1) as u8 as i8).collect(),
+        );
+        let w = BsrPacked::pack(&wd, 8, 8);
+        assert_eq!(w.stored_blocks(), 2 * 2);
+        assert_eq!(w.block_density(), 1.0);
+        let a = TensorI8::rand(&[3, 16], &mut rng);
+        assert_eq!(bsr_i8_packed(&a, &w).data(), dense_i8(&a, &wd).data());
+    }
+
+    #[test]
+    fn partial_edge_blocks_are_exact() {
+        // K=13, N=11 with 8x8 blocks: both edges partial
+        let mut rng = Rng::new(9);
+        let wd = TensorI8::rand(&[13, 11], &mut rng);
+        let w = BsrPacked::pack(&wd, 8, 8);
+        let a = TensorI8::rand(&[5, 13], &mut rng);
+        assert_eq!(bsr_i8_packed(&a, &w).data(), dense_i8(&a, &wd).data());
+    }
+
+    #[test]
+    fn raw_parts_roundtrip_and_rejection() {
+        let mut rng = Rng::new(11);
+        let wd = prune_bsr_i8(&TensorI8::rand(&[24, 16], &mut rng), 8, 8, 1);
+        let w = BsrPacked::pack(&wd, 8, 8);
+        let rt = BsrPacked::from_raw_parts(
+            w.k,
+            w.n,
+            w.bz_r,
+            w.bz_c,
+            w.row_ptr().to_vec(),
+            w.col_idx().to_vec(),
+            w.blocks().to_vec(),
+        )
+        .unwrap();
+        assert_eq!(rt, w);
+        // corrupted row_ptr length
+        assert!(BsrPacked::from_raw_parts(
+            w.k,
+            w.n,
+            8,
+            8,
+            w.row_ptr()[1..].to_vec(),
+            w.col_idx().to_vec(),
+            w.blocks().to_vec()
+        )
+        .is_err());
+        // col_idx out of range
+        let mut bad_ci = w.col_idx().to_vec();
+        if let Some(c) = bad_ci.first_mut() {
+            *c = 99;
+        }
+        assert!(BsrPacked::from_raw_parts(
+            w.k,
+            w.n,
+            8,
+            8,
+            w.row_ptr().to_vec(),
+            bad_ci,
+            w.blocks().to_vec()
+        )
+        .is_err());
+        // truncated block payload
+        assert!(BsrPacked::from_raw_parts(
+            w.k,
+            w.n,
+            8,
+            8,
+            w.row_ptr().to_vec(),
+            w.col_idx().to_vec(),
+            w.blocks()[..w.blocks().len() - 1].to_vec()
+        )
+        .is_err());
+        // zero-sized block geometry
+        assert!(BsrPacked::from_raw_parts(8, 8, 0, 8, vec![0], vec![], vec![]).is_err());
+    }
+
+    #[test]
+    fn index_bytes_have_no_per_element_bitmask() {
+        let mut rng = Rng::new(13);
+        let wd = TensorI8::rand(&[64, 64], &mut rng);
+        let w = BsrPacked::pack(&wd, 8, 8);
+        // 9 row_ptr entries * 4B + 64 blocks * 2B
+        assert_eq!(w.index_bytes(), 9 * 4 + 64 * 2);
+        // dense stream bytes: every block dense
+        assert_eq!(w.blocks().len(), 64 * 64);
+    }
+}

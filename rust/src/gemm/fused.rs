@@ -69,7 +69,7 @@ pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
 use crate::gemm::conv::ConvShape;
-use crate::gemm::{DbbPacked, Epilogue, ZeroGate};
+use crate::gemm::{BsrPacked, DbbPacked, Epilogue, ZeroGate};
 use crate::tensor::{Tensor, TensorF32, TensorI32, TensorI8};
 
 /// Patch rows generated per inner-kernel call — the software row buffer.
@@ -1061,6 +1061,81 @@ pub fn conv2d_dbb_i8_packed_encoded_with(
     c
 }
 
+/// Fused BSR convolution on a pre-packed operand (transient scratch):
+/// streaming IM2COL feeds the block-scheduler kernel
+/// ([`crate::gemm::bsr`]) — absent weight blocks are skipped for every
+/// generated patch row, surviving blocks run dense. Bit-exact with
+/// [`conv2d_i8`] on the decompressed weights.
+pub fn conv2d_bsr_i8_packed(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+) -> TensorI32 {
+    conv2d_bsr_i8_packed_with(x, w, s, par, &mut PatchScratch::new())
+}
+
+/// [`conv2d_bsr_i8_packed`] drawing its per-worker row buffers from a
+/// caller-owned [`PatchScratch`] — the fully prepared BSR conv hot path
+/// ([`crate::engine`] runs every BSR-format conv layer through here).
+pub fn conv2d_bsr_i8_packed_with(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
+    conv2d_bsr_i8_packed_gated_with(x, w, s, par, ZeroGate::Off, scratch)
+}
+
+/// [`conv2d_bsr_i8_packed`] under a [`ZeroGate`] policy (transient
+/// scratch).
+pub fn conv2d_bsr_i8_packed_gated(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+) -> TensorI32 {
+    conv2d_bsr_i8_packed_gated_with(x, w, s, par, gate, &mut PatchScratch::new())
+}
+
+/// [`conv2d_bsr_i8_packed_with`] under a [`ZeroGate`] policy: weight
+/// zeros vanish at *block* granularity in the scheduler walk, activation
+/// zeros at element granularity in the gated kernel. `Auto` measures the
+/// raw feature map once (same safe under-estimate as
+/// [`conv2d_i8_gated_with`]). Bit-exact with
+/// [`conv2d_bsr_i8_packed_with`] under every policy.
+pub fn conv2d_bsr_i8_packed_gated_with(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    scratch: &mut PatchScratch,
+) -> TensorI32 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "BSR weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "BSR weight N vs conv oc");
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output(x.shape().len() == 4, batch, s);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let xd = x.data();
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::bsr::bsr_rows_i8_gated(patch, w, out, 0, k, n)
+        });
+    } else {
+        conv_tiled(xd, s, c.data_mut(), m, k, n, par, scratch, |patch, out| {
+            crate::gemm::bsr::bsr_rows_i8(patch, w, out, 0, k, n)
+        });
+    }
+    c
+}
+
 /// [`conv2d_i8_gated`] with the layer epilogue fused into the output walk
 /// (transient scratch, fresh output allocation): each worker requantizes
 /// (+ ReLU, + 2×2/stride-2 max-pool when the epilogue pools) its freshly
@@ -1245,6 +1320,55 @@ pub fn conv2d_dbb_i8_packed_encoded_ep_with(
     conv_tiled_encoded_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |arp, aen, out| {
         crate::gemm::act::adbb_rows_i8(arp, aen, cp, en, out, 0, n)
     });
+    c
+}
+
+/// [`conv2d_bsr_i8_packed_gated`] with the layer epilogue fused into the
+/// output walk (transient scratch).
+pub fn conv2d_bsr_i8_packed_ep(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    conv2d_bsr_i8_packed_ep_with(x, w, s, par, gate, ep, &mut PatchScratch::new(), Vec::new())
+}
+
+/// [`conv2d_bsr_i8_packed_ep`] on caller-owned scratch + recyclable output
+/// backing — the engine's fused-epilogue hot path for BSR conv layers.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_bsr_i8_packed_ep_with(
+    x: &TensorI8,
+    w: &BsrPacked,
+    s: &ConvShape,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    scratch: &mut PatchScratch,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let batch = batch_of(x, s);
+    assert_eq!(w.k, s.gemm_k(), "BSR weight K vs conv {s:?}");
+    assert_eq!(w.n, s.oc, "BSR weight N vs conv oc");
+    check_pool(ep, s);
+    let (k, n) = (s.gemm_k(), s.oc);
+    let m = batch * s.gemm_m();
+    let mut c = conv_output_ep(x.shape().len() == 4, batch, s, ep, buf);
+    if m == 0 || n == 0 || ep.out_rows(m) == 0 {
+        return c;
+    }
+    let xd = x.data();
+    if gate.resolve_with(|| x.sparsity()) {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::bsr::bsr_rows_i8_gated(patch, w, out, 0, k, n)
+        });
+    } else {
+        conv_tiled_ep(xd, s, c.data_mut(), m, k, n, par, ep, scratch, |patch, out| {
+            crate::gemm::bsr::bsr_rows_i8(patch, w, out, 0, k, n)
+        });
+    }
     c
 }
 

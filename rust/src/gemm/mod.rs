@@ -97,6 +97,7 @@
 //! to the historical [`requant_relu`]); [`micro`] vectorizes them per ISA.
 
 pub mod act;
+pub mod bsr;
 pub mod conv;
 pub mod epilogue;
 pub mod fused;
@@ -104,7 +105,67 @@ pub mod micro;
 pub mod tiled;
 
 pub use act::{adbb_dense_i8, adbb_i8_packed, ActDbb};
+pub use bsr::{bsr_i8_packed, bsr_i8_packed_gated, BsrPacked};
 pub use epilogue::{requant_relu, Epilogue, PoolGeom, Requant};
+
+/// Which compressed weight datapath a model (or layer) runs on — the
+/// format-polymorphism knob threaded from the pruner
+/// ([`crate::dbb::prune`]) through [`crate::engine::PreparedModel`] down
+/// to the analytic twin's pricing ([`crate::arch::Datapath`]).
+///
+/// * `Dbb` — the paper's (V)DBB stream: per-`BZ`-block bitmask + packed
+///   non-zeros, fine-grained `NNZ`-of-`BZ` sparsity ([`DbbPacked`]).
+/// * `Bsr` — block-sparse-row: whole `bz×bz` zero blocks skipped by a
+///   `row_ptr`/`col_idx` scheduler walk, surviving blocks dense
+///   ([`BsrPacked`]; SPOTS / SNIPPETS Snippet 1).
+/// * `Dense` — no compression; the dense oracle end to end.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WeightFormat {
+    #[default]
+    Dbb,
+    Bsr,
+    Dense,
+}
+
+impl WeightFormat {
+    /// Stable one-byte tag used by the prepared-model flat binary (v2+).
+    pub fn tag(self) -> u8 {
+        match self {
+            WeightFormat::Dbb => 0,
+            WeightFormat::Bsr => 1,
+            WeightFormat::Dense => 2,
+        }
+    }
+
+    /// Inverse of [`Self::tag`] for deserialization.
+    pub fn from_tag(tag: u8) -> Option<WeightFormat> {
+        match tag {
+            0 => Some(WeightFormat::Dbb),
+            1 => Some(WeightFormat::Bsr),
+            2 => Some(WeightFormat::Dense),
+            _ => None,
+        }
+    }
+
+    /// Human label (CLI parsing / report tables).
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightFormat::Dbb => "dbb",
+            WeightFormat::Bsr => "bsr",
+            WeightFormat::Dense => "dense",
+        }
+    }
+
+    /// Parse a CLI token (`dbb` / `bsr` / `dense`, case-insensitive).
+    pub fn parse(s: &str) -> Option<WeightFormat> {
+        match s.to_ascii_lowercase().as_str() {
+            "dbb" => Some(WeightFormat::Dbb),
+            "bsr" => Some(WeightFormat::Bsr),
+            "dense" => Some(WeightFormat::Dense),
+            _ => None,
+        }
+    }
+}
 
 use crate::dbb::DbbMatrix;
 use crate::tensor::{TensorI32, TensorI8};

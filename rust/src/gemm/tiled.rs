@@ -23,7 +23,7 @@
 pub use crate::util::par::Parallelism;
 
 use crate::dbb::DbbMatrix;
-use crate::gemm::{ActDbb, DbbPacked, Epilogue, ZeroGate};
+use crate::gemm::{ActDbb, BsrPacked, DbbPacked, Epilogue, ZeroGate};
 use crate::tensor::{TensorI32, TensorI8};
 
 /// Accumulator rows a fused-epilogue worker computes per inner-kernel call
@@ -147,6 +147,51 @@ pub fn dbb_i8_packed_gated(
     } else {
         row_tiled(m, w.n, par, |tile, row0| {
             crate::gemm::micro::dbb_rows_i8(ad, cp, en, tile, row0, k, w.n)
+        })
+    }
+}
+
+/// Parallel BSR GEMM on a pre-packed operand: the block-scheduler kernel
+/// ([`crate::gemm::bsr`]) walks each worker's row tile, skipping absent
+/// blocks. Zero per-call decode work; bit-exact with
+/// [`crate::gemm::bsr_i8_packed`] — and with the dense oracle on the
+/// decompressed weights — for every thread count.
+pub fn bsr_i8_packed(a: &TensorI8, w: &BsrPacked, par: Parallelism) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wbsr[{}x{}]", w.k, w.n);
+    if par.get() <= 1 || m <= 1 || w.n == 0 {
+        return crate::gemm::bsr_i8_packed(a, w);
+    }
+    let ad = a.data();
+    row_tiled(m, w.n, par, |tile, row0| {
+        crate::gemm::bsr::bsr_rows_i8(ad, w, tile, row0, k, w.n)
+    })
+}
+
+/// [`bsr_i8_packed`] under a [`ZeroGate`] policy: workers run the
+/// zero-gated block scheduler when the gate engages (`Auto` measures `A`'s
+/// zero fraction once, before the pool spawns). Bit-exact with
+/// [`bsr_i8_packed`] for every policy and thread count.
+pub fn bsr_i8_packed_gated(
+    a: &TensorI8,
+    w: &BsrPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+) -> TensorI32 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wbsr[{}x{}]", w.k, w.n);
+    let engaged = gate.resolve_with(|| a.sparsity());
+    if par.get() <= 1 || m <= 1 || w.n == 0 {
+        return crate::gemm::bsr_i8_packed_gated(a, w, ZeroGate::resolved(engaged));
+    }
+    let ad = a.data();
+    if engaged {
+        row_tiled(m, w.n, par, |tile, row0| {
+            crate::gemm::bsr::bsr_rows_i8_gated(ad, w, tile, row0, k, w.n)
+        })
+    } else {
+        row_tiled(m, w.n, par, |tile, row0| {
+            crate::gemm::bsr::bsr_rows_i8(ad, w, tile, row0, k, w.n)
         })
     }
 }
@@ -332,6 +377,41 @@ pub fn dbb_i8_packed_ep_into(
     } else {
         row_tiled_ep(m, w.n, par, ep, buf, |acc, row0| {
             crate::gemm::micro::dbb_rows_i8(ad, cp, en, acc, row0, k, w.n)
+        })
+    }
+}
+
+/// [`bsr_i8_packed_gated`] with a fused output [`Epilogue`].
+pub fn bsr_i8_packed_ep(
+    a: &TensorI8,
+    w: &BsrPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+) -> TensorI8 {
+    bsr_i8_packed_ep_into(a, w, par, gate, ep, Vec::new())
+}
+
+/// [`bsr_i8_packed_ep`] recycling `buf` as the output backing.
+pub fn bsr_i8_packed_ep_into(
+    a: &TensorI8,
+    w: &BsrPacked,
+    par: Parallelism,
+    gate: ZeroGate,
+    ep: &Epilogue,
+    buf: Vec<i8>,
+) -> TensorI8 {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dims: A[{m}x{k}] Wbsr[{}x{}]", w.k, w.n);
+    let engaged = gate.resolve_with(|| a.sparsity());
+    let ad = a.data();
+    if engaged {
+        row_tiled_ep(m, w.n, par, ep, buf, |acc, row0| {
+            crate::gemm::bsr::bsr_rows_i8_gated(ad, w, acc, row0, k, w.n)
+        })
+    } else {
+        row_tiled_ep(m, w.n, par, ep, buf, |acc, row0| {
+            crate::gemm::bsr::bsr_rows_i8(ad, w, acc, row0, k, w.n)
         })
     }
 }
@@ -571,6 +651,36 @@ mod tests {
                 fusedp.data(),
                 pooled.data(),
                 "pool b={b} oh={oh} ow={ow} k={k} n={n} threads={threads} relu={relu}"
+            );
+        });
+    }
+
+    #[test]
+    fn bsr_tiled_bit_exact_prop() {
+        use crate::dbb::prune::prune_bsr_i8;
+        // tiled + gated BSR vs the dense oracle, threads incl. M < threads
+        check(Config::default().cases(64), |rng| {
+            let m = rng.below(24) + 1;
+            let k = rng.below(48) + 1;
+            let n = rng.below(20) + 1;
+            let bz_r = [4usize, 8, 16][rng.below(3)];
+            let bz_c = [4usize, 8, 16][rng.below(3)];
+            let threads = rng.below(8) + 1;
+            let p_zero = [0.0f32, 0.5, 1.0][rng.below(3)];
+            let gate = [ZeroGate::Off, ZeroGate::Auto, ZeroGate::On][rng.below(3)];
+            let a = TensorI8::rand_sparse(&[m, k], p_zero, rng);
+            let wd = prune_bsr_i8(&TensorI8::rand(&[k, n], rng), bz_r, bz_c, rng.below(3) + 1);
+            let w = BsrPacked::pack(&wd, bz_r, bz_c);
+            let par = Parallelism::threads(threads);
+            assert_eq!(
+                bsr_i8_packed(&a, &w, par).data(),
+                gemm::dense_i8(&a, &wd).data(),
+                "bsr m={m} k={k} n={n} bz={bz_r}x{bz_c} threads={threads}"
+            );
+            assert_eq!(
+                bsr_i8_packed_gated(&a, &w, par, gate).data(),
+                gemm::dense_i8(&a, &wd).data(),
+                "bsr gated m={m} k={k} n={n} p={p_zero} gate={gate:?}"
             );
         });
     }

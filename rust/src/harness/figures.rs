@@ -98,6 +98,7 @@ pub fn fig10() -> Vec<Table> {
                 (crate::arch::Datapath::FixedDbb { .. }, _) => "fixed-DBB",
                 (crate::arch::Datapath::Vdbb, true) => "VDBB+IM2C",
                 (crate::arch::Datapath::Vdbb, false) => "VDBB",
+                (crate::arch::Datapath::Bsr, _) => "BSR",
             };
             (d.label(), ep / bp, ea / ba, group)
         });

@@ -52,7 +52,13 @@ pub struct LayerProfile {
     /// GEMM rows (output pixels × batch).
     pub m: usize,
     /// Weight statistics (synthetic-exact for magnitude-pruned weights).
+    /// For a [`crate::gemm::WeightFormat::Bsr`] layer `bound/bz` is the
+    /// *block* density (see [`WeightStats::of_bsr`]).
     pub weights: WeightStats,
+    /// How this layer's weights are packed — decides which datapath
+    /// pricing the timing and buffer models apply (DBB bitmask stream vs
+    /// BSR `row_ptr`/`col_idx` walk vs raw dense).
+    pub format: crate::gemm::WeightFormat,
     /// Zero fraction of the layer's *raw input* operand — the feature map
     /// (or FC matrix) as fed to the layer, **before** IM2COL expansion.
     /// That is exactly what [`crate::engine::PreparedModel::profile`]
@@ -196,6 +202,7 @@ pub fn profile_model_fixed_act(
                 name: l.name.clone(),
                 m,
                 weights: WeightStats::synthetic(k, n, bz, bound),
+                format: crate::gemm::WeightFormat::Dbb,
                 act_sparsity,
                 act_encoded: false,
                 im2col_magnification: im2c,
@@ -270,17 +277,37 @@ pub fn buffer_feasibility(profiles: &[LayerProfile], stripe_cols: usize) -> Vec<
         .iter()
         .map(|p| {
             let kb = p.weights.kblocks();
-            // compressed stream: bound bytes + BZ/8 index bytes per block.
-            // Dense-fallback layers (bound == bz) stream the raw weights —
-            // there is nothing for a bitmask to select, so they carry no
-            // index bytes (historically they were overcounted ~12.5%).
-            let per_col = if p.weights.bound >= p.weights.bz {
-                kb * p.weights.bz
+            let (weight_bytes, stripe_bytes) = if matches!(p.format, crate::gemm::WeightFormat::Bsr)
+                && p.weights.bound < p.weights.bz
+            {
+                // BSR: surviving dense block values + the row_ptr/col_idx
+                // walk — a BSR layer carries **no** DBB per-element bitmask
+                // byte (the historical overcount this branch removes).
+                // Uniform matched-sparsity budgets: ceil(kb·bound/bz)
+                // surviving blocks per block-column.
+                let bz = p.weights.bz;
+                let surv = (kb * p.weights.bound).div_ceil(bz).max(1);
+                let nbc = p.weights.n.div_ceil(bz);
+                let row_ptr = 4 * (kb + 1);
+                let wbytes = surv * bz * p.weights.n + row_ptr + 2 * surv * nbc;
+                let scols = stripe_cols.min(p.weights.n);
+                let sbc = scols.div_ceil(bz).max(1);
+                let sbytes = surv * bz * scols + row_ptr + 2 * surv * sbc;
+                (wbytes, sbytes)
             } else {
-                kb * (p.weights.bound + p.weights.bz.div_ceil(8))
+                // compressed stream: bound bytes + BZ/8 index bytes per
+                // block. Dense-fallback layers (bound == bz) stream the raw
+                // weights — there is nothing for a bitmask to select, so
+                // they carry no index bytes (historically overcounted
+                // ~12.5%). A dense-fallback BSR layer is the same raw
+                // stream (every block survives).
+                let per_col = if p.weights.bound >= p.weights.bz {
+                    kb * p.weights.bz
+                } else {
+                    kb * (p.weights.bound + p.weights.bz.div_ceil(8))
+                };
+                (per_col * p.weights.n, per_col * stripe_cols.min(p.weights.n))
             };
-            let weight_bytes = per_col * p.weights.n;
-            let stripe_bytes = per_col * stripe_cols.min(p.weights.n);
             // input map working set: raw (the IM2COL unit regenerates the
             // expansion), or the compressed value+index stream when the
             // layer's activations are DBB-encoded
@@ -485,6 +512,7 @@ mod tests {
             name: format!("l_{bound}"),
             m: 64,
             weights: WeightStats::synthetic(64, 32, 8, bound),
+            format: crate::gemm::WeightFormat::Dbb,
             act_sparsity: 0.5,
             act_encoded: false,
             im2col_magnification: 1.0,
@@ -509,6 +537,44 @@ mod tests {
     }
 
     #[test]
+    fn buffer_feasibility_bsr_layer_has_no_bitmask_byte() {
+        // satellite regression: a BSR layer's WB working set is surviving
+        // dense block values + row_ptr/col_idx — NOT the DBB per-block
+        // bitmask byte. Exact bytes pinned.
+        let mk = |format: crate::gemm::WeightFormat| LayerProfile {
+            name: "l".into(),
+            m: 64,
+            weights: WeightStats::synthetic(64, 32, 8, 4),
+            format,
+            act_sparsity: 0.5,
+            act_encoded: false,
+            im2col_magnification: 1.0,
+            raw_act_bytes: 4096,
+            out_elems: 64 * 32,
+            relu: true,
+            fused_epilogue: false,
+        };
+        let feas = buffer_feasibility(
+            &[mk(crate::gemm::WeightFormat::Bsr), mk(crate::gemm::WeightFormat::Dbb)],
+            16,
+        );
+        // BSR at 50% block density: 4-of-8 kblocks survive per column.
+        // values 4·8·32 + row_ptr 4·(8+1) + col_idx 2·(4 surviving × 4
+        // block-cols) = 1024 + 36 + 32
+        assert_eq!(feas[0].weight_bytes, 4 * 8 * 32 + 4 * 9 + 2 * 4 * 4);
+        // 16-col stripe: values 4·8·16 + row_ptr + col_idx for 2 block-cols
+        assert_eq!(feas[0].stripe_bytes, 4 * 8 * 16 + 4 * 9 + 2 * 4 * 2);
+        // the DBB stream at the same density pays the bitmask byte instead
+        assert_eq!(feas[1].weight_bytes, 8 * (4 + 1) * 32);
+        assert!(feas[0].weight_bytes < feas[1].weight_bytes);
+        // a dense-fallback BSR layer is the raw stream, same as dense DBB
+        let mut dense = mk(crate::gemm::WeightFormat::Bsr);
+        dense.weights = WeightStats::synthetic(64, 32, 8, 8);
+        let df = buffer_feasibility(&[dense], 16);
+        assert_eq!(df[0].weight_bytes, 8 * 8 * 32);
+    }
+
+    #[test]
     fn encoded_act_layer_prices_compressed_stream() {
         // the acceptance check: the twin's reported A-side operand bytes
         // drop when a layer's activations are encoded, with the index
@@ -517,6 +583,7 @@ mod tests {
             name: "l".into(),
             m: 256,
             weights: WeightStats::synthetic(512, 64, 8, 3),
+            format: crate::gemm::WeightFormat::Dbb,
             act_sparsity: 0.6,
             act_encoded: enc,
             im2col_magnification: 1.0,
@@ -596,6 +663,7 @@ mod tests {
             name: "l".into(),
             m: 256,
             weights: WeightStats::synthetic(512, 64, 8, 3),
+            format: crate::gemm::WeightFormat::Dbb,
             act_sparsity: 0.5,
             act_encoded: false,
             im2col_magnification: 1.0,

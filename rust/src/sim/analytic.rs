@@ -59,6 +59,24 @@ impl WeightStats {
         }
     }
 
+    /// Extract from a BSR operand. For the BSR datapath `bound/bz` is the
+    /// *block* density (fraction of the block grid that survived pruning),
+    /// so `bound` is the measured block density rounded to the nearest
+    /// `1/bz` — exact whenever the pruner keeps `keep`-of-`nbc` blocks
+    /// with `keep/nbc` on the `1/bz` grid (the engine's matched-sparsity
+    /// budgets are).
+    pub fn of_bsr(w: &crate::gemm::BsrPacked) -> Self {
+        let bz = w.bz_r;
+        let bound = ((w.block_density() * bz as f64).round() as usize).clamp(1, bz);
+        WeightStats {
+            k: w.k,
+            n: w.n,
+            bz,
+            bound,
+            total_nnz: w.total_nnz() as u64,
+        }
+    }
+
     /// Synthetic stats for a matrix pruned exactly to `bound`-of-`bz`
     /// (every block full to the bound — the design-space sweep assumption).
     pub fn synthetic(k: usize, n: usize, bz: usize, bound: usize) -> Self {
@@ -97,6 +115,10 @@ pub fn occupancy(design: &Design, stats: &WeightStats) -> usize {
             }
         }
         Datapath::Vdbb => stats.bound.max(1),
+        // a surviving BSR block is a dense B-way dot product: 1 cycle,
+        // exactly like the dense STA — the win is *skipped* block-steps
+        // (see [`sched_blocks`]), not per-block occupancy
+        Datapath::Bsr => 1,
     }
 }
 
@@ -106,6 +128,10 @@ pub fn occupancy(design: &Design, stats: &WeightStats) -> usize {
 pub fn sched_blocks(design: &Design, stats: &WeightStats) -> usize {
     match design.datapath {
         Datapath::Dense => stats.k.div_ceil(design.dims.b),
+        // the BSR scheduler walks `row_ptr`/`col_idx` and only ever
+        // streams surviving blocks: kblocks × block-density (for BSR
+        // layers `stats.density() = bound/bz` *is* the block density)
+        Datapath::Bsr => (stats.kblocks() * stats.bound).div_ceil(stats.bz).max(1),
         _ => stats.kblocks(),
     }
 }
@@ -114,7 +140,8 @@ pub fn sched_blocks(design: &Design, stats: &WeightStats) -> usize {
 /// many physical-MAC cycles a block occupies per output element.
 fn slots_per_block(design: &Design, stats: &WeightStats) -> u64 {
     match design.datapath {
-        Datapath::Dense => design.dims.b as u64, // B MACs' worth, 1 cycle of B-way DP
+        // B MACs' worth, 1 cycle of B-way DP (BSR: per *surviving* block)
+        Datapath::Dense | Datapath::Bsr => design.dims.b as u64,
         Datapath::FixedDbb { b } => (occupancy(design, stats) * b) as u64,
         Datapath::Vdbb => occupancy(design, stats) as u64,
     }
@@ -222,14 +249,16 @@ pub fn gemm_timing_stats_enc(
     //   raw K values (zeros included — they issue but don't switch).
     let weight_slots_per_col: u64 = kb
         * match design.datapath {
-            Datapath::Dense => design.dims.b as u64,
+            Datapath::Dense | Datapath::Bsr => design.dims.b as u64,
             Datapath::FixedDbb { b } => (occupancy(design, stats) * b) as u64,
             Datapath::Vdbb => occupancy(design, stats) as u64,
         };
     let dense_k_pad = kb * design.dims.b as u64; // K padded to block multiple
     let real_weight_slots = match design.datapath {
-        // dense: non-zero weights = total_nnz, pad K-B zeros also stream
-        Datapath::Dense => stats.total_nnz,
+        // dense: non-zero weights = total_nnz, pad K-B zeros also stream.
+        // BSR: zeros embedded in surviving blocks stream but never switch,
+        // so real slots are again exactly total_nnz.
+        Datapath::Dense | Datapath::Bsr => stats.total_nnz,
         _ => stats.total_nnz,
     };
     let wzero_frac = if weight_slots_per_col == 0 {
@@ -261,6 +290,15 @@ pub fn gemm_timing_stats_enc(
         Datapath::Vdbb => {
             kb as f64 * (occupancy(design, stats) as f64 + design.dims.b as f64 / 8.0)
         }
+        // surviving dense block values, plus the scheduler metadata at the
+        // weight-SRAM rate and with **no per-element bitmask** (the
+        // defining contrast with the (V)DBB streams): one u16 `col_idx`
+        // per surviving block amortized over its B columns, one u32
+        // `row_ptr` entry per block row amortized over all N columns.
+        Datapath::Bsr => {
+            kb as f64 * (design.dims.b as f64 + 2.0 / design.dims.b as f64)
+                + 4.0 * (stats.kblocks() + 1) as f64 / stats.n as f64
+        }
     };
     let weight_sram = (wbytes_per_col_pass * stats.n as f64 * row_tiles as f64) as u64;
 
@@ -268,7 +306,10 @@ pub fn gemm_timing_stats_enc(
     // fetches only the surviving values plus the per-block bitmask
     let act_edge = (mg as u64 * kb * design.dims.b as u64) * col_tiles;
     let act_raw = act_edge as f64 / im2col_magnification.max(1.0);
-    let act_encoded = act_encoded && !matches!(design.datapath, Datapath::Dense);
+    // dense arrays have no A-side DBB decoder; neither does BSR (its
+    // surviving blocks consume raw dense activation tiles)
+    let act_encoded =
+        act_encoded && !matches!(design.datapath, Datapath::Dense | Datapath::Bsr);
     let (act_sram, act_index) = if act_encoded {
         (
             (act_raw * (1.0 - act_sparsity.clamp(0.0, 1.0))) as u64,
@@ -283,7 +324,9 @@ pub fn gemm_timing_stats_enc(
     let out_bytes = mg as u64 * stats.n as u64;
 
     let mux = match design.datapath {
-        Datapath::Dense => 0,
+        // no per-element operand selection on dense or BSR datapaths —
+        // BSR skips in the scheduler, not in the MAC operand path
+        Datapath::Dense | Datapath::Bsr => 0,
         _ => issued,
     };
 
@@ -453,6 +496,61 @@ mod tests {
         let exact = gemm_timing_exact(&d, &a, &w, 1.0);
         let stats = gemm_timing_stats(&d, 64, &WeightStats::of(&w), a.sparsity(), 1.0);
         assert_eq!(exact.events, stats.events);
+    }
+
+    #[test]
+    fn bsr_throughput_scales_with_block_density() {
+        // the scheduler skips absent blocks entirely, so effective
+        // MACs/cycle -> physical / block-density (symmetric with VDBB,
+        // but at block rather than element granularity)
+        let d = Design::parse("4x8x8_2x4_BSR").unwrap();
+        for bound in 1..=8usize {
+            let stats = WeightStats::synthetic(4096, 512, 8, bound);
+            let t = gemm_timing_stats(&d, 4096, &stats, 0.0, 1.0);
+            let eff = t.effective_ops_per_cycle() / 2.0; // MACs/cycle
+            let ideal = d.physical_macs() as f64 / stats.density();
+            assert!(
+                eff > 0.85 * ideal && eff <= ideal,
+                "bound={bound} eff={eff} ideal={ideal}"
+            );
+        }
+    }
+
+    #[test]
+    fn bsr_slot_conservation() {
+        let d = Design::parse("4x8x8_2x4_BSR").unwrap();
+        let stats = WeightStats::synthetic(100, 30, 8, 5);
+        let t = gemm_timing_stats(&d, 77, &stats, 0.3, 1.0);
+        assert_eq!(
+            t.events.mac_slots(),
+            d.physical_macs() as u64 * t.events.cycles
+        );
+    }
+
+    #[test]
+    fn bsr_weight_traffic_prices_index_without_bitmask() {
+        let d = Design::parse("4x8x8_2x4_BSR").unwrap();
+        let stats = WeightStats::synthetic(4096, 512, 8, 4); // 50% block density
+        let t = gemm_timing_stats(&d, 4096, &stats, 0.0, 1.0);
+        // exact pin: surviving dense values + u16 col_idx per block
+        // (amortized over its 8 columns) + u32 row_ptr per block row
+        // (amortized over all N columns), once per row-tile pass
+        let kb = sched_blocks(&d, &stats) as f64;
+        assert_eq!(kb, 256.0); // 512 kblocks x 4/8 survive
+        let row_tiles = 4096f64 / 8.0; // mg / (A*M)
+        let per_col = kb * (8.0 + 2.0 / 8.0) + 4.0 * (512.0 + 1.0) / 512.0;
+        let expect = (per_col * 512.0 * row_tiles) as u64;
+        assert_eq!(t.events.weight_sram_bytes, expect);
+        // strictly cheaper than a (V)DBB-style per-element bitmask stream
+        let with_bitmask = (kb * (8.0 + 8.0 / 8.0) * 512.0 * row_tiles) as u64;
+        assert!(t.events.weight_sram_bytes < with_bitmask);
+        // no operand muxes on the BSR datapath: skip happens in the
+        // scheduler, not the MAC operand path
+        assert_eq!(t.events.mux_selects, 0);
+        // and no A-side DBB decoder: the encode flag is ignored
+        let enc = gemm_timing_stats_enc(&d, 256, &stats, 0.5, 1.0, true);
+        let raw = gemm_timing_stats(&d, 256, &stats, 0.5, 1.0);
+        assert_eq!(enc.events, raw.events);
     }
 
     #[test]

@@ -38,6 +38,10 @@ pub fn simulate_gemm(
     let (mg, k) = (a.shape()[0], a.shape()[1]);
     assert_eq!(k, w.k, "GEMM inner dim");
     let ng = w.n;
+    assert!(
+        !matches!(design.datapath, Datapath::Bsr),
+        "the BSR datapath runs on its own operand: use simulate_gemm_bsr"
+    );
     if !matches!(design.datapath, Datapath::Dense) {
         assert_eq!(d.b, w.bz, "sparse datapath block size must match encoding");
     }
@@ -97,13 +101,14 @@ pub fn simulate_gemm(
         // + one index byte per block
         Datapath::FixedDbb { b } => kb * (o as u64 * b as u64) + (w.kblocks() as u64),
         Datapath::Vdbb => kb * o as u64 + w.kblocks() as u64,
+        Datapath::Bsr => unreachable!("guarded at entry"),
     };
     ev.weight_sram_bytes = wbytes_per_col * ng as u64 * row_tiles as u64;
     ev.act_edge_bytes = (mg as u64 * kb * d.b as u64) * col_tiles as u64;
     ev.act_sram_bytes = (ev.act_edge_bytes as f64 / im2col_magnification.max(1.0)) as u64;
     ev.out_sram_bytes = mg as u64 * ng as u64; // INT8 post-requant write-back
     ev.mux_selects = match design.datapath {
-        Datapath::Dense => 0,
+        Datapath::Dense | Datapath::Bsr => 0,
         _ => ev.macs_active + ev.macs_gated,
     };
 
@@ -196,6 +201,143 @@ fn issue_block(
                     mac(0, 0); // block had fewer non-zeros than the bound
                 }
             }
+        }
+        Datapath::Bsr => unreachable!("BSR blocks are issued by simulate_gemm_bsr"),
+    }
+}
+
+/// Simulate `C = A · W` for a BSR operand on a [`Datapath::Bsr`] design,
+/// per MAC slot. The scheduler walks the real `row_ptr`/`col_idx`
+/// structure: a block-column only ever issues its *surviving* blocks. The
+/// systolic wavefront stays in lockstep across an output tile, so a pass
+/// streams the **maximum** surviving-block count over the block-columns it
+/// covers (shorter columns idle for the remainder; the analytic twin
+/// prices the average — equal whenever the pruner keeps a uniform block
+/// count per column, which matched-sparsity budgets do).
+pub fn simulate_gemm_bsr(
+    design: &Design,
+    a: &TensorI8,
+    w: &crate::gemm::BsrPacked,
+    im2col_magnification: f64,
+) -> DetailedResult {
+    design.validate().expect("valid design");
+    assert!(
+        matches!(design.datapath, Datapath::Bsr),
+        "simulate_gemm_bsr is the BSR-datapath entry"
+    );
+    let d = design.dims;
+    let (mg, k) = (a.shape()[0], a.shape()[1]);
+    assert_eq!(k, w.k, "GEMM inner dim");
+    assert_eq!(d.b, w.bz_r, "BSR block rows must match the datapath B");
+    assert_eq!(d.b, w.bz_c, "BSR block cols must match the datapath B");
+    let ng = w.n;
+    let bz = d.b;
+    let (tile_rows, tile_cols) = (d.a * d.m, d.c * d.n);
+    let row_tiles = mg.div_ceil(tile_rows);
+    let col_tiles = ng.div_ceil(tile_cols);
+
+    // per-block-column surviving (block_row, storage_index) lists, in
+    // ascending K order (canonical col_idx order guarantees it)
+    let nbc = w.block_cols();
+    let mut col_blocks: Vec<Vec<(usize, usize)>> = vec![Vec::new(); nbc];
+    for br in 0..w.block_rows() {
+        for idx in w.row_ptr()[br]..w.row_ptr()[br + 1] {
+            col_blocks[w.col_idx()[idx] as usize].push((br, idx));
+        }
+    }
+    // wavefront length per column tile = max survivors over covered bcs
+    let stream_len: Vec<usize> = (0..col_tiles)
+        .map(|ct| {
+            let lo = ct * tile_cols / bz;
+            let hi = ((ct + 1) * tile_cols).min(ng).div_ceil(bz);
+            (lo..hi).map(|bc| col_blocks[bc].len()).max().unwrap_or(0)
+        })
+        .collect();
+
+    let mut out = TensorI32::zeros(&[mg, ng]);
+    let mut ev = EventCounts::default();
+    for rt in 0..row_tiles {
+        for (ct, &tsteps) in stream_len.iter().enumerate() {
+            for ti in 0..d.m {
+                for tj in 0..d.n {
+                    for ai in 0..d.a {
+                        let row = rt * tile_rows + ti * d.a + ai;
+                        for cj in 0..d.c {
+                            let col = ct * tile_cols + tj * d.c + cj;
+                            if row >= mg || col >= ng {
+                                continue; // idle (counted via slot balance)
+                            }
+                            // a column shorter than the tile wavefront
+                            // idles after its own blocks run out — those
+                            // slots land in the idle balance below
+                            for &(br, idx) in &col_blocks[col / bz] {
+                                issue_bsr_block(a, w, br, idx, row, col, &mut out, &mut ev);
+                            }
+                        }
+                    }
+                }
+            }
+            ev.cycles += tsteps as u64; // occupancy 1 per surviving block
+        }
+    }
+    // pipeline fill + final accumulator drain, occupancy 1
+    ev.cycles += (d.m + d.n - 2) as u64 + (d.a * d.c) as u64;
+    let slots = design.physical_macs() as u64 * ev.cycles;
+    ev.macs_idle = slots - (ev.macs_active + ev.macs_gated);
+
+    // ---- SRAM traffic (counted from the real structure) ----
+    // values: each output column re-reads its surviving blocks' B-value
+    // column slices once per row-tile pass; index: row_ptr + col_idx are
+    // walked once per row-tile pass. No per-element bitmask exists.
+    let value_bytes: u64 = (0..ng)
+        .map(|c| col_blocks[c / bz].len() as u64 * bz as u64)
+        .sum();
+    ev.weight_sram_bytes = (value_bytes + w.index_bytes() as u64) * row_tiles as u64;
+    let stream_total: u64 = stream_len.iter().map(|&t| t as u64).sum();
+    ev.act_edge_bytes = mg as u64 * bz as u64 * stream_total;
+    ev.act_sram_bytes = (ev.act_edge_bytes as f64 / im2col_magnification.max(1.0)) as u64;
+    ev.out_sram_bytes = mg as u64 * ng as u64; // INT8 post-requant write-back
+    ev.mux_selects = 0; // skip lives in the scheduler, not the operand path
+
+    DetailedResult {
+        output: out,
+        timing: GemmTiming {
+            events: ev,
+            dense_macs: mg as u64 * k as u64 * ng as u64,
+        },
+    }
+}
+
+/// Issue the B MAC slots of one surviving BSR block for one output element.
+#[allow(clippy::too_many_arguments)]
+fn issue_bsr_block(
+    a: &TensorI8,
+    w: &crate::gemm::BsrPacked,
+    br: usize,
+    idx: usize,
+    row: usize,
+    col: usize,
+    out: &mut TensorI32,
+    ev: &mut EventCounts,
+) {
+    let (bz_r, bz_c) = (w.bz_r, w.bz_c);
+    let block = &w.blocks()[idx * bz_r * bz_c..(idx + 1) * bz_r * bz_c];
+    let jc = col % bz_c;
+    for s in 0..bz_r {
+        let kk = br * bz_r + s;
+        // K-edge padding inside the block is stored as literal zeros, so
+        // the padded slots stream (and gate) exactly like dense K padding
+        let (av, wv) = if kk < w.k {
+            (a.at(&[row, kk]), block[s * bz_c + jc])
+        } else {
+            (0, 0)
+        };
+        if av != 0 && wv != 0 {
+            ev.macs_active += 1;
+            let cur = out.at(&[row, col]);
+            out.set(&[row, col], cur + av as i32 * wv as i32);
+        } else {
+            ev.macs_gated += 1;
         }
     }
 }
@@ -361,6 +503,83 @@ mod tests {
                 design.label()
             );
         });
+    }
+
+    #[test]
+    fn bsr_functional_matches_golden() {
+        use crate::dbb::prune::prune_bsr_i8;
+        use crate::gemm::BsrPacked;
+        let design = Design {
+            dims: ArrayDims { a: 2, b: 8, c: 2, m: 2, n: 2 },
+            datapath: Datapath::Bsr,
+            im2col: false,
+            act_cg: true,
+            tech: Tech::N16,
+        };
+        check(Config::default().cases(30), |rng| {
+            let mg = rng.below(20) + 1;
+            let k = rng.below(40) + 1;
+            let ng = rng.below(20) + 1;
+            let keep = rng.below(ng.div_ceil(8)) + 1;
+            let a = TensorI8::rand_sparse(&[mg, k], 0.4, rng);
+            let wd = prune_bsr_i8(&TensorI8::rand(&[k, ng], rng), 8, 8, keep);
+            let w = BsrPacked::pack(&wd, 8, 8);
+            let r = simulate_gemm_bsr(&design, &a, &w, 1.0);
+            let golden = gemm::dense_i8(&a, &wd);
+            assert_eq!(
+                r.output.data(),
+                golden.data(),
+                "mg={mg} k={k} ng={ng} keep={keep}"
+            );
+            assert_eq!(r.timing.events.mux_selects, 0);
+            // slot balance holds exactly
+            assert_eq!(
+                r.timing.events.mac_slots(),
+                design.physical_macs() as u64 * r.timing.events.cycles
+            );
+        });
+    }
+
+    #[test]
+    fn bsr_uniform_survival_matches_analytic_exactly() {
+        // a checkerboard block pattern gives every block-column exactly
+        // half its blocks, so the detailed per-tile max equals the
+        // analytic per-column average: cycles and traffic agree exactly
+        use crate::gemm::BsrPacked;
+        let design = Design {
+            dims: ArrayDims { a: 2, b: 8, c: 2, m: 2, n: 2 },
+            datapath: Datapath::Bsr,
+            im2col: false,
+            act_cg: true,
+            tech: Tech::N16,
+        };
+        let (k, ng) = (64, 64);
+        let mut rng = Rng::new(9);
+        let mut wd = TensorI8::rand(&[k, ng], &mut rng);
+        for v in wd.data_mut() {
+            if *v == 0 {
+                *v = 1; // no accidental all-zero blocks
+            }
+        }
+        for r in 0..k {
+            for c in 0..ng {
+                if ((r / 8) + (c / 8)) % 2 == 1 {
+                    wd.set(&[r, c], 0);
+                }
+            }
+        }
+        let w = BsrPacked::pack(&wd, 8, 8);
+        assert_eq!(w.stored_blocks(), 32);
+        let a = TensorI8::rand(&[24, k], &mut rng);
+        let det = simulate_gemm_bsr(&design, &a, &w, 1.0).timing.events;
+        let stats = analytic::WeightStats::of_bsr(&w);
+        assert_eq!(stats.bound, 4); // 50% block density on the 1/8 grid
+        let ana = analytic::gemm_timing_stats(&design, 24, &stats, a.sparsity(), 1.0).events;
+        assert_eq!(det.cycles, ana.cycles);
+        assert_eq!(det.act_edge_bytes, ana.act_edge_bytes);
+        assert_eq!(det.weight_sram_bytes, ana.weight_sram_bytes);
+        assert_eq!(det.macs_active + det.macs_gated, ana.macs_active + ana.macs_gated);
+        assert_eq!(det.mux_selects, 0);
     }
 
     #[test]

@@ -5,8 +5,16 @@
 //! is met." We implement the schedule as a per-epoch NNZ ramp from BZ down
 //! to the target, recomputing the keep-mask each step and re-applying it
 //! after every optimizer update so pruned weights stay zero.
+//!
+//! The same schedule learns **block** masks under [`WeightFormat::Bsr`]
+//! ([`DbbPruneSchedule::new_format`]): instead of the top-`nnz` elements of
+//! each DBB block, whole `bz×bz` tiles survive by Frobenius magnitude — the
+//! matched-density rule the inference engine applies at
+//! `PreparedModel::prepare_format`, so a network trained here exports
+//! directly into the BSR datapath.
 
-use crate::dbb::prune::{apply_mask_f32, dbb_mask_f32};
+use crate::dbb::prune::{apply_mask_f32, bsr_mask_f32, dbb_mask_f32};
+use crate::gemm::WeightFormat;
 use crate::tensor::TensorF32;
 
 use super::net::Network;
@@ -20,17 +28,37 @@ pub struct DbbPruneSchedule {
     pub target_nnz: usize,
     /// Epochs over which NNZ ramps from BZ to the target.
     pub ramp_epochs: usize,
+    /// Mask structure the schedule learns: per-element within DBB blocks
+    /// ([`WeightFormat::Dbb`], the historical default), whole surviving
+    /// `bz×bz` tiles ([`WeightFormat::Bsr`]), or no pruning at all
+    /// ([`WeightFormat::Dense`]).
+    pub format: WeightFormat,
     masks: Vec<Vec<bool>>, // one per prunable weight matrix
 }
 
 impl DbbPruneSchedule {
-    /// New schedule.
+    /// New schedule (the historical DBB element-mask mode).
     pub fn new(bz: usize, target_nnz: usize, ramp_epochs: usize) -> Self {
+        Self::new_format(bz, target_nnz, ramp_epochs, WeightFormat::Dbb)
+    }
+
+    /// New schedule learning `format`-structured masks. The NNZ ramp is
+    /// shared: at an epoch bound of `nnz`, DBB keeps the top `nnz` elements
+    /// of every `bz` block while BSR keeps the top `nnz/bz` **fraction of
+    /// blocks** per block row — identical weight density, different
+    /// granularity.
+    pub fn new_format(
+        bz: usize,
+        target_nnz: usize,
+        ramp_epochs: usize,
+        format: WeightFormat,
+    ) -> Self {
         assert!(target_nnz >= 1 && target_nnz <= bz);
         DbbPruneSchedule {
             bz,
             target_nnz,
             ramp_epochs: ramp_epochs.max(1),
+            format,
             masks: Vec::new(),
         }
     }
@@ -55,10 +83,18 @@ impl DbbPruneSchedule {
             .into_iter()
             .zip(prunable)
             .map(|((_, w), &p)| {
-                if !p || nnz >= self.bz {
+                if !p || nnz >= self.bz || matches!(self.format, WeightFormat::Dense) {
                     vec![true; w.len()]
                 } else {
-                    let m = dbb_mask_f32(w, self.bz, nnz);
+                    let m = match self.format {
+                        WeightFormat::Dbb => dbb_mask_f32(w, self.bz, nnz),
+                        WeightFormat::Bsr => {
+                            let nbc = w.shape()[1].div_ceil(self.bz);
+                            let keep = (nbc * nnz).div_ceil(self.bz).clamp(1, nbc);
+                            bsr_mask_f32(w, self.bz, self.bz, keep)
+                        }
+                        WeightFormat::Dense => unreachable!("handled above"),
+                    };
                     apply_mask_f32(w, &m);
                     m
                 }
@@ -185,5 +221,50 @@ mod tests {
         s.prune_epoch(&mut net, &[true, true], 0);
         let sp = s.sparsity(&mut net, &[true, true]);
         assert!((sp - 0.75).abs() < 0.02, "sparsity {sp}"); // 2/8 = 75%
+    }
+
+    #[test]
+    fn bsr_mode_learns_block_structured_masks_at_matched_density() {
+        let mut rng = Rng::new(5);
+        let mut net = net2(&mut rng);
+        let mut s = DbbPruneSchedule::new_format(8, 2, 1, WeightFormat::Bsr);
+        assert_eq!(s.format, WeightFormat::Bsr);
+        s.prune_epoch(&mut net, &[true, true], 0);
+        for (_, w) in net.gemm_weights() {
+            let (k, n) = (w.shape()[0], w.shape()[1]);
+            let (nbr, nbc) = (k.div_ceil(8), n.div_ceil(8));
+            let keep = (nbc * 2).div_ceil(8).max(1);
+            for br in 0..nbr {
+                let mut survivors = 0;
+                for bc in 0..nbc {
+                    // every 8x8 tile is uniformly kept or uniformly zero
+                    let mut any = false;
+                    let mut all = true;
+                    for r in br * 8..((br + 1) * 8).min(k) {
+                        for c in bc * 8..((bc + 1) * 8).min(n) {
+                            let nz = w.at(&[r, c]) != 0.0;
+                            any |= nz;
+                            all &= nz;
+                        }
+                    }
+                    assert!(any == all || !any, "ragged block ({br},{bc})");
+                    survivors += any as usize;
+                }
+                assert!(survivors <= keep, "block row {br}: {survivors} > {keep}");
+            }
+        }
+        // the matched-density rule: 2/8 bound -> 1/4 of the blocks survive,
+        // so element sparsity lands on the same 75% the DBB mode reports
+        let sp = s.sparsity(&mut net, &[true, true]);
+        assert!((sp - 0.75).abs() < 0.02, "sparsity {sp}");
+        // enforce keeps the block structure after optimizer perturbation
+        for (_, w) in net.gemm_weights() {
+            for v in w.data_mut() {
+                *v += 0.25;
+            }
+        }
+        s.enforce(&mut net);
+        let sp = s.sparsity(&mut net, &[true, true]);
+        assert!((sp - 0.75).abs() < 0.02, "post-enforce sparsity {sp}");
     }
 }

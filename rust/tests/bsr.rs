@@ -1,0 +1,229 @@
+//! Integration suite for the BSR weight datapath — the format-polymorphic
+//! second pipeline next to DBB. Exercised through the public API exactly as
+//! the engine consumes it:
+//!
+//! * **pack/decompress** is lossless across block geometries (including
+//!   partial edge blocks) and the coarse index really is
+//!   `row_ptr`/`col_idx` only — no per-element bitmask;
+//! * the **block-scheduler kernels** (tiled GEMM, gated, fused epilogue,
+//!   streaming-IM2COL conv) are bit-exact with the dense oracle on the
+//!   decompressed operand at every block size, sparsity extreme, and
+//!   thread count — including M smaller than the pool;
+//! * a **BSR-prepared engine** round-trips the v2 flat binary bit-exactly
+//!   and rejects truncated or corrupted streams cleanly.
+
+use ssta::dbb::prune::prune_bsr_i8;
+use ssta::engine::{PreparedModel, PERSIST_MAGIC};
+use ssta::gemm::{self, conv::ConvShape, fused, tiled};
+use ssta::gemm::{BsrPacked, Epilogue, Requant, WeightFormat, ZeroGate};
+use ssta::models::{Layer, LayerKind, Model};
+use ssta::tensor::TensorI8;
+use ssta::util::prop::{check, Config};
+use ssta::util::{Parallelism, Rng};
+
+/// The satellite's block-geometry sweep: powers of two plus a non-dividing
+/// size so edge blocks are partial in both dimensions.
+const BLOCK_SIZES: [usize; 4] = [4, 8, 14, 16];
+
+/// A block-pruned operand at one of the three sparsity extremes the suite
+/// pins: dense (every block survives), half the blocks, or fully zero.
+fn pruned_operand(k: usize, n: usize, bz: usize, sparsity: usize, rng: &mut Rng) -> TensorI8 {
+    let w = TensorI8::rand(&[k, n], rng);
+    let nbc = n.div_ceil(bz);
+    match sparsity {
+        0 => w,
+        1 => prune_bsr_i8(&w, bz, bz, nbc.div_ceil(2)),
+        _ => TensorI8::zeros(&[k, n]),
+    }
+}
+
+#[test]
+fn pack_decompress_is_lossless_and_index_is_coarse() {
+    check(Config::default().cases(64), |rng| {
+        let bz_r = BLOCK_SIZES[rng.below(4)];
+        let bz_c = BLOCK_SIZES[rng.below(4)];
+        let k = rng.below(90) + 1; // rarely a multiple of bz → edge blocks
+        let n = rng.below(60) + 1;
+        let sparsity = rng.below(3);
+        let w = pruned_operand(k, n, bz_r.min(bz_c), sparsity, rng);
+        let p = BsrPacked::pack(&w, bz_r, bz_c);
+        assert_eq!(p.decompress().data(), w.data(), "k={k} n={n} bz={bz_r}x{bz_c}");
+        // the defining contrast with DBB: the index is one row_ptr entry
+        // per block row + one col_idx per surviving block, nothing per
+        // element
+        assert_eq!(p.block_rows(), k.div_ceil(bz_r));
+        assert_eq!(p.block_cols(), n.div_ceil(bz_c));
+        assert_eq!(p.index_bytes(), 4 * (p.block_rows() + 1) + 2 * p.stored_blocks());
+        // col_idx strictly ascending within each block row
+        let (rp, ci) = (p.row_ptr(), p.col_idx());
+        for br in 0..p.block_rows() {
+            let row = &ci[rp[br]..rp[br + 1]];
+            assert!(row.windows(2).all(|w| w[0] < w[1]), "row {br}: {row:?}");
+        }
+        if sparsity == 2 {
+            assert_eq!(p.stored_blocks(), 0, "all-zero matrix stores no blocks");
+        }
+    });
+}
+
+#[test]
+fn tiled_bsr_matches_dense_oracle_across_geometry_and_threads() {
+    check(Config::default().cases(64), |rng| {
+        let bz = BLOCK_SIZES[rng.below(4)];
+        let m = rng.below(48) + 1;
+        let k = rng.below(90) + 1;
+        let n = rng.below(40) + 1;
+        let sparsity = rng.below(3);
+        let threads = [1usize, 2, 5, 8][rng.below(4)];
+        let a = TensorI8::rand_sparse(&[m, k], 0.5, rng);
+        let w = pruned_operand(k, n, bz, sparsity, rng);
+        let p = BsrPacked::pack(&w, bz, bz);
+        let par = Parallelism::threads(threads);
+        let want = gemm::dense_i8(&a, &p.decompress());
+        let tag = format!("m={m} k={k} n={n} bz={bz} sp={sparsity} threads={threads}");
+        assert_eq!(tiled::bsr_i8_packed(&a, &p, par).data(), want.data(), "{tag}");
+        for gate in [ZeroGate::Off, ZeroGate::On, ZeroGate::Auto] {
+            assert_eq!(
+                tiled::bsr_i8_packed_gated(&a, &p, par, gate).data(),
+                want.data(),
+                "{tag} gate={gate:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn m_smaller_than_thread_count() {
+    // every M in 1..8 against an 8-thread pool — the row partition
+    // degenerates to one row per worker with idle workers left over
+    let mut rng = Rng::new(23);
+    let par = Parallelism::threads(8);
+    for m in 1..8usize {
+        let a = TensorI8::rand(&[m, 44], &mut rng);
+        let w = pruned_operand(44, 12, 8, 1, &mut rng);
+        let p = BsrPacked::pack(&w, 8, 8);
+        assert_eq!(
+            tiled::bsr_i8_packed(&a, &p, par).data(),
+            gemm::dense_i8(&a, &p.decompress()).data(),
+            "m={m}"
+        );
+    }
+}
+
+#[test]
+fn fused_epilogue_matches_dense_epilogue_path() {
+    check(Config::default().cases(32), |rng| {
+        let bz = BLOCK_SIZES[rng.below(4)];
+        let m = rng.below(32) + 1;
+        let k = rng.below(64) + 1;
+        let n = rng.below(24) + 1;
+        let a = TensorI8::rand_sparse(&[m, k], 0.5, rng);
+        let w = pruned_operand(k, n, bz, 1, rng);
+        let p = BsrPacked::pack(&w, bz, bz);
+        let par = Parallelism::threads(rng.below(4) + 1);
+        let ep = Epilogue::new(Requant::Global(rng.below(8) as u32), rng.below(2) == 0);
+        for gate in [ZeroGate::Off, ZeroGate::On] {
+            assert_eq!(
+                tiled::bsr_i8_packed_ep(&a, &p, par, gate, &ep).data(),
+                tiled::dense_i8_ep(&a, &p.decompress(), par, gate, &ep).data(),
+                "m={m} k={k} n={n} bz={bz} gate={gate:?}"
+            );
+        }
+    });
+}
+
+#[test]
+fn fused_conv_matches_dense_conv_on_decompressed_weights() {
+    // c·kh·kw deliberately not a multiple of the block size → the BSR
+    // operand ends in partial edge blocks along K
+    let s = ConvShape { h: 9, w: 9, c: 3, kh: 3, kw: 3, oc: 10, stride: 1, pad: 1 };
+    let mut rng = Rng::new(31);
+    for bz in BLOCK_SIZES {
+        for sparsity in 0..3usize {
+            let w = pruned_operand(s.gemm_k(), s.oc, bz, sparsity, &mut rng);
+            let p = BsrPacked::pack(&w, bz, bz);
+            for threads in [1usize, 4] {
+                let par = Parallelism::threads(threads);
+                let x = TensorI8::rand_sparse(&[s.h, s.w, s.c], 0.5, &mut rng);
+                let want = fused::conv2d_i8(&x, &p.decompress(), &s, par);
+                assert_eq!(
+                    fused::conv2d_bsr_i8_packed(&x, &p, &s, par).data(),
+                    want.data(),
+                    "bz={bz} sp={sparsity} threads={threads}"
+                );
+                for gate in [ZeroGate::Off, ZeroGate::On, ZeroGate::Auto] {
+                    assert_eq!(
+                        fused::conv2d_bsr_i8_packed_gated(&x, &p, &s, par, gate).data(),
+                        want.data(),
+                        "bz={bz} sp={sparsity} threads={threads} gate={gate:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A small conv+FC model with a prunable conv — enough to give the engine
+/// a real BSR operand next to a dense-fallback layer.
+fn bsr_model() -> Model {
+    let c1 = ConvShape { h: 10, w: 10, c: 3, kh: 3, kw: 3, oc: 8, stride: 1, pad: 1 };
+    let c2 = ConvShape { h: 10, w: 10, c: 8, kh: 3, kw: 3, oc: 16, stride: 2, pad: 1 };
+    Model {
+        name: "bsr-int",
+        dataset: "synthetic",
+        layers: vec![
+            Layer { name: "conv1".into(), kind: LayerKind::Conv(c1), prunable: false },
+            Layer { name: "conv2".into(), kind: LayerKind::Conv(c2), prunable: true },
+            Layer { name: "fc".into(), kind: LayerKind::Fc(5 * 5 * 16, 10), prunable: true },
+        ],
+    }
+}
+
+#[test]
+fn bsr_engine_roundtrips_flat_binary_bit_exactly() {
+    let par = Parallelism::serial();
+    let mut pm = PreparedModel::prepare_format(&bsr_model(), 2, 8, 7, par, WeightFormat::Bsr);
+    pm.set_fused_epilogue(true);
+    pm.profile(par);
+    pm.calibrate(par);
+    assert_eq!(pm.weight_format(), WeightFormat::Bsr);
+
+    let bytes = pm.to_bytes();
+    assert_eq!(&bytes[..8], PERSIST_MAGIC, "BSR models persist as v2");
+    let rt = PreparedModel::from_bytes(&bytes, par).unwrap();
+    assert_eq!(rt.weight_format(), WeightFormat::Bsr);
+    assert_eq!(rt.operand_bytes(), pm.operand_bytes());
+    let mut rng = Rng::new(3);
+    for _ in 0..3 {
+        let x = TensorI8::rand_sparse(&[10, 10, 3], 0.5, &mut rng);
+        assert_eq!(rt.execute(&x, par).output, pm.execute(&x, par).output);
+        assert_eq!(rt.execute_fused(&x, par).output, pm.execute_fused(&x, par).output);
+    }
+    assert_eq!(rt.to_bytes(), bytes, "canonical re-serialization");
+}
+
+#[test]
+fn bsr_stream_truncation_and_corruption_are_clean_errors() {
+    let par = Parallelism::serial();
+    let pm = PreparedModel::prepare_format(&bsr_model(), 2, 8, 7, par, WeightFormat::Bsr);
+    let bytes = pm.to_bytes();
+    for i in 0..16 {
+        let cut = i * bytes.len() / 16;
+        assert!(
+            PreparedModel::from_bytes(&bytes[..cut], par).is_err(),
+            "truncation at {cut}/{} must fail cleanly",
+            bytes.len()
+        );
+    }
+    // the trailing FNV-1a checksum catches any flipped bit in the body —
+    // including inside the BSR row_ptr/col_idx/block payload
+    for &pos in &[0usize, 9, bytes.len() / 3, bytes.len() / 2, bytes.len() - 3] {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x20;
+        assert!(
+            PreparedModel::from_bytes(&bad, par).is_err(),
+            "bit flip at {pos}/{} must fail cleanly",
+            bytes.len()
+        );
+    }
+}

@@ -76,7 +76,8 @@ TRACKED = ("gemm/", "conv/", "engine/", "coordinator/")
 # benches this gate was hardened to hold, the fused-epilogue entries (the
 # i8-chained execute path must stay on the gate), and the serving-substrate
 # entries (flat-binary restart load + the engine-native coordinator round
-# trip).
+# trip), and the BSR-datapath entries (the block-scheduler GEMM kernels and
+# the BSR-prepared engine execute).
 REQUIRED = (
     "gemm/dense_i8_512_simd",
     "gemm/dbb_i8_512_simd_50pct",
@@ -86,6 +87,9 @@ REQUIRED = (
     "engine/convnet5_execute_fused_epilogue",
     "engine/convnet5_load_persisted",
     "coordinator/engine_serve_steady_p99",
+    "gemm/bsr_i8_512_50pct",
+    "gemm/bsr_i8_512_87pct",
+    "engine/convnet5_execute_bsr",
 )
 on_baseline_machine = (
     bool(os.environ.get("CI")) or os.environ.get("BENCH_CHECK_ENFORCE") == "1"

@@ -30,7 +30,7 @@ step cargo test -q --doc
 for isa in scalar sse2 avx2; do
   step env SSTA_FORCE_ISA="$isa" cargo test -q --test micro_kernels \
     --test epilogue --test tiled_gemm --test fused_conv --test zero_gate \
-    --test act_dbb
+    --test act_dbb --test bsr
 done
 step cargo fmt --check
 step cargo clippy --all-targets -- -D warnings
